@@ -1,0 +1,46 @@
+//! The paper's "full stack flow" (Fig. 10), step by step and instrumented:
+//! compile the model to the CIM-type ISA, disassemble a window of the
+//! program, run it, and show the per-phase latency ladder for every
+//! optimization level — the paper's end-to-end inference flow (RISC-V
+//! mode / CIM mode / weight-fusion mode) made visible.
+//!
+//!     make artifacts && cargo run --release --example full_stack_flow
+
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::build_kws_program;
+use cimrv::isa::{decode, disasm};
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::{dataset, KwsModel};
+use cimrv::sim::Soc;
+
+fn main() -> anyhow::Result<()> {
+    let model = KwsModel::load_default()?;
+    let audio = dataset::synth_utterance(2, 9, model.audio_len, 0.37);
+
+    // Stage 1: compile (train/quantize happened in python at build time).
+    let program = build_kws_program(&model, OptLevel::FULL)?;
+    println!("=== compiled program: {} instructions ===", program.imem.len());
+    println!("first CIM-type instructions in the stream:");
+    let mut shown = 0;
+    for (i, w) in program.imem.iter().enumerate() {
+        if let Ok(instr) = decode(*w) {
+            if matches!(instr, cimrv::isa::Instr::Cim(_)) {
+                println!("  [{:#07x}] {}", i * 4, disasm(&instr));
+                shown += 1;
+                if shown >= 8 {
+                    break;
+                }
+            }
+        }
+    }
+
+    // Stage 2: deploy + run at each optimization level.
+    println!("\n=== per-phase latency by optimization level ===");
+    for (name, opt) in OptLevel::ladder() {
+        let prog = build_kws_program(&model, opt)?;
+        let mut soc = Soc::new(prog, DramConfig::default())?;
+        let r = soc.infer(&audio)?;
+        println!("{name:<28} {}", r.phases.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! ISA playground: hand-assemble a tiny RV32IM+CIM routine with the
+//! in-tree assembler, run it on a bare SoC, and watch the CIM macro do a
+//! MAC — the smallest possible "hello, CIM-type instruction" (Fig. 4).
+//!
+//!     cargo run --release --example isa_playground
+
+use cimrv::compiler::asm::Asm;
+use cimrv::cpu::{Cpu, StepOutcome};
+use cimrv::isa::{decode, disasm, CimInstr, Reg};
+use cimrv::mem::bus::Bus;
+use cimrv::mem::dram::DramConfig;
+use cimrv::mem::layout;
+
+fn main() -> anyhow::Result<()> {
+    let mut a = Asm::new();
+    // Identity-ish weights: port word 0 of column 0 = 0xFFFFFFFF (all +1),
+    // mask word likewise; threshold 0; fire on an input with 3 hot bits.
+    a.li(Reg::A0, layout::FM_BASE as i64); // FM scratch base
+    a.li(Reg::T0, 0xFFFF_FFFFu32 as i64);
+    a.sw(Reg::A0, Reg::T0, 0); // ones word in FM[0]
+    a.li(Reg::T0, 0b1011); // the input vector (3 hot bits)
+    a.sw(Reg::A0, Reg::T0, 4);
+    // cim_w: sign plane col 0 word 0 <- ones; mask plane likewise.
+    a.li(Reg::A1, 0);
+    a.cim(CimInstr::write(Reg::A0, 0, Reg::A1, 0));
+    a.li(Reg::A1, cimrv::cim::weight_map::MASK_BASE as i64);
+    a.cim(CimInstr::write(Reg::A0, 0, Reg::A1, 0));
+    // CIM cfg: X-mode, window = 1 word.
+    a.li(Reg::T1, layout::MMIO_BASE as i64);
+    a.li(Reg::T0, cimrv::cim::CimConfig { window_words: 1, ..Default::default() }.to_bits() as i64);
+    a.sw(Reg::T1, Reg::T0, layout::MMIO_CIM_CFG as i32);
+    // cim_conv: shift FM[1] in, fire, store latch word 0 to FM[8].
+    a.cim(CimInstr::conv(Reg::A0, 1, Reg::A0, 8, 0, true));
+    // Read the raw sum of SA column 0 back to FM[9].
+    a.li(Reg::A1, cimrv::cim::weight_map::RAW_BASE as i64);
+    a.cim(CimInstr::read(Reg::A1, 0, Reg::A0, 9));
+    a.ebreak();
+
+    let words = a.assemble()?;
+    println!("=== program ===");
+    for (i, w) in words.iter().enumerate() {
+        println!("  [{:#06x}] {:08x}  {}", i * 4, w, disasm(&decode(*w)?));
+    }
+
+    let mut bus = Bus::new(DramConfig::default());
+    for (i, w) in words.iter().enumerate() {
+        bus.imem.poke_u32((i * 4) as u32, *w)?;
+    }
+    let mut cpu = Cpu::new(0);
+    let mut now = 0;
+    while let StepOutcome::Retired { cycles } = cpu.step(&mut bus)? {
+        now += cycles;
+        bus.tick(now)?;
+    }
+    println!("\n=== result ===");
+    println!("binarized latch word: {:#x}", bus.fm.peek_u32(32)?);
+    println!("raw MAC sum of SA 0: {}", bus.fm.peek_u32(36)? as i32);
+    println!("(input had 3 hot bits x weight +1 -> sum 3, 3 > 0 -> latch bit set)");
+    assert_eq!(bus.fm.peek_u32(36)? as i32, 3);
+    assert_eq!(bus.fm.peek_u32(32)? & 1, 1);
+    println!("cycles: {now}, instructions: {}", cpu.stats.instret);
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): serve a batch of synthetic
+//! GSCD keywords through the threaded coordinator over the cycle-accurate
+//! chip, verify every response against the PJRT golden model (the
+//! AOT-lowered JAX+Pallas network), and report latency / throughput /
+//! energy / accuracy — all three stack layers composing on a real small
+//! workload.
+//!
+//!     make artifacts && cargo run --release --example kws_e2e
+
+use cimrv::baselines::OptLevel;
+use cimrv::coordinator::{Coordinator, InferenceRequest};
+use cimrv::model::{dataset, KwsModel};
+use cimrv::runtime::GoldenModel;
+use cimrv::util::io::artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    let model = KwsModel::load_default()?;
+    let dir = artifacts_dir()?;
+    let eval = dataset::Dataset::load_eval(&dir, model.audio_len, model.n_classes)?;
+    let n = 16.min(eval.len());
+
+    // L3: the coordinator with a fleet of simulated chips.
+    let coord = Coordinator::start(&model, OptLevel::FULL, 4)?;
+    let reqs: Vec<_> = (0..n)
+        .map(|i| InferenceRequest {
+            id: i as u64,
+            audio: eval.utterance(i).to_vec(),
+            label: Some(eval.labels[i]),
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let resps = coord.serve_batch(reqs)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // L2/L1: the PJRT golden model (AOT JAX + Pallas kernel via HLO text).
+    let golden = GoldenModel::load(&dir)?;
+    let mut mismatches = 0;
+    for r in &resps {
+        let g = golden.infer(eval.utterance(r.id as usize))?;
+        if r.logits != g {
+            mismatches += 1;
+        }
+    }
+
+    let cycles: u64 = resps.iter().map(|r| r.chip_cycles).sum();
+    let uj: f64 = resps.iter().map(|r| r.energy_uj).sum();
+    let correct = resps.iter().filter(|r| r.correct == Some(true)).count();
+    println!("served {n} utterances on 4 workers in {wall:.2}s host time");
+    println!(
+        "chip:  {:.3} ms/inference @50 MHz, {:.2} uJ/inference, {:.1} inf/s chip-rate",
+        1e3 * (cycles as f64 / n as f64) / 50e6,
+        uj / n as f64,
+        n as f64 / (cycles as f64 / 50e6)
+    );
+    println!("accuracy: {}/{} ({:.1}%)", correct, n, 100.0 * correct as f64 / n as f64);
+    println!(
+        "PJRT golden cross-check: {}/{} bit-exact {}",
+        n - mismatches,
+        n,
+        if mismatches == 0 { "✓" } else { "✗" }
+    );
+    coord.shutdown();
+    assert_eq!(mismatches, 0, "three-layer stack must agree bit-for-bit");
+    Ok(())
+}

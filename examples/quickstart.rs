@@ -1,0 +1,40 @@
+//! Quickstart: load the trained model, compile it for the chip, run one
+//! keyword through the cycle-accurate SoC, and cross-check the logits
+//! against the Rust host reference.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::build_kws_program;
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::{dataset, reference, KwsModel};
+use cimrv::sim::Soc;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The trained, quantized KWS model exported by `make artifacts`.
+    let model = KwsModel::load_default()?;
+    println!(
+        "model: {} conv layers, {} classes, {} weight bits",
+        model.layers.len(),
+        model.n_classes,
+        model.layers.iter().map(|l| l.weight_bits()).sum::<usize>()
+    );
+
+    // 2. Compile the full-stack program (Fig. 10) with all optimizations.
+    let program = build_kws_program(&model, OptLevel::FULL)?;
+    println!("compiled {} RV32IM+CIM instructions", program.imem.len());
+
+    // 3. Simulate one utterance.
+    let audio = dataset::synth_utterance(7, 42, model.audio_len, 0.37);
+    let mut soc = Soc::new(program, DramConfig::default())?;
+    let result = soc.infer(&audio)?;
+    println!("predicted keyword class: {}", result.predicted);
+    println!("{}", result.phases.render());
+    println!("{}", result.energy.breakdown());
+
+    // 4. Cross-check against the host reference implementation.
+    let expected = reference::infer(&model, &audio);
+    assert_eq!(result.logits, expected, "simulator must be bit-exact");
+    println!("bit-exact against the host reference ✓");
+    Ok(())
+}

@@ -1,0 +1,197 @@
+"""AOT lowering: JAX KWS model -> HLO text + weight/test-vector artifacts.
+
+Emits HLO **text**, NOT ``.serialize()``: jax >= 0.5 emits HloModuleProto
+with 64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under ``artifacts/``):
+    model.hlo.txt       full inference: (audio, w0..w6, bn x4) -> (logits,)
+    macro.hlo.txt       a single X-mode cim_mac tile: (x, w) -> (out,)
+    preprocess.hlo.txt  preprocessing stage only: (audio, bn x4) -> (feats,)
+    weights/<p>.bin     f32 little-endian parameter payloads
+    testvec/*.bin       sample audio + golden logits for Rust integration
+    kws_manifest.json   parameter order/shapes/files — the Rust runtime's
+                        source of truth for feeding the HLO executable
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model
+from .kernels import cim_conv, ref
+
+PARAM_ORDER = (
+    [f"conv{i}" for i in range(7)]
+    + [f"th{i}" for i in range(6)]  # SA reference levels (binarized layers)
+    + ["bn_gamma", "bn_beta", "bn_mean", "bn_var"]
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def load_or_init_params(params_npz: str | None, cfg: model.KwsConfig):
+    """Trained params if available, else deterministic init — `make
+    artifacts` must work on a fresh checkout without a training run."""
+    if params_npz and os.path.exists(params_npz):
+        with np.load(params_npz) as z:
+            params = {k: jnp.asarray(z[k]) for k in z.files}
+        print(f"loaded trained params from {params_npz}")
+        return params, True
+    print("no trained params found; using deterministic init")
+    params = model.init_params(jax.random.key(0), cfg)
+    # Representative BN stats from a tiny calibration batch.
+    audio, _ = data.make_dataset(64, seed=7)
+    mean, var = data.feature_stats(audio, cfg.t, cfg.c)
+    params["bn_mean"] = jnp.asarray(mean)
+    params["bn_var"] = jnp.asarray(var)
+    return params, False
+
+
+def lower_model(qparams, cfg: model.KwsConfig) -> str:
+    """Lower full inference with every parameter as an HLO parameter, in
+    PARAM_ORDER, so Rust can feed freshly-loaded weights."""
+
+    def fn(audio, *flat):
+        params = dict(zip(PARAM_ORDER, flat))
+        return (model.forward(params, audio, cfg, use_pallas=True),)
+
+    specs = [jax.ShapeDtypeStruct((cfg.audio_len,), jnp.float32)] + [
+        jax.ShapeDtypeStruct(qparams[k].shape, jnp.float32) for k in PARAM_ORDER
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_macro(cfg: model.KwsConfig) -> str:
+    """One X-mode macro tile (1024 x 256) through the Pallas kernel — the
+    unit-level cross-check target for rust/src/cim/."""
+
+    def fn(x, w):
+        return (cim_conv.cim_mac(x, w, binarized=True),)
+
+    xs = jax.ShapeDtypeStruct((8, ref.X_MODE_WL), jnp.float32)
+    ws = jax.ShapeDtypeStruct((ref.X_MODE_WL, ref.X_MODE_SA), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(xs, ws))
+
+
+def lower_preprocess(cfg: model.KwsConfig) -> str:
+    """Preprocessing stage only (the RISC-V high-precision path)."""
+
+    def fn(audio, gamma, beta, mean, var):
+        return (
+            ref.ref_preprocess(audio, gamma, beta, mean, var, t=cfg.t, c=cfg.c),
+        )
+
+    a = jax.ShapeDtypeStruct((cfg.audio_len,), jnp.float32)
+    v = jax.ShapeDtypeStruct((cfg.c,), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(a, v, v, v, v))
+
+
+def export(out_dir: str, params_npz: str | None, n_testvec: int, n_eval: int):
+    cfg = model.CONFIG
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "testvec"), exist_ok=True)
+
+    params, trained = load_or_init_params(params_npz, cfg)
+    qparams = model.quantize_params(params, cfg)
+
+    # 1. HLO modules
+    for name, text in [
+        ("model.hlo.txt", lower_model(qparams, cfg)),
+        ("macro.hlo.txt", lower_macro(cfg)),
+        ("preprocess.hlo.txt", lower_preprocess(cfg)),
+    ]:
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # 2. Weight payloads (f32 LE). The Rust simulator re-packs binaries to
+    #    bitplanes itself; f32 keeps one canonical on-disk format.
+    weight_entries = []
+    for k in PARAM_ORDER:
+        arr = np.asarray(qparams[k], dtype=np.float32)
+        fname = f"weights/{k}.bin"
+        arr.tofile(os.path.join(out_dir, fname))
+        weight_entries.append({"name": k, "shape": list(arr.shape), "file": fname})
+
+    # 3. Test vectors: audio + golden logits through the *reference* path
+    #    (bit-identical to the pallas path; asserted by pytest).
+    audio, labels = data.make_dataset(n_testvec, seed=1234)
+    logits = np.asarray(model.predict(qparams, jnp.asarray(audio), cfg))
+    audio.astype(np.float32).tofile(os.path.join(out_dir, "testvec/audio.bin"))
+    logits.astype(np.float32).tofile(os.path.join(out_dir, "testvec/logits.bin"))
+    labels.astype(np.int32).tofile(os.path.join(out_dir, "testvec/labels.bin"))
+
+    # 4. A larger eval set for the Rust accuracy experiment (§III-A).
+    eval_audio, eval_labels = data.make_dataset(n_eval, seed=4321)
+    eval_audio.astype(np.float32).tofile(os.path.join(out_dir, "testvec/eval_audio.bin"))
+    eval_labels.astype(np.int32).tofile(os.path.join(out_dir, "testvec/eval_labels.bin"))
+
+    manifest = {
+        "trained": trained,
+        "param_order": PARAM_ORDER,
+        "weights": weight_entries,
+        "config": {
+            "audio_len": cfg.audio_len,
+            "t": cfg.t,
+            "c": cfg.c,
+            "n_classes": cfg.n_classes,
+            "kernel": cfg.kernel,
+            "channels": [list(p) for p in cfg.channels],
+            "fusion_split": cfg.fusion_split,
+        },
+        "hlo": {
+            "model": "model.hlo.txt",
+            "macro": "macro.hlo.txt",
+            "preprocess": "preprocess.hlo.txt",
+        },
+        "testvec": {
+            "n": n_testvec,
+            "audio": "testvec/audio.bin",
+            "logits": "testvec/logits.bin",
+            "labels": "testvec/labels.bin",
+            "n_eval": n_eval,
+            "eval_audio": "testvec/eval_audio.bin",
+            "eval_labels": "testvec/eval_labels.bin",
+        },
+    }
+    mpath = os.path.join(out_dir, "kws_manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="kept for Makefile compat; parent dir is used")
+    ap.add_argument("--params", default="../artifacts/kws_params.npz")
+    ap.add_argument("--n-testvec", type=int, default=16)
+    ap.add_argument("--n-eval", type=int, default=96)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "../artifacts"
+    export(out_dir, args.params, args.n_testvec, args.n_eval)
+
+
+if __name__ == "__main__":
+    main()

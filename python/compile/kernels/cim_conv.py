@@ -1,0 +1,193 @@
+"""L1 Pallas kernels: the CIM macro's compute hot-spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the silicon macro is an
+analog 1024-input MAC with 256 parallel sense amps. On a TPU-shaped target
+the wordline axis (inputs) becomes the MXU contraction axis, the
+bitline/sense-amp axis becomes the output-lane axis, and the sense-amp
+threshold + ReLU becomes an epilogue fused *inside* the kernel so the
+binarized activation never leaves VMEM — just as the silicon never drives
+full-precision values onto the output bus. X-mode vs Y-mode reconfiguration
+is two BlockSpec tilings of the same weight buffer.
+
+All kernels run with ``interpret=True`` (CPU PJRT); real-TPU lowering would
+emit a Mosaic custom-call the CPU plugin cannot execute. Correctness is
+checked against ``ref.py`` by pytest (hypothesis sweeps shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-shaped tile sizes. A (8, 128) f32 output tile plus (8, 256) x and
+# (256, 128) w operand tiles is ~132 KiB of VMEM — far under the ~16 MiB
+# per-core budget, leaving room for double buffering of the streamed
+# wordline blocks. The contraction block of 256 keeps the MXU systolic
+# array's K dimension saturated.
+BLOCK_B = 8      # batch rows per tile (conv rows in flight)
+BLOCK_WL = 256   # wordline (contraction) block
+BLOCK_SA = 128   # sense-amp (output lane) block
+
+
+def _pad_to(x, axis, mult):
+    """Zero-pad ``x`` along ``axis`` up to a multiple of ``mult``."""
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _mac_kernel(x_ref, w_ref, th_ref, o_ref, *, binarized: bool, nk: int):
+    """Grid = (B tiles, SA tiles, WL tiles); the last axis contracts.
+
+    The output block is revisited across the contraction axis and doubles
+    as the accumulator (no HBM round-trip between partial sums); the
+    sense-amp compare (``sum > th``, th = programmable SA reference) runs
+    as an epilogue in the final contraction step so only {0,1} values ever
+    leave the kernel.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    if binarized:
+        @pl.when(k == nk - 1)
+        def _epilogue():
+            o_ref[...] = jnp.where(o_ref[...] > th_ref[...], 1.0, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("binarized",))
+def cim_mac(x, w, th=None, *, binarized: bool = True):
+    """Pallas CIM macro MAC: ``binarize(x @ w - th)`` (or raw sums).
+
+    x: (b, wl) in {0,1};  w: (wl, sa) in {-1,0,+1};  th: (sa,) integer SA
+    reference levels (defaults to 0).  Shapes are padded to tile multiples
+    internally; zero padding is exact for this op (padded wordlines
+    contribute 0 to every sum, padded lanes are sliced away).
+    """
+    if th is None:
+        th = jnp.zeros((w.shape[1],), jnp.float32)
+    x = _pad_to(_pad_to(x.astype(jnp.float32), 0, BLOCK_B), 1, BLOCK_WL)
+    w = _pad_to(_pad_to(w.astype(jnp.float32), 0, BLOCK_WL), 1, BLOCK_SA)
+    th2 = _pad_to(th.astype(jnp.float32)[None, :], 1, BLOCK_SA)
+    (bp, wlp), sap = x.shape, w.shape[1]
+    nk = wlp // BLOCK_WL
+    out = pl.pallas_call(
+        functools.partial(_mac_kernel, binarized=binarized, nk=nk),
+        grid=(bp // BLOCK_B, sap // BLOCK_SA, nk),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, BLOCK_WL), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BLOCK_WL, BLOCK_SA), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, BLOCK_SA), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, BLOCK_SA), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, sap), jnp.float32),
+        interpret=True,
+    )(x, w, th2)
+    return out
+
+
+def cim_mac_trimmed(x, w, th=None, *, binarized: bool = True):
+    """`cim_mac` with the padding sliced back off (test-facing wrapper)."""
+    return cim_mac(x, w, th, binarized=binarized)[: x.shape[0], : w.shape[1]]
+
+
+def _conv_pool_kernel(cols_ref, w_ref, o_ref, *, nk: int):
+    """Fused conv + max-pool tile: the paper's conv/max-pool pipeline.
+
+    cols_ref: (2*BLOCK_B, BLOCK_WL) im2col rows (two conv rows per pooled
+    output row); w_ref: (BLOCK_WL, BLOCK_SA). The pooled max runs in VMEM in
+    the epilogue, so the un-pooled activations never reach HBM — the Pallas
+    rendering of Fig. 7 (pooling overlapped with convolution, no
+    intermediate store).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros((2 * BLOCK_B, BLOCK_SA), jnp.float32)
+
+    o_ref[...] += jnp.dot(
+        cols_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        a = jnp.where(o_ref[...] > 0, 1.0, 0.0)
+        pooled = jnp.maximum(a[0::2, :], a[1::2, :])
+        # Broadcast the pooled rows back into the (interleaved) tile; the
+        # wrapper reads every second row. Keeps the output block shape
+        # static across grid steps.
+        o_ref[...] = jnp.repeat(pooled, 2, axis=0)
+
+
+@jax.jit
+def cim_conv_pool(cols, w):
+    """Fused binarized MAC + 2:1 max-pool over row pairs.
+
+    cols: (2*n, wl) im2col rows in {0,1};  w: (wl, sa) in {-1,0,+1}.
+    Returns (n, sa) pooled binary activations.
+    """
+    n2 = cols.shape[0]
+    assert n2 % 2 == 0, "conv/pool pipeline consumes row pairs"
+    sa = w.shape[1]
+    cols = _pad_to(_pad_to(cols.astype(jnp.float32), 0, 2 * BLOCK_B), 1, BLOCK_WL)
+    w = _pad_to(_pad_to(w.astype(jnp.float32), 0, BLOCK_WL), 1, BLOCK_SA)
+    (bp, wlp), sap = cols.shape, w.shape[1]
+    nk = wlp // BLOCK_WL
+    out = pl.pallas_call(
+        functools.partial(_conv_pool_kernel, nk=nk),
+        grid=(bp // (2 * BLOCK_B), sap // BLOCK_SA, nk),
+        in_specs=[
+            pl.BlockSpec((2 * BLOCK_B, BLOCK_WL), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BLOCK_WL, BLOCK_SA), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (2 * BLOCK_B, BLOCK_SA), lambda i, j, k: (i, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((bp, sap), jnp.float32),
+        interpret=True,
+    )(cols, w)
+    return out[0 : n2 : 2, :sa]
+
+
+def im2col(x, k: int):
+    """(t, c) -> (t, k*c) tap-major/channel-minor im2col with symmetric
+    padding — identical flattening to the Rust weight mapper and ref.py."""
+    t, c = x.shape
+    pad = (k - 1) // 2
+    xp = jnp.pad(x, ((pad, k - 1 - pad), (0, 0)))
+    return jnp.stack([xp[i : i + t] for i in range(k)], axis=1).reshape(t, k * c)
+
+
+def conv1d_binary(x, w, th=None, *, binarized: bool = True):
+    """Binary 1-D convolution via the Pallas macro kernel.
+
+    x: (t, c_in) in {0,1};  w: (k, c_in, c_out) in {-1,+1};
+    th: (c_out,) SA reference levels (binarized path only).
+    """
+    t, c_in = x.shape
+    k, _, c_out = w.shape
+    cols = im2col(x, k)
+    out = cim_mac(cols, w.reshape(k * c_in, c_out), th, binarized=binarized)
+    return out[:t, :c_out]
+
+
+def conv1d_pool_binary(x, w):
+    """Binary conv + fused 2:1 max-pool (paper Fig. 7 pipeline)."""
+    t, c_in = x.shape
+    k, _, c_out = w.shape
+    cols = im2col(x, k)
+    return cim_conv_pool(cols, w.reshape(k * c_in, c_out))[:, :c_out]

@@ -1,0 +1,156 @@
+"""Pure-jnp correctness oracles for the CIMR-V compute path.
+
+Every Pallas kernel in this package has an oracle here; pytest asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated shapes.
+These functions are also the *semantic definition* shared with the Rust
+cycle-level CIM-macro model (``rust/src/cim/``): the Rust simulator must be
+bit-exact against them (binary values, integer-valued accumulations, strict
+``> 0`` binarization).
+
+Conventions (see DESIGN.md §3):
+  * input activations  IA ∈ {0, 1}        (post-ReLU binarized)
+  * weights            W  ∈ {-1, +1}      (binary) or {-1, 0, +1} (ternary)
+  * MAC sums are integer-valued (exact in f32 far below 2**24)
+  * binarize(s) = 1 if s > 0 else 0       (sense-amp threshold + ReLU fused)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# --- Macro geometry (paper §II-B) -------------------------------------------
+# X-mode: 1024 wordlines (inputs) x 256 sense amps (outputs)
+# Y-mode:  512 wordlines (inputs) x 512 sense amps (outputs)
+X_MODE_WL, X_MODE_SA = 1024, 256
+Y_MODE_WL, Y_MODE_SA = 512, 512
+MACRO_BITS = 512 * 1024  # 512 Kb array
+
+
+def binarize(s):
+    """Sense-amp output: threshold at zero, ReLU fused (paper §II-B)."""
+    return (s > 0).astype(jnp.float32)
+
+
+def ref_cim_mac(x, w):
+    """The macro's analog MAC, functionally: ``binarize(x @ w)``.
+
+    x: (batch, wl)  in {0,1};  w: (wl, sa) in {-1,0,+1}.
+    Returns (batch, sa) in {0,1}.
+    """
+    return binarize(x.astype(jnp.float32) @ w.astype(jnp.float32))
+
+
+def ref_cim_mac_raw(x, w):
+    """Macro MAC without the SA binarization (used by the final conv layer,
+    whose raw sums go to the high-precision RISC-V post-processing path)."""
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def ref_conv1d_binary(x, w, *, binarized: bool = True):
+    """Row-wise binary 1-D convolution with symmetric zero padding so the
+    time length is preserved — matches the Rust row-wise dataflow.
+
+    x: (t, c_in) in {0,1};  w: (k, c_in, c_out) in {-1,+1}.
+    Returns (t, c_out), binarized unless ``binarized=False``.
+
+    Implemented as an explicit im2col so the contraction axis (k*c_in) is
+    literally the macro wordline axis — the same flattening order
+    (tap-major, channel-minor) the Rust weight mapper uses.
+    """
+    t, c_in = x.shape
+    k, c_in2, c_out = w.shape
+    assert c_in == c_in2
+    pad = (k - 1) // 2
+    xp = jnp.pad(x, ((pad, k - 1 - pad), (0, 0)))
+    # im2col: (t, k*c_in), tap-major / channel-minor
+    cols = jnp.stack([xp[i : i + t] for i in range(k)], axis=1).reshape(t, k * c_in)
+    wf = w.reshape(k * c_in, c_out)
+    s = cols.astype(jnp.float32) @ wf.astype(jnp.float32)
+    return binarize(s) if binarized else s
+
+
+def ref_maxpool1d(x, pool: int = 2):
+    """Max pooling over time, stride == window. x: (t, c) -> (t//pool, c)."""
+    t, c = x.shape
+    tt = (t // pool) * pool
+    return x[:tt].reshape(t // pool, pool, c).max(axis=1)
+
+
+def ref_global_avg_pool(x):
+    """(t, c) -> (c,) — the high-precision RISC-V post-processing step."""
+    return x.mean(axis=0)
+
+
+def quantize_audio(audio):
+    """ADC model: float waveform -> integer-valued samples (11-bit + sign).
+
+    Stored as f32 holding exact integers so the whole preprocessing chain
+    below is *exact* in f32 arithmetic — bit-identical between JAX, the
+    Rust host reference and the integer-only RISC-V program on the ISS."""
+    return jnp.round(jnp.clip(audio, -1.0, 1.0) * 2048.0)
+
+
+def ref_highpass(audio):
+    """Integer pre-emphasis high-pass: y[t] = 32*x[t] - 31*x[t-1].
+
+    alpha = 31/32 = 0.96875 (vs the textbook 0.97): chosen so the filter is
+    exact integer arithmetic (values < 2^21, exact in f32) and the ibex-class
+    core computes it with shifts — the deployment-grade quantization any
+    edge flow applies. ``audio`` must be integer-valued (quantize_audio)."""
+    prev = jnp.concatenate([jnp.zeros((1,), audio.dtype), audio[:-1]])
+    return 32.0 * audio - 31.0 * prev
+
+
+def ref_frame_energy(audio, t: int, c: int):
+    """Deterministic framing + per-sample magnitude features:
+    (samples,) -> (t, c): feature[t, c] = |y[t*frame + c]|.
+
+    With 16000 samples, t=128 frames of 125 samples, the first c=64
+    samples of each frame feed the 64 feature channels. Integer-exact and
+    strided-reshape only, so it lowers to trivial HLO and has an exact
+    Rust/ISS mirror."""
+    n = audio.shape[0]
+    frame = n // t
+    x = audio[: t * frame].reshape(t, frame)
+    return jnp.abs(x[:, :c])
+
+
+def ref_batchnorm(x, gamma, beta, mean, var, eps: float = 1e-5):
+    """Inference-time BN with running stats. x: (t, c)."""
+    return gamma * (x - mean) / jnp.sqrt(var + eps) + beta
+
+
+def ref_quantize_binary(x):
+    """Preprocessing quantizer: BN output -> {0,1} activations."""
+    return (x > 0).astype(jnp.float32)
+
+
+def ref_preprocess(audio, gamma, beta, mean, var, *, t: int, c: int):
+    """Full paper Table-II preprocessing: quantize (ADC), high-pass,
+    features, BN, binarize. ``audio`` is the raw float waveform."""
+    filtered = ref_highpass(quantize_audio(audio))
+    feats = ref_frame_energy(filtered, t, c)
+    return ref_quantize_binary(ref_batchnorm(feats, gamma, beta, mean, var))
+
+
+def bn_fold_thresholds(gamma, beta, mean, var, eps: float = 1e-5):
+    """Fold inference BN + binarize into per-channel integer compares.
+
+    bit = gamma*(f-mean)/std + beta > 0  with integer features f is
+      gamma > 0:  f >  tau   where tau = mean - beta*std/gamma
+      gamma < 0:  f <  tau
+      gamma = 0:  bit = (beta > 0) constant
+    Returns (int_threshold floor(tau), direction) per channel, the exact
+    integer comparison the RISC-V program performs: `f > floor(tau)` is
+    equivalent to `f > tau` for integer f when tau is not an integer;
+    ties are broken identically because floor is computed in f64 here."""
+    import numpy as np
+
+    g = np.asarray(gamma, np.float64)
+    b = np.asarray(beta, np.float64)
+    m = np.asarray(mean, np.float64)
+    s = np.sqrt(np.asarray(var, np.float64) + eps)
+    tau = m - b * s / np.where(g == 0, 1.0, g)
+    thr = np.floor(tau).astype(np.int64)
+    direction = np.sign(g).astype(np.int64)  # +1: f>tau, -1: f<tau, 0: const
+    return thr, direction

@@ -1,0 +1,230 @@
+"""L2: the CIMR-V keyword-spotting model (paper Table II) in JAX.
+
+Topology (Table II):
+    preprocessing        high-pass filter, sub-band energy features, BN,
+                         quantize to {0,1}            (RISC-V, high precision)
+    convolution in CIM   (binary conv1d k=3 + max-pool 2:1) x 5
+    weight fusion        weight update (layers 6-7 streamed from DRAM while
+                         layers 1-5 compute; a *scheduling* event — the math
+                         here is unchanged)
+    convolution in CIM   conv, max-pool, conv (final conv emits raw sums)
+    post-processing      global average pooling       (RISC-V, high precision)
+
+Two forward paths share one set of quantized weights:
+  * ``forward``       — inference path, built on the L1 Pallas kernels; this
+                        is what ``aot.py`` lowers to HLO for the Rust runtime
+                        (the bit-exact golden model for the cycle simulator).
+  * ``forward_train`` — straight-through-estimator path for training the
+                        binary weights (pure jnp; never shipped).
+
+The channel plan keeps every layer inside one X-mode mapping of the macro
+(k*c_in <= 1024 wordlines, c_out <= 256 sense amps) and makes layers 1-5
+(372 Kb) fill the 512 Kb weight SRAM while layers 6-7 (201 Kb) must be
+streamed — which is exactly what makes weight fusion worth measuring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cim_conv, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class KwsConfig:
+    """Dimensions of the keyword-spotting model (paper Table II + §III-A)."""
+
+    audio_len: int = 16000        # 1 s @ 16 kHz
+    t: int = 128                  # frames
+    c: int = 64                   # feature channels
+    n_classes: int = 12           # GSCD 12-way
+    kernel: int = 3
+    # (c_in, c_out) per conv layer; pool follows layers 0-4 and 5.
+    # Sized so every layer fits one X-mode macro mapping (k*c_in <= 1024,
+    # c_out <= 256) AND the full weight-stream set (signs + thresholds,
+    # ~45 KiB) fits the 512 Kb weight SRAM — the premise of the weight
+    # fusion flow (all DRAM traffic prefetched behind compute, Fig. 8).
+    channels: tuple = ((64, 64), (64, 128), (128, 128), (128, 256),
+                       (256, 128), (128, 128), (128, 12))
+    fusion_split: int = 5         # layers [0,5) resident; [5,7) weight-fused
+
+    @property
+    def conv_shapes(self):
+        return [(self.kernel, ci, co) for ci, co in self.channels]
+
+    def weight_bits(self, layer: int) -> int:
+        k, ci, co = self.conv_shapes[layer]
+        return k * ci * co
+
+    @property
+    def resident_bits(self) -> int:
+        return sum(self.weight_bits(i) for i in range(self.fusion_split))
+
+    @property
+    def streamed_bits(self) -> int:
+        return sum(
+            self.weight_bits(i)
+            for i in range(self.fusion_split, len(self.channels))
+        )
+
+
+CONFIG = KwsConfig()
+
+
+def init_params(key, cfg: KwsConfig = CONFIG):
+    """Latent float parameters (binarized by sign() in both forward paths).
+
+    ``th{i}`` are per-output-channel sense-amp reference levels for the
+    binarized layers 0..n-2: the macro [7] this chip integrates exposes a
+    configurable SA reference, and folding the (digital) BN affine into
+    that threshold is the standard BNN deployment trick — at inference the
+    comparison is ``sum > th`` with an *integer* th (see quantize_params).
+    The final raw-sum layer has no threshold (its sums go to the RISC-V
+    GAP at full precision)."""
+    params = {}
+    for i, (k, ci, co) in enumerate(cfg.conv_shapes):
+        key, sub = jax.random.split(key)
+        params[f"conv{i}"] = jax.random.normal(sub, (k, ci, co)) * 0.1
+        if i < len(cfg.conv_shapes) - 1:
+            params[f"th{i}"] = jnp.zeros((co,))
+    params["bn_gamma"] = jnp.ones((cfg.c,))
+    params["bn_beta"] = jnp.zeros((cfg.c,))
+    params["bn_mean"] = jnp.zeros((cfg.c,))
+    params["bn_var"] = jnp.ones((cfg.c,))
+    return params
+
+
+def quantize_params(params, cfg: KwsConfig = CONFIG):
+    """Latent floats -> what the chip actually holds: binary {-1,+1}
+    weights and *integer* SA thresholds (binary-MAC sums are integers, so
+    an integer reference loses nothing after rounding).
+
+    BN running stats stay float (preprocessing runs on the RISC-V core at
+    high precision, per Fig. 10)."""
+    out = dict(params)
+    for i in range(len(cfg.conv_shapes)):
+        out[f"conv{i}"] = jnp.where(params[f"conv{i}"] >= 0, 1.0, -1.0)
+        if f"th{i}" in params:
+            # Latent thresholds live in fan-in-normalized units (the
+            # training path compares s/sqrt(n) > th~); the silicon compares
+            # raw integer sums, so map back: th = round(th~ * sqrt(n)).
+            k, ci, _ = cfg.conv_shapes[i]
+            out[f"th{i}"] = jnp.round(params[f"th{i}"] * jnp.sqrt(float(k * ci)))
+    return out
+
+
+# --- Straight-through estimators (training only) -----------------------------
+
+@jax.custom_vjp
+def sign_ste(w):
+    return jnp.where(w >= 0, 1.0, -1.0)
+
+
+def _sign_fwd(w):
+    return sign_ste(w), w
+
+
+def _sign_bwd(w, g):
+    # Clipped straight-through: pass gradient where |w| <= 1.
+    return (g * (jnp.abs(w) <= 1.0),)
+
+
+sign_ste.defvjp(_sign_fwd, _sign_bwd)
+
+
+@jax.custom_vjp
+def binarize_ste(x):
+    return (x > 0).astype(jnp.float32)
+
+
+def _bin_fwd(x):
+    return binarize_ste(x), x
+
+
+def _bin_bwd(x, g):
+    # Hard-sigmoid surrogate window. The training path feeds this
+    # *fan-in-normalized* pre-activations (unit-ish variance), so the
+    # classic |x| <= 1 window is correctly scaled.
+    return (g * (jnp.abs(x) <= 1.0),)
+
+
+binarize_ste.defvjp(_bin_fwd, _bin_bwd)
+
+
+# --- Forward paths -----------------------------------------------------------
+
+def preprocess(audio, params, cfg: KwsConfig = CONFIG):
+    """RISC-V preprocessing stage (high precision)."""
+    return ref.ref_preprocess(
+        audio, params["bn_gamma"], params["bn_beta"], params["bn_mean"],
+        params["bn_var"], t=cfg.t, c=cfg.c,
+    )
+
+
+def _conv_stack(x, weights, thresholds, cfg: KwsConfig, conv, pool):
+    """Shared layer schedule: 5x(conv+pool), [weight fusion], conv, pool,
+    conv(raw). ``conv``/``pool`` are injected so the train / Pallas /
+    reference paths share one definition of the topology."""
+    n = len(cfg.conv_shapes)
+    for i in range(n - 1):
+        # (layers >= fusion_split were streamed in by weight fusion; a
+        # scheduling event only — the math is identical)
+        x = pool(conv(x, weights[i], thresholds[i]))
+    x = conv(x, weights[n - 1], None)  # raw sums for the RISC-V GAP
+    return x
+
+
+def forward(params, audio, cfg: KwsConfig = CONFIG, *, use_pallas: bool = True):
+    """Inference with hard-binary weights/activations.
+
+    ``params`` must already be quantized (see ``quantize_params``); this is
+    the function AOT-lowered for the Rust golden runtime. Returns the
+    (n_classes,) raw logits produced by the RISC-V global average pooling.
+    """
+    x = preprocess(audio, params, cfg)
+    n = len(cfg.conv_shapes)
+    weights = [params[f"conv{i}"] for i in range(n)]
+    thresholds = [params[f"th{i}"] for i in range(n - 1)] + [None]
+    if use_pallas:
+        def conv(x, w, th):
+            # threshold fused in the kernel epilogue (SA reference compare)
+            return cim_conv.conv1d_binary(x, w, th, binarized=th is not None)
+    else:
+        def conv(x, w, th):
+            s = ref.ref_conv1d_binary(x, w, binarized=False)
+            return s if th is None else ref.binarize(s - th)
+
+    x = _conv_stack(x, weights, thresholds, cfg, conv, ref.ref_maxpool1d)
+    return ref.ref_global_avg_pool(x)
+
+
+def forward_train(params, audio, cfg: KwsConfig = CONFIG):
+    """Training path: latent float params, STE through both quantizers.
+
+    Pre-activations are normalized by sqrt(fan-in) so they are unit-ish
+    variance at every depth — the standard way to keep a deep BNN
+    trainable without inter-layer BN (which the silicon doesn't have).
+    The normalization commutes with the hard compare, so inference still
+    uses raw integer sums (see quantize_params)."""
+    x = preprocess(audio, params, cfg)
+    n = len(cfg.conv_shapes)
+
+    def conv(x, w, th):
+        s = ref.ref_conv1d_binary(x, sign_ste(w), binarized=False)
+        z = s / jnp.sqrt(float(w.shape[0] * w.shape[1]))
+        return z if th is None else binarize_ste(z - th)
+
+    weights = [params[f"conv{i}"] for i in range(n)]
+    thresholds = [params[f"th{i}"] for i in range(n - 1)] + [None]
+    x = _conv_stack(x, weights, thresholds, cfg, conv, ref.ref_maxpool1d)
+    return ref.ref_global_avg_pool(x)
+
+
+def predict(params, audio_batch, cfg: KwsConfig = CONFIG):
+    """Batched hard-binary inference (reference path; fast on CPU)."""
+    return jax.vmap(lambda a: forward(params, a, cfg, use_pallas=False))(
+        audio_batch
+    )

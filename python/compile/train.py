@@ -1,0 +1,139 @@
+"""Train the binary KWS model on the synthetic GSCD corpus (STE + Adam).
+
+Build-time only: produces the latent weights that ``aot.py`` quantizes and
+exports. Hand-rolled Adam (optax is not in the image). Run:
+
+    cd python && python -m compile.train --steps 400 --out ../artifacts/kws_params.npz
+
+The loss curve and final train/test accuracy are printed and recorded in
+EXPERIMENTS.md (§III-A accuracy row).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def loss_fn(params, audio, labels, cfg):
+    logits = jax.vmap(lambda a: model.forward_train(params, a, cfg))(audio)
+    # Logits are fan-in-normalized GAP sums (unit-ish scale); sharpen the
+    # softmax a little. The scale folds away under argmax at inference.
+    return cross_entropy(logits * 3.0, labels)
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def accuracy(params, audio, labels, cfg, batch=256):
+    """Hard-binary (deployment-path) accuracy."""
+    qp = model.quantize_params(params, cfg)
+    hits = 0
+    for i in range(0, len(labels), batch):
+        logits = model.predict(qp, jnp.asarray(audio[i : i + batch]), cfg)
+        hits += int((jnp.argmax(logits, -1) == labels[i : i + batch]).sum())
+    return hits / len(labels)
+
+
+def train(
+    steps: int = 400,
+    batch: int = 64,
+    lr: float = 1e-3,
+    seed: int = 0,
+    n_train: int = 1536,
+    n_test: int = 384,
+    noise: float = 0.35,
+    log_every: int = 20,
+    cfg: model.KwsConfig = model.CONFIG,
+):
+    """Returns (params, history dict)."""
+    print(f"generating synthetic GSCD: {n_train} train / {n_test} test")
+    train_audio, train_labels = data.make_dataset(n_train, seed=seed, noise=noise)
+    test_audio, test_labels = data.make_dataset(n_test, seed=seed + 1, noise=noise)
+
+    params = model.init_params(jax.random.key(seed), cfg)
+    mean, var = data.feature_stats(train_audio, cfg.t, cfg.c)
+    params["bn_mean"] = jnp.asarray(mean)
+    params["bn_var"] = jnp.asarray(var)
+
+    step_fn = jax.jit(
+        lambda p, a, l: jax.value_and_grad(loss_fn)(p, a, l, cfg)
+    )
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    history = {"step": [], "loss": []}
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, n_train, size=batch)
+        loss, grads = step_fn(
+            params, jnp.asarray(train_audio[idx]), jnp.asarray(train_labels[idx])
+        )
+        # BN stats are frozen running stats, not trained.
+        for k in ("bn_mean", "bn_var"):
+            grads[k] = jnp.zeros_like(grads[k])
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        # BinaryConnect-style latent clipping: keep weights inside the
+        # sign_ste pass-through window, or their gradients die and the
+        # run diverges (observed: collapse after ~300 steps without this).
+        for i in range(len(cfg.conv_shapes)):
+            params[f"conv{i}"] = jnp.clip(params[f"conv{i}"], -1.0, 1.0)
+        history["step"].append(step)
+        history["loss"].append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:4d}  loss {float(loss):.4f}  ({time.time()-t0:.1f}s)")
+    train_acc = accuracy(params, train_audio[:512], train_labels[:512], cfg)
+    test_acc = accuracy(params, test_audio, test_labels, cfg)
+    print(f"train acc (hard-binary) {train_acc*100:.2f}%  test acc {test_acc*100:.2f}%")
+    history["train_acc"] = train_acc
+    history["test_acc"] = test_acc
+    return params, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--noise", type=float, default=0.35)
+    ap.add_argument("--out", default="../artifacts/kws_params.npz")
+    ap.add_argument("--history", default="../artifacts/train_history.json")
+    args = ap.parse_args()
+    params, history = train(
+        steps=args.steps, batch=args.batch, lr=args.lr, seed=args.seed,
+        noise=args.noise,
+    )
+    np.savez(args.out, **{k: np.asarray(v) for k, v in params.items()})
+    with open(args.history, "w") as f:
+        json.dump(history, f)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+This is the CORE correctness signal for the compute layer: hypothesis
+sweeps shapes/densities and asserts bit-exact agreement (binary values and
+integer-valued sums make exact equality the right check, not allclose)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cim_conv, ref
+
+
+def _bits(rng, shape, density=0.5):
+    return (rng.random(shape) < density).astype(np.float32)
+
+
+def _weights(rng, shape, ternary=False):
+    vals = [-1.0, 0.0, 1.0] if ternary else [-1.0, 1.0]
+    return rng.choice(vals, size=shape).astype(np.float32)
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 40),      # batch rows
+    st.integers(1, 520),     # wordlines
+    st.integers(1, 140),     # sense amps
+    st.integers(0, 2**31 - 1),
+    st.floats(0.05, 0.95),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.booleans(), st.booleans())
+def test_cim_mac_matches_ref(dims, binarized, ternary):
+    b, wl, sa, seed, density = dims
+    rng = np.random.default_rng(seed)
+    x = _bits(rng, (b, wl), density)
+    w = _weights(rng, (wl, sa), ternary)
+    got = cim_conv.cim_mac_trimmed(jnp.asarray(x), jnp.asarray(w), binarized=binarized)
+    want = (
+        ref.ref_cim_mac(jnp.asarray(x), jnp.asarray(w))
+        if binarized
+        else ref.ref_cim_mac_raw(jnp.asarray(x), jnp.asarray(w))
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(2, 32).map(lambda n: 2 * n),  # even t
+    st.integers(1, 96),
+    st.integers(1, 64),
+    st.sampled_from([1, 3, 5]),
+    st.integers(0, 2**31 - 1),
+)
+def test_conv1d_binary_matches_ref(t, c_in, c_out, k, seed):
+    rng = np.random.default_rng(seed)
+    x = _bits(rng, (t, c_in))
+    w = _weights(rng, (k, c_in, c_out))
+    got = cim_conv.conv1d_binary(jnp.asarray(x), jnp.asarray(w))
+    want = ref.ref_conv1d_binary(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(2, 24).map(lambda n: 2 * n),
+    st.integers(1, 64),
+    st.integers(1, 48),
+    st.integers(0, 2**31 - 1),
+)
+def test_conv_pool_pipeline_matches_unfused(t, c_in, c_out, seed):
+    """The fused conv+maxpool kernel (Fig. 7 pipeline) must equal the
+    unfused conv-then-pool composition exactly."""
+    rng = np.random.default_rng(seed)
+    x = _bits(rng, (t, c_in))
+    w = _weights(rng, (3, c_in, c_out))
+    got = cim_conv.conv1d_pool_binary(jnp.asarray(x), jnp.asarray(w))
+    want = ref.ref_maxpool1d(ref.ref_conv1d_binary(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_macro_geometry_xmode():
+    """Full X-mode tile: 1024 wordlines x 256 sense amps — one macro fire."""
+    rng = np.random.default_rng(0)
+    x = _bits(rng, (8, ref.X_MODE_WL))
+    w = _weights(rng, (ref.X_MODE_WL, ref.X_MODE_SA))
+    got = cim_conv.cim_mac_trimmed(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.ref_cim_mac(jnp.asarray(x), jnp.asarray(w)))
+    )
+
+
+def test_macro_geometry_ymode():
+    """Y-mode tile: 512 wordlines x 512 sense amps."""
+    rng = np.random.default_rng(1)
+    x = _bits(rng, (8, ref.Y_MODE_WL))
+    w = _weights(rng, (ref.Y_MODE_WL, ref.Y_MODE_SA))
+    got = cim_conv.cim_mac_trimmed(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.ref_cim_mac(jnp.asarray(x), jnp.asarray(w)))
+    )
+
+
+def test_binarize_is_strict_threshold():
+    """binarize(0) == 0 (strict >): the SA threshold convention shared with
+    the Rust macro model; a mismatch here would silently skew everything."""
+    s = jnp.asarray([-2.0, -1.0, 0.0, 1.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(ref.binarize(s)), [0, 0, 0, 1, 1])
+
+
+def test_all_zero_and_all_one_inputs():
+    rng = np.random.default_rng(3)
+    w = _weights(rng, (64, 32))
+    zero = jnp.zeros((4, 64))
+    one = jnp.ones((4, 64))
+    np.testing.assert_array_equal(
+        np.asarray(cim_conv.cim_mac_trimmed(zero, jnp.asarray(w))), np.zeros((4, 32))
+    )
+    want = ref.ref_cim_mac(one, jnp.asarray(w))
+    np.testing.assert_array_equal(
+        np.asarray(cim_conv.cim_mac_trimmed(one, jnp.asarray(w))), np.asarray(want)
+    )
+
+
+def test_im2col_flattening_order():
+    """Tap-major / channel-minor: position p, tap j, channel c lands at
+    column j*c_in + c — the exact contract rust/src/cim/weight_map.rs uses."""
+    t, c_in, k = 6, 4, 3
+    x = jnp.arange(t * c_in, dtype=jnp.float32).reshape(t, c_in)
+    cols = cim_conv.im2col(x, k)
+    assert cols.shape == (t, k * c_in)
+    # Row 2 sees taps at t=1,2,3 (pad=1): tap j corresponds to x[2+j-1].
+    for j in range(k):
+        np.testing.assert_array_equal(
+            np.asarray(cols[2, j * c_in : (j + 1) * c_in]), np.asarray(x[1 + j])
+        )

@@ -1,0 +1,195 @@
+"""L2 correctness: model topology, preprocessing, quantization, STE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = model.CONFIG
+    p = model.init_params(jax.random.key(0), cfg)
+    audio, _ = data.make_dataset(8, seed=7)
+    mean, var = data.feature_stats(audio, cfg.t, cfg.c)
+    p["bn_mean"] = jnp.asarray(mean)
+    p["bn_var"] = jnp.asarray(var)
+    return p
+
+
+@pytest.fixture(scope="module")
+def qparams(params):
+    return model.quantize_params(params)
+
+
+@pytest.fixture(scope="module")
+def audio():
+    a, _ = data.make_dataset(2, seed=3)
+    return jnp.asarray(a[0])
+
+
+def test_config_fits_macro():
+    """Every layer must fit one X-mode macro mapping (DESIGN.md §3)."""
+    cfg = model.CONFIG
+    for k, ci, co in cfg.conv_shapes:
+        assert k * ci <= ref.X_MODE_WL, "wordlines overflow"
+        assert co <= ref.X_MODE_SA, "sense amps overflow"
+
+
+def test_config_weight_sram_split():
+    """Resident layers fill <=512Kb weight SRAM; streamed layers exist —
+    the premise of the weight-fusion experiment (Fig. 9)."""
+    cfg = model.CONFIG
+    assert cfg.resident_bits <= 512 * 1024
+    assert cfg.streamed_bits > 0
+    assert cfg.streamed_bits <= 512 * 1024
+    # Table II: 7 convs = 5 + (conv, pool, conv)
+    assert len(cfg.conv_shapes) == 7 and cfg.fusion_split == 5
+
+
+def test_forward_shapes(qparams, audio):
+    logits = model.forward(qparams, audio, use_pallas=False)
+    assert logits.shape == (model.CONFIG.n_classes,)
+
+
+def test_pallas_and_ref_paths_bit_exact(qparams, audio):
+    lp = model.forward(qparams, audio, use_pallas=True)
+    lr = model.forward(qparams, audio, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(lp), np.asarray(lr))
+
+
+def test_quantize_params_is_binary(qparams):
+    for i in range(len(model.CONFIG.conv_shapes)):
+        w = np.asarray(qparams[f"conv{i}"])
+        assert set(np.unique(w)) <= {-1.0, 1.0}
+
+
+def test_preprocess_output_is_binary(params, audio):
+    x = model.preprocess(audio, params)
+    assert x.shape == (model.CONFIG.t, model.CONFIG.c)
+    assert set(np.unique(np.asarray(x))) <= {0.0, 1.0}
+
+
+def test_train_step_decreases_loss():
+    """A few STE steps on one batch must reduce the loss (gradient sanity)."""
+    from compile import train
+
+    cfg = model.CONFIG
+    a, l = data.make_dataset(32, seed=11)
+    p = model.init_params(jax.random.key(1), cfg)
+    mean, var = data.feature_stats(a, cfg.t, cfg.c)
+    p["bn_mean"] = jnp.asarray(mean)
+    p["bn_var"] = jnp.asarray(var)
+    step = jax.jit(lambda p, a, l: jax.value_and_grad(train.loss_fn)(p, a, l, cfg))
+    opt = train.adam_init(p)
+    a, l = jnp.asarray(a), jnp.asarray(l)
+    loss0, _ = step(p, a, l)
+    for _ in range(8):
+        loss, g = step(p, a, l)
+        for k in ("bn_mean", "bn_var"):
+            g[k] = jnp.zeros_like(g[k])
+        p, opt = train.adam_update(p, g, opt, lr=3e-3)
+    loss1, _ = step(p, a, l)
+    assert float(loss1) < float(loss0)
+
+
+def test_ste_gradients_nonzero():
+    cfg = model.CONFIG
+    a, l = data.make_dataset(4, seed=5)
+    p = model.init_params(jax.random.key(2), cfg)
+    from compile import train
+
+    _, g = jax.value_and_grad(train.loss_fn)(p, jnp.asarray(a), jnp.asarray(l), cfg)
+    total = sum(float(jnp.abs(g[f"conv{i}"]).sum()) for i in range(7))
+    assert total > 0.0, "STE must pass gradients to latent weights"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 11), st.integers(0, 2**31 - 1))
+def test_dataset_envelope_determinism(label, seed):
+    """Class envelopes are deterministic; utterances vary with the rng."""
+    e1 = data.class_envelope(label)
+    e2 = data.class_envelope(label)
+    np.testing.assert_array_equal(e1, e2)
+    rng = np.random.default_rng(seed)
+    u = data.make_utterance(label, rng)
+    assert u.shape == (data.AUDIO_LEN,) and u.dtype == np.float32
+
+
+def test_dataset_balanced():
+    _, labels = data.make_dataset(120, seed=0)
+    counts = np.bincount(labels, minlength=12)
+    assert (counts == 10).all()
+
+
+def test_feature_stats_match_ref():
+    """The numpy preprocessing mirror must be bit-identical to the jnp
+    reference chain (quantize -> highpass -> frame features)."""
+    cfg = model.CONFIG
+    a, _ = data.make_dataset(4, seed=9)
+    feats_ref = np.stack(
+        [
+            np.asarray(
+                ref.ref_frame_energy(
+                    ref.ref_highpass(ref.quantize_audio(jnp.asarray(x))), cfg.t, cfg.c
+                )
+            )
+            for x in a
+        ]
+    )
+    feats_np = data.preprocess_features(a, cfg.t, cfg.c)
+    np.testing.assert_array_equal(feats_np, feats_ref)
+
+
+def test_features_are_integer_valued():
+    """Integer-exact preprocessing: every feature is an exact integer (the
+    premise of the bit-exact ISS preprocessing and BN threshold folding)."""
+    a, _ = data.make_dataset(2, seed=3)
+    f = data.preprocess_features(a)
+    np.testing.assert_array_equal(f, np.round(f))
+
+
+def test_bn_fold_matches_float_bn():
+    """Folded integer thresholds reproduce the float BN+binarize bits."""
+    rng = np.random.default_rng(0)
+    a, _ = data.make_dataset(4, seed=5)
+    f = data.preprocess_features(a).reshape(-1, 64)
+    gamma = rng.normal(size=64).astype(np.float32)
+    beta = rng.normal(size=64).astype(np.float32)
+    mean, var = data.feature_stats(a)
+    bits_float = np.asarray(
+        ref.ref_quantize_binary(
+            ref.ref_batchnorm(jnp.asarray(f), gamma, beta, mean, var)
+        )
+    )
+    thr, direction = ref.bn_fold_thresholds(gamma, beta, mean, var)
+    fi = f.astype(np.int64)
+    bits_int = np.where(
+        direction[None, :] > 0,
+        fi > thr[None, :],
+        np.where(direction[None, :] < 0, fi < thr[None, :] + 1, beta[None, :] > 0),
+    ).astype(np.float32)
+    np.testing.assert_array_equal(bits_int, bits_float)
+
+
+def test_maxpool_odd_tail_dropped():
+    x = jnp.asarray(np.arange(10, dtype=np.float32).reshape(5, 2))
+    out = ref.ref_maxpool1d(x, 2)
+    assert out.shape == (2, 2)
+    np.testing.assert_array_equal(np.asarray(out), [[2, 3], [6, 7]])
+
+
+def test_highpass_dc_vs_nyquist_gain():
+    """Pre-emphasis: DC gain (|32x-31x| = |x|) is 63x below Nyquist gain
+    (alternating signal -> |±63x|)."""
+    dc = jnp.full((100,), 100.0)
+    y_dc = np.asarray(ref.ref_highpass(dc))
+    alt = jnp.asarray([100.0, -100.0] * 50)
+    y_alt = np.asarray(ref.ref_highpass(alt))
+    assert abs(y_dc[1:]).max() == 100.0          # 32*100 - 31*100
+    assert abs(y_alt[1:]).max() == 6300.0        # 32*100 + 31*100
+    assert abs(y_alt[1:]).max() / abs(y_dc[1:]).max() == 63.0

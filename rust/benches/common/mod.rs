@@ -1,0 +1,33 @@
+//! Shared bench harness (criterion is not in the offline image): a tiny
+//! timing loop plus the standard model/audio setup all benches share.
+
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::build_kws_program;
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::{dataset, KwsModel};
+use cimrv::sim::{RunResult, Soc};
+
+/// Time a closure `iters` times; returns (mean seconds, result of last).
+pub fn time_it<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut out = None;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        out = Some(f());
+    }
+    (t0.elapsed().as_secs_f64() / iters as f64, out.unwrap())
+}
+
+pub fn model() -> KwsModel {
+    KwsModel::load_default().expect("run `make artifacts` first")
+}
+
+pub fn audio(model: &KwsModel, label: usize, seed: u64) -> Vec<f32> {
+    dataset::synth_utterance(label, seed, model.audio_len, 0.37)
+}
+
+/// One simulated inference at an opt level.
+pub fn run_once(model: &KwsModel, opt: OptLevel, audio: &[f32]) -> RunResult {
+    let prog = build_kws_program(model, opt).expect("codegen");
+    let mut soc = Soc::new(prog, DramConfig::default()).expect("soc");
+    soc.infer(audio).expect("inference")
+}

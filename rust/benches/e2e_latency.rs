@@ -1,0 +1,56 @@
+//! §III-A headline — end-to-end latency waterfall: baseline -> +layer
+//! fusion -> +weight fusion -> +conv/pool pipeline (the paper's cumulative
+//! ordering; 85.14% total reduction on its model/testbed).
+
+mod common;
+
+use cimrv::baselines::OptLevel;
+use cimrv::coordinator::report::{render_ladder, LadderPoint};
+
+fn main() {
+    let model = common::model();
+    let audio = common::audio(&model, 3, 1);
+    let mut points = Vec::new();
+    for (name, opt) in OptLevel::ladder() {
+        let r = common::run_once(&model, opt, &audio);
+        points.push(LadderPoint::from_run(name, opt, &r));
+    }
+    println!("=== §III-A: end-to-end latency waterfall ===");
+    println!("{}", render_ladder(&points));
+    let base = points[0].accelerated_cycles as f64;
+    let full = points[3].accelerated_cycles as f64;
+    println!(
+        "total accelerated-phase reduction: {:.2}% (paper: 85.14%)",
+        100.0 * (1.0 - full / base)
+    );
+    // Wall-clock of the simulator itself (host-side throughput).
+    let (secs, _) = common::time_it(3, || common::run_once(&model, OptLevel::FULL, &audio));
+    println!("simulator speed: {:.2} ms host-time per inference", 1e3 * secs);
+    dram_sweep(&model, &audio);
+}
+
+/// DRAM-bandwidth sensitivity (DESIGN.md §8 calls the bridge bandwidth a
+/// calibration choice — this sweep shows the waterfall's dependence on it).
+fn dram_sweep(model: &cimrv::model::KwsModel, audio: &[f32]) {
+    use cimrv::compiler::build_kws_program;
+    use cimrv::mem::dram::DramConfig;
+    use cimrv::sim::Soc;
+    println!("\n=== ablation: DRAM bridge bandwidth sensitivity ===");
+    println!("{:<18}{:>18}{:>18}{:>14}", "bytes/cycle", "baseline accel", "full accel", "reduction");
+    for bpc in [1u64, 2, 4, 8] {
+        let cfg = DramConfig { bytes_per_cycle: bpc, ..DramConfig::default() };
+        let mut accel = [0u64; 2];
+        for (k, opt) in [(0, OptLevel::BASELINE), (1, OptLevel::FULL)] {
+            let prog = build_kws_program(model, opt).unwrap();
+            let mut soc = Soc::new(prog, cfg.clone()).unwrap();
+            accel[k] = soc.infer(audio).unwrap().phases.accelerated();
+        }
+        println!(
+            "{:<18}{:>18}{:>18}{:>13.2}%",
+            bpc,
+            accel[0],
+            accel[1],
+            100.0 * (1.0 - accel[1] as f64 / accel[0] as f64)
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! §Perf microbenchmarks: the simulator's own hot paths — macro fire
+//! (bit-parallel popcount MAC), ISS instruction throughput, and compiled
+//! program build time. Used for the before/after log in EXPERIMENTS.md.
+
+mod common;
+
+use cimrv::baselines::OptLevel;
+use cimrv::cim::{weight_map, CimMacro, Mode};
+use cimrv::compiler::build_kws_program;
+use cimrv::util::rng::Rng;
+
+fn main() {
+    // --- macro fire throughput, full window vs layer-sized window -------
+    let mut rng = Rng::new(1);
+    let mut m = CimMacro::new();
+    let img = weight_map::WeightImage::from_layer(Mode::X, 1024, 256, |_, _| 1, &vec![0; 256]);
+    m.load_image(&img).unwrap();
+    for _ in 0..32 {
+        m.shift_in(rng.next_u32());
+    }
+    for (name, window) in [("window=32 (full array)", 32u8), ("window=6 (L0-sized)", 6)] {
+        m.cfg.window_words = window;
+        let iters = 20_000;
+        let (secs, _) = common::time_it(iters, || {
+            m.shift_in(rng.next_u32());
+            m.fire();
+            m.raw_sum(0)
+        });
+        println!(
+            "macro fire {name}: {:.2} us/fire ({:.1} Mfires/s, {:.1} GMAC/s simulated)",
+            1e6 * secs,
+            1e-6 / secs,
+            1e-9 * Mode::X.macs_per_fire() as f64 / secs
+        );
+    }
+
+    // --- ISS throughput on the real workload ----------------------------
+    let model = common::model();
+    let audio = common::audio(&model, 3, 1);
+    let (secs, r) = common::time_it(3, || common::run_once(&model, OptLevel::FULL, &audio));
+    println!(
+        "ISS end-to-end: {:.1} ms host per inference = {:.2} Minstr/s ({} instr, {} cycles)",
+        1e3 * secs,
+        1e-6 * r.instret as f64 / secs,
+        r.instret,
+        r.cycles
+    );
+
+    // --- codegen cost ----------------------------------------------------
+    let (secs, prog) = common::time_it(10, || build_kws_program(&model, OptLevel::FULL).unwrap());
+    println!(
+        "codegen: {:.2} ms for {} instructions ({} KiB)",
+        1e3 * secs,
+        prog.imem.len(),
+        prog.imem_bytes() / 1024
+    );
+}

@@ -1,0 +1,73 @@
+//! Table I — comparison with prior SRAM-CIM designs: published numbers +
+//! the normalization footnote math (computed, not transcribed), plus this
+//! reproduction's measured energy efficiency (peak-calibrated and
+//! end-to-end) and synthetic-GSCD accuracy. Also the §II-B variation
+//! ablation (symmetric vs single-ended weight mapping).
+
+mod common;
+
+use cimrv::baselines::{comparison, OptLevel};
+use cimrv::cim::{Mode, VariationModel};
+use cimrv::compiler::build_kws_program;
+use cimrv::energy::tops::peak_tops;
+use cimrv::energy::EnergyTable;
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::reference;
+use cimrv::sim::Soc;
+
+fn main() {
+    let model = common::model();
+    let audio = common::audio(&model, 0, 7);
+    let r = common::run_once(&model, OptLevel::FULL, &audio);
+
+    // Accuracy over synthetic-GSCD eval vectors (host reference — bit
+    // exact vs the ISS, demonstrated by the integration tests).
+    let dir = cimrv::util::io::artifacts_dir().unwrap();
+    let eval =
+        cimrv::model::dataset::Dataset::load_eval(&dir, model.audio_len, model.n_classes).unwrap();
+    let mut hits = 0;
+    for i in 0..eval.len() {
+        let l = reference::infer(&model, eval.utterance(i));
+        if reference::argmax(&l) == eval.labels[i] as usize {
+            hits += 1;
+        }
+    }
+    let acc = 100.0 * hits as f64 / eval.len() as f64;
+
+    println!("=== Table I: comparison with SRAM-based CIM designs ===");
+    println!("{}", comparison::render_table1(Some(r.energy.tops_per_w()), Some(acc)));
+    println!(
+        "peak (architectural): {:.4} TOPS @50 MHz, {:.2} TOPS/W calibrated",
+        peak_tops(Mode::X),
+        {
+            let t = EnergyTable::default();
+            peak_tops(Mode::X) / (t.peak_cycle_pj() * 1e-12 * 50e6)
+        }
+    );
+    println!("macro utilization this run: {:.2}%", 100.0 * r.energy.macs as f64
+        / (r.cycles as f64 * Mode::X.macs_per_fire() as f64));
+
+    // --- §II-B ablation: symmetric vs single-ended mapping under cell
+    // variation / bitline NL.
+    println!("\n=== §II-B: symmetry weight mapping vs variation ===");
+    println!("{:<10}{:>22}{:>22}", "sigma", "symmetric acc %", "single-ended acc %");
+    let n = 24.min(eval.len());
+    for sigma in [0.0, 0.05, 0.1, 0.2] {
+        let mut accs = [0.0f64; 2];
+        for (k, symmetric) in [(0, true), (1, false)] {
+            let prog = build_kws_program(&model, OptLevel::FULL).unwrap();
+            let mut soc = Soc::new(prog, DramConfig::default())
+                .unwrap()
+                .with_variation(VariationModel::new(sigma, 0.3, symmetric, 7));
+            let mut h = 0;
+            for i in 0..n {
+                let r = soc.infer(eval.utterance(i)).unwrap();
+                if r.predicted == eval.labels[i] as usize {
+                    h += 1;
+                }
+            }
+            accs[k] = 100.0 * h as f64 / n as f64;
+        }
+        println!("{sigma:<10}{:>22.1}{:>22.1}", accs[0], accs[1]);
+    }
+}

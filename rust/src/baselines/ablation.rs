@@ -1,0 +1,91 @@
+//! Ablation execution modes: which of the paper's three optimizations the
+//! compiler enables. The latency experiments (Figs. 6/7/9, the 85.14 %
+//! headline) are differences between these modes on the same model.
+
+use std::fmt;
+
+/// Optimization toggles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OptLevel {
+    /// CIM layer fusion: inter-layer FMs stay in FM SRAM (Fig. 6).
+    /// Off = every layer's input/output FM round-trips DRAM.
+    pub layer_fusion: bool,
+    /// Conv/max-pool pipeline: pooling fused into the drain path (Fig. 7).
+    /// Off = a separate RISC-V pooling pass between conv layers.
+    pub conv_pool_pipeline: bool,
+    /// Weight fusion: uDMA prefetch of layer i+1 weights during layer i
+    /// compute, double-buffered in weight SRAM (Figs. 8/9).
+    /// Off = compute stalls on every layer's DRAM weight load.
+    pub weight_fusion: bool,
+}
+
+impl OptLevel {
+    /// The paper's baseline (conventional CIM accelerator).
+    pub const BASELINE: OptLevel =
+        OptLevel { layer_fusion: false, conv_pool_pipeline: false, weight_fusion: false };
+    /// Everything on (the CIMR-V configuration).
+    pub const FULL: OptLevel =
+        OptLevel { layer_fusion: true, conv_pool_pipeline: true, weight_fusion: true };
+
+    /// The cumulative ladder used for the 85.14 % waterfall:
+    /// baseline -> +layer fusion -> +weight fusion -> +pipeline (the
+    /// paper's §III-A ordering).
+    pub fn ladder() -> [(&'static str, OptLevel); 4] {
+        [
+            ("baseline", OptLevel::BASELINE),
+            (
+                "+layer fusion",
+                OptLevel { layer_fusion: true, ..OptLevel::BASELINE },
+            ),
+            (
+                "+weight fusion",
+                OptLevel { layer_fusion: true, weight_fusion: true, conv_pool_pipeline: false },
+            ),
+            ("+conv/pool pipeline (full)", OptLevel::FULL),
+        ]
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<OptLevel> {
+        Ok(match s {
+            "baseline" | "none" => OptLevel::BASELINE,
+            "full" | "all" => OptLevel::FULL,
+            "layer-fusion" => OptLevel { layer_fusion: true, ..OptLevel::BASELINE },
+            "weight-fusion" => OptLevel { weight_fusion: true, ..OptLevel::BASELINE },
+            "pipeline" => OptLevel { conv_pool_pipeline: true, ..OptLevel::BASELINE },
+            _ => anyhow::bail!(
+                "unknown opt level {s:?} (baseline|layer-fusion|weight-fusion|pipeline|full)"
+            ),
+        })
+    }
+}
+
+impl fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "lf={} pipe={} wf={}",
+            self.layer_fusion as u8, self.conv_pool_pipeline as u8, self.weight_fusion as u8
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_cumulative() {
+        let l = OptLevel::ladder();
+        assert_eq!(l[0].1, OptLevel::BASELINE);
+        assert_eq!(l[3].1, OptLevel::FULL);
+        assert!(l[1].1.layer_fusion && !l[1].1.weight_fusion);
+        assert!(l[2].1.layer_fusion && l[2].1.weight_fusion && !l[2].1.conv_pool_pipeline);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(OptLevel::parse("full").unwrap(), OptLevel::FULL);
+        assert_eq!(OptLevel::parse("baseline").unwrap(), OptLevel::BASELINE);
+        assert!(OptLevel::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Table I comparator rows: published numbers for JSSC'21 [4],
+//! TCAS-I'22 [5], ISSCC'22 [9] (DIANA) and this work. The normalized
+//! values are *computed* by `energy::normalize`, not transcribed — the
+//! test in `normalize.rs` checks they reproduce the table's parentheses.
+
+use crate::energy::normalize::DesignPoint;
+
+/// All four Table I columns.
+pub fn table1_rows() -> Vec<DesignPoint> {
+    vec![
+        DesignPoint {
+            name: "JSSC'21 [4]",
+            process_nm: 65.0,
+            voltage_v: 1.0,
+            // RNN processor, 4b/8b IA and W; Table I normalizes at 8b x 8b.
+            ia_bits: 8.0,
+            w_bits: 8.0,
+            tops: Some(0.0055),
+            tops_per_w: 0.91,
+            accuracy_pct: Some(92.75),
+            end_to_end: false,
+            weight_fusion: false,
+        },
+        DesignPoint {
+            name: "TCAS-I'22 [5]",
+            process_nm: 28.0,
+            voltage_v: 0.8,
+            // BR-CIM: binary representation, normalized at 1b x 1b.
+            ia_bits: 1.0,
+            w_bits: 1.0,
+            tops: None, // not reported
+            tops_per_w: 1280.0,
+            accuracy_pct: Some(76.40),
+            end_to_end: false,
+            weight_fusion: false,
+        },
+        DesignPoint {
+            name: "ISSCC'22 [9]",
+            process_nm: 22.0,
+            voltage_v: 0.55,
+            // DIANA analog path: 7b IA x 1.5b W.
+            ia_bits: 7.0,
+            w_bits: 1.5,
+            tops: Some(29.5),
+            tops_per_w: 600.0,
+            accuracy_pct: Some(89.3),
+            end_to_end: true,
+            weight_fusion: false,
+        },
+        DesignPoint {
+            name: "This work",
+            process_nm: 28.0,
+            voltage_v: 0.9,
+            ia_bits: 1.0,
+            w_bits: 1.0,
+            tops: Some(26.2144),
+            tops_per_w: 3707.84,
+            accuracy_pct: Some(94.02), // paper; our synthetic-GSCD number is
+            // reported next to it by the bench
+            end_to_end: true,
+            weight_fusion: true,
+        },
+    ]
+}
+
+/// Render Table I (the bench and the `table1` CLI subcommand print this).
+pub fn render_table1(our_measured_tops_per_w: Option<f64>, our_accuracy: Option<f64>) -> String {
+    let rows = table1_rows();
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<22}{:>14}{:>12}{:>14}{:>16}{:>18}{:>12}{:>8}{:>8}\n",
+        "design", "process", "voltage", "TOPS", "norm TOPS", "TOPS/W", "norm EE", "e2e", "wfuse"
+    ));
+    for r in &rows {
+        s.push_str(&format!(
+            "{:<22}{:>12}nm{:>11}V{:>14}{:>16}{:>18}{:>12.2}{:>8}{:>8}\n",
+            r.name,
+            r.process_nm,
+            r.voltage_v,
+            r.tops.map_or("-".into(), |t| format!("{t}")),
+            r.normalized_tops().map_or("-".into(), |t| format!("{t:.3}")),
+            format!("{}", r.tops_per_w),
+            r.normalized_tops_per_w(),
+            if r.end_to_end { "yes" } else { "-" },
+            if r.weight_fusion { "yes" } else { "-" },
+        ));
+    }
+    if let Some(m) = our_measured_tops_per_w {
+        s.push_str(&format!("this repro (measured, cycle+energy model): {m:.2} TOPS/W\n"));
+    }
+    if let Some(a) = our_accuracy {
+        s.push_str(&format!("this repro (synthetic GSCD accuracy): {a:.2}%\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_rows_ours_last() {
+        let rows = table1_rows();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[3].name, "This work");
+        assert!(rows[3].end_to_end && rows[3].weight_fusion);
+        assert!(!rows.iter().take(3).any(|r| r.weight_fusion));
+    }
+
+    #[test]
+    fn render_contains_all_designs() {
+        let t = render_table1(Some(3500.0), Some(96.1));
+        for n in ["JSSC", "TCAS", "ISSCC", "This work", "3500.00", "96.10%"] {
+            assert!(t.contains(n), "missing {n} in:\n{t}");
+        }
+    }
+}

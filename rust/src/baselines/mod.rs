@@ -1,0 +1,9 @@
+//! Baselines: the Table I comparator designs (published datasheet numbers
+//! + the normalization model) and the ablation execution modes (no layer
+//! fusion / no pipeline / no weight fusion) that the latency experiments
+//! compare against.
+
+pub mod ablation;
+pub mod comparison;
+
+pub use ablation::OptLevel;

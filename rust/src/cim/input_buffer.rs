@@ -1,0 +1,118 @@
+//! The CIM input buffer: a 1024-bit register filled 32 bits at a time
+//! ("the CIM input buffer is designed with a 32-bit shift" — paper §II-A).
+//!
+//! The row-wise dataflow leans on this: advancing the convolution window
+//! by one row only shifts in `c_in/32` new words while the overlapping
+//! `(k-1)*c_in` bits stay in place — that is the layer-fusion overlap
+//! storage of Fig. 6.
+
+/// 1024-bit shift register, 32 words, shifted one word at a time.
+/// `word(j)` indexes the *window*: j = 0 is the oldest word of the last
+/// `n` shifted, j = n-1 the newest (see `CimConfig::window_words`).
+#[derive(Debug, Clone)]
+pub struct InputBuffer {
+    words: [u32; 32],
+    /// Circular head: index of the slot holding the *newest* word.
+    head: usize,
+    /// Total shifts (energy accounting).
+    pub shifts: u64,
+}
+
+impl Default for InputBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InputBuffer {
+    pub fn new() -> Self {
+        InputBuffer { words: [0; 32], head: 31, shifts: 0 }
+    }
+
+    /// Shift one 32-bit word in (drops the word that entered 32 shifts ago).
+    #[inline]
+    pub fn shift_in(&mut self, word: u32) {
+        self.head = (self.head + 1) & 31;
+        self.words[self.head] = word;
+        self.shifts += 1;
+    }
+
+    /// Word `j` of an `n`-word window ending at the newest word:
+    /// j = 0 -> the word shifted `n-1` shifts ago, j = n-1 -> the newest.
+    #[inline]
+    pub fn window_word(&self, j: usize, n: usize) -> u32 {
+        debug_assert!(j < n && n <= 32);
+        self.words[(self.head + 33 - n + j) & 31]
+    }
+
+    /// The wordline bit `r` seen by the array for an `n`-word window.
+    pub fn wordline(&self, r: usize, n: usize) -> bool {
+        (self.window_word(r / 32, n) >> (r % 32)) & 1 == 1
+    }
+
+    /// Clear (layer transitions in the baseline path).
+    pub fn clear(&mut self) {
+        self.words = [0; 32];
+        self.head = 31;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_ordering() {
+        let mut b = InputBuffer::new();
+        for i in 0..6u32 {
+            b.shift_in(i);
+        }
+        // 3-word window: oldest of the window is word 3.
+        assert_eq!(b.window_word(0, 3), 3);
+        assert_eq!(b.window_word(1, 3), 4);
+        assert_eq!(b.window_word(2, 3), 5);
+        // 6-word window.
+        assert_eq!(b.window_word(0, 6), 0);
+        assert_eq!(b.window_word(5, 6), 5);
+    }
+
+    #[test]
+    fn rolls_over_32() {
+        let mut b = InputBuffer::new();
+        for i in 0..40u32 {
+            b.shift_in(i);
+        }
+        assert_eq!(b.window_word(31, 32), 39);
+        assert_eq!(b.window_word(0, 32), 8); // words 0..7 dropped
+        assert_eq!(b.shifts, 40);
+    }
+
+    #[test]
+    fn wordline_bits() {
+        let mut b = InputBuffer::new();
+        b.shift_in(0b1010);
+        b.shift_in(0x8000_0001);
+        // window n=2: word0 = 0b1010, word1 = 0x80000001
+        assert!(b.wordline(1, 2));
+        assert!(!b.wordline(0, 2));
+        assert!(b.wordline(3, 2));
+        assert!(b.wordline(32, 2));
+        assert!(b.wordline(63, 2));
+        assert!(!b.wordline(62, 2));
+    }
+
+    #[test]
+    fn overlap_survives_row_advance() {
+        // Row-wise reuse: after shifting rows A,B,C then advancing by one
+        // row (shift D), the window must read B,C,D — B and C reused.
+        let mut b = InputBuffer::new();
+        for w in [0xA, 0xB, 0xC] {
+            b.shift_in(w);
+        }
+        b.shift_in(0xD);
+        assert_eq!(
+            (0..3).map(|j| b.window_word(j, 3)).collect::<Vec<_>>(),
+            vec![0xB, 0xC, 0xD]
+        );
+    }
+}

@@ -1,0 +1,409 @@
+//! The CIM macro: 512 Kb cell array, word port, single-cycle MAC fire,
+//! output latch, pooling register and raw-sum readout.
+//!
+//! Semantics contract (shared with `python/compile/kernels/ref.py` and the
+//! Pallas kernel): inputs in {0,1}, weights in {-1,0,+1} (sign+mask
+//! planes), `out[c] = (sum_r in[r]*w[r][c]) > th[c]`. The integer MAC is
+//! computed with bit-parallel popcounts:
+//!
+//! ```text
+//!   sum = 2*popcount(x & sign & mask) - popcount(x & mask)
+//! ```
+//!
+//! which is exactly `sum over active rows of (sign ? +1 : -1) * x_r`.
+
+use anyhow::{bail, Result};
+
+use super::input_buffer::InputBuffer;
+use super::mode::{CimConfig, Mode};
+use super::variation::VariationModel;
+use super::weight_map::{self, PortWord};
+
+/// Fire/shift/load statistics (energy model inputs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CimStats {
+    /// Full-array MAC fires.
+    pub fires: u64,
+    /// Input-buffer word shifts.
+    pub shifts: u64,
+    /// Output latch words stored to SRAM.
+    pub out_words: u64,
+    /// Weight port writes (`cim_w`).
+    pub weight_writes: u64,
+    /// Weight port reads (`cim_r`).
+    pub weight_reads: u64,
+    /// Total MAC operations performed (wordlines x SAs per fire).
+    pub macs: u64,
+}
+
+/// The macro model.
+#[derive(Debug, Clone)]
+pub struct CimMacro {
+    /// Sign plane: 8192 words (bit=1 -> +1).
+    sign: Vec<u32>,
+    /// Mask plane: 8192 words (bit=1 -> active cell).
+    mask: Vec<u32>,
+    /// Per-SA thresholds (512).
+    th: Vec<i32>,
+    /// Input shift buffer.
+    pub input: InputBuffer,
+    /// Binarized output latch of the last fire (512 bits max = 16 words).
+    latch: [u32; 16],
+    /// Max-pool rolling register (Fig. 7 pipeline block).
+    pool_reg: [u32; 16],
+    /// Raw integer sums of the last fire (high-precision readout port).
+    raw: Vec<i32>,
+    /// Live configuration (MMIO CIM_CFG).
+    pub cfg: CimConfig,
+    /// Optional variation/NL injection.
+    pub variation: Option<VariationModel>,
+    pub stats: CimStats,
+}
+
+impl Default for CimMacro {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CimMacro {
+    pub fn new() -> Self {
+        CimMacro {
+            sign: vec![0; weight_map::SIGN_WORDS as usize],
+            mask: vec![0; weight_map::MASK_WORDS as usize],
+            th: vec![0; weight_map::TH_WORDS as usize],
+            input: InputBuffer::new(),
+            latch: [0; 16],
+            pool_reg: [0; 16],
+            raw: vec![0; weight_map::RAW_WORDS as usize],
+            cfg: CimConfig::default(),
+            variation: None,
+            stats: CimStats::default(),
+        }
+    }
+
+    /// `cim_w`: write a 32-bit word into the port address space.
+    pub fn port_write(&mut self, addr: u32, value: u32) -> Result<()> {
+        self.stats.weight_writes += 1;
+        match weight_map::decode_port(addr) {
+            Some(PortWord::Sign(i)) => self.sign[i as usize] = value,
+            Some(PortWord::Mask(i)) => self.mask[i as usize] = value,
+            Some(PortWord::Threshold(i)) => self.th[i as usize] = value as i32,
+            Some(PortWord::RawSum(_)) => bail!("raw-sum port is read-only"),
+            None => bail!("cim_w to unmapped port word {addr:#x}"),
+        }
+        Ok(())
+    }
+
+    /// `cim_r`: read a 32-bit word from the port address space.
+    pub fn port_read(&mut self, addr: u32) -> Result<u32> {
+        self.stats.weight_reads += 1;
+        Ok(match weight_map::decode_port(addr) {
+            Some(PortWord::Sign(i)) => self.sign[i as usize],
+            Some(PortWord::Mask(i)) => self.mask[i as usize],
+            Some(PortWord::Threshold(i)) => self.th[i as usize] as u32,
+            Some(PortWord::RawSum(i)) => self.raw[i as usize] as u32,
+            None => bail!("cim_r from unmapped port word {addr:#x}"),
+        })
+    }
+
+    /// Shift one word into the input buffer (the `sh` bit of `cim_conv`).
+    #[inline]
+    pub fn shift_in(&mut self, word: u32) {
+        self.input.shift_in(word);
+        self.stats.shifts += 1;
+    }
+
+    /// Fire the full-array MAC and latch all SA outputs (the `wd == 0`
+    /// event of `cim_conv`). Single cycle in the timing model.
+    ///
+    /// The active layer's rectangle is `[row_base*32, +window_words*32) x
+    /// [col_base*32, sense_amps)`: wordlines outside the window see zero
+    /// input (they hold *other resident layers'* weights — the packing of
+    /// DESIGN.md §4), so only the window rows contribute; every SA still
+    /// physically fires (energy counts the full array).
+    pub fn fire(&mut self) {
+        let mode = self.cfg.mode;
+        let cw = mode.col_words();
+        let row_base = (self.cfg.row_base as usize).min(cw - 1);
+        let n = (self.cfg.window_words as usize).min(cw - row_base);
+        let sas = mode.sense_amps();
+        self.stats.fires += 1;
+        self.stats.macs += mode.macs_per_fire();
+
+        // Gather the window once (hot path: reused across all columns).
+        let mut x = [0u32; 32];
+        for (j, xj) in x.iter_mut().enumerate().take(n) {
+            *xj = self.input.window_word(j, n);
+        }
+
+        let mut latch = [0u32; 16];
+        for c in 0..sas {
+            let base = c * cw + row_base;
+            let mut pos = 0u32;
+            let mut act = 0u32;
+            for j in 0..n {
+                let m = self.mask[base + j];
+                let xm = x[j] & m;
+                act += xm.count_ones();
+                pos += (xm & self.sign[base + j]).count_ones();
+            }
+            // sum over active rows of (+1 for sign=1, -1 for sign=0)
+            let mut sum = (2 * pos) as i32 - act as i32;
+            if let Some(v) = self.variation.as_mut() {
+                // Noise scales with the column's active cell count.
+                let col_active: u32 = (0..n).map(|j| self.mask[base + j].count_ones()).sum();
+                sum = v.disturb(sum, col_active);
+            }
+            self.raw[c] = sum;
+            if sum > self.th[c] {
+                latch[c / 32] |= 1 << (c % 32);
+            }
+        }
+        // Max-pool pipeline (Fig. 7): the previous fire's latch rolls into
+        // the pool register, so stores issued after this fire read
+        // `latch | pool_reg` = the binary max of the row pair.
+        self.pool_reg = self.latch;
+        self.latch = latch;
+    }
+
+    /// Read output latch word `wd` as stored by `cim_conv`, applying the
+    /// max-pool pipeline (OR with the rolling pool register) when enabled.
+    /// Returns the word to store to FM SRAM.
+    pub fn store_word(&mut self, wd: u8) -> u32 {
+        self.stats.out_words += 1;
+        let idx = self.word_index(wd);
+        let cur = self.latch[idx];
+        if self.cfg.pool_or {
+            cur | self.pool_reg[idx]
+        } else {
+            cur
+        }
+    }
+
+    /// Clear the pool register (layer start).
+    pub fn clear_pool(&mut self) {
+        self.pool_reg = [0; 16];
+    }
+
+    fn word_index(&self, wd: u8) -> usize {
+        // Layer rectangle: wd selects within the layer's column block.
+        let max = match self.cfg.mode {
+            Mode::X => 7,
+            Mode::Y => 15,
+        };
+        ((self.cfg.col_base as usize) + (wd & 0x7) as usize).min(max)
+    }
+
+    /// Direct latch access (tests/debug).
+    pub fn latch_word(&self, idx: usize) -> u32 {
+        self.latch[idx]
+    }
+
+    /// Raw sum of SA `c` from the last fire (tests + final-layer readout).
+    pub fn raw_sum(&self, c: usize) -> i32 {
+        self.raw[c]
+    }
+
+    /// Host-side bulk load of a weight image (bypasses cycle accounting;
+    /// the *timed* path is the `cim_w` burst the compiler emits).
+    pub fn load_image(&mut self, img: &weight_map::WeightImage) -> Result<()> {
+        for &(a, v) in &img.words {
+            match weight_map::decode_port(a) {
+                Some(PortWord::Sign(i)) => self.sign[i as usize] = v,
+                Some(PortWord::Mask(i)) => self.mask[i as usize] = v,
+                Some(PortWord::Threshold(i)) => self.th[i as usize] = v as i32,
+                _ => bail!("bad image word {a:#x}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CimStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference MAC in the obvious O(rows*cols) form.
+    fn ref_mac(x: &[u8], w: &[Vec<i8>], th: &[i32]) -> (Vec<i32>, Vec<bool>) {
+        let cols = w[0].len();
+        let mut sums = vec![0i32; cols];
+        for (r, &xr) in x.iter().enumerate() {
+            if xr == 1 {
+                for c in 0..cols {
+                    sums[c] += w[r][c] as i32;
+                }
+            }
+        }
+        let bits = sums.iter().zip(th).map(|(s, t)| s > t).collect();
+        (sums, bits)
+    }
+
+    fn setup_random(mode: Mode, rows: usize, cols: usize, seed: u64) -> (CimMacro, Vec<u8>, Vec<Vec<i8>>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<Vec<i8>> = (0..rows)
+            .map(|_| (0..cols).map(|_| if rng.bool(0.1) { 0 } else { rng.pm1() }).collect())
+            .collect();
+        let th: Vec<i32> = (0..cols).map(|_| rng.range(0, 7) as i32 - 3).collect();
+        let x: Vec<u8> = (0..rows).map(|_| rng.bool(0.5) as u8).collect();
+
+        let mut m = CimMacro::new();
+        m.cfg.mode = mode;
+        m.cfg.window_words = rows.div_ceil(32) as u8;
+        let img = weight_map::WeightImage::from_layer(mode, rows, cols, |r, c| w[r][c], &th);
+        m.load_image(&img).unwrap();
+        // Shift the input in, 32 bits at a time, LSB-first within words.
+        let nwords = rows.div_ceil(32);
+        for j in 0..nwords {
+            let mut word = 0u32;
+            for b in 0..32 {
+                if j * 32 + b < rows && x[j * 32 + b] == 1 {
+                    word |= 1 << b;
+                }
+            }
+            m.shift_in(word);
+        }
+        (m, x, w, th)
+    }
+
+    #[test]
+    fn mac_matches_reference_xmode() {
+        for seed in 0..5 {
+            let (mut m, x, w, th) = setup_random(Mode::X, 192, 64, seed);
+            m.fire();
+            let (sums, bits) = ref_mac(&x, &w, &th);
+            for c in 0..64 {
+                assert_eq!(m.raw_sum(c), sums[c], "sum col {c} seed {seed}");
+                assert_eq!(
+                    m.latch_word(c / 32) >> (c % 32) & 1 == 1,
+                    bits[c],
+                    "bit col {c} seed {seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mac_matches_reference_ymode_full() {
+        let (mut m, x, w, th) = setup_random(Mode::Y, 512, 512, 9);
+        m.fire();
+        let (sums, _) = ref_mac(&x, &w, &th);
+        for c in [0, 31, 255, 256, 511] {
+            assert_eq!(m.raw_sum(c), sums[c], "col {c}");
+        }
+    }
+
+    #[test]
+    fn threshold_strictly_greater() {
+        let mut m = CimMacro::new();
+        m.cfg.window_words = 1;
+        // One active row, weight +1, threshold 1: sum == 1, 1 > 1 false.
+        let img = weight_map::WeightImage::from_layer(Mode::X, 1, 1, |_, _| 1, &[1]);
+        m.load_image(&img).unwrap();
+        m.shift_in(1);
+        m.fire();
+        assert_eq!(m.raw_sum(0), 1);
+        assert_eq!(m.latch_word(0) & 1, 0);
+        // Threshold 0: 1 > 0 true.
+        m.port_write(weight_map::TH_BASE, 0).unwrap();
+        m.fire();
+        assert_eq!(m.latch_word(0) & 1, 1);
+    }
+
+    #[test]
+    fn pool_or_is_pairwise_max() {
+        let mut m = CimMacro::new();
+        m.cfg.window_words = 1;
+        m.cfg.pool_or = true;
+        let img = weight_map::WeightImage::from_layer(Mode::X, 32, 32, |r, c| if r == c { 1 } else { -1 }, &vec![0; 32]);
+        m.load_image(&img).unwrap();
+        // Fire 1: input = bit0 only -> col 0 sum = +1 (>0), others -1.
+        m.shift_in(1);
+        m.fire();
+        let w1 = m.latch_word(0);
+        // Fire 2: input = bit1 only -> col 1 hot.
+        m.shift_in(2);
+        m.fire();
+        let pooled = m.store_word(0);
+        assert_eq!(w1, 0b01);
+        assert_eq!(pooled, 0b11, "OR of the two fires");
+    }
+
+    #[test]
+    fn port_rw_roundtrip_and_raw_readonly() {
+        let mut m = CimMacro::new();
+        m.port_write(0, 0xAAAA_5555).unwrap();
+        assert_eq!(m.port_read(0).unwrap(), 0xAAAA_5555);
+        m.port_write(weight_map::MASK_BASE + 5, 7).unwrap();
+        assert_eq!(m.port_read(weight_map::MASK_BASE + 5).unwrap(), 7);
+        m.port_write(weight_map::TH_BASE + 2, (-3i32) as u32).unwrap();
+        assert_eq!(m.port_read(weight_map::TH_BASE + 2).unwrap() as i32, -3);
+        assert!(m.port_write(weight_map::RAW_BASE, 0).is_err());
+        assert!(m.port_write(0x10_0000, 0).is_err());
+    }
+
+    #[test]
+    fn resident_rectangles_coexist() {
+        // Two layers packed in disjoint rectangles: firing one layer's
+        // window must not see the other's weights (the DESIGN.md §4
+        // packing that makes Table II's weight-update flow possible).
+        let mut m = CimMacro::new();
+        // Layer A: rows [0,32), cols [0,32), all +1, th 0.
+        let a = weight_map::WeightImage::from_layer_at(Mode::X, 0, 0, 32, 32, |_, _| 1, &vec![0; 32]);
+        // Layer B: rows [32,64) (row_base 1), cols [0,32), all -1, th 0.
+        let b = weight_map::WeightImage::from_layer_at(Mode::X, 1, 0, 32, 32, |_, _| -1, &vec![0; 32]);
+        m.load_image(&a).unwrap();
+        m.load_image(&b).unwrap();
+
+        // Fire layer A: window 1 word at row_base 0, input all ones.
+        m.cfg.window_words = 1;
+        m.cfg.row_base = 0;
+        m.shift_in(0xFFFF_FFFF);
+        m.fire();
+        assert_eq!(m.raw_sum(0), 32, "layer A sums +32");
+
+        // Fire layer B: same input, row_base 1.
+        m.cfg.row_base = 1;
+        m.shift_in(0xFFFF_FFFF);
+        m.fire();
+        assert_eq!(m.raw_sum(0), -32, "layer B sums -32");
+        // Layer A's weights are untouched.
+        m.cfg.row_base = 0;
+        m.shift_in(0xFFFF_FFFF);
+        m.fire();
+        assert_eq!(m.raw_sum(0), 32);
+    }
+
+    #[test]
+    fn col_base_selects_latch_word() {
+        // A layer at col block 1 (cols 32..64): wd=0 must store latch word 1.
+        let mut m = CimMacro::new();
+        let img =
+            weight_map::WeightImage::from_layer_at(Mode::X, 0, 1, 32, 32, |_, _| 1, &vec![0; 32]);
+        m.load_image(&img).unwrap();
+        m.cfg.window_words = 1;
+        m.cfg.col_base = 1;
+        m.shift_in(0xFFFF_FFFF);
+        m.fire();
+        assert_eq!(m.store_word(0), 0xFFFF_FFFF, "cols 32..64 all hot");
+        assert_eq!(m.latch_word(0), 0, "cols 0..32 dark (no weights)");
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut m = CimMacro::new();
+        m.cfg.window_words = 1;
+        m.shift_in(0);
+        m.fire();
+        m.store_word(0);
+        assert_eq!(m.stats.shifts, 1);
+        assert_eq!(m.stats.fires, 1);
+        assert_eq!(m.stats.out_words, 1);
+        assert_eq!(m.stats.macs, Mode::X.macs_per_fire());
+    }
+}

@@ -1,0 +1,24 @@
+//! The 512 Kb SRAM-based CIM macro (paper §II-B, integrating the ternary
+//! macro of [7]) as a functional + timing + energy model.
+//!
+//! * [`mode`]         — X-mode (1024 WL × 256 SA) / Y-mode (512 WL × 512 SA)
+//!   reconfiguration and the per-layer window configuration.
+//! * [`input_buffer`] — the 1024-bit, 32-bit-shift input buffer (paper
+//!   Fig. 2 designed it as a 32-bit shift "to reduce routing complexity").
+//! * [`weight_map`]   — logical weight/threshold/mask placement in the
+//!   macro's word-addressed port (symmetry mapping = sign + mask planes).
+//! * [`variation`]    — sense-amp nonlinearity / cell-variation injection
+//!   and the symmetric-mapping mitigation the paper references.
+//! * [`macro_`]       — the array itself: `cim_w`/`cim_r` word port, the
+//!   single-cycle full-array MAC ("fire"), output latch, pooling register,
+//!   raw-sum readout port for the high-precision final layer.
+
+pub mod input_buffer;
+pub mod macro_;
+pub mod mode;
+pub mod variation;
+pub mod weight_map;
+
+pub use macro_::CimMacro;
+pub use mode::{CimConfig, Mode};
+pub use variation::VariationModel;

@@ -1,0 +1,144 @@
+//! Macro operating modes (paper §II-B) and per-layer configuration.
+
+/// Array reconfiguration: the same 512 Kb cell array sensed two ways.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// High-input mode: 1024 wordlines × 512 bitlines, 256 sense amps
+    /// (two bitlines per SA — the symmetric/differential pair).
+    X,
+    /// High-output mode: 512 wordlines × 1024 bitlines, 512 sense amps.
+    Y,
+}
+
+impl Mode {
+    /// Wordlines (MAC fan-in) in this mode.
+    pub fn wordlines(self) -> usize {
+        match self {
+            Mode::X => 1024,
+            Mode::Y => 512,
+        }
+    }
+
+    /// Sense amplifiers (parallel outputs) in this mode.
+    pub fn sense_amps(self) -> usize {
+        match self {
+            Mode::X => 256,
+            Mode::Y => 512,
+        }
+    }
+
+    /// 32-bit words per SA column in the weight port address space.
+    pub fn col_words(self) -> usize {
+        self.wordlines() / 32
+    }
+
+    /// MACs per fire (for TOPS accounting): every wordline × every SA.
+    pub fn macs_per_fire(self) -> u64 {
+        (self.wordlines() * self.sense_amps()) as u64
+    }
+}
+
+/// Live configuration of the CIM unit (MMIO `CIM_CFG` register).
+///
+/// `row_base`/`col_base` (units of 32 wordlines / 32 SA columns) select
+/// the rectangle of the array the current layer occupies: several layers'
+/// weights stay resident simultaneously (DESIGN.md §4 packing), which is
+/// what lets the KWS flow keep layers 0-4 in the macro across inferences
+/// and only "weight update" layers 5-6 (paper Table II).
+///
+/// Register layout:
+/// ```text
+///   bit 0       mode (0 = X, 1 = Y)
+///   bit 1       pool_or (conv/max-pool pipeline, Fig. 7)
+///   bits 7:2    window_words (1..=32; 0 decodes as 32)
+///   bits 12:8   row_base (x32 wordlines)
+///   bits 16:13  col_base (x32 SA columns)
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct CimConfig {
+    pub mode: Mode,
+    /// Max-pool pipeline: stores emit `latch | pool_reg` (binary max).
+    pub pool_or: bool,
+    /// Input window length in 32-bit words (1..=32): how many of the most
+    /// recently shifted words the layer's wordlines see.
+    pub window_words: u8,
+    /// First wordline block (x32) of the layer's rectangle.
+    pub row_base: u8,
+    /// First SA column block (x32) of the layer's rectangle.
+    pub col_base: u8,
+}
+
+impl Default for CimConfig {
+    fn default() -> Self {
+        CimConfig { mode: Mode::X, pool_or: false, window_words: 32, row_base: 0, col_base: 0 }
+    }
+}
+
+impl CimConfig {
+    /// Decode from the MMIO register value (see `mem::layout`).
+    pub fn from_bits(v: u32) -> Self {
+        let w = ((v >> 2) & 0x3F) as u8;
+        CimConfig {
+            mode: if v & 1 != 0 { Mode::Y } else { Mode::X },
+            pool_or: v & 2 != 0,
+            window_words: if w == 0 { 32 } else { w.min(32) },
+            row_base: ((v >> 8) & 0x1F) as u8,
+            col_base: ((v >> 13) & 0x0F) as u8,
+        }
+    }
+
+    /// Encode to the MMIO register value.
+    pub fn to_bits(self) -> u32 {
+        (matches!(self.mode, Mode::Y) as u32)
+            | ((self.pool_or as u32) << 1)
+            | (((self.window_words as u32) & 0x3F) << 2)
+            | (((self.row_base as u32) & 0x1F) << 8)
+            | (((self.col_base as u32) & 0x0F) << 13)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_paper() {
+        assert_eq!(Mode::X.wordlines(), 1024);
+        assert_eq!(Mode::X.sense_amps(), 256);
+        assert_eq!(Mode::Y.wordlines(), 512);
+        assert_eq!(Mode::Y.sense_amps(), 512);
+        // Total cells identical: the same 512 Kb array.
+        assert_eq!(
+            Mode::X.wordlines() * Mode::X.sense_amps(),
+            Mode::Y.wordlines() * Mode::Y.sense_amps()
+        );
+    }
+
+    #[test]
+    fn tops_at_50mhz_matches_table1() {
+        // X-mode, 2 ops per MAC, 50 MHz -> 26.21 TOPS (Table I).
+        let tops = Mode::X.macs_per_fire() as f64 * 2.0 * 50e6 / 1e12;
+        assert!((tops - 26.2144).abs() < 1e-3, "{tops}");
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        for mode in [Mode::X, Mode::Y] {
+            for pool_or in [false, true] {
+                for window_words in [1u8, 6, 16, 32] {
+                    for row_base in [0u8, 6, 18, 31] {
+                        for col_base in [0u8, 2, 7, 15] {
+                            let c = CimConfig { mode, pool_or, window_words, row_base, col_base };
+                            let c2 = CimConfig::from_bits(c.to_bits());
+                            assert_eq!(c2.mode, c.mode);
+                            assert_eq!(c2.pool_or, c.pool_or);
+                            assert_eq!(c2.window_words, c.window_words);
+                            assert_eq!(c2.row_base, c.row_base);
+                            assert_eq!(c2.col_base, c.col_base);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Sense-amp nonlinearity and cell-variation injection (paper §II-B: "we
+//! apply the symmetry weight mapping method to mitigate nonlinearity (NL)
+//! and cell variation in binary or ternary weights").
+//!
+//! Model: an analog MAC sum accumulated on a long bitline suffers
+//!   (a) per-cell conductance variation — zero-mean noise whose variance
+//!       grows with the number of active cells: sigma_eff = sigma*sqrt(n);
+//!   (b) bitline nonlinearity — a compressive term ~ alpha * s * |s| / n
+//!       that biases large sums toward the rail.
+//!
+//! With **symmetric (differential) mapping**, both bitlines of an SA see
+//! the same number of active cells, so the NL term cancels to first order
+//! and only the residual mismatch (fraction `mismatch`) survives. With
+//! single-ended mapping both terms apply in full. The ablation bench
+//! (`table1_comparison --variation`) sweeps sigma and shows the accuracy
+//! cliff the paper's mapping avoids.
+
+use crate::util::rng::Rng;
+
+/// Variation/nonlinearity injection parameters.
+#[derive(Debug, Clone)]
+pub struct VariationModel {
+    /// Per-cell conductance sigma (in units of one cell's contribution).
+    pub sigma: f64,
+    /// Bitline nonlinearity coefficient.
+    pub nl_alpha: f64,
+    /// Symmetric (differential) weight mapping enabled?
+    pub symmetric: bool,
+    /// Residual differential mismatch when symmetric (0..1).
+    pub mismatch: f64,
+    /// RNG for the noise draws (seeded per run for reproducibility).
+    pub rng: Rng,
+}
+
+impl VariationModel {
+    pub fn new(sigma: f64, nl_alpha: f64, symmetric: bool, seed: u64) -> Self {
+        VariationModel { sigma, nl_alpha, symmetric, mismatch: 0.05, rng: Rng::new(seed) }
+    }
+
+    /// Disturb one SA's ideal integer MAC sum. `active` is the number of
+    /// unmasked cells on the column (noise scale), `sum` the ideal result.
+    pub fn disturb(&mut self, sum: i32, active: u32) -> i32 {
+        if active == 0 {
+            return sum;
+        }
+        let n = active as f64;
+        let noise_scale = if self.symmetric { self.mismatch } else { 1.0 };
+        let noise = self.rng.normal() * self.sigma * n.sqrt() * noise_scale;
+        let nl = if self.symmetric {
+            // Differential read: compressive term cancels to first order.
+            0.0
+        } else {
+            -self.nl_alpha * (sum as f64) * (sum as f64).abs() / n
+        };
+        let disturbed = sum as f64 + noise + nl;
+        disturbed.round() as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_sigma_is_identity_when_symmetric() {
+        let mut v = VariationModel::new(0.0, 0.1, true, 1);
+        for s in [-100, -1, 0, 1, 37, 500] {
+            assert_eq!(v.disturb(s, 512), s);
+        }
+    }
+
+    #[test]
+    fn single_ended_nl_compresses_large_sums() {
+        let mut v = VariationModel::new(0.0, 0.5, false, 1);
+        let big = v.disturb(400, 512);
+        assert!(big < 400, "compressive NL must pull large sums down, got {big}");
+        let small = v.disturb(2, 512);
+        assert!((small - 2).abs() <= 1);
+    }
+
+    #[test]
+    fn symmetric_mapping_suppresses_noise() {
+        // Same sigma, symmetric vs single-ended: symmetric spread is ~20x
+        // smaller (mismatch = 0.05).
+        let spread = |symmetric: bool| {
+            let mut v = VariationModel::new(1.0, 0.0, symmetric, 7);
+            let mut acc = 0.0;
+            for _ in 0..2000 {
+                let d = v.disturb(0, 1024) as f64;
+                acc += d * d;
+            }
+            (acc / 2000.0).sqrt()
+        };
+        let sym = spread(true);
+        let single = spread(false);
+        assert!(
+            sym * 10.0 < single,
+            "symmetric {sym:.2} should be <<{single:.2}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = VariationModel::new(0.5, 0.1, false, 42);
+        let mut b = VariationModel::new(0.5, 0.1, false, 42);
+        for s in 0..50 {
+            assert_eq!(a.disturb(s, 256), b.disturb(s, 256));
+        }
+    }
+}

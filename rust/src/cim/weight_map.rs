@@ -1,0 +1,212 @@
+//! Weight placement in the macro's word-addressed port, and the symmetry
+//! (sign + mask) mapping.
+//!
+//! The `cim_w`/`cim_r` instructions move 32-bit words through a flat word
+//! address space:
+//!
+//! ```text
+//!   [0      .. 8192)   sign plane   (bit = 1 -> +1, bit = 0 -> -1)
+//!   [8192   .. 16384)  mask plane   (bit = 1 -> cell active; 0 -> ternary 0)
+//!   [16384  .. 16896)  SA thresholds (one i32 word per SA, 512 max)
+//!   [16896  .. 17408)  raw MAC sums of the last fire (read-only)
+//! ```
+//!
+//! The **symmetry weight mapping** of §II-B stores each logical weight as a
+//! differential cell pair on the two bitlines of an SA; at this level of
+//! abstraction that means: a weight is (sign, active) — exactly the two
+//! planes — and first-order cell nonlinearity cancels in the differential
+//! read (see `variation.rs` for what happens when it doesn't).
+//!
+//! Column-major layout: SA column `c` owns words `[c*col_words, (c+1)*col_words)`
+//! of each plane, `col_words` = 32 (X-mode) or 16 (Y-mode) — so one column
+//! is a contiguous run and a layer load is a linear `cim_w` burst.
+
+use super::mode::Mode;
+
+/// Word counts of the port address space.
+pub const SIGN_BASE: u32 = 0;
+pub const SIGN_WORDS: u32 = 8192; // 256 Kb of logical weights
+pub const MASK_BASE: u32 = 8192;
+pub const MASK_WORDS: u32 = 8192;
+pub const TH_BASE: u32 = 16384;
+pub const TH_WORDS: u32 = 512;
+pub const RAW_BASE: u32 = 16896;
+pub const RAW_WORDS: u32 = 512;
+pub const PORT_WORDS: u32 = RAW_BASE + RAW_WORDS;
+
+/// What a port word address refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PortWord {
+    Sign(u32),
+    Mask(u32),
+    Threshold(u32),
+    RawSum(u32),
+}
+
+/// Decode a port word address.
+pub fn decode_port(addr: u32) -> Option<PortWord> {
+    match addr {
+        _ if addr < MASK_BASE => Some(PortWord::Sign(addr)),
+        _ if addr < TH_BASE => Some(PortWord::Mask(addr - MASK_BASE)),
+        _ if addr < TH_BASE + TH_WORDS => Some(PortWord::Threshold(addr - TH_BASE)),
+        _ if (RAW_BASE..RAW_BASE + RAW_WORDS).contains(&addr) => {
+            Some(PortWord::RawSum(addr - RAW_BASE))
+        }
+        _ => None,
+    }
+}
+
+/// Word index (within a plane) of wordline `r`, column `c`.
+pub fn plane_word(mode: Mode, c: usize, r: usize) -> u32 {
+    debug_assert!(c < mode.sense_amps() && r < mode.wordlines());
+    (c * mode.col_words() + r / 32) as u32
+}
+
+/// A layer's weights laid out as port-write words: the "full stack flow"
+/// compiler builds this image, stages it in DRAM, and emits the uDMA +
+/// `cim_w` burst that loads it.
+#[derive(Debug, Clone)]
+pub struct WeightImage {
+    pub mode: Mode,
+    /// (port word address, value) pairs in burst order.
+    pub words: Vec<(u32, u32)>,
+}
+
+impl WeightImage {
+    /// Map a conv layer's weights (tap-major/channel-minor rows — the
+    /// im2col order shared with `python/compile/kernels/ref.py`) onto a
+    /// rectangle of the macro: `weights[r][c]` in {-1,0,+1} for rows
+    /// `0..rows`, columns `0..cols`, placed at (`row_base`,`col_base`)
+    /// x32-blocks. Only the rectangle's own words are emitted — other
+    /// resident layers' rectangles are untouched (DESIGN.md §4 packing);
+    /// rows inside the window beyond `rows` are masked off.
+    /// `thresholds[c]` are the SA reference levels (absolute column =
+    /// `col_base*32 + c`).
+    pub fn from_layer_at(
+        mode: Mode,
+        row_base: usize,
+        col_base: usize,
+        rows: usize,
+        cols: usize,
+        weight: impl Fn(usize, usize) -> i8,
+        thresholds: &[i32],
+    ) -> Self {
+        let cw = mode.col_words();
+        let active_words = rows.div_ceil(32);
+        assert!(row_base * 32 + rows <= mode.wordlines(), "rows overflow {mode:?}");
+        assert!(col_base * 32 + cols <= mode.sense_amps(), "cols overflow {mode:?}");
+        let mut words = Vec::new();
+        for c in 0..cols {
+            let c_abs = col_base * 32 + c;
+            for wj in 0..active_words {
+                let mut sign = 0u32;
+                let mut mask = 0u32;
+                for b in 0..32 {
+                    let r = wj * 32 + b;
+                    if r < rows {
+                        match weight(r, c) {
+                            0 => {} // ternary zero: cell masked off
+                            x if x > 0 => {
+                                mask |= 1 << b;
+                                sign |= 1 << b;
+                            }
+                            _ => mask |= 1 << b,
+                        }
+                    }
+                }
+                words.push((SIGN_BASE + (c_abs * cw + row_base + wj) as u32, sign));
+                words.push((MASK_BASE + (c_abs * cw + row_base + wj) as u32, mask));
+            }
+        }
+        for (c, &th) in thresholds.iter().enumerate().take(cols) {
+            words.push((TH_BASE + (col_base * 32 + c) as u32, th as u32));
+        }
+        WeightImage { mode, words }
+    }
+
+    /// `from_layer_at` anchored at the array origin.
+    pub fn from_layer(
+        mode: Mode,
+        rows: usize,
+        cols: usize,
+        weight: impl Fn(usize, usize) -> i8,
+        thresholds: &[i32],
+    ) -> Self {
+        Self::from_layer_at(mode, 0, 0, rows, cols, weight, thresholds)
+    }
+
+    /// Number of `cim_w` instructions (= cycles) to load this image.
+    pub fn burst_len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Serialize to a flat little-endian byte image: `[addr, value]` pairs
+    /// are flattened into (addr-ordered) contiguous value words for DRAM
+    /// staging; returns (base-sorted words, bytes).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.words.len() * 8);
+        for &(a, v) in &self.words {
+            out.extend_from_slice(&a.to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn port_decode_ranges() {
+        assert_eq!(decode_port(0), Some(PortWord::Sign(0)));
+        assert_eq!(decode_port(8191), Some(PortWord::Sign(8191)));
+        assert_eq!(decode_port(8192), Some(PortWord::Mask(0)));
+        assert_eq!(decode_port(16384), Some(PortWord::Threshold(0)));
+        assert_eq!(decode_port(16896), Some(PortWord::RawSum(0)));
+        assert_eq!(decode_port(17408), None);
+        assert_eq!(decode_port(16895), Some(PortWord::Threshold(511)));
+    }
+
+    #[test]
+    fn column_major_contiguous() {
+        assert_eq!(plane_word(Mode::X, 0, 0), 0);
+        assert_eq!(plane_word(Mode::X, 0, 1023), 31);
+        assert_eq!(plane_word(Mode::X, 1, 0), 32);
+        assert_eq!(plane_word(Mode::Y, 1, 0), 16);
+    }
+
+    #[test]
+    fn image_masks_inactive_rows_within_window() {
+        // 40 rows, 2 cols, all +1.
+        let img = WeightImage::from_layer(Mode::X, 40, 2, |_, _| 1, &[0, 0]);
+        // Column 0 sign word 0 = all ones; word 1 = low 8 bits only (mask).
+        let get = |addr: u32| img.words.iter().find(|(a, _)| *a == addr).map(|(_, v)| *v);
+        assert_eq!(get(SIGN_BASE), Some(0xFFFF_FFFF));
+        assert_eq!(get(MASK_BASE), Some(0xFFFF_FFFF));
+        assert_eq!(get(MASK_BASE + 1), Some(0x0000_00FF));
+        // Words outside the rectangle are NOT touched (other layers own them).
+        assert_eq!(get(MASK_BASE + 2), None);
+        assert_eq!(get(MASK_BASE + 2 * 32), None);
+    }
+
+    #[test]
+    fn placement_offsets_addresses() {
+        // Rectangle at row block 6, col block 2: column 64, word 6.
+        let img = WeightImage::from_layer_at(Mode::X, 6, 2, 32, 1, |_, _| 1, &[5]);
+        let addrs: Vec<u32> = img.words.iter().map(|(a, _)| *a).collect();
+        assert!(addrs.contains(&(SIGN_BASE + 64 * 32 + 6)));
+        assert!(addrs.contains(&(MASK_BASE + 64 * 32 + 6)));
+        assert!(addrs.contains(&(TH_BASE + 64)));
+        assert_eq!(img.words.len(), 3);
+    }
+
+    #[test]
+    fn negative_weights_clear_sign_bits() {
+        let img =
+            WeightImage::from_layer(Mode::X, 32, 1, |r, _| if r % 2 == 0 { 1 } else { -1 }, &[3]);
+        let get = |addr: u32| img.words.iter().find(|(a, _)| *a == addr).map(|(_, v)| *v);
+        assert_eq!(get(SIGN_BASE), Some(0x5555_5555));
+        assert_eq!(get(TH_BASE), Some(3));
+    }
+}

@@ -1,0 +1,278 @@
+//! Mini-assembler: builds encoded RV32IM+CIM instruction streams with
+//! labels, forward references and the usual pseudo-instructions. The
+//! codegen (`codegen.rs`) drives this to produce the boot image.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::isa::rv32::{AluOp, BranchKind, Instr, LoadKind, StoreKind};
+use crate::isa::{encode, CimInstr, Reg};
+
+/// A label handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Label(usize);
+
+#[derive(Debug, Clone)]
+enum Slot {
+    /// Fully encoded instruction word.
+    Done(u32),
+    /// Branch to a label (patched at assembly).
+    Branch { kind: BranchKind, rs1: Reg, rs2: Reg, target: Label },
+    /// Jump-and-link to a label.
+    Jal { rd: Reg, target: Label },
+}
+
+/// The builder.
+#[derive(Debug, Default)]
+pub struct Asm {
+    slots: Vec<Slot>,
+    labels: BTreeMap<Label, usize>, // label -> instruction index
+    next_label: usize,
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current position (instruction index).
+    pub fn here(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Create an unbound label.
+    pub fn label(&mut self) -> Label {
+        let l = Label(self.next_label);
+        self.next_label += 1;
+        l
+    }
+
+    /// Bind a label to the current position.
+    pub fn bind(&mut self, l: Label) {
+        self.labels.insert(l, self.slots.len());
+    }
+
+    /// Create a label bound here.
+    pub fn here_label(&mut self) -> Label {
+        let l = self.label();
+        self.bind(l);
+        l
+    }
+
+    pub fn raw(&mut self, i: Instr) -> &mut Self {
+        self.slots.push(Slot::Done(encode(&i).expect("encodable instruction")));
+        self
+    }
+
+    // --- pseudo-instructions -------------------------------------------
+
+    /// Load a 32-bit immediate (lui+addi or single addi).
+    pub fn li(&mut self, rd: Reg, v: i64) -> &mut Self {
+        let v = v as i32;
+        if (-2048..=2047).contains(&v) {
+            return self.addi(rd, Reg::ZERO, v);
+        }
+        // lui loads the upper 20 bits; addi sign-extends, so round up.
+        let lo = ((v << 20) >> 20) as i32; // low 12, sign-extended
+        let hi = (v.wrapping_sub(lo) as u32) >> 12;
+        self.raw(Instr::Lui { rd, imm: hi as i32 });
+        if lo != 0 {
+            self.addi(rd, rd, lo);
+        }
+        self
+    }
+
+    pub fn addi(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.raw(Instr::OpImm { op: AluOp::Add, rd, rs1, imm })
+    }
+
+    pub fn mv(&mut self, rd: Reg, rs: Reg) -> &mut Self {
+        self.addi(rd, rs, 0)
+    }
+
+    pub fn add(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.raw(Instr::Op { op: AluOp::Add, rd, rs1, rs2 })
+    }
+
+    pub fn sub(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.raw(Instr::Op { op: AluOp::Sub, rd, rs1, rs2 })
+    }
+
+    pub fn slli(&mut self, rd: Reg, rs1: Reg, sh: i32) -> &mut Self {
+        self.raw(Instr::OpImm { op: AluOp::Sll, rd, rs1, imm: sh })
+    }
+
+    pub fn srai(&mut self, rd: Reg, rs1: Reg, sh: i32) -> &mut Self {
+        self.raw(Instr::OpImm { op: AluOp::Sra, rd, rs1, imm: sh })
+    }
+
+    pub fn xor(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.raw(Instr::Op { op: AluOp::Xor, rd, rs1, rs2 })
+    }
+
+    pub fn or(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.raw(Instr::Op { op: AluOp::Or, rd, rs1, rs2 })
+    }
+
+    pub fn and(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.raw(Instr::Op { op: AluOp::And, rd, rs1, rs2 })
+    }
+
+    pub fn slt(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.raw(Instr::Op { op: AluOp::Slt, rd, rs1, rs2 })
+    }
+
+    pub fn sll(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.raw(Instr::Op { op: AluOp::Sll, rd, rs1, rs2 })
+    }
+
+    pub fn lw(&mut self, rd: Reg, rs1: Reg, off: i32) -> &mut Self {
+        self.raw(Instr::Load { kind: LoadKind::Lw, rd, rs1, offset: off })
+    }
+
+    pub fn lh(&mut self, rd: Reg, rs1: Reg, off: i32) -> &mut Self {
+        self.raw(Instr::Load { kind: LoadKind::Lh, rd, rs1, offset: off })
+    }
+
+    pub fn sw(&mut self, rs1: Reg, rs2: Reg, off: i32) -> &mut Self {
+        self.raw(Instr::Store { kind: StoreKind::Sw, rs1, rs2, offset: off })
+    }
+
+    pub fn cim(&mut self, c: CimInstr) -> &mut Self {
+        c.validate().expect("valid cim instruction");
+        self.raw(Instr::Cim(c))
+    }
+
+    pub fn ebreak(&mut self) -> &mut Self {
+        self.raw(Instr::Ebreak)
+    }
+
+    // --- control flow ---------------------------------------------------
+
+    pub fn branch(&mut self, kind: BranchKind, rs1: Reg, rs2: Reg, target: Label) -> &mut Self {
+        self.slots.push(Slot::Branch { kind, rs1, rs2, target });
+        self
+    }
+
+    pub fn beq(&mut self, rs1: Reg, rs2: Reg, t: Label) -> &mut Self {
+        self.branch(BranchKind::Beq, rs1, rs2, t)
+    }
+
+    pub fn bne(&mut self, rs1: Reg, rs2: Reg, t: Label) -> &mut Self {
+        self.branch(BranchKind::Bne, rs1, rs2, t)
+    }
+
+    pub fn blt(&mut self, rs1: Reg, rs2: Reg, t: Label) -> &mut Self {
+        self.branch(BranchKind::Blt, rs1, rs2, t)
+    }
+
+    pub fn jal(&mut self, rd: Reg, target: Label) -> &mut Self {
+        self.slots.push(Slot::Jal { rd, target });
+        self
+    }
+
+    /// Assemble to instruction words (base address 0).
+    pub fn assemble(&self) -> Result<Vec<u32>> {
+        let resolve = |l: Label| -> Result<usize> {
+            self.labels.get(&l).copied().ok_or_else(|| anyhow!("unbound label {l:?}"))
+        };
+        let mut out = Vec::with_capacity(self.slots.len());
+        for (i, slot) in self.slots.iter().enumerate() {
+            let word = match slot {
+                Slot::Done(w) => *w,
+                Slot::Branch { kind, rs1, rs2, target } => {
+                    let t = resolve(*target)?;
+                    let off = (t as i64 - i as i64) * 4;
+                    if !(-4096..=4094).contains(&off) {
+                        bail!("branch at {i} to {t}: offset {off} out of range");
+                    }
+                    encode(&Instr::Branch { kind: *kind, rs1: *rs1, rs2: *rs2, offset: off as i32 })?
+                }
+                Slot::Jal { rd, target } => {
+                    let t = resolve(*target)?;
+                    let off = (t as i64 - i as i64) * 4;
+                    encode(&Instr::Jal { rd: *rd, offset: off as i32 })?
+                }
+            };
+            out.push(word);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{decode, disasm};
+
+    #[test]
+    fn li_all_ranges() {
+        for v in [0i64, 1, -1, 2047, -2048, 2048, -2049, 0x2000_0000, -0x8000_0000, 0x7FFF_FFFF, 0x0000_8FFF] {
+            let mut a = Asm::new();
+            a.li(Reg::T0, v);
+            a.ebreak();
+            let words = a.assemble().unwrap();
+            // Execute by hand: lui/addi semantics.
+            let mut reg = 0i64;
+            for w in &words[..words.len() - 1] {
+                match decode(*w).unwrap() {
+                    Instr::Lui { imm, .. } => reg = ((imm as u32) << 12) as i32 as i64,
+                    Instr::OpImm { imm, rs1, .. } => {
+                        let base = if rs1 == Reg::ZERO { 0 } else { reg };
+                        reg = (base as i32).wrapping_add(imm) as i64;
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            assert_eq!(reg as i32, v as i32, "li {v:#x}");
+        }
+    }
+
+    #[test]
+    fn forward_and_backward_branches() {
+        let mut a = Asm::new();
+        let end = a.label();
+        a.li(Reg::T0, 3);
+        let loop_top = a.here_label();
+        a.addi(Reg::T0, Reg::T0, -1);
+        a.beq(Reg::T0, Reg::ZERO, end);
+        a.bne(Reg::T0, Reg::ZERO, loop_top);
+        a.bind(end);
+        a.ebreak();
+        let words = a.assemble().unwrap();
+        // beq at index 2 forward to 4: offset +8; bne at 3 back to 1: -8.
+        assert!(disasm(&decode(words[2]).unwrap()).contains("beq"));
+        match decode(words[2]).unwrap() {
+            Instr::Branch { offset, .. } => assert_eq!(offset, 8),
+            _ => panic!(),
+        }
+        match decode(words[3]).unwrap() {
+            Instr::Branch { offset, .. } => assert_eq!(offset, -8),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn unbound_label_errors() {
+        let mut a = Asm::new();
+        let l = a.label();
+        a.beq(Reg::ZERO, Reg::ZERO, l);
+        assert!(a.assemble().is_err());
+    }
+
+    #[test]
+    fn jal_offsets() {
+        let mut a = Asm::new();
+        let f = a.label();
+        a.jal(Reg::RA, f);
+        a.ebreak();
+        a.bind(f);
+        a.ebreak();
+        let words = a.assemble().unwrap();
+        match decode(words[0]).unwrap() {
+            Instr::Jal { offset, .. } => assert_eq!(offset, 8),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,534 @@
+//! Program generator: trained KWS model + `OptLevel` -> bootable image.
+//!
+//! Register conventions in the emitted code:
+//!   a0..a3  CIM-addressable window (bases for cim_conv/cim_w/cim_r)
+//!   t0..t6  scalar temps
+//!   s0..s5  loop counters / running pointers
+//!   t6      MMIO base (held across the whole program)
+//!
+//! The conv inner code is fully unrolled straight-line `cim_conv`
+//! sequences (the paper's single-cycle-per-instruction throughput story);
+//! preprocessing and weight bursts are loops.
+
+use anyhow::Result;
+
+use crate::baselines::OptLevel;
+use crate::cim::mode::{CimConfig, Mode};
+use crate::cim::weight_map;
+use crate::dataflow::plan::{self, KwsPlan};
+use crate::isa::{CimInstr, Reg};
+use crate::mem::layout;
+use crate::model::KwsModel;
+
+use super::asm::Asm;
+use super::program::{Phase, Program};
+
+const FM: i64 = layout::FM_BASE as i64;
+const DMEM: i64 = layout::DMEM_BASE as i64;
+
+fn mmio_sw(a: &mut Asm, reg: Reg, off: u32) {
+    // t6 holds MMIO_BASE.
+    a.sw(Reg::T6, reg, off as i32);
+}
+
+/// Busy-wait until the uDMA is idle (poll MMIO_UDMA_CTRL).
+fn emit_udma_wait(a: &mut Asm) {
+    let top = a.here_label();
+    a.lw(Reg::T0, Reg::T6, layout::MMIO_UDMA_CTRL as i32);
+    a.bne(Reg::T0, Reg::ZERO, top);
+}
+
+/// Program a uDMA transfer and start it (does not wait).
+fn emit_udma_start(a: &mut Asm, src: i64, dst: i64, len: i64) {
+    a.li(Reg::T0, src);
+    mmio_sw(a, Reg::T0, layout::MMIO_UDMA_SRC);
+    a.li(Reg::T0, dst);
+    mmio_sw(a, Reg::T0, layout::MMIO_UDMA_DST);
+    a.li(Reg::T0, len);
+    mmio_sw(a, Reg::T0, layout::MMIO_UDMA_LEN);
+    a.li(Reg::T0, 1);
+    mmio_sw(a, Reg::T0, layout::MMIO_UDMA_CTRL);
+}
+
+fn emit_phase(a: &mut Asm, id: u32) {
+    a.li(Reg::T0, id as i64);
+    mmio_sw(a, Reg::T0, layout::MMIO_HOST_PHASE);
+}
+
+/// Boot: stage audio into DMEM (uDMA), initialise the macro mask plane to
+/// all-ones (binary weights: every cell active), set MMIO base register.
+fn emit_boot(a: &mut Asm, p: &KwsPlan, opt: OptLevel) {
+    a.li(Reg::T6, layout::MMIO_BASE as i64);
+    // Audio: DRAM -> DMEM (background; mask init runs meanwhile).
+    emit_udma_start(
+        a,
+        layout::DRAM_BASE as i64 + plan::DRAM_AUDIO as i64,
+        DMEM + plan::DMEM_AUDIO as i64,
+        p.audio_bytes as i64,
+    );
+    // Mask plane: 8192 words of 0xFFFFFFFF via cim_w from the FM ones
+    // word. a1 = ones source, a2 = running port address.
+    a.li(Reg::A1, FM + plan::FM_ONES as i64);
+    a.li(Reg::A2, weight_map::MASK_BASE as i64);
+    a.li(Reg::T1, (weight_map::MASK_BASE + weight_map::MASK_WORDS) as i64);
+    // Store the ones word first (FM_ONES starts zeroed).
+    a.li(Reg::T0, 0xFFFF_FFFFu32 as i64);
+    a.sw(Reg::A1, Reg::T0, 0);
+    let top = a.here_label();
+    a.cim(CimInstr::write(Reg::A1, 0, Reg::A2, 0));
+    a.addi(Reg::A2, Reg::A2, 1);
+    a.bne(Reg::A2, Reg::T1, top);
+    emit_udma_wait(a); // audio must have landed
+    if opt.weight_fusion {
+        // Weight fusion (Fig. 8): enqueue EVERY layer's stream on the uDMA
+        // descriptor chain now — the engine drains DRAM into the weight
+        // SRAM while the core runs preprocessing and early conv layers.
+        for lp in &p.layers {
+            emit_udma_start(
+                a,
+                layout::DRAM_BASE as i64 + lp.dram_offset as i64,
+                layout::WT_BASE as i64 + lp.wt_offset as i64,
+                lp.stream_bytes() as i64,
+            );
+        }
+    }
+    emit_phase(a, Phase::BootDone as u32);
+}
+
+/// Integer preprocessing (paper Fig. 10 RISC-V mode): pre-emphasis,
+/// per-sample magnitude features, folded-BN threshold compare, packed
+/// binary FM written to `FM_BUF_A`.
+///
+/// Loop structure: outer over t (frames), inner fully unrolled over the
+/// two 32-channel words of each row.
+fn emit_preprocess(a: &mut Asm, model: &KwsModel) {
+    let frame = model.audio_len / model.t; // samples per frame
+    let wpr = model.c / 32; // words per row
+    a.li(Reg::S0, DMEM + plan::DMEM_AUDIO as i64); // audio ptr (by frame)
+    a.li(Reg::S1, FM + plan::FM_BUF_A as i64); // FM out ptr
+    a.li(Reg::S2, model.t as i64); // frame counter
+    let t_top = a.here_label();
+    a.li(Reg::S4, DMEM + plan::DMEM_THR as i64); // threshold table ptr
+    for w in 0..wpr {
+        a.li(Reg::T3, 0); // word accumulator
+        for cbit in 0..32 {
+            let ch = w * 32 + cbit;
+            // x = audio[t*frame + ch]; xp = previous sample. The halfword
+            // below DMEM_AUDIO is zero, so ch==0/t==0 reads a true zero.
+            a.lh(Reg::T0, Reg::S0, (2 * ch) as i32);
+            a.lh(Reg::T1, Reg::S0, (2 * ch) as i32 - 2);
+            // y = 32x - 31xp = (x<<5) - ((xp<<5) - xp)
+            a.slli(Reg::T0, Reg::T0, 5);
+            a.slli(Reg::T2, Reg::T1, 5);
+            a.sub(Reg::T2, Reg::T2, Reg::T1);
+            a.sub(Reg::T0, Reg::T0, Reg::T2);
+            // |y|
+            a.srai(Reg::T1, Reg::T0, 31);
+            a.xor(Reg::T0, Reg::T0, Reg::T1);
+            a.sub(Reg::T0, Reg::T0, Reg::T1);
+            // bit = thr < f  (flip applied per-word below)
+            a.lw(Reg::T1, Reg::S4, (4 * ch) as i32);
+            a.slt(Reg::T1, Reg::T1, Reg::T0);
+            if cbit > 0 {
+                a.slli(Reg::T1, Reg::T1, cbit as i32);
+            }
+            a.or(Reg::T3, Reg::T3, Reg::T1);
+        }
+        // Apply the per-word flip mask (folded BN gamma<0 / gamma==0).
+        a.li(Reg::T4, DMEM + plan::DMEM_FLIP as i64 + (w * 4) as i64);
+        a.lw(Reg::T4, Reg::T4, 0);
+        a.xor(Reg::T3, Reg::T3, Reg::T4);
+        a.sw(Reg::S1, Reg::T3, (w * 4) as i32);
+    }
+    a.addi(Reg::S1, Reg::S1, (wpr * 4) as i32);
+    a.addi(Reg::S0, Reg::S0, (frame * 2) as i32);
+    a.addi(Reg::S2, Reg::S2, -1);
+    a.bne(Reg::S2, Reg::ZERO, t_top);
+    emit_phase(a, Phase::PreprocessDone as u32);
+}
+
+/// Weight phase of layer `i`: make the stream resident in the weight-SRAM
+/// half, then burst it into the macro with `cim_w`.
+fn emit_weight_phase(a: &mut Asm, p: &KwsPlan, i: usize, opt: OptLevel) {
+    let lp = &p.layers[i];
+    if opt.weight_fusion {
+        // The descriptor chain was enqueued at boot (audio first, then one
+        // descriptor per layer); wait until this layer's stream (done
+        // count >= i + 2) has landed. With preprocessing in front, this
+        // poll almost never spins — that is the Fig. 9 saving.
+        a.li(Reg::T1, (i as i64) + 2);
+        let top = a.here_label();
+        a.lw(Reg::T0, Reg::T6, layout::MMIO_UDMA_DONE as i32);
+        a.blt(Reg::T0, Reg::T1, top);
+    } else {
+        // Serial: fetch now, stall on DRAM (Fig. 9 baseline).
+        emit_udma_start(
+            a,
+            layout::DRAM_BASE as i64 + lp.dram_offset as i64,
+            layout::WT_BASE as i64 + lp.wt_offset as i64,
+            lp.stream_bytes() as i64,
+        );
+        emit_udma_wait(a);
+    }
+
+    // cim_w burst: signs, column-major. a1 = stream ptr, a2 = port addr.
+    let aw = lp.window_words;
+    a.li(Reg::A1, layout::WT_BASE as i64 + lp.wt_offset as i64);
+    a.li(Reg::A2, weight_map::SIGN_BASE as i64);
+    a.li(Reg::S5, lp.c_out as i64);
+    let col_top = a.here_label();
+    for j in 0..aw {
+        a.cim(CimInstr::write(Reg::A1, j as u16, Reg::A2, j as u16));
+    }
+    a.addi(Reg::A1, Reg::A1, (4 * aw) as i32);
+    a.addi(Reg::A2, Reg::A2, Mode::X.col_words() as i32);
+    a.addi(Reg::S5, Reg::S5, -1);
+    a.bne(Reg::S5, Reg::ZERO, col_top);
+
+    // Thresholds (binarized layers): one word per output channel.
+    if lp.th_words > 0 {
+        a.li(Reg::A2, weight_map::TH_BASE as i64);
+        a.li(Reg::S5, lp.th_words as i64);
+        let th_top = a.here_label();
+        a.cim(CimInstr::write(Reg::A1, 0, Reg::A2, 0));
+        a.addi(Reg::A1, Reg::A1, 4);
+        a.addi(Reg::A2, Reg::A2, 1);
+        a.addi(Reg::S5, Reg::S5, -1);
+        a.bne(Reg::S5, Reg::ZERO, th_top);
+    }
+
+    emit_phase(a, Phase::weight_done(i));
+}
+
+/// Convolution phase of a binarized layer (row-wise dataflow, Fig. 5).
+fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, i: usize, opt: OptLevel) {
+    let lp = &p.layers[i];
+    let s = lp.s_words;
+    let o = lp.o_words;
+    let t_len = lp.t_in;
+    let fused_pool = opt.conv_pool_pipeline && lp.pooled;
+
+    // Configure the CIM unit for this layer.
+    let cfg = CimConfig {
+        mode: Mode::X,
+        pool_or: fused_pool,
+        window_words: lp.window_words as u8,
+        row_base: 0,
+        col_base: 0,
+    };
+    a.li(Reg::T0, cfg.to_bits() as i64);
+    mmio_sw(a, Reg::T0, layout::MMIO_CIM_CFG);
+
+    let in_buf = FM + p.in_buf(i) as i64;
+    // Without the pipeline, pooled layers stage unpooled rows in PREPOOL.
+    let conv_dst = if fused_pool || !lp.pooled {
+        FM + p.out_buf(i) as i64
+    } else {
+        FM + plan::FM_PREPOOL as i64
+    };
+    a.li(Reg::A0, in_buf); // src row pointer
+    a.li(Reg::A2, FM + plan::FM_SCRATCH as i64); // dummy store target
+    a.li(Reg::A3, conv_dst); // real drain pointer
+
+    // Prefill: zero row (pad), then rows 0 and 1.
+    a.li(Reg::A1, FM + plan::FM_ZERO as i64);
+    for j in 0..s {
+        a.cim(CimInstr::conv(Reg::A1, j as u16, Reg::A2, 0, 7, true));
+    }
+    for j in 0..2 * s {
+        a.cim(CimInstr::conv(Reg::A0, j as u16, Reg::A2, 0, 7, true));
+    }
+    // a0 now conceptually points at row 2 (next row to shift).
+    a.addi(Reg::A0, Reg::A0, (8 * s) as i32);
+
+    for t in 0..t_len {
+        // Does this position drain to the real output?
+        let drains = if fused_pool { t % 2 == 1 } else { true };
+        // Fire (wd = 0). Its store is word 0: real when draining.
+        if drains {
+            a.cim(CimInstr::conv(Reg::A0, 0, Reg::A3, 0, 0, false));
+            for wd in 1..o {
+                a.cim(CimInstr::conv(Reg::A0, 0, Reg::A3, wd as u16, wd as u8, false));
+            }
+            a.addi(Reg::A3, Reg::A3, (4 * o) as i32);
+        } else {
+            a.cim(CimInstr::conv(Reg::A0, 0, Reg::A2, 0, 0, false));
+        }
+        // Shift in row t+2 for the next position.
+        if t + 2 < t_len {
+            for j in 0..s {
+                a.cim(CimInstr::conv(Reg::A0, j as u16, Reg::A2, 0, 7, true));
+            }
+            a.addi(Reg::A0, Reg::A0, (4 * s) as i32);
+        } else if t + 2 == t_len {
+            // Boundary: shift the zero row.
+            for j in 0..s {
+                a.cim(CimInstr::conv(Reg::A1, j as u16, Reg::A2, 0, 7, true));
+            }
+        }
+    }
+
+    // Unfused pooling: RISC-V OR pass PREPOOL -> out buffer (Fig. 7
+    // baseline: the CIM macro idles during this).
+    if lp.pooled && !fused_pool {
+        let out = FM + p.out_buf(i) as i64;
+        a.li(Reg::S0, FM + plan::FM_PREPOOL as i64);
+        a.li(Reg::S1, out);
+        a.li(Reg::S2, lp.t_out as i64);
+        let top = a.here_label();
+        for w in 0..o {
+            a.lw(Reg::T0, Reg::S0, (4 * w) as i32);
+            a.lw(Reg::T1, Reg::S0, (4 * (o + w)) as i32);
+            a.or(Reg::T0, Reg::T0, Reg::T1);
+            a.sw(Reg::S1, Reg::T0, (4 * w) as i32);
+        }
+        a.addi(Reg::S0, Reg::S0, (8 * o) as i32);
+        a.addi(Reg::S1, Reg::S1, (4 * o) as i32);
+        a.addi(Reg::S2, Reg::S2, -1);
+        a.bne(Reg::S2, Reg::ZERO, top);
+    }
+
+    // Baseline FM round trip (no layer fusion): spill the output FM to
+    // DRAM and reload it (Fig. 6 baseline), except after the last layer.
+    if !opt.layer_fusion && i + 1 < p.layers.len() {
+        let out = p.out_buf(i) as i64;
+        let bytes = lp.out_bytes() as i64;
+        emit_udma_start(
+            a,
+            FM + out,
+            layout::DRAM_BASE as i64 + plan::DRAM_FM_SPILL as i64,
+            bytes,
+        );
+        emit_udma_wait(a);
+        emit_udma_start(
+            a,
+            layout::DRAM_BASE as i64 + plan::DRAM_FM_SPILL as i64,
+            FM + out,
+            bytes,
+        );
+        emit_udma_wait(a);
+    }
+    emit_phase(a, Phase::conv_done(i));
+}
+
+/// Final layer: raw sums via the `cim_r` high-precision port, accumulated
+/// into the GAP result vector on the RISC-V side (Fig. 10 post-processing).
+fn emit_final_layer(a: &mut Asm, p: &KwsPlan, model: &KwsModel, opt: OptLevel) {
+    let i = p.layers.len() - 1;
+    let lp = &p.layers[i];
+    let s = lp.s_words;
+    let t_len = lp.t_in;
+    let n = model.n_classes;
+
+    let cfg = CimConfig {
+        mode: Mode::X,
+        pool_or: false,
+        window_words: lp.window_words as u8,
+        row_base: 0,
+        col_base: 0,
+    };
+    a.li(Reg::T0, cfg.to_bits() as i64);
+    mmio_sw(a, Reg::T0, layout::MMIO_CIM_CFG);
+
+    a.li(Reg::A0, FM + p.in_buf(i) as i64);
+    a.li(Reg::A1, FM + plan::FM_ZERO as i64);
+    a.li(Reg::A2, FM + plan::FM_SCRATCH as i64);
+    a.li(Reg::A3, DMEM + plan::DMEM_RAWDUMP as i64);
+
+    // Prefill rows -1, 0, 1.
+    for j in 0..s {
+        a.cim(CimInstr::conv(Reg::A1, j as u16, Reg::A2, 0, 7, true));
+    }
+    for j in 0..2 * s {
+        a.cim(CimInstr::conv(Reg::A0, j as u16, Reg::A2, 0, 7, true));
+    }
+    a.addi(Reg::A0, Reg::A0, (8 * s) as i32);
+
+    // s3 = raw port base (register operand for cim_r).
+    a.li(Reg::S3, weight_map::RAW_BASE as i64);
+    for t in 0..t_len {
+        // Fire; the binarized store goes to scratch (we read raw sums).
+        a.cim(CimInstr::conv(Reg::A0, 0, Reg::A2, 0, 0, false));
+        // Raw sums of columns 0..n -> DMEM dump (a1 temporarily = port base).
+        a.mv(Reg::A1, Reg::S3);
+        for c in 0..n {
+            a.cim(CimInstr::read(Reg::A1, c as u16, Reg::A3, c as u16));
+        }
+        a.li(Reg::A1, FM + plan::FM_ZERO as i64);
+        a.addi(Reg::A3, Reg::A3, (4 * n) as i32);
+        if t + 2 < t_len {
+            for j in 0..s {
+                a.cim(CimInstr::conv(Reg::A0, j as u16, Reg::A2, 0, 7, true));
+            }
+            a.addi(Reg::A0, Reg::A0, (4 * s) as i32);
+        } else if t + 2 == t_len {
+            for j in 0..s {
+                a.cim(CimInstr::conv(Reg::A1, j as u16, Reg::A2, 0, 7, true));
+            }
+        }
+    }
+
+    // GAP accumulate: result[c] = sum over t of rawdump[t][c]. Pointer
+    // walks the dump row by row so immediates stay within I-type range.
+    a.li(Reg::S0, DMEM + plan::DMEM_RAWDUMP as i64);
+    a.li(Reg::S1, DMEM + plan::DMEM_RESULT as i64);
+    for c in 0..n {
+        a.sw(Reg::S1, Reg::ZERO, (c * 4) as i32);
+    }
+    a.li(Reg::S2, t_len as i64);
+    let gap_top = a.here_label();
+    for c in 0..n {
+        a.lw(Reg::T0, Reg::S1, (c * 4) as i32);
+        a.lw(Reg::T1, Reg::S0, (c * 4) as i32);
+        a.add(Reg::T0, Reg::T0, Reg::T1);
+        a.sw(Reg::S1, Reg::T0, (c * 4) as i32);
+    }
+    a.addi(Reg::S0, Reg::S0, (n * 4) as i32);
+    a.addi(Reg::S2, Reg::S2, -1);
+    a.bne(Reg::S2, Reg::ZERO, gap_top);
+    emit_phase(a, Phase::conv_done(i));
+    let _ = opt;
+}
+
+/// Build the complete program for one inference.
+pub fn build_kws_program(model: &KwsModel, opt: OptLevel) -> Result<Program> {
+    let p = KwsPlan::new(model)?;
+    let mut a = Asm::new();
+
+    emit_boot(&mut a, &p, opt);
+    emit_preprocess(&mut a, model);
+    for i in 0..p.layers.len() {
+        emit_weight_phase(&mut a, &p, i, opt);
+        if p.layers[i].binarized {
+            emit_conv_layer(&mut a, &p, i, opt);
+        } else {
+            emit_final_layer(&mut a, &p, model, opt);
+        }
+    }
+    // Publish the result and halt.
+    a.li(Reg::T0, DMEM + plan::DMEM_RESULT as i64);
+    mmio_sw(&mut a, Reg::T0, layout::MMIO_HOST_RESULT);
+    a.li(Reg::T0, 0);
+    mmio_sw(&mut a, Reg::T0, layout::MMIO_HOST_EXIT);
+    a.ebreak(); // unreachable (HOST_EXIT halts), defensive
+
+    // DMEM constant tables: folded-BN thresholds + flip words.
+    let thr_words: Vec<u32> = model
+        .pre_thr
+        .iter()
+        .zip(&model.pre_dir)
+        .zip(&model.bn_beta)
+        .map(|((&thr, &dir), &beta)| match dir {
+            // dir > 0: bit = f > thr (raw slt result, flip 0)
+            1 => (thr.clamp(i32::MIN as i64, i32::MAX as i64)) as i32 as u32,
+            // dir < 0: bit = !(f > thr) -> same thr, flip 1
+            -1 => (thr.clamp(i32::MIN as i64, i32::MAX as i64)) as i32 as u32,
+            // dir == 0: constant beta>0: thr = MAX (never >) with flip set
+            // for true; or flip clear for false.
+            _ => {
+                let _ = beta;
+                i32::MAX as u32
+            }
+        })
+        .collect();
+    let flip_words: Vec<u32> = (0..model.c / 32)
+        .map(|w| {
+            let mut word = 0u32;
+            for b in 0..32 {
+                let ch = w * 32 + b;
+                let flip = match model.pre_dir[ch] {
+                    -1 => true,
+                    0 => model.bn_beta[ch] > 0.0,
+                    _ => false,
+                };
+                if flip {
+                    word |= 1 << b;
+                }
+            }
+            word
+        })
+        .collect();
+
+    let final_t = p.layers.last().unwrap().t_in;
+    Ok(Program {
+        imem: a.assemble()?,
+        dram: p.build_dram_weights(model),
+        dmem: vec![(plan::DMEM_THR, thr_words), (plan::DMEM_FLIP, flip_words)],
+        result_addr: plan::DMEM_RESULT,
+        final_t,
+        opt,
+        n_classes: model.n_classes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::decode;
+
+    fn fake_model() -> KwsModel {
+        use crate::model::kws::LayerSpec;
+        let mk = |ci: usize, co: usize, pooled: bool, binarized: bool| LayerSpec {
+            c_in: ci,
+            c_out: co,
+            kernel: 3,
+            pooled,
+            binarized,
+            weights: (0..3 * ci * co).map(|x| if x % 3 == 0 { 1 } else { -1 }).collect(),
+            thresholds: if binarized { vec![0; co] } else { vec![] },
+        };
+        KwsModel {
+            audio_len: 16000,
+            t: 128,
+            c: 64,
+            n_classes: 12,
+            fusion_split: 1,
+            layers: vec![mk(64, 64, true, true), mk(64, 12, false, false)],
+            bn_gamma: vec![1.0; 64],
+            bn_beta: vec![0.0; 64],
+            bn_mean: vec![10.0; 64],
+            bn_var: vec![100.0; 64],
+            pre_thr: vec![10; 64],
+            pre_dir: vec![1; 64],
+            trained: false,
+            artifacts_dir: std::path::PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn builds_and_decodes_for_all_opt_levels() {
+        let m = fake_model();
+        for (_, opt) in crate::baselines::OptLevel::ladder() {
+            let prog = build_kws_program(&m, opt).unwrap();
+            assert!(!prog.imem.is_empty());
+            assert!(prog.imem.len() * 4 <= layout::IMEM_SIZE as usize, "IMEM overflow");
+            // Every emitted word must decode.
+            for (i, w) in prog.imem.iter().enumerate() {
+                decode(*w).unwrap_or_else(|e| panic!("word {i}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_has_more_instructions() {
+        let m = fake_model();
+        let base = build_kws_program(&m, OptLevel::BASELINE).unwrap();
+        let full = build_kws_program(&m, OptLevel::FULL).unwrap();
+        assert!(
+            base.imem.len() > full.imem.len(),
+            "baseline adds pooling passes + FM spills: {} vs {}",
+            base.imem.len(),
+            full.imem.len()
+        );
+    }
+
+    #[test]
+    fn dram_image_covers_all_layers() {
+        let m = fake_model();
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        assert_eq!(prog.dram.len(), 2);
+        let total: usize = prog.dram.iter().map(|(_, b)| b.len()).sum();
+        // L0: 64 cols * 6 words + 64 th; L1: 12 cols * 6 words.
+        assert_eq!(total, (64 * 6 + 64 + 12 * 6) * 4);
+    }
+}

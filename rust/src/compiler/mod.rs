@@ -1,0 +1,19 @@
+//! The "full stack flow" compiler (paper §II-G, Fig. 10): takes the
+//! trained/quantized KWS model and emits a complete, runnable RV32IM+CIM
+//! program image — boot, integer preprocessing, per-layer weight loading
+//! (uDMA + `cim_w` bursts), row-wise CIM convolution with the configured
+//! optimizations, and RISC-V post-processing.
+//!
+//! * [`asm`]     — label-based mini-assembler over the `isa` encoder.
+//! * [`codegen`] — the program generator, parameterized by
+//!   `baselines::OptLevel` (layer fusion / conv-pool pipeline / weight
+//!   fusion toggles — the ablation axes of Figs. 6/7/9).
+//! * [`program`] — the linked image: IMEM words + DRAM staging + DMEM
+//!   constant tables + metadata.
+
+pub mod asm;
+pub mod codegen;
+pub mod program;
+
+pub use codegen::build_kws_program;
+pub use program::{Phase, Program};

@@ -1,0 +1,52 @@
+//! The linked program image produced by codegen and consumed by the SoC
+//! loader (`sim::soc`).
+
+use crate::baselines::OptLevel;
+
+/// Phase marker ids written to `MMIO_HOST_PHASE` (cycle attribution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    BootDone = 1,
+    PreprocessDone = 2,
+    /// Weight phase of layer i done: 10 + i.
+    WeightBase = 10,
+    /// Conv phase of layer i done: 30 + i.
+    ConvBase = 30,
+}
+
+impl Phase {
+    pub fn weight_done(layer: usize) -> u32 {
+        Phase::WeightBase as u32 + layer as u32
+    }
+
+    pub fn conv_done(layer: usize) -> u32 {
+        Phase::ConvBase as u32 + layer as u32
+    }
+}
+
+/// A complete bootable image.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Encoded instructions, loaded at IMEM 0 (boot vector).
+    pub imem: Vec<u32>,
+    /// DRAM staging: (byte offset, payload) chunks (weights; audio is
+    /// staged per-inference by the SoC loader).
+    pub dram: Vec<(u32, Vec<u8>)>,
+    /// DMEM constant tables: (byte offset, words).
+    pub dmem: Vec<(u32, Vec<u32>)>,
+    /// DMEM byte address of the n_classes i32 result sums (divide by the
+    /// final-layer T on the host for GAP logits).
+    pub result_addr: u32,
+    /// Final-layer time length (GAP divisor).
+    pub final_t: usize,
+    /// The optimization level this program was compiled with.
+    pub opt: OptLevel,
+    pub n_classes: usize,
+}
+
+impl Program {
+    /// Rough static footprint for reports.
+    pub fn imem_bytes(&self) -> usize {
+        self.imem.len() * 4
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the edge-inference request loop.
+//!
+//! CIMR-V is an edge accelerator, so the coordinator is a leader/worker
+//! request pipeline rather than a datacenter router: a leader thread
+//! batches incoming utterances, worker threads each own a SoC instance
+//! (the cycle-accurate chip) and optionally the PJRT golden model, and
+//! every response carries latency/energy accounting and a cross-check
+//! verdict. (The offline image has no tokio; std threads + channels play
+//! its role — see DESIGN.md §2.)
+
+pub mod report;
+pub mod server;
+
+pub use server::{Coordinator, InferenceRequest, InferenceResponse};

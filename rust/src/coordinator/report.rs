@@ -1,0 +1,102 @@
+//! Experiment reporting: JSON + human-readable summaries shared by the
+//! CLI subcommands and the benches.
+
+use crate::baselines::OptLevel;
+use crate::sim::RunResult;
+use crate::util::json::Json;
+
+/// One ladder rung's measurement.
+#[derive(Debug, Clone)]
+pub struct LadderPoint {
+    pub name: &'static str,
+    pub opt: OptLevel,
+    pub total_cycles: u64,
+    pub accelerated_cycles: u64,
+    pub preprocess_cycles: u64,
+}
+
+impl LadderPoint {
+    pub fn from_run(name: &'static str, opt: OptLevel, r: &RunResult) -> Self {
+        LadderPoint {
+            name,
+            opt,
+            total_cycles: r.cycles,
+            accelerated_cycles: r.phases.accelerated(),
+            preprocess_cycles: r.phases.preprocess,
+        }
+    }
+}
+
+/// Render the Fig. 6/7/9 + §III-A waterfall: per-step and cumulative
+/// reductions over the accelerated (weights+conv) phases and end-to-end.
+pub fn render_ladder(points: &[LadderPoint]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<28}{:>14}{:>14}{:>12}{:>12}{:>12}{:>12}\n",
+        "config", "accel cycles", "e2e cycles", "step red.", "cum red.", "e2e step", "e2e cum."
+    ));
+    let base = &points[0];
+    let mut prev = base;
+    for p in points {
+        let step = 1.0 - p.accelerated_cycles as f64 / prev.accelerated_cycles as f64;
+        let cum = 1.0 - p.accelerated_cycles as f64 / base.accelerated_cycles as f64;
+        let estep = 1.0 - p.total_cycles as f64 / prev.total_cycles as f64;
+        let ecum = 1.0 - p.total_cycles as f64 / base.total_cycles as f64;
+        s.push_str(&format!(
+            "{:<28}{:>14}{:>14}{:>11.2}%{:>11.2}%{:>11.2}%{:>11.2}%\n",
+            p.name,
+            p.accelerated_cycles,
+            p.total_cycles,
+            100.0 * step,
+            100.0 * cum,
+            100.0 * estep,
+            100.0 * ecum,
+        ));
+        prev = p;
+    }
+    s
+}
+
+/// Ladder as JSON (machine-readable experiment record).
+pub fn ladder_json(points: &[LadderPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("name", Json::str(p.name)),
+                    ("opt", Json::str(p.opt.to_string())),
+                    ("accelerated_cycles", Json::num(p.accelerated_cycles as f64)),
+                    ("total_cycles", Json::num(p.total_cycles as f64)),
+                    ("preprocess_cycles", Json::num(p.preprocess_cycles as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(name: &'static str, accel: u64, total: u64) -> LadderPoint {
+        LadderPoint {
+            name,
+            opt: OptLevel::FULL,
+            total_cycles: total,
+            accelerated_cycles: accel,
+            preprocess_cycles: total - accel,
+        }
+    }
+
+    #[test]
+    fn ladder_renders_percentages() {
+        let pts =
+            vec![pt("baseline", 100_000, 200_000), pt("+lf", 80_000, 180_000), pt("full", 20_000, 120_000)];
+        let s = render_ladder(&pts);
+        assert!(s.contains("baseline"));
+        assert!(s.contains("80.00%")); // cumulative accel reduction of full
+        let j = ladder_json(&pts);
+        assert_eq!(j.as_arr().unwrap().len(), 3);
+    }
+}

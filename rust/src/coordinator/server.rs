@@ -1,0 +1,239 @@
+//! Leader/worker inference service over the cycle-level SoC.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::baselines::OptLevel;
+use crate::compiler::build_kws_program;
+use crate::mem::dram::DramConfig;
+use crate::model::KwsModel;
+use crate::sim::{RunResult, Soc};
+
+/// One utterance to classify.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub audio: Vec<f32>,
+    /// Golden label, if known (accuracy accounting).
+    pub label: Option<i32>,
+}
+
+/// The service's answer.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub predicted: usize,
+    pub logits: Vec<f32>,
+    /// Simulated chip latency (cycles @ 50 MHz).
+    pub chip_cycles: u64,
+    pub chip_seconds: f64,
+    /// Host wall-clock spent simulating.
+    pub host_seconds: f64,
+    /// Energy per inference (uJ).
+    pub energy_uj: f64,
+    pub correct: Option<bool>,
+}
+
+impl InferenceResponse {
+    fn from_run(id: u64, r: &RunResult, label: Option<i32>, host: f64) -> Self {
+        InferenceResponse {
+            id,
+            predicted: r.predicted,
+            logits: r.logits.clone(),
+            chip_cycles: r.cycles,
+            chip_seconds: r.seconds_at_50mhz,
+            host_seconds: host,
+            energy_uj: r.energy.total_uj(),
+            correct: label.map(|l| l as usize == r.predicted),
+        }
+    }
+}
+
+/// Aggregate service statistics.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub served: AtomicU64,
+    pub correct: AtomicU64,
+    pub labeled: AtomicU64,
+    pub chip_cycles: AtomicU64,
+}
+
+/// The leader: owns worker threads, each with its own SoC (the chip is
+/// single-tenant; a fleet of workers models a fleet of edge devices).
+pub struct Coordinator {
+    tx: mpsc::Sender<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)>,
+    pub stats: Arc<ServiceStats>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spin up `n_workers` workers for `model` at `opt`.
+    pub fn start(model: &KwsModel, opt: OptLevel, n_workers: usize) -> Result<Self> {
+        let program = build_kws_program(model, opt)?;
+        let stats = Arc::new(ServiceStats::default());
+        let (tx, rx) = mpsc::channel::<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::new();
+        for _ in 0..n_workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let stats = Arc::clone(&stats);
+            let program = program.clone();
+            workers.push(thread::spawn(move || {
+                let mut soc = match Soc::new(program, DramConfig::default()) {
+                    Ok(s) => s,
+                    Err(_) => return,
+                };
+                loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    let Ok((req, reply)) = job else { break };
+                    let t0 = Instant::now();
+                    let out = soc.infer(&req.audio).map(|r| {
+                        let resp = InferenceResponse::from_run(
+                            req.id,
+                            &r,
+                            req.label,
+                            t0.elapsed().as_secs_f64(),
+                        );
+                        stats.served.fetch_add(1, Ordering::Relaxed);
+                        stats.chip_cycles.fetch_add(r.cycles, Ordering::Relaxed);
+                        if let Some(c) = resp.correct {
+                            stats.labeled.fetch_add(1, Ordering::Relaxed);
+                            if c {
+                                stats.correct.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        resp
+                    });
+                    let _ = reply.send(out);
+                }
+            }));
+        }
+        Ok(Coordinator { tx, stats, workers })
+    }
+
+    /// Submit one request; returns a receiver for the response.
+    pub fn submit(&self, req: InferenceRequest) -> mpsc::Receiver<Result<InferenceResponse>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send((req, rtx)).expect("coordinator alive");
+        rrx
+    }
+
+    /// Serve a whole batch, preserving order.
+    pub fn serve_batch(&self, reqs: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
+        let rxs: Vec<_> = reqs.into_iter().map(|r| self.submit(r)).collect();
+        rxs.into_iter()
+            .map(|rx| rx.recv().context("worker dropped")?)
+            .collect()
+    }
+
+    /// Measured accuracy over labeled requests so far.
+    pub fn accuracy(&self) -> Option<f64> {
+        let l = self.stats.labeled.load(Ordering::Relaxed);
+        (l > 0).then(|| self.stats.correct.load(Ordering::Relaxed) as f64 / l as f64)
+    }
+
+    /// Shut down: drop the queue and join workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::kws::LayerSpec;
+
+    fn fake_model() -> KwsModel {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let mut mk = |ci: usize, co: usize, pooled: bool, binarized: bool| LayerSpec {
+            c_in: ci,
+            c_out: co,
+            kernel: 3,
+            pooled,
+            binarized,
+            weights: (0..3 * ci * co).map(|_| rng.pm1()).collect(),
+            thresholds: if binarized { vec![0; co] } else { vec![] },
+        };
+        KwsModel {
+            audio_len: 16000,
+            t: 128,
+            c: 64,
+            n_classes: 12,
+            fusion_split: 1,
+            layers: vec![mk(64, 32, true, true), mk(32, 12, false, false)],
+            bn_gamma: vec![1.0; 64],
+            bn_beta: vec![0.0; 64],
+            bn_mean: vec![20000.0; 64],
+            bn_var: vec![4e8; 64],
+            pre_thr: vec![20000; 64],
+            pre_dir: vec![1; 64],
+            trained: false,
+            artifacts_dir: std::path::PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn serves_batches_in_order_across_workers() {
+        let m = fake_model();
+        let coord = Coordinator::start(&m, OptLevel::FULL, 3).unwrap();
+        let reqs: Vec<_> = (0..9)
+            .map(|i| InferenceRequest {
+                id: i,
+                audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
+                label: None,
+            })
+            .collect();
+        let resps = coord.serve_batch(reqs).unwrap();
+        assert_eq!(resps.len(), 9);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.chip_cycles > 0);
+            assert!(r.energy_uj > 0.0);
+        }
+        assert_eq!(coord.stats.served.load(Ordering::Relaxed), 9);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn responses_deterministic_across_workers() {
+        // The same utterance must classify identically on every worker.
+        let m = fake_model();
+        let coord = Coordinator::start(&m, OptLevel::FULL, 4).unwrap();
+        let audio = crate::model::dataset::synth_utterance(5, 1, 16000, 0.3);
+        let reqs: Vec<_> = (0..8)
+            .map(|i| InferenceRequest { id: i, audio: audio.clone(), label: None })
+            .collect();
+        let resps = coord.serve_batch(reqs).unwrap();
+        for r in &resps[1..] {
+            assert_eq!(r.logits, resps[0].logits);
+            assert_eq!(r.chip_cycles, resps[0].chip_cycles);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn accuracy_accounting() {
+        let m = fake_model();
+        let coord = Coordinator::start(&m, OptLevel::FULL, 2).unwrap();
+        let reqs: Vec<_> = (0..4)
+            .map(|i| InferenceRequest {
+                id: i,
+                audio: crate::model::dataset::synth_utterance(0, i, 16000, 0.3),
+                label: Some(0),
+            })
+            .collect();
+        let _ = coord.serve_batch(reqs).unwrap();
+        assert_eq!(coord.stats.labeled.load(Ordering::Relaxed), 4);
+        assert!(coord.accuracy().is_some());
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,59 @@
+//! Control and status registers. We implement the counters the paper's
+//! flow actually uses (cycle, instret, and a scratch register) — enough
+//! for self-timing programs — and fault on anything else.
+
+use anyhow::{bail, Result};
+
+/// Standard CSR addresses.
+pub const CSR_CYCLE: u16 = 0xC00;
+pub const CSR_CYCLEH: u16 = 0xC80;
+pub const CSR_INSTRET: u16 = 0xC02;
+pub const CSR_INSTRETH: u16 = 0xC82;
+/// mscratch: free scratch register.
+pub const CSR_MSCRATCH: u16 = 0x340;
+
+#[derive(Debug, Clone, Default)]
+pub struct CsrFile {
+    pub mscratch: u32,
+}
+
+impl CsrFile {
+    pub fn read(&self, csr: u16, cycle: u64, instret: u64) -> Result<u32> {
+        Ok(match csr {
+            CSR_CYCLE => cycle as u32,
+            CSR_CYCLEH => (cycle >> 32) as u32,
+            CSR_INSTRET => instret as u32,
+            CSR_INSTRETH => (instret >> 32) as u32,
+            CSR_MSCRATCH => self.mscratch,
+            _ => bail!("unimplemented CSR {csr:#x}"),
+        })
+    }
+
+    pub fn write(&mut self, csr: u16, v: u32) -> Result<()> {
+        match csr {
+            CSR_MSCRATCH => self.mscratch = v,
+            CSR_CYCLE | CSR_CYCLEH | CSR_INSTRET | CSR_INSTRETH => {
+                bail!("CSR {csr:#x} is read-only")
+            }
+            _ => bail!("unimplemented CSR {csr:#x}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_scratch() {
+        let mut c = CsrFile::default();
+        assert_eq!(c.read(CSR_CYCLE, 0x1_0000_0005, 3).unwrap(), 5);
+        assert_eq!(c.read(CSR_CYCLEH, 0x1_0000_0005, 3).unwrap(), 1);
+        assert_eq!(c.read(CSR_INSTRET, 0, 3).unwrap(), 3);
+        c.write(CSR_MSCRATCH, 99).unwrap();
+        assert_eq!(c.read(CSR_MSCRATCH, 0, 0).unwrap(), 99);
+        assert!(c.write(CSR_CYCLE, 0).is_err());
+        assert!(c.read(0x300, 0, 0).is_err());
+    }
+}

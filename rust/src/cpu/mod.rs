@@ -1,0 +1,16 @@
+//! The modified RISC-V core (paper Fig. 3): a 2-stage (ibex-class)
+//! in-order pipeline — prefetch buffer feeding a decode/execute stage —
+//! extended with the CIM read/write/convolution execute units.
+//!
+//! Timing model (cycles per retired instruction):
+//!   * ALU / CSR / CIM-type: 1   (CIM instructions are atomic single-cycle,
+//!     §II-C — the point of the ISA extension)
+//!   * loads: 2 (+ DRAM stalls), stores: 1 (+ DRAM stalls)
+//!   * taken branches / jumps: 2 (front-end flush of the 2-stage pipe)
+//!   * mul: 1, div/rem: 37 (iterative divider, ibex-style)
+
+pub mod cpu;
+pub mod csr;
+pub mod regfile;
+
+pub use cpu::{Cpu, ExecStats, StepOutcome};

@@ -1,0 +1,11 @@
+//! Dataflow planning: where feature maps, weight streams and macro
+//! rectangles live, and which of the paper's optimizations (layer fusion,
+//! conv/max-pool pipeline, weight fusion) the generated program applies.
+//!
+//! The policies themselves are *compiled into the program* by
+//! `compiler::codegen`; this module owns the address/size arithmetic so
+//! codegen, the SoC loader and the analytical models all agree.
+
+pub mod plan;
+
+pub use plan::{KwsPlan, LayerPlan};

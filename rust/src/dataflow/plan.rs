@@ -1,0 +1,316 @@
+//! Address & schedule planning for the KWS program (row-wise dataflow,
+//! Fig. 5): FM SRAM buffers, weight-SRAM ping-pong halves, DRAM staging,
+//! and per-layer shift/drain word counts.
+
+use anyhow::{ensure, Result};
+
+use crate::mem::layout;
+use crate::model::KwsModel;
+
+// --- FM SRAM layout (32 KiB) -------------------------------------------------
+/// Ping-pong FM buffers (layer input/output) and the pre-pool staging
+/// buffer used when the conv/max-pool pipeline is disabled.
+pub const FM_BUF_A: u32 = 0x0000;
+pub const FM_BUF_B: u32 = 0x1000;
+pub const FM_PREPOOL: u32 = 0x2000;
+/// Eight zero words for boundary-row shifts (never written).
+pub const FM_ZERO: u32 = 0x7E00;
+/// Scratch word for dummy stores (prefill shifts, even-position fires).
+pub const FM_SCRATCH: u32 = 0x7F00;
+/// One all-ones word (mask-plane boot initialisation source).
+pub const FM_ONES: u32 = 0x7F80;
+
+// --- Weight SRAM layout (64 KiB) ---------------------------------------------
+// Static allocation: layer i's stream lives at the cumulative offset of
+// the streams before it (the whole model's streams fit the 512 Kb SRAM —
+// the "weight buffer" of Fig. 1; checked by KwsPlan::new). The uDMA
+// descriptor chain fills the buffer once per inference, fully overlapped
+// with preprocessing when weight fusion is on.
+
+// --- DMEM layout --------------------------------------------------------------
+/// Audio staged as i16; the halfword below the base stays zero (the
+/// "previous sample" of sample 0 for the pre-emphasis filter).
+pub const DMEM_AUDIO: u32 = 0x100;
+/// Folded-BN per-channel thresholds (c i32 words)...
+pub const DMEM_THR: u32 = 0x1_0000;
+/// ...then c/32 flip words applied to each packed feature word.
+pub const DMEM_FLIP: u32 = 0x1_0200;
+/// GAP accumulators / result vector (n_classes i32 words).
+pub const DMEM_RESULT: u32 = 0x1_0300;
+/// Raw-sum dump area for the final layer (t_final * n_classes words).
+pub const DMEM_RAWDUMP: u32 = 0x1_0400;
+
+// --- DRAM staging --------------------------------------------------------------
+pub const DRAM_AUDIO: u32 = 0x0000_0000;
+pub const DRAM_WEIGHTS: u32 = 0x0001_0000;
+/// Baseline (no layer fusion) FM spill region.
+pub const DRAM_FM_SPILL: u32 = 0x0030_0000;
+
+/// Per-layer schedule parameters.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub index: usize,
+    /// Input feature words per row (c_in/32) — shifts per position.
+    pub s_words: usize,
+    /// Output latch words per row (ceil(c_out/32)) — drains per position.
+    pub o_words: usize,
+    /// Window length in words (kernel * c_in / 32).
+    pub window_words: usize,
+    /// Time length in/out (pools halve).
+    pub t_in: usize,
+    pub t_out: usize,
+    pub pooled: bool,
+    pub binarized: bool,
+    pub c_out: usize,
+    /// Sign-stream words (cols * active words) in the weight stream.
+    pub sign_words: usize,
+    /// Threshold words following the signs (0 for the raw final layer).
+    pub th_words: usize,
+    /// Byte offset of this layer's stream in the DRAM staging area.
+    pub dram_offset: u32,
+    /// Byte offset of this layer's stream in the weight SRAM (static).
+    pub wt_offset: u32,
+}
+
+impl LayerPlan {
+    /// Stream bytes (uDMA transfer length).
+    pub fn stream_bytes(&self) -> u32 {
+        ((self.sign_words + self.th_words) * 4) as u32
+    }
+
+    /// Words per output row in FM SRAM.
+    pub fn out_row_words(&self) -> usize {
+        self.o_words
+    }
+
+    /// Output FM bytes (pooled rows).
+    pub fn out_bytes(&self) -> u32 {
+        (self.t_out * self.o_words * 4) as u32
+    }
+
+    /// Input FM bytes.
+    pub fn in_bytes(&self) -> u32 {
+        (self.t_in * self.s_words * 4) as u32
+    }
+}
+
+/// The whole-model plan.
+#[derive(Debug, Clone)]
+pub struct KwsPlan {
+    pub layers: Vec<LayerPlan>,
+    /// Audio bytes staged in DRAM (i16 samples).
+    pub audio_bytes: u32,
+}
+
+impl KwsPlan {
+    pub fn new(model: &KwsModel) -> Result<Self> {
+        let mut layers = Vec::new();
+        let mut dram_off = DRAM_WEIGHTS;
+        let mut wt_off = 0u32;
+        let mut t = model.t;
+        for (i, l) in model.layers.iter().enumerate() {
+            ensure!(l.c_in % 32 == 0, "layer {i}: c_in must be a word multiple");
+            let s_words = l.c_in / 32;
+            let o_words = l.c_out.div_ceil(32);
+            let window_words = l.kernel * l.c_in / 32;
+            ensure!(window_words <= 32, "layer {i}: window overflows the input buffer");
+            ensure!(l.c_out <= 256, "layer {i}: X-mode SA overflow");
+            let aw = window_words; // active words per column
+            let sign_words = l.c_out * aw;
+            let th_words = if l.binarized { l.c_out } else { 0 };
+            let t_out = if l.pooled { t / 2 } else { t };
+            let lp = LayerPlan {
+                index: i,
+                s_words,
+                o_words,
+                window_words,
+                t_in: t,
+                t_out,
+                pooled: l.pooled,
+                binarized: l.binarized,
+                c_out: l.c_out,
+                sign_words,
+                th_words,
+                dram_offset: dram_off,
+                wt_offset: wt_off,
+            };
+            wt_off += lp.stream_bytes();
+            ensure!(
+                wt_off <= layout::WT_SIZE,
+                "layer {i}: weight streams overflow the 512 Kb weight SRAM \
+                 ({wt_off}B) — the Fig. 1 weight-buffer premise requires the \
+                 model's streams to fit"
+            );
+            // FM buffers: unpooled staging must fit the pre-pool buffer.
+            ensure!(lp.t_in * lp.o_words * 4 <= (FM_ZERO - FM_PREPOOL) as usize);
+            dram_off += lp.stream_bytes();
+            // 4-byte alignment is automatic (whole words).
+            t = t_out;
+            layers.push(lp);
+        }
+        Ok(KwsPlan { layers, audio_bytes: (model.audio_len * 2) as u32 })
+    }
+
+    /// Input FM buffer of layer `i` (ping-pong).
+    pub fn in_buf(&self, i: usize) -> u32 {
+        if i % 2 == 0 {
+            FM_BUF_A
+        } else {
+            FM_BUF_B
+        }
+    }
+
+    /// Output FM buffer of layer `i`.
+    pub fn out_buf(&self, i: usize) -> u32 {
+        if i % 2 == 0 {
+            FM_BUF_B
+        } else {
+            FM_BUF_A
+        }
+    }
+
+    /// Weight-SRAM byte offset of layer `i`'s stream.
+    pub fn wt_offset(&self, i: usize) -> u32 {
+        self.layers[i].wt_offset
+    }
+
+    /// Build the DRAM weight-stream image for all layers: sign words in
+    /// column-major burst order, then threshold words.
+    pub fn build_dram_weights(&self, model: &KwsModel) -> Vec<(u32, Vec<u8>)> {
+        let mut chunks = Vec::new();
+        for (lp, l) in self.layers.iter().zip(&model.layers) {
+            let aw = lp.window_words;
+            let mut bytes = Vec::with_capacity(lp.stream_bytes() as usize);
+            for co in 0..l.c_out {
+                for wj in 0..aw {
+                    let mut sign = 0u32;
+                    for b in 0..32 {
+                        let r = wj * 32 + b;
+                        if r < l.rows() && l.weight(r, co) > 0 {
+                            sign |= 1 << b;
+                        }
+                    }
+                    bytes.extend_from_slice(&sign.to_le_bytes());
+                }
+            }
+            if l.binarized {
+                for &th in &l.thresholds {
+                    bytes.extend_from_slice(&(th as u32).to_le_bytes());
+                }
+            }
+            debug_assert_eq!(bytes.len(), lp.stream_bytes() as usize);
+            chunks.push((lp.dram_offset, bytes));
+        }
+        chunks
+    }
+
+    /// Audio staged as little-endian i16 (the ADC output the chip sees).
+    pub fn build_dram_audio(&self, audio: &[f32]) -> Vec<u8> {
+        let q = crate::model::reference::quantize_audio(audio);
+        let mut bytes = Vec::with_capacity(q.len() * 2);
+        for v in q {
+            bytes.extend_from_slice(&(v as i16).to_le_bytes());
+        }
+        bytes
+    }
+
+    /// Total DRAM weight traffic per inference (all layer streams).
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.stream_bytes() as u64).sum()
+    }
+
+    /// Total `cim_w` instructions for all macro loads.
+    pub fn total_cim_w(&self) -> u64 {
+        self.layers.iter().map(|l| (l.sign_words + l.th_words) as u64).sum()
+    }
+}
+
+/// MMIO register absolute addresses used by codegen.
+pub fn mmio(off: u32) -> u32 {
+    layout::MMIO_BASE + off
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_model() -> KwsModel {
+        // A tiny 3-layer model shaped like Table II for plan tests.
+        use crate::model::kws::LayerSpec;
+        let mk = |ci: usize, co: usize, pooled: bool, binarized: bool| LayerSpec {
+            c_in: ci,
+            c_out: co,
+            kernel: 3,
+            pooled,
+            binarized,
+            weights: vec![1; 3 * ci * co],
+            thresholds: if binarized { vec![0; co] } else { vec![] },
+        };
+        KwsModel {
+            audio_len: 16000,
+            t: 128,
+            c: 64,
+            n_classes: 12,
+            fusion_split: 2,
+            layers: vec![mk(64, 64, true, true), mk(64, 128, true, true), mk(128, 12, false, false)],
+            bn_gamma: vec![1.0; 64],
+            bn_beta: vec![0.0; 64],
+            bn_mean: vec![0.0; 64],
+            bn_var: vec![1.0; 64],
+            pre_thr: vec![0; 64],
+            pre_dir: vec![1; 64],
+            trained: false,
+            artifacts_dir: std::path::PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn plan_word_counts() {
+        let m = fake_model();
+        let p = KwsPlan::new(&m).unwrap();
+        assert_eq!(p.layers[0].s_words, 2);
+        assert_eq!(p.layers[0].o_words, 2);
+        assert_eq!(p.layers[0].window_words, 6);
+        assert_eq!(p.layers[0].t_out, 64);
+        assert_eq!(p.layers[1].t_in, 64);
+        assert_eq!(p.layers[2].o_words, 1); // 12 channels
+        assert!(!p.layers[2].binarized);
+    }
+
+    #[test]
+    fn ping_pong_alternates() {
+        let m = fake_model();
+        let p = KwsPlan::new(&m).unwrap();
+        assert_eq!(p.in_buf(0), FM_BUF_A);
+        assert_eq!(p.out_buf(0), FM_BUF_B);
+        assert_eq!(p.in_buf(1), FM_BUF_B);
+        assert_eq!(p.wt_offset(0), 0);
+        assert_eq!(p.wt_offset(1), p.layers[0].stream_bytes());
+    }
+
+    #[test]
+    fn dram_streams_sized_and_disjoint() {
+        let m = fake_model();
+        let p = KwsPlan::new(&m).unwrap();
+        let chunks = p.build_dram_weights(&m);
+        assert_eq!(chunks.len(), 3);
+        for (i, (off, bytes)) in chunks.iter().enumerate() {
+            assert_eq!(bytes.len() as u32, p.layers[i].stream_bytes());
+            if i > 0 {
+                let (poff, pbytes) = &chunks[i - 1];
+                assert_eq!(poff + pbytes.len() as u32, *off, "contiguous streams");
+            }
+            assert!(*off >= DRAM_WEIGHTS);
+        }
+    }
+
+    #[test]
+    fn audio_staging_i16() {
+        let m = fake_model();
+        let p = KwsPlan::new(&m).unwrap();
+        let bytes = p.build_dram_audio(&[0.0, 0.5, -1.0]);
+        assert_eq!(bytes.len(), 6);
+        assert_eq!(i16::from_le_bytes([bytes[2], bytes[3]]), 1024);
+        assert_eq!(i16::from_le_bytes([bytes[4], bytes[5]]), -2048);
+    }
+}

@@ -1,0 +1,16 @@
+//! Energy/power/throughput accounting and the Table I normalization
+//! formulas.
+//!
+//! * [`table`]     — the calibrated per-event energy table (pJ).
+//! * [`power`]     — run statistics -> energy -> average power -> TOPS/W.
+//! * [`tops`]      — throughput (peak and achieved).
+//! * [`normalize`] — Table I's footnote math (normalized ops + normalized
+//!   energy efficiency across process/voltage/precision).
+
+pub mod normalize;
+pub mod power;
+pub mod table;
+pub mod tops;
+
+pub use power::EnergyReport;
+pub use table::EnergyTable;

@@ -1,0 +1,140 @@
+//! Run statistics -> energy breakdown -> average power -> TOPS/W.
+
+use crate::cim::macro_::CimStats;
+use crate::cpu::ExecStats;
+use crate::mem::bus::Bus;
+
+use super::table::EnergyTable;
+use super::tops::{achieved_tops, CLOCK_HZ};
+
+/// Energy breakdown of one simulated run (picojoules).
+#[derive(Debug, Clone, Default)]
+pub struct EnergyReport {
+    pub core_pj: f64,
+    pub macro_pj: f64,
+    pub fm_sram_pj: f64,
+    pub wt_sram_pj: f64,
+    pub dmem_pj: f64,
+    pub dram_pj: f64,
+    pub udma_pj: f64,
+    pub total_pj: f64,
+    /// Cycles and MACs the energy was spent over.
+    pub cycles: u64,
+    pub macs: u64,
+}
+
+impl EnergyReport {
+    /// Account a completed run.
+    pub fn from_run(table: &EnergyTable, cpu: &ExecStats, bus: &Bus) -> Self {
+        let cim: &CimStats = &bus.cim.stats;
+        let core_pj = table.core_instr * cpu.instret as f64 + table.core_muldiv * cpu.muldiv as f64;
+        let macro_pj = table.macro_fire * cim.fires as f64
+            + table.input_shift * cim.shifts as f64
+            + table.weight_write * cim.weight_writes as f64
+            + table.weight_read * cim.weight_reads as f64;
+        let fm_sram_pj =
+            table.fm_read * bus.fm.reads as f64 + table.fm_write * bus.fm.writes as f64;
+        let wt_sram_pj =
+            table.wt_read * bus.wt.reads as f64 + table.wt_write * bus.wt.writes as f64;
+        let dmem_pj = table.dmem_access * (bus.dmem.reads + bus.dmem.writes) as f64;
+        let dram_pj = table.dram_byte * bus.dram.bytes_transferred as f64;
+        let udma_pj = table.udma_word * (bus.udma.bytes / 4) as f64;
+        let static_pj = table.static_cycle * cpu.cycles as f64;
+        let total_pj =
+            core_pj + macro_pj + fm_sram_pj + wt_sram_pj + dmem_pj + dram_pj + udma_pj + static_pj;
+        EnergyReport {
+            core_pj,
+            macro_pj,
+            fm_sram_pj,
+            wt_sram_pj,
+            dmem_pj,
+            dram_pj,
+            udma_pj,
+            total_pj,
+            cycles: cpu.cycles,
+            macs: cim.macs,
+        }
+    }
+
+    /// Average power over the run (watts) at the 50 MHz clock.
+    pub fn avg_power_w(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.total_pj * 1e-12 / (self.cycles as f64 / CLOCK_HZ)
+    }
+
+    /// Measured energy efficiency (TOPS/W) of the run.
+    pub fn tops_per_w(&self) -> f64 {
+        let p = self.avg_power_w();
+        if p == 0.0 {
+            return 0.0;
+        }
+        achieved_tops(self.macs, self.cycles) / p
+    }
+
+    /// Energy per inference in microjoules (edge-device budget number).
+    pub fn total_uj(&self) -> f64 {
+        self.total_pj * 1e-6
+    }
+
+    /// Render a human-readable breakdown.
+    pub fn breakdown(&self) -> String {
+        let pct = |x: f64| if self.total_pj > 0.0 { 100.0 * x / self.total_pj } else { 0.0 };
+        format!(
+            "energy {:.2} uJ: core {:.1}% | macro {:.1}% | FM {:.1}% | WT {:.1}% | dmem {:.1}% | DRAM {:.1}% | uDMA {:.1}%",
+            self.total_uj(),
+            pct(self.core_pj),
+            pct(self.macro_pj),
+            pct(self.fm_sram_pj),
+            pct(self.wt_sram_pj),
+            pct(self.dmem_pj),
+            pct(self.dram_pj),
+            pct(self.udma_pj),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::dram::DramConfig;
+
+    #[test]
+    fn peak_synthetic_run_hits_calibration() {
+        // Construct stats as if a cim_conv fired every cycle for 1000
+        // cycles: the measured TOPS/W must equal the calibrated 3707.84.
+        let table = EnergyTable::default();
+        let mut bus = Bus::new(DramConfig::default());
+        let cycles = 1000u64;
+        bus.cim.stats.fires = cycles;
+        bus.cim.stats.shifts = cycles;
+        bus.cim.stats.macs = cycles * crate::cim::Mode::X.macs_per_fire();
+        bus.fm.reads = cycles;
+        bus.fm.writes = cycles;
+        let cpu = ExecStats { instret: cycles, cycles, ..Default::default() };
+        let r = EnergyReport::from_run(&table, &cpu, &bus);
+        assert!((r.tops_per_w() - 3707.84).abs() < 1.0, "{}", r.tops_per_w());
+        assert!((r.avg_power_w() - 7.07e-3).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dram_dominates_unfused_traffic() {
+        // 64 KB over DRAM costs more energy than 1000 macro fires — the
+        // architectural argument for fusion, in one assert.
+        let table = EnergyTable::default();
+        assert!(table.dram_byte * 65536.0 > table.macro_fire * 1000.0);
+    }
+
+    #[test]
+    fn breakdown_percentages_sum() {
+        let table = EnergyTable::default();
+        let mut bus = Bus::new(DramConfig::default());
+        bus.cim.stats.fires = 10;
+        bus.dram.bytes_transferred = 100;
+        let cpu = ExecStats { instret: 100, cycles: 100, ..Default::default() };
+        let r = EnergyReport::from_run(&table, &cpu, &bus);
+        let parts = r.core_pj + r.macro_pj + r.fm_sram_pj + r.wt_sram_pj + r.dmem_pj + r.dram_pj + r.udma_pj;
+        assert!((parts - r.total_pj).abs() < 1e-9);
+    }
+}

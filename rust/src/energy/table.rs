@@ -1,0 +1,98 @@
+//! Per-event energy table (picojoules), TSMC 28 nm @ 0.9 V, 50 MHz.
+//!
+//! Calibration (DESIGN.md §6): the paper reports 26.21 TOPS at
+//! 3707.84 TOPS/W, i.e. 7.0701 mW total at peak — 141.40 pJ per cycle when
+//! a `cim_conv` fires every cycle. A peak-compute cycle spends:
+//!
+//! ```text
+//!   core issue + decode        10.0 pJ   (ibex-class 2-stage @28nm)
+//!   FM SRAM read (32 b)         5.0 pJ
+//!   input-buffer shift          2.0 pJ
+//!   macro full-array MAC      118.4 pJ   <- calibrated residual
+//!   FM SRAM write (32 b)        6.0 pJ
+//!   total                     141.4 pJ  -> 3707.84 TOPS/W exactly
+//! ```
+//!
+//! The macro figure is consistent with the integrated macro's standalone
+//! headline ([7]: 20943 TOPS/W ternary @0.9 V — lower per-op energy than
+//! our residual, the difference being SA/latch and routing overhead inside
+//! the CIMR-V wrapper). DRAM energy uses a DDR4-class 400 pJ/byte
+//! (interface + device) — it only matters for the baseline (no-fusion)
+//! rows, which is rather the point of the paper.
+
+/// Energy per event, picojoules.
+#[derive(Debug, Clone)]
+pub struct EnergyTable {
+    /// RISC-V core, per retired instruction (issue/decode/regfile).
+    pub core_instr: f64,
+    /// Extra for mul/div (iterative datapath activity).
+    pub core_muldiv: f64,
+    /// CIM macro full-array MAC fire (X or Y mode, includes SA + latch).
+    pub macro_fire: f64,
+    /// Input-buffer 32-bit shift.
+    pub input_shift: f64,
+    /// Weight-port word write (`cim_w`) including write drivers.
+    pub weight_write: f64,
+    /// Weight-port word read (`cim_r`).
+    pub weight_read: f64,
+    /// FM SRAM word read / write.
+    pub fm_read: f64,
+    pub fm_write: f64,
+    /// Weight SRAM word read / write.
+    pub wt_read: f64,
+    pub wt_write: f64,
+    /// DMEM word access (either direction).
+    pub dmem_access: f64,
+    /// DRAM, per byte moved (device + interface, DDR4-class).
+    pub dram_byte: f64,
+    /// uDMA engine, per word moved (on-chip side).
+    pub udma_word: f64,
+    /// Static/leakage + clock tree, per cycle.
+    pub static_cycle: f64,
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        EnergyTable {
+            core_instr: 10.0,
+            core_muldiv: 8.0,
+            macro_fire: 118.4,
+            input_shift: 2.0,
+            weight_write: 6.0,
+            weight_read: 6.0,
+            fm_read: 5.0,
+            fm_write: 6.0,
+            wt_read: 7.0,
+            wt_write: 8.0,
+            dmem_access: 5.0,
+            dram_byte: 400.0,
+            udma_word: 4.0,
+            static_cycle: 0.0,
+        }
+    }
+}
+
+impl EnergyTable {
+    /// Energy of one peak-throughput cycle (cim_conv firing): the quantity
+    /// the table is calibrated on.
+    pub fn peak_cycle_pj(&self) -> f64 {
+        self.core_instr + self.fm_read + self.input_shift + self.macro_fire + self.fm_write
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_hits_table1_energy_efficiency() {
+        let t = EnergyTable::default();
+        let peak_w = t.peak_cycle_pj() * 1e-12 * 50e6;
+        let tops = 1024.0 * 256.0 * 2.0 * 50e6 / 1e12;
+        let tops_per_w = tops / peak_w;
+        assert!(
+            (tops_per_w - 3707.84).abs() < 1.0,
+            "calibration drifted: {tops_per_w:.2} TOPS/W"
+        );
+    }
+}

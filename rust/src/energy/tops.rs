@@ -1,0 +1,59 @@
+//! Throughput accounting: peak (architectural) and achieved (measured).
+
+use crate::cim::Mode;
+
+/// Core clock of the paper's implementation.
+pub const CLOCK_HZ: f64 = 50e6;
+
+/// Ops per MAC (multiply + accumulate).
+pub const OPS_PER_MAC: f64 = 2.0;
+
+/// Peak TOPS in a mode at the paper's 50 MHz clock (Table I headline:
+/// X-mode -> 26.21 TOPS).
+pub fn peak_tops(mode: Mode) -> f64 {
+    mode.macs_per_fire() as f64 * OPS_PER_MAC * CLOCK_HZ / 1e12
+}
+
+/// Achieved TOPS of a measured run: MACs actually performed over the
+/// cycles it took, at the 50 MHz clock.
+pub fn achieved_tops(total_macs: u64, cycles: u64) -> f64 {
+    if cycles == 0 {
+        return 0.0;
+    }
+    let secs = cycles as f64 / CLOCK_HZ;
+    total_macs as f64 * OPS_PER_MAC / secs / 1e12
+}
+
+/// Macro utilization: fraction of cycles with a fire.
+pub fn macro_utilization(fires: u64, cycles: u64) -> f64 {
+    if cycles == 0 {
+        0.0
+    } else {
+        fires as f64 / cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x_mode_peak_matches_table1() {
+        assert!((peak_tops(Mode::X) - 26.2144).abs() < 1e-6);
+        assert!((peak_tops(Mode::Y) - 26.2144).abs() < 1e-6); // same cell count
+    }
+
+    #[test]
+    fn achieved_is_peak_when_firing_every_cycle() {
+        let macs = Mode::X.macs_per_fire() * 1000;
+        let t = achieved_tops(macs, 1000);
+        assert!((t - peak_tops(Mode::X)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        assert_eq!(macro_utilization(0, 100), 0.0);
+        assert_eq!(macro_utilization(50, 100), 0.5);
+        assert_eq!(macro_utilization(0, 0), 0.0);
+    }
+}

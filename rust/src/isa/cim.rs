@@ -1,0 +1,274 @@
+//! The CIM-type instruction extension (paper Fig. 4).
+//!
+//! Opcode `1111110` (0x7E). Three instructions, all executed atomically in
+//! a single cycle by the modified core:
+//!
+//! * `cim_conv` — shift 32 bits of feature-map SRAM into the macro's input
+//!   buffer, fire the full-array MAC, and store a 32-bit word of the
+//!   binarized output latch back to feature-map SRAM.
+//! * `cim_r`    — read 32 weight bits out of the macro into SRAM.
+//! * `cim_w`    — write 32 weight bits from SRAM into the macro.
+//!
+//! ## Encoding (documented deviation from Fig. 4)
+//!
+//! Fig. 4's field diagram is internally inconsistent in the published PDF:
+//! the bit ranges for rs1/rs2/funct2 overlap, "funct2" carries the values
+//! 0x01/0x10/0x11 (only readable as *binary* 2-bit values), and nothing
+//! says how the 256-bit CIM output reaches SRAM 32 bits at a time. We keep
+//! the published field order and semantics and pin down a self-consistent
+//! layout that makes the hidden sequencing explicit:
+//!
+//! ```text
+//!  31     25 24      17 16 15 14 13 12 11 10    8   7   6      0
+//! +---------+----------+-----+-----+-----+--------+----+--------+
+//! | imm_d   | imm_s    | rs2'| rs1'| f2  |   wd   | sh | opcode |
+//! | [6:0]   | [7:0]    |     |     |     |        |    | 1111110|
+//! +---------+----------+-----+-----+-----+--------+----+--------+
+//! ```
+//!
+//! * `rs1'`/`rs2'` are 2-bit selectors over x10..x13 (a0..a3): the
+//!   compiler pins CIM base addresses to the a-register window, which is
+//!   what lets two bases, two offsets, a word select and a function field
+//!   coexist in 32 bits.
+//! * `imm_s`/`imm_d` are unsigned *word* offsets (the CIM port moves
+//!   32-bit words): 8 bits source, 7 bits destination.
+//! * `wd` (3 bits) selects the 32-lane slice of the 256-bit output latch
+//!   to store — the paper's "store CIM_out[31:0]" issued 8 times per row
+//!   with an implicit word counter; we carry the counter in the encoding.
+//! * `sh` (1 bit) gates the input-buffer shift, so output-word drains that
+//!   outnumber input-word fills (c_out > c_in layers) don't corrupt the
+//!   window being assembled for the next row.
+//!
+//! ### `cim_conv` micro-order (single cycle)
+//!   1. if `sh`: shift FM-SRAM word at `rs1 + 4*imm_s` into CIM_in
+//!      (1024-bit shift register, 32 bits per shift, LSW-first)
+//!   2. if `wd == 0`: fire the full-array MAC and latch all SA outputs
+//!   3. store latch word `wd` to FM-SRAM at `rs2 + 4*imm_d`
+//!
+//! Firing on `wd == 0` (after the shift) lets the compiler interleave the
+//! next row's fills with the previous row's drains — the paper's row-wise
+//! pipeline — while keeping "one instruction, one cycle, one macro event".
+//!
+//! ### `cim_w` / `cim_r`
+//! `cim_w`: SRAM word at `rs1 + 4*imm_s` -> macro weight word at
+//! `rs2_val + imm_d` (rs2 carries a *weight-array word index* base).
+//! `cim_r` is the exact inverse (macro word at `rs1_val + imm_s` -> SRAM
+//! at `rs2 + 4*imm_d`). `wd`/`sh` must be zero for both.
+
+use std::fmt;
+
+use super::rv32::Reg;
+
+/// CIM extension major opcode (bits 6:0).
+pub const CIM_OPCODE: u32 = 0b111_1110;
+
+/// funct2 values (bits 12:11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CimFunct {
+    /// 0b01: shift-in + full-array MAC + store output word.
+    Conv,
+    /// 0b10: macro -> SRAM weight readback.
+    Read,
+    /// 0b11: SRAM -> macro weight write.
+    Write,
+}
+
+impl CimFunct {
+    pub fn bits(self) -> u32 {
+        match self {
+            CimFunct::Conv => 0b01,
+            CimFunct::Read => 0b10,
+            CimFunct::Write => 0b11,
+        }
+    }
+
+    pub fn from_bits(b: u32) -> Option<Self> {
+        match b {
+            0b01 => Some(CimFunct::Conv),
+            0b10 => Some(CimFunct::Read),
+            0b11 => Some(CimFunct::Write),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded CIM-type instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CimInstr {
+    pub funct: CimFunct,
+    /// Source base register (a0..a3).
+    pub rs1: Reg,
+    /// Destination base register (a0..a3).
+    pub rs2: Reg,
+    /// Source word offset (8 bits unsigned).
+    pub imm_s: u16,
+    /// Destination word offset (7 bits unsigned).
+    pub imm_d: u16,
+    /// Output latch word select (cim_conv only, 3 bits).
+    pub wd: u8,
+    /// Input-buffer shift enable (cim_conv only).
+    pub sh: bool,
+}
+
+/// The a-register window addressable by the 2-bit selectors.
+pub const CIM_REG_WINDOW: [Reg; 4] = [Reg::A0, Reg::A1, Reg::A2, Reg::A3];
+
+impl CimInstr {
+    pub const IMM_S_MAX: u16 = 0xFF;
+    pub const IMM_D_MAX: u16 = 0x7F;
+
+    /// Validate field ranges (used by the assembler and the prop tests).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            CIM_REG_WINDOW.contains(&self.rs1),
+            "cim rs1 must be a0..a3, got {}",
+            self.rs1
+        );
+        anyhow::ensure!(
+            CIM_REG_WINDOW.contains(&self.rs2),
+            "cim rs2 must be a0..a3, got {}",
+            self.rs2
+        );
+        anyhow::ensure!(self.imm_s <= Self::IMM_S_MAX, "imm_s out of range");
+        anyhow::ensure!(self.imm_d <= Self::IMM_D_MAX, "imm_d out of range");
+        anyhow::ensure!(self.wd < 8, "wd out of range");
+        if self.funct != CimFunct::Conv {
+            anyhow::ensure!(self.wd == 0 && !self.sh, "wd/sh are cim_conv-only fields");
+        }
+        Ok(())
+    }
+
+    fn reg_sel(r: Reg) -> u32 {
+        (r.0 - 10) as u32
+    }
+
+    fn sel_reg(bits: u32) -> Reg {
+        Reg(10 + (bits & 0b11) as u8)
+    }
+
+    /// Encode to the 32-bit instruction word.
+    pub fn encode(&self) -> u32 {
+        ((self.imm_d as u32 & 0x7F) << 25)
+            | ((self.imm_s as u32 & 0xFF) << 17)
+            | (Self::reg_sel(self.rs2) << 15)
+            | (Self::reg_sel(self.rs1) << 13)
+            | (self.funct.bits() << 11)
+            | ((self.wd as u32 & 0x7) << 8)
+            | ((self.sh as u32) << 7)
+            | CIM_OPCODE
+    }
+
+    /// Decode from a 32-bit instruction word (must have the CIM opcode).
+    pub fn decode(word: u32) -> Option<Self> {
+        if word & 0x7F != CIM_OPCODE {
+            return None;
+        }
+        let funct = CimFunct::from_bits((word >> 11) & 0b11)?;
+        Some(CimInstr {
+            funct,
+            rs1: Self::sel_reg(word >> 13),
+            rs2: Self::sel_reg(word >> 15),
+            imm_s: ((word >> 17) & 0xFF) as u16,
+            imm_d: ((word >> 25) & 0x7F) as u16,
+            wd: ((word >> 8) & 0x7) as u8,
+            sh: (word >> 7) & 1 == 1,
+        })
+    }
+
+    /// Convenience constructor for `cim_conv`.
+    pub fn conv(rs1: Reg, imm_s: u16, rs2: Reg, imm_d: u16, wd: u8, sh: bool) -> Self {
+        CimInstr { funct: CimFunct::Conv, rs1, rs2, imm_s, imm_d, wd, sh }
+    }
+
+    /// Convenience constructor for `cim_w`.
+    pub fn write(rs1: Reg, imm_s: u16, rs2: Reg, imm_d: u16) -> Self {
+        CimInstr { funct: CimFunct::Write, rs1, rs2, imm_s, imm_d, wd: 0, sh: false }
+    }
+
+    /// Convenience constructor for `cim_r`.
+    pub fn read(rs1: Reg, imm_s: u16, rs2: Reg, imm_d: u16) -> Self {
+        CimInstr { funct: CimFunct::Read, rs1, rs2, imm_s, imm_d, wd: 0, sh: false }
+    }
+}
+
+impl fmt::Display for CimInstr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.funct {
+            CimFunct::Conv => write!(
+                f,
+                "cim_conv {}+{}, {}+{}, wd={}{}",
+                self.rs1,
+                self.imm_s,
+                self.rs2,
+                self.imm_d,
+                self.wd,
+                if self.sh { ", sh" } else { "" }
+            ),
+            CimFunct::Read => {
+                write!(f, "cim_r {}+{}, {}+{}", self.rs1, self.imm_s, self.rs2, self.imm_d)
+            }
+            CimFunct::Write => {
+                write!(f, "cim_w {}+{}, {}+{}", self.rs1, self.imm_s, self.rs2, self.imm_d)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip_field_sweep() {
+        for funct in [CimFunct::Conv, CimFunct::Read, CimFunct::Write] {
+            let (wds, shs): (&[u8], &[bool]) = if funct == CimFunct::Conv {
+                (&[0, 1, 3, 7], &[false, true])
+            } else {
+                (&[0], &[false])
+            };
+            for rs1 in CIM_REG_WINDOW {
+                for rs2 in CIM_REG_WINDOW {
+                    for &imm_s in &[0u16, 1, 31, 32, 255] {
+                        for &imm_d in &[0u16, 17, 127] {
+                            for &wd in wds {
+                                for &sh in shs {
+                                    let i = CimInstr { funct, rs1, rs2, imm_s, imm_d, wd, sh };
+                                    i.validate().unwrap();
+                                    let w = i.encode();
+                                    assert_eq!(w & 0x7F, CIM_OPCODE);
+                                    assert_eq!(CimInstr::decode(w), Some(i));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_opcode() {
+        assert!(CimInstr::decode(0x0000_0013).is_none()); // addi x0,x0,0
+    }
+
+    #[test]
+    fn funct2_values_match_paper_reading() {
+        // Fig. 4 lists 0x01 / 0x10 / 0x11 — read as binary 2-bit values.
+        assert_eq!(CimFunct::Conv.bits(), 0b01);
+        assert_eq!(CimFunct::Read.bits(), 0b10);
+        assert_eq!(CimFunct::Write.bits(), 0b11);
+    }
+
+    #[test]
+    fn validate_rejects_bad_fields() {
+        let mut i = CimInstr::conv(Reg::A0, 0, Reg::A1, 0, 0, true);
+        i.rs1 = Reg::T0;
+        assert!(i.validate().is_err());
+        let mut j = CimInstr::write(Reg::A0, 0, Reg::A1, 0);
+        j.sh = true;
+        assert!(j.validate().is_err());
+        let mut k = CimInstr::conv(Reg::A0, 0, Reg::A1, 0, 0, false);
+        k.imm_d = 0x80;
+        assert!(k.validate().is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! RV32IM + CIM instruction decoder (the core's decode stage).
+
+use anyhow::{bail, Result};
+
+use super::cim::{CimInstr, CIM_OPCODE};
+use super::rv32::*;
+
+#[inline]
+fn rd(w: u32) -> Reg {
+    Reg(((w >> 7) & 0x1F) as u8)
+}
+
+#[inline]
+fn rs1(w: u32) -> Reg {
+    Reg(((w >> 15) & 0x1F) as u8)
+}
+
+#[inline]
+fn rs2(w: u32) -> Reg {
+    Reg(((w >> 20) & 0x1F) as u8)
+}
+
+#[inline]
+fn f3(w: u32) -> u32 {
+    (w >> 12) & 0x7
+}
+
+#[inline]
+fn f7(w: u32) -> u32 {
+    w >> 25
+}
+
+#[inline]
+fn imm_i(w: u32) -> i32 {
+    (w as i32) >> 20
+}
+
+#[inline]
+fn imm_s(w: u32) -> i32 {
+    (((w & 0xFE00_0000) as i32) >> 20) | (((w >> 7) & 0x1F) as i32)
+}
+
+#[inline]
+fn imm_b(w: u32) -> i32 {
+    (((w & 0x8000_0000) as i32) >> 19)
+        | (((w >> 7) & 1) as i32) << 11
+        | (((w >> 25) & 0x3F) as i32) << 5
+        | (((w >> 8) & 0xF) as i32) << 1
+}
+
+#[inline]
+fn imm_u(w: u32) -> i32 {
+    (w >> 12) as i32
+}
+
+#[inline]
+fn imm_j(w: u32) -> i32 {
+    (((w & 0x8000_0000) as i32) >> 11)
+        | ((w & 0x000F_F000) as i32)
+        | (((w >> 20) & 1) as i32) << 11
+        | (((w >> 21) & 0x3FF) as i32) << 1
+}
+
+/// Decode one 32-bit instruction word. Unknown encodings are an error
+/// (the core raises an illegal-instruction trap).
+pub fn decode(w: u32) -> Result<Instr> {
+    let op = w & 0x7F;
+    Ok(match op {
+        0x37 => Instr::Lui { rd: rd(w), imm: imm_u(w) },
+        0x17 => Instr::Auipc { rd: rd(w), imm: imm_u(w) },
+        0x6F => Instr::Jal { rd: rd(w), offset: imm_j(w) },
+        0x67 => {
+            if f3(w) != 0 {
+                bail!("illegal jalr funct3 {}", f3(w));
+            }
+            Instr::Jalr { rd: rd(w), rs1: rs1(w), offset: imm_i(w) }
+        }
+        0x63 => {
+            let kind = match f3(w) {
+                0 => BranchKind::Beq,
+                1 => BranchKind::Bne,
+                4 => BranchKind::Blt,
+                5 => BranchKind::Bge,
+                6 => BranchKind::Bltu,
+                7 => BranchKind::Bgeu,
+                x => bail!("illegal branch funct3 {x}"),
+            };
+            Instr::Branch { kind, rs1: rs1(w), rs2: rs2(w), offset: imm_b(w) }
+        }
+        0x03 => {
+            let kind = match f3(w) {
+                0 => LoadKind::Lb,
+                1 => LoadKind::Lh,
+                2 => LoadKind::Lw,
+                4 => LoadKind::Lbu,
+                5 => LoadKind::Lhu,
+                x => bail!("illegal load funct3 {x}"),
+            };
+            Instr::Load { kind, rd: rd(w), rs1: rs1(w), offset: imm_i(w) }
+        }
+        0x23 => {
+            let kind = match f3(w) {
+                0 => StoreKind::Sb,
+                1 => StoreKind::Sh,
+                2 => StoreKind::Sw,
+                x => bail!("illegal store funct3 {x}"),
+            };
+            Instr::Store { kind, rs1: rs1(w), rs2: rs2(w), offset: imm_s(w) }
+        }
+        0x13 => {
+            let op = match f3(w) {
+                0b000 => AluOp::Add,
+                0b001 => {
+                    if f7(w) != 0 {
+                        bail!("illegal slli funct7");
+                    }
+                    AluOp::Sll
+                }
+                0b010 => AluOp::Slt,
+                0b011 => AluOp::Sltu,
+                0b100 => AluOp::Xor,
+                0b101 => match f7(w) {
+                    0x00 => AluOp::Srl,
+                    0x20 => AluOp::Sra,
+                    x => bail!("illegal shift funct7 {x:#x}"),
+                },
+                0b110 => AluOp::Or,
+                0b111 => AluOp::And,
+                _ => unreachable!(),
+            };
+            let imm = if matches!(op, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                ((w >> 20) & 0x1F) as i32
+            } else {
+                imm_i(w)
+            };
+            Instr::OpImm { op, rd: rd(w), rs1: rs1(w), imm }
+        }
+        0x33 => {
+            if f7(w) == 0x01 {
+                let op = match f3(w) {
+                    0 => MulOp::Mul,
+                    1 => MulOp::Mulh,
+                    2 => MulOp::Mulhsu,
+                    3 => MulOp::Mulhu,
+                    4 => MulOp::Div,
+                    5 => MulOp::Divu,
+                    6 => MulOp::Rem,
+                    7 => MulOp::Remu,
+                    _ => unreachable!(),
+                };
+                Instr::MulDiv { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) }
+            } else {
+                let op = match (f3(w), f7(w)) {
+                    (0b000, 0x00) => AluOp::Add,
+                    (0b000, 0x20) => AluOp::Sub,
+                    (0b001, 0x00) => AluOp::Sll,
+                    (0b010, 0x00) => AluOp::Slt,
+                    (0b011, 0x00) => AluOp::Sltu,
+                    (0b100, 0x00) => AluOp::Xor,
+                    (0b101, 0x00) => AluOp::Srl,
+                    (0b101, 0x20) => AluOp::Sra,
+                    (0b110, 0x00) => AluOp::Or,
+                    (0b111, 0x00) => AluOp::And,
+                    (a, b) => bail!("illegal OP funct3/funct7 {a}/{b:#x}"),
+                };
+                Instr::Op { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) }
+            }
+        }
+        0x0F => Instr::Fence,
+        0x73 => match f3(w) {
+            0 => match w >> 20 {
+                0 => Instr::Ecall,
+                1 => Instr::Ebreak,
+                x => bail!("illegal SYSTEM imm {x:#x}"),
+            },
+            1 => Instr::Csr { op: CsrOp::Rw, rd: rd(w), rs1: rs1(w), csr: (w >> 20) as u16 },
+            2 => Instr::Csr { op: CsrOp::Rs, rd: rd(w), rs1: rs1(w), csr: (w >> 20) as u16 },
+            3 => Instr::Csr { op: CsrOp::Rc, rd: rd(w), rs1: rs1(w), csr: (w >> 20) as u16 },
+            5 => Instr::Csr { op: CsrOp::Rwi, rd: rd(w), rs1: rs1(w), csr: (w >> 20) as u16 },
+            6 => Instr::Csr { op: CsrOp::Rsi, rd: rd(w), rs1: rs1(w), csr: (w >> 20) as u16 },
+            7 => Instr::Csr { op: CsrOp::Rci, rd: rd(w), rs1: rs1(w), csr: (w >> 20) as u16 },
+            x => bail!("illegal SYSTEM funct3 {x}"),
+        },
+        CIM_OPCODE => Instr::Cim(
+            CimInstr::decode(w).ok_or_else(|| anyhow::anyhow!("illegal CIM funct2"))?,
+        ),
+        x => bail!("unknown opcode {x:#09b}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::encode;
+    use super::*;
+
+    #[test]
+    fn decode_known_words() {
+        // addi a0, zero, 42
+        assert_eq!(
+            decode(0x02A0_0513).unwrap(),
+            Instr::OpImm { op: AluOp::Add, rd: Reg::A0, rs1: Reg::ZERO, imm: 42 }
+        );
+        // lw t0, 8(sp)
+        assert_eq!(
+            decode(0x0081_2283).unwrap(),
+            Instr::Load { kind: LoadKind::Lw, rd: Reg::T0, rs1: Reg::SP, offset: 8 }
+        );
+        // ecall / ebreak
+        assert_eq!(decode(0x0000_0073).unwrap(), Instr::Ecall);
+        assert_eq!(decode(0x0010_0073).unwrap(), Instr::Ebreak);
+    }
+
+    #[test]
+    fn negative_immediates() {
+        // addi sp, sp, -16
+        let i = decode(0xFF01_0113).unwrap();
+        assert_eq!(
+            i,
+            Instr::OpImm { op: AluOp::Add, rd: Reg::SP, rs1: Reg::SP, imm: -16 }
+        );
+        // Round-trip.
+        assert_eq!(decode(encode(&i).unwrap()).unwrap(), i);
+    }
+
+    #[test]
+    fn branch_offset_sign() {
+        let i = Instr::Branch {
+            kind: BranchKind::Bne,
+            rs1: Reg::T0,
+            rs2: Reg::ZERO,
+            offset: -8,
+        };
+        assert_eq!(decode(encode(&i).unwrap()).unwrap(), i);
+    }
+
+    #[test]
+    fn jal_wide_offsets() {
+        for off in [-1048576, -4096, -2, 0, 2, 4094, 1048574] {
+            let i = Instr::Jal { rd: Reg::RA, offset: off };
+            assert_eq!(decode(encode(&i).unwrap()).unwrap(), i, "offset {off}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(decode(0xFFFF_FFFF).is_err());
+        assert!(decode(0x0000_0000).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Disassembler — trace output, the `disasm` CLI subcommand, and the
+//! isa_playground example.
+
+use super::rv32::*;
+
+/// Render one decoded instruction in assembler syntax.
+pub fn disasm(i: &Instr) -> String {
+    use Instr::*;
+    match *i {
+        Lui { rd, imm } => format!("lui {rd}, {:#x}", imm),
+        Auipc { rd, imm } => format!("auipc {rd}, {:#x}", imm),
+        Jal { rd, offset } => format!("jal {rd}, {offset}"),
+        Jalr { rd, rs1, offset } => format!("jalr {rd}, {offset}({rs1})"),
+        Branch { kind, rs1, rs2, offset } => {
+            let n = match kind {
+                BranchKind::Beq => "beq",
+                BranchKind::Bne => "bne",
+                BranchKind::Blt => "blt",
+                BranchKind::Bge => "bge",
+                BranchKind::Bltu => "bltu",
+                BranchKind::Bgeu => "bgeu",
+            };
+            format!("{n} {rs1}, {rs2}, {offset}")
+        }
+        Load { kind, rd, rs1, offset } => {
+            let n = match kind {
+                LoadKind::Lb => "lb",
+                LoadKind::Lh => "lh",
+                LoadKind::Lw => "lw",
+                LoadKind::Lbu => "lbu",
+                LoadKind::Lhu => "lhu",
+            };
+            format!("{n} {rd}, {offset}({rs1})")
+        }
+        Store { kind, rs1, rs2, offset } => {
+            let n = match kind {
+                StoreKind::Sb => "sb",
+                StoreKind::Sh => "sh",
+                StoreKind::Sw => "sw",
+            };
+            format!("{n} {rs2}, {offset}({rs1})")
+        }
+        OpImm { op, rd, rs1, imm } => {
+            let n = match op {
+                AluOp::Add => "addi",
+                AluOp::Sll => "slli",
+                AluOp::Slt => "slti",
+                AluOp::Sltu => "sltiu",
+                AluOp::Xor => "xori",
+                AluOp::Srl => "srli",
+                AluOp::Sra => "srai",
+                AluOp::Or => "ori",
+                AluOp::And => "andi",
+                AluOp::Sub => "sub?",
+            };
+            format!("{n} {rd}, {rs1}, {imm}")
+        }
+        Op { op, rd, rs1, rs2 } => {
+            let n = match op {
+                AluOp::Add => "add",
+                AluOp::Sub => "sub",
+                AluOp::Sll => "sll",
+                AluOp::Slt => "slt",
+                AluOp::Sltu => "sltu",
+                AluOp::Xor => "xor",
+                AluOp::Srl => "srl",
+                AluOp::Sra => "sra",
+                AluOp::Or => "or",
+                AluOp::And => "and",
+            };
+            format!("{n} {rd}, {rs1}, {rs2}")
+        }
+        MulDiv { op, rd, rs1, rs2 } => {
+            let n = match op {
+                MulOp::Mul => "mul",
+                MulOp::Mulh => "mulh",
+                MulOp::Mulhsu => "mulhsu",
+                MulOp::Mulhu => "mulhu",
+                MulOp::Div => "div",
+                MulOp::Divu => "divu",
+                MulOp::Rem => "rem",
+                MulOp::Remu => "remu",
+            };
+            format!("{n} {rd}, {rs1}, {rs2}")
+        }
+        Fence => "fence".to_string(),
+        Ecall => "ecall".to_string(),
+        Ebreak => "ebreak".to_string(),
+        Csr { op, rd, rs1, csr } => {
+            let n = match op {
+                CsrOp::Rw => "csrrw",
+                CsrOp::Rs => "csrrs",
+                CsrOp::Rc => "csrrc",
+                CsrOp::Rwi => "csrrwi",
+                CsrOp::Rsi => "csrrsi",
+                CsrOp::Rci => "csrrci",
+            };
+            format!("{n} {rd}, {csr:#x}, {rs1}")
+        }
+        Cim(c) => c.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decode::decode;
+    use super::*;
+
+    #[test]
+    fn renders_common_forms() {
+        assert_eq!(disasm(&decode(0x02A0_0513).unwrap()), "addi a0, zero, 42");
+        assert_eq!(disasm(&decode(0x0000_0073).unwrap()), "ecall");
+    }
+
+    #[test]
+    fn renders_cim() {
+        use crate::isa::cim::{CimFunct, CimInstr};
+        let c = CimInstr {
+            funct: CimFunct::Conv,
+            rs1: Reg::A0,
+            rs2: Reg::A1,
+            imm_s: 3,
+            imm_d: 7,
+            wd: 1,
+            sh: true,
+        };
+        assert_eq!(disasm(&Instr::Cim(c)), "cim_conv a0+3, a1+7, wd=1, sh");
+    }
+}

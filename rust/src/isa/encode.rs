@@ -1,0 +1,165 @@
+//! RV32IM + CIM instruction encoder (the assembler's backend).
+
+use anyhow::{bail, Result};
+
+use super::rv32::*;
+
+fn r(rd: u32, f3: u32, rs1: u32, rs2: u32, f7: u32, op: u32) -> u32 {
+    (f7 << 25) | (rs2 << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | op
+}
+
+fn i(rd: u32, f3: u32, rs1: u32, imm: i32, op: u32) -> Result<u32> {
+    if !(-2048..=2047).contains(&imm) {
+        bail!("I-type immediate {imm} out of range");
+    }
+    Ok((((imm as u32) & 0xFFF) << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | op)
+}
+
+fn s(f3: u32, rs1: u32, rs2: u32, imm: i32, op: u32) -> Result<u32> {
+    if !(-2048..=2047).contains(&imm) {
+        bail!("S-type immediate {imm} out of range");
+    }
+    let u = imm as u32;
+    Ok((((u >> 5) & 0x7F) << 25) | (rs2 << 20) | (rs1 << 15) | (f3 << 12) | ((u & 0x1F) << 7) | op)
+}
+
+fn b(f3: u32, rs1: u32, rs2: u32, off: i32, op: u32) -> Result<u32> {
+    if off % 2 != 0 || !(-4096..=4094).contains(&off) {
+        bail!("branch offset {off} invalid");
+    }
+    let u = off as u32;
+    Ok((((u >> 12) & 1) << 31)
+        | (((u >> 5) & 0x3F) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (f3 << 12)
+        | (((u >> 1) & 0xF) << 8)
+        | (((u >> 11) & 1) << 7)
+        | op)
+}
+
+fn u_type(rd: u32, imm: i32, op: u32) -> u32 {
+    ((imm as u32) << 12) | (rd << 7) | op
+}
+
+fn j(rd: u32, off: i32, op: u32) -> Result<u32> {
+    if off % 2 != 0 || !(-(1 << 20)..(1 << 20)).contains(&off) {
+        bail!("jal offset {off} invalid");
+    }
+    let u = off as u32;
+    Ok((((u >> 20) & 1) << 31)
+        | (((u >> 1) & 0x3FF) << 21)
+        | (((u >> 11) & 1) << 20)
+        | (((u >> 12) & 0xFF) << 12)
+        | (rd << 7)
+        | op)
+}
+
+/// Encode a decoded instruction back to its 32-bit word.
+pub fn encode(instr: &Instr) -> Result<u32> {
+    use Instr::*;
+    Ok(match *instr {
+        Lui { rd, imm } => u_type(rd.0 as u32, imm, 0x37),
+        Auipc { rd, imm } => u_type(rd.0 as u32, imm, 0x17),
+        Jal { rd, offset } => j(rd.0 as u32, offset, 0x6F)?,
+        Jalr { rd, rs1, offset } => i(rd.0 as u32, 0, rs1.0 as u32, offset, 0x67)?,
+        Branch { kind, rs1, rs2, offset } => {
+            let f3 = match kind {
+                BranchKind::Beq => 0,
+                BranchKind::Bne => 1,
+                BranchKind::Blt => 4,
+                BranchKind::Bge => 5,
+                BranchKind::Bltu => 6,
+                BranchKind::Bgeu => 7,
+            };
+            b(f3, rs1.0 as u32, rs2.0 as u32, offset, 0x63)?
+        }
+        Load { kind, rd, rs1, offset } => {
+            let f3 = match kind {
+                LoadKind::Lb => 0,
+                LoadKind::Lh => 1,
+                LoadKind::Lw => 2,
+                LoadKind::Lbu => 4,
+                LoadKind::Lhu => 5,
+            };
+            i(rd.0 as u32, f3, rs1.0 as u32, offset, 0x03)?
+        }
+        Store { kind, rs1, rs2, offset } => {
+            let f3 = match kind {
+                StoreKind::Sb => 0,
+                StoreKind::Sh => 1,
+                StoreKind::Sw => 2,
+            };
+            s(f3, rs1.0 as u32, rs2.0 as u32, offset, 0x23)?
+        }
+        OpImm { op, rd, rs1, imm } => {
+            let (f3, shift_f7) = match op {
+                AluOp::Add => (0b000, None),
+                AluOp::Sll => (0b001, Some(0)),
+                AluOp::Slt => (0b010, None),
+                AluOp::Sltu => (0b011, None),
+                AluOp::Xor => (0b100, None),
+                AluOp::Srl => (0b101, Some(0)),
+                AluOp::Sra => (0b101, Some(0x20)),
+                AluOp::Or => (0b110, None),
+                AluOp::And => (0b111, None),
+                AluOp::Sub => bail!("subi does not exist (use addi with -imm)"),
+            };
+            match shift_f7 {
+                None => i(rd.0 as u32, f3, rs1.0 as u32, imm, 0x13)?,
+                Some(f7) => {
+                    if !(0..32).contains(&imm) {
+                        bail!("shift amount {imm} out of range");
+                    }
+                    r(rd.0 as u32, f3, rs1.0 as u32, imm as u32, f7, 0x13)
+                }
+            }
+        }
+        Op { op, rd, rs1, rs2 } => {
+            let (f3, f7) = match op {
+                AluOp::Add => (0b000, 0x00),
+                AluOp::Sub => (0b000, 0x20),
+                AluOp::Sll => (0b001, 0x00),
+                AluOp::Slt => (0b010, 0x00),
+                AluOp::Sltu => (0b011, 0x00),
+                AluOp::Xor => (0b100, 0x00),
+                AluOp::Srl => (0b101, 0x00),
+                AluOp::Sra => (0b101, 0x20),
+                AluOp::Or => (0b110, 0x00),
+                AluOp::And => (0b111, 0x00),
+            };
+            r(rd.0 as u32, f3, rs1.0 as u32, rs2.0 as u32, f7, 0x33)
+        }
+        MulDiv { op, rd, rs1, rs2 } => {
+            let f3 = match op {
+                MulOp::Mul => 0,
+                MulOp::Mulh => 1,
+                MulOp::Mulhsu => 2,
+                MulOp::Mulhu => 3,
+                MulOp::Div => 4,
+                MulOp::Divu => 5,
+                MulOp::Rem => 6,
+                MulOp::Remu => 7,
+            };
+            r(rd.0 as u32, f3, rs1.0 as u32, rs2.0 as u32, 0x01, 0x33)
+        }
+        Fence => 0x0000_000F,
+        Ecall => 0x0000_0073,
+        Ebreak => 0x0010_0073,
+        Csr { op, rd, rs1, csr } => {
+            let f3 = match op {
+                CsrOp::Rw => 1,
+                CsrOp::Rs => 2,
+                CsrOp::Rc => 3,
+                CsrOp::Rwi => 5,
+                CsrOp::Rsi => 6,
+                CsrOp::Rci => 7,
+            };
+            ((csr as u32) << 20) | ((rs1.0 as u32) << 15) | (f3 << 12) | ((rd.0 as u32) << 7) | 0x73
+        }
+        Cim(c) => {
+            c.validate()?;
+            c.encode()
+        }
+    })
+}

@@ -1,0 +1,18 @@
+//! The CIMR-V instruction set: RV32IM plus the CIM-type extension.
+//!
+//! The paper runs a modified ibex (RV32IMC) core; we implement RV32I + M
+//! (the compiler emits no compressed instructions) and the paper's three
+//! CIM instructions (Fig. 4). [`decode`]/[`encode`] are exact inverses —
+//! a property test in `rust/tests/proptests.rs` round-trips the whole space.
+
+pub mod cim;
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+pub mod rv32;
+
+pub use cim::{CimFunct, CimInstr, CIM_OPCODE};
+pub use decode::decode;
+pub use disasm::disasm;
+pub use encode::encode;
+pub use rv32::{Instr, Reg};

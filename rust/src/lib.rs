@@ -1,0 +1,54 @@
+//! # CIMR-V — an end-to-end SRAM-based CIM accelerator with RISC-V
+//!
+//! Cycle-level, bit-exact reproduction of *CIMR-V: An End-to-End SRAM-based
+//! CIM Accelerator with RISC-V for AI Edge Device* (cs.AR 2025) as a
+//! three-layer Rust + JAX + Pallas stack (see `DESIGN.md`).
+//!
+//! The silicon is unavailable (TSMC 28 nm testchip), so every subsystem is
+//! built here as a simulation substrate:
+//!
+//! * [`isa`] — the full RV32IM ISA plus the paper's CIM-type extension
+//!   (`cim_conv` / `cim_r` / `cim_w`, Fig. 4): encode, decode, disassemble.
+//! * [`cpu`] — a 2-stage (ibex-class) in-order core: prefetch buffer +
+//!   decode/execute, CSRs, LSU; single-cycle CIM instructions.
+//! * [`cim`] — the 512 Kb 10T-SRAM CIM macro: X-mode (1024×512, 256 SA) and
+//!   Y-mode (512×1024, 512 SA), shift input buffer, programmable SA
+//!   references, symmetry weight mapping, NL/cell-variation injection.
+//! * [`mem`] — on-chip SRAMs (instruction / 256 Kb feature-map / 512 Kb
+//!   weight), a DDR4-like DRAM timing model, and the uDMA engine.
+//! * [`dataflow`] — the paper's three latency optimizations: CIM layer
+//!   fusion (Fig. 6), conv/max-pool pipelining (Fig. 7), weight fusion
+//!   (Fig. 8/9), over the row-wise convolution dataflow (Fig. 5).
+//! * [`compiler`] — the "full stack flow" (Fig. 10): model IR → SRAM
+//!   allocation → schedule → encoded RV32IM+CIM program.
+//! * [`energy`] — per-op energy/latency accounting, TOPS / TOPS/W, and the
+//!   normalization formulas of Table I.
+//! * [`sim`] — the SoC: wires core, macro, memories, DMA together and runs
+//!   programs cycle by cycle with full stats.
+//! * [`runtime`] — PJRT golden model: loads `artifacts/*.hlo.txt` (AOT-
+//!   lowered JAX/Pallas) and executes it for bit-exact cross-checking.
+//! * [`coordinator`] — the edge-inference request loop (threaded leader /
+//!   worker): batches requests, runs simulator + golden model, reports.
+//! * [`baselines`] — analytical models of the Table I comparators and the
+//!   no-fusion ablations.
+//!
+//! The image is offline with a minimal vendored crate set, so [`util`]
+//! carries small in-tree replacements (JSON, RNG, CLI, property-testing,
+//! micro-bench harness) instead of serde/clap/proptest/criterion.
+
+pub mod baselines;
+pub mod cim;
+pub mod compiler;
+pub mod coordinator;
+pub mod cpu;
+pub mod dataflow;
+pub mod energy;
+pub mod isa;
+pub mod mem;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type (anyhow is in the vendored set).
+pub type Result<T> = anyhow::Result<T>;

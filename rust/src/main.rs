@@ -1,0 +1,241 @@
+//! `cimrv` — the CIMR-V launcher.
+//!
+//! Subcommands:
+//!   run        one inference on the cycle-level SoC (+ golden cross-check)
+//!   ablation   the Fig. 6/7/9 + §III-A optimization ladder
+//!   table1     Table I comparison (+ measured TOPS/W and accuracy)
+//!   accuracy   synthetic-GSCD accuracy on the ISS vs the host reference
+//!   serve      threaded coordinator demo (batch of requests)
+//!   disasm     decode a hex instruction word
+//!
+//! Run from the repo root after `make artifacts && cargo build --release`.
+
+use anyhow::{bail, Context, Result};
+
+use cimrv::baselines::{comparison, OptLevel};
+use cimrv::compiler::build_kws_program;
+use cimrv::coordinator::report::{ladder_json, render_ladder, LadderPoint};
+use cimrv::coordinator::{Coordinator, InferenceRequest};
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::{dataset, reference, KwsModel};
+use cimrv::runtime::GoldenModel;
+use cimrv::sim::Soc;
+use cimrv::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["no-golden", "json", "verbose"])?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("ablation") => cmd_ablation(&args),
+        Some("table1") => cmd_table1(&args),
+        Some("accuracy") => cmd_accuracy(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("disasm") => cmd_disasm(&args),
+        Some("trace") => cmd_trace(&args),
+        _ => {
+            eprintln!(
+                "usage: cimrv <run|ablation|table1|accuracy|serve|trace|disasm> [--opt LEVEL] \
+                 [--n N] [--workers W] [--label L] [--seed S] [--skip K] [--no-golden] [--json]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_model() -> Result<KwsModel> {
+    KwsModel::load_default().context("loading artifacts (run `make artifacts` first)")
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
+    let label = args.opt_usize("label", 3)?;
+    let seed = args.opt_usize("seed", 1)? as u64;
+    let audio = dataset::synth_utterance(label, seed, model.audio_len, 0.37);
+
+    let program = build_kws_program(&model, opt)?;
+    println!(
+        "program: {} instructions ({} KiB IMEM), opt {}",
+        program.imem.len(),
+        program.imem_bytes() / 1024,
+        opt
+    );
+    let mut soc = Soc::new(program, DramConfig::default())?;
+    let r = soc.infer(&audio)?;
+    println!("predicted class {} (true {label}), logits {:?}", r.predicted, r.logits);
+    println!("{}", r.phases.render());
+    println!("{}", r.energy.breakdown());
+    println!(
+        "chip latency: {} cycles = {:.3} ms @50 MHz | measured {:.2} TOPS/W",
+        r.cycles,
+        1e3 * r.seconds_at_50mhz,
+        r.energy.tops_per_w()
+    );
+
+    let host = reference::infer(&model, &audio);
+    if r.logits != host {
+        bail!("ISS disagrees with host reference: {:?} vs {host:?}", r.logits);
+    }
+    println!("host reference: bit-exact \u{2713}");
+    if !args.flag("no-golden") {
+        let golden = GoldenModel::load_default()?;
+        let g = golden.infer(&audio)?;
+        if r.logits != g {
+            bail!("ISS disagrees with PJRT golden model: {:?} vs {g:?}", r.logits);
+        }
+        println!("PJRT golden model (AOT JAX+Pallas): bit-exact \u{2713}");
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let seed = args.opt_usize("seed", 1)? as u64;
+    let audio = dataset::synth_utterance(3, seed, model.audio_len, 0.37);
+    let mut points = Vec::new();
+    for (name, opt) in OptLevel::ladder() {
+        let program = build_kws_program(&model, opt)?;
+        let mut soc = Soc::new(program, DramConfig::default())?;
+        let r = soc.infer(&audio)?;
+        points.push(LadderPoint::from_run(name, opt, &r));
+    }
+    if args.flag("json") {
+        println!("{}", ladder_json(&points));
+    } else {
+        println!("{}", render_ladder(&points));
+        let base = points[0].accelerated_cycles as f64;
+        let full = points[3].accelerated_cycles as f64;
+        println!(
+            "total accelerated-phase reduction: {:.2}% (paper: 85.14% on its model/testbed)",
+            100.0 * (1.0 - full / base)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    // Measure TOPS/W on a full-opt inference.
+    let program = build_kws_program(&model, OptLevel::FULL)?;
+    let mut soc = Soc::new(program, DramConfig::default())?;
+    let audio = dataset::synth_utterance(0, 7, model.audio_len, 0.37);
+    let r = soc.infer(&audio)?;
+    // Quick accuracy over a few eval utterances (host reference, fast).
+    let n = args.opt_usize("n", 64)?;
+    let mut hits = 0usize;
+    for i in 0..n {
+        let label = i % 12;
+        let a = dataset::synth_utterance(label, 1000 + i as u64, model.audio_len, 0.37);
+        if reference::argmax(&reference::infer(&model, &a)) == label {
+            hits += 1;
+        }
+    }
+    let acc = 100.0 * hits as f64 / n as f64;
+    println!("{}", comparison::render_table1(Some(r.energy.tops_per_w()), Some(acc)));
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let dir = cimrv::util::io::artifacts_dir()?;
+    let eval = dataset::Dataset::load_eval(&dir, model.audio_len, model.n_classes)?;
+    let n = args.opt_usize("n", eval.len())?.min(eval.len());
+    let on_iss = args.opt_usize("iss", 8)?.min(n); // ISS is slower; subset
+    let program = build_kws_program(&model, OptLevel::FULL)?;
+    let mut soc = Soc::new(program, DramConfig::default())?;
+    let mut host_hits = 0;
+    let mut iss_hits = 0;
+    let mut iss_matches = 0;
+    for i in 0..n {
+        let audio = eval.utterance(i);
+        let want = eval.labels[i] as usize;
+        let host = reference::infer(&model, audio);
+        if reference::argmax(&host) == want {
+            host_hits += 1;
+        }
+        if i < on_iss {
+            let r = soc.infer(audio)?;
+            if r.predicted == want {
+                iss_hits += 1;
+            }
+            if r.logits == host {
+                iss_matches += 1;
+            }
+        }
+    }
+    println!(
+        "host reference accuracy: {:.2}% ({host_hits}/{n})",
+        100.0 * host_hits as f64 / n as f64
+    );
+    if on_iss > 0 {
+        println!(
+            "ISS accuracy: {:.2}% ({iss_hits}/{on_iss}); bit-exact vs host on {iss_matches}/{on_iss}",
+            100.0 * iss_hits as f64 / on_iss as f64
+        );
+    }
+    println!("(paper reports 94.02% on the real GSCD; ours is the synthetic corpus — DESIGN.md §2)");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let workers = args.opt_usize("workers", 4)?;
+    let n = args.opt_usize("n", 24)?;
+    let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
+    let coord = Coordinator::start(&model, opt, workers)?;
+    let t0 = std::time::Instant::now();
+    let reqs: Vec<_> = (0..n)
+        .map(|i| InferenceRequest {
+            id: i as u64,
+            audio: dataset::synth_utterance(i % 12, 400 + i as u64, model.audio_len, 0.37),
+            label: Some((i % 12) as i32),
+        })
+        .collect();
+    let resps = coord.serve_batch(reqs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let chip: u64 = resps.iter().map(|r| r.chip_cycles).sum();
+    println!(
+        "served {n} requests on {workers} workers in {wall:.2}s host time \
+         ({:.1} req/s host, {:.1} req/s chip-time)",
+        n as f64 / wall,
+        n as f64 / (chip as f64 / 50e6)
+    );
+    if let Some(acc) = coord.accuracy() {
+        println!("accuracy: {:.2}%", 100.0 * acc);
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
+    let n = args.opt_usize("n", 40)?;
+    let skip = args.opt_usize("skip", 0)? as u64;
+    let program = build_kws_program(&model, opt)?;
+    // Stage a deterministic utterance so the trace reflects a real run.
+    let mut prog = program;
+    let audio = dataset::synth_utterance(3, 1, model.audio_len, 0.37);
+    let q = cimrv::model::reference::quantize_audio(&audio);
+    let mut bytes = Vec::with_capacity(q.len() * 2);
+    for v in &q {
+        bytes.extend_from_slice(&(*v as i16).to_le_bytes());
+    }
+    prog.dram.push((cimrv::dataflow::plan::DRAM_AUDIO, bytes));
+    for e in cimrv::sim::trace::trace_program(&prog, skip, n)? {
+        println!("{}", e.render());
+    }
+    Ok(())
+}
+
+fn cmd_disasm(args: &Args) -> Result<()> {
+    for p in &args.positional {
+        let w = u32::from_str_radix(p.trim_start_matches("0x"), 16)
+            .with_context(|| format!("parsing {p}"))?;
+        match cimrv::isa::decode(w) {
+            Ok(i) => println!("{p}: {}", cimrv::isa::disasm(&i)),
+            Err(e) => println!("{p}: <illegal: {e}>"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,301 @@
+//! System bus: address decode, device ownership, MMIO side effects.
+//!
+//! The bus owns every addressable device (SRAMs, DRAM, uDMA, the CIM
+//! macro's configuration window) and prices each access in stall cycles —
+//! on-chip SRAM is single-cycle (0 extra stalls), DRAM pays the timing
+//! model. The 2-stage core calls into this for its LSU and fetch stages;
+//! CIM instructions touch `fm`/`wt`/`cim` directly (same-cycle datapath).
+
+use anyhow::{bail, Result};
+
+use crate::cim::{CimConfig, CimMacro};
+
+use super::dram::{Dram, DramConfig};
+use super::layout::{self, Region};
+use super::sram::Sram;
+use super::udma::Udma;
+
+/// Access width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Width {
+    Byte,
+    Half,
+    Word,
+}
+
+/// The SoC interconnect + devices.
+#[derive(Debug, Clone)]
+pub struct Bus {
+    pub imem: Sram,
+    pub dmem: Sram,
+    pub fm: Sram,
+    pub wt: Sram,
+    pub dram: Dram,
+    pub udma: Udma,
+    pub cim: CimMacro,
+    /// Current cycle (SoC updates before each access batch).
+    pub now: u64,
+    /// Set by a HOST_EXIT write: simulation should halt.
+    pub exit_code: Option<u32>,
+    /// HOST_PUTC output.
+    pub console: String,
+    /// HOST_RESULT register: DMEM address of the program's result vector.
+    pub result_addr: u32,
+    /// Phase markers: (id, cycle) recorded on MMIO_HOST_PHASE writes.
+    pub phases: Vec<(u32, u64)>,
+    /// Cycles the CPU spent stalled on DRAM (stats).
+    pub cpu_dram_stalls: u64,
+}
+
+impl Bus {
+    pub fn new(dram_cfg: DramConfig) -> Self {
+        Bus {
+            imem: Sram::new("imem", layout::IMEM_SIZE),
+            dmem: Sram::new("dmem", layout::DMEM_SIZE),
+            fm: Sram::new("fm", layout::FM_SIZE),
+            wt: Sram::new("wt", layout::WT_SIZE),
+            dram: Dram::new(dram_cfg, layout::DRAM_SIZE),
+            udma: Udma::new(),
+            cim: CimMacro::new(),
+            now: 0,
+            exit_code: None,
+            console: String::new(),
+            result_addr: 0,
+            phases: Vec::new(),
+            cpu_dram_stalls: 0,
+        }
+    }
+
+    /// Advance time: retire a completed uDMA transfer if its deadline
+    /// passed. Called by the SoC every instruction step.
+    pub fn tick(&mut self, now: u64) -> Result<()> {
+        self.now = now;
+        self.udma
+            .complete(now, &mut self.dram, &mut self.fm, &mut self.wt, &mut self.dmem)
+    }
+
+    /// Load `width` at `addr`. Returns (zero-extended value, stall cycles).
+    pub fn read(&mut self, addr: u32, width: Width) -> Result<(u32, u64)> {
+        let Some((region, off)) = layout::decode(addr) else {
+            bail!("load from unmapped address {addr:#010x}");
+        };
+        let (v, stall) = match region {
+            Region::Imem => (read_sram(&mut self.imem, off, width)?, 0),
+            Region::Dmem => (read_sram(&mut self.dmem, off, width)?, 0),
+            Region::FmSram => (read_sram(&mut self.fm, off, width)?, 0),
+            Region::WtSram => (read_sram(&mut self.wt, off, width)?, 0),
+            Region::Dram => {
+                let bytes = width_bytes(width);
+                let stall = self.dram.access_latency(off, bytes);
+                self.cpu_dram_stalls += stall;
+                let v = match width {
+                    Width::Byte => self.dram.read_u8(off)? as u32,
+                    Width::Half => {
+                        (self.dram.read_u8(off)? as u32)
+                            | ((self.dram.read_u8(off + 1)? as u32) << 8)
+                    }
+                    Width::Word => self.dram.read_u32(off)?,
+                };
+                (v, stall)
+            }
+            Region::Mmio => (self.mmio_read(off)?, 0),
+        };
+        Ok((v, stall))
+    }
+
+    /// Store `width` at `addr`. Returns stall cycles.
+    pub fn write(&mut self, addr: u32, value: u32, width: Width) -> Result<u64> {
+        let Some((region, off)) = layout::decode(addr) else {
+            bail!("store to unmapped address {addr:#010x}");
+        };
+        match region {
+            Region::Imem => bail!("store to instruction memory at {addr:#010x}"),
+            Region::Dmem => write_sram(&mut self.dmem, off, value, width)?,
+            Region::FmSram => write_sram(&mut self.fm, off, value, width)?,
+            Region::WtSram => write_sram(&mut self.wt, off, value, width)?,
+            Region::Dram => {
+                let stall = self.dram.access_latency(off, width_bytes(width));
+                self.cpu_dram_stalls += stall;
+                match width {
+                    Width::Byte => self.dram.write_u8(off, value as u8)?,
+                    Width::Half => {
+                        self.dram.write_u8(off, value as u8)?;
+                        self.dram.write_u8(off + 1, (value >> 8) as u8)?;
+                    }
+                    Width::Word => self.dram.write_u32(off, value)?,
+                }
+                return Ok(stall);
+            }
+            Region::Mmio => return self.mmio_write(off, value),
+        }
+        Ok(0)
+    }
+
+    /// Instruction fetch (imem is single-cycle; fetching outside imem is a
+    /// program bug we surface immediately).
+    pub fn fetch(&mut self, pc: u32) -> Result<u32> {
+        match layout::decode(pc) {
+            Some((Region::Imem, off)) => self.imem.read_u32(off),
+            _ => bail!("fetch from non-IMEM address {pc:#010x}"),
+        }
+    }
+
+    fn mmio_read(&mut self, off: u32) -> Result<u32> {
+        Ok(match off {
+            layout::MMIO_UDMA_SRC => self.udma.src,
+            layout::MMIO_UDMA_DST => self.udma.dst,
+            layout::MMIO_UDMA_LEN => self.udma.len,
+            layout::MMIO_UDMA_CTRL => self.udma.busy(self.now) as u32,
+            layout::MMIO_UDMA_DONE => self.udma.done_count,
+            layout::MMIO_CYCLE_LO => self.now as u32,
+            layout::MMIO_CYCLE_HI => (self.now >> 32) as u32,
+            layout::MMIO_CIM_CFG => self.cim.cfg.to_bits(),
+            layout::MMIO_HOST_RESULT => self.result_addr,
+            _ => bail!("MMIO read from unmapped offset {off:#x}"),
+        })
+    }
+
+    fn mmio_write(&mut self, off: u32, value: u32) -> Result<u64> {
+        match off {
+            layout::MMIO_UDMA_SRC => self.udma.src = value,
+            layout::MMIO_UDMA_DST => self.udma.dst = value,
+            layout::MMIO_UDMA_LEN => self.udma.len = value,
+            layout::MMIO_UDMA_CTRL => {
+                if value & 1 == 1 {
+                    self.udma.start(self.now, &mut self.dram)?;
+                }
+            }
+            layout::MMIO_CIM_CFG => self.cim.cfg = CimConfig::from_bits(value),
+            layout::MMIO_HOST_EXIT => self.exit_code = Some(value),
+            layout::MMIO_HOST_PUTC => self.console.push((value & 0xFF) as u8 as char),
+            layout::MMIO_HOST_RESULT => self.result_addr = value,
+            layout::MMIO_HOST_PHASE => self.phases.push((value, self.now)),
+            _ => bail!("MMIO write to unmapped offset {off:#x}"),
+        }
+        Ok(0)
+    }
+
+    /// Busy-wait helper used by the timing model: cycles until the uDMA
+    /// transfer in flight completes (0 if idle).
+    pub fn udma_wait_cycles(&self) -> u64 {
+        match self.udma.inflight {
+            Some(t) if t.done_at > self.now => t.done_at - self.now,
+            _ => 0,
+        }
+    }
+}
+
+fn width_bytes(w: Width) -> u32 {
+    match w {
+        Width::Byte => 1,
+        Width::Half => 2,
+        Width::Word => 4,
+    }
+}
+
+fn read_sram(s: &mut Sram, off: u32, w: Width) -> Result<u32> {
+    Ok(match w {
+        Width::Byte => s.read_u8(off)? as u32,
+        Width::Half => s.read_u16(off)? as u32,
+        Width::Word => s.read_u32(off)?,
+    })
+}
+
+fn write_sram(s: &mut Sram, off: u32, v: u32, w: Width) -> Result<()> {
+    match w {
+        Width::Byte => s.write_u8(off, v as u8),
+        Width::Half => s.write_u16(off, v as u16),
+        Width::Word => s.write_u32(off, v),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bus() -> Bus {
+        Bus::new(DramConfig::default())
+    }
+
+    #[test]
+    fn sram_access_is_zero_stall() {
+        let mut b = bus();
+        let s = b.write(layout::FM_BASE, 0x1234, Width::Word).unwrap();
+        assert_eq!(s, 0);
+        let (v, s) = b.read(layout::FM_BASE, Width::Word).unwrap();
+        assert_eq!((v, s), (0x1234, 0));
+    }
+
+    #[test]
+    fn dram_access_stalls() {
+        let mut b = bus();
+        let (_, stall) = b.read(layout::DRAM_BASE, Width::Word).unwrap();
+        assert!(stall > 0);
+        assert_eq!(b.cpu_dram_stalls, stall);
+    }
+
+    #[test]
+    fn mmio_cycle_counter() {
+        let mut b = bus();
+        b.tick(0x1_2345_6789).unwrap();
+        let (lo, _) = b.read(layout::MMIO_BASE + layout::MMIO_CYCLE_LO, Width::Word).unwrap();
+        let (hi, _) = b.read(layout::MMIO_BASE + layout::MMIO_CYCLE_HI, Width::Word).unwrap();
+        assert_eq!(lo, 0x2345_6789);
+        assert_eq!(hi, 1);
+    }
+
+    #[test]
+    fn udma_via_mmio() {
+        let mut b = bus();
+        b.dram.load(0, &[1, 2, 3, 4]).unwrap();
+        b.write(layout::MMIO_BASE + layout::MMIO_UDMA_SRC, layout::DRAM_BASE, Width::Word).unwrap();
+        b.write(layout::MMIO_BASE + layout::MMIO_UDMA_DST, layout::WT_BASE, Width::Word).unwrap();
+        b.write(layout::MMIO_BASE + layout::MMIO_UDMA_LEN, 4, Width::Word).unwrap();
+        b.write(layout::MMIO_BASE + layout::MMIO_UDMA_CTRL, 1, Width::Word).unwrap();
+        let (busy, _) = b.read(layout::MMIO_BASE + layout::MMIO_UDMA_CTRL, Width::Word).unwrap();
+        assert_eq!(busy, 1);
+        let wait = b.udma_wait_cycles();
+        assert!(wait > 0);
+        b.tick(b.now + wait).unwrap();
+        let (v, _) = b.read(layout::WT_BASE, Width::Word).unwrap();
+        assert_eq!(v, 0x0403_0201);
+    }
+
+    #[test]
+    fn cim_cfg_register() {
+        let mut b = bus();
+        let cfg = crate::cim::CimConfig {
+            mode: crate::cim::Mode::Y,
+            pool_or: true,
+            window_words: 6,
+            row_base: 3,
+            col_base: 2,
+        };
+        b.write(layout::MMIO_BASE + layout::MMIO_CIM_CFG, cfg.to_bits(), Width::Word).unwrap();
+        assert!(matches!(b.cim.cfg.mode, crate::cim::Mode::Y));
+        assert!(b.cim.cfg.pool_or);
+        assert_eq!(b.cim.cfg.window_words, 6);
+        assert_eq!(b.cim.cfg.row_base, 3);
+        assert_eq!(b.cim.cfg.col_base, 2);
+        let (v, _) = b.read(layout::MMIO_BASE + layout::MMIO_CIM_CFG, Width::Word).unwrap();
+        assert_eq!(v, cfg.to_bits());
+    }
+
+    #[test]
+    fn exit_and_console() {
+        let mut b = bus();
+        b.write(layout::MMIO_BASE + layout::MMIO_HOST_PUTC, 'h' as u32, Width::Word).unwrap();
+        b.write(layout::MMIO_BASE + layout::MMIO_HOST_PUTC, 'i' as u32, Width::Word).unwrap();
+        b.write(layout::MMIO_BASE + layout::MMIO_HOST_EXIT, 0, Width::Word).unwrap();
+        assert_eq!(b.console, "hi");
+        assert_eq!(b.exit_code, Some(0));
+    }
+
+    #[test]
+    fn unmapped_faults() {
+        let mut b = bus();
+        assert!(b.read(0x7000_0000, Width::Word).is_err());
+        assert!(b.write(layout::IMEM_BASE, 0, Width::Word).is_err());
+        assert!(b.fetch(layout::DMEM_BASE).is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! DDR4-like DRAM timing model (the paper simulates DRAM access latency
+//! "based on DDR4 DRAM [11]" — Ramulator; we model the first-order terms
+//! that matter at a 50 MHz core clock: request latency, row activate /
+//! precharge, and a bandwidth-limited data bus).
+//!
+//! All times are in *core* cycles (50 MHz -> 20 ns per cycle). An edge SoC
+//! reaches DRAM through a narrow bridge, so the effective bandwidth seen by
+//! the core/uDMA is a few bytes per core cycle — this is exactly the
+//! bottleneck the paper's weight fusion hides.
+
+use anyhow::Result;
+
+/// Timing parameters (core cycles @ 50 MHz).
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    /// Fixed request overhead (controller + PHY round trip).
+    pub t_req: u64,
+    /// Row activate (tRCD) when the row buffer misses.
+    pub t_rcd: u64,
+    /// Precharge (tRP) when a different row is open.
+    pub t_rp: u64,
+    /// CAS latency.
+    pub t_cas: u64,
+    /// Data-bus bytes per core cycle (narrow edge-device bridge).
+    pub bytes_per_cycle: u64,
+    /// Row size in bytes (row-buffer hit window).
+    pub row_bytes: u64,
+    /// Number of banks.
+    pub banks: usize,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        // DDR4-2400 x16 behind a narrow 50 MHz edge-SoC bridge:
+        //   tRCD = tRP = CL = 14.16 ns  -> 1 core cycle each (rounded up)
+        //   request overhead ~ 6 core cycles (controller + APB bridge)
+        //   sustained effective bandwidth 1 B / core cycle (50 MB/s): the
+        //   bridge serialises beats, so the SoC sees a fraction of the
+        //   device bandwidth. Chosen so DRAM weight loading dominates the
+        //   un-fused baseline — the regime the paper's §III-A describes
+        //   (weight transfer = the largest latency component).
+        DramConfig {
+            t_req: 6,
+            t_rcd: 1,
+            t_rp: 1,
+            t_cas: 1,
+            bytes_per_cycle: 1,
+            row_bytes: 2048,
+            banks: 8,
+        }
+    }
+}
+
+/// DRAM device + contents + timing state.
+#[derive(Debug, Clone)]
+pub struct Dram {
+    cfg: DramConfig,
+    data: Vec<u8>,
+    /// Open row per bank (row index), None = all precharged.
+    open_row: Vec<Option<u64>>,
+    /// Stats.
+    pub accesses: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub bytes_transferred: u64,
+    pub busy_cycles: u64,
+}
+
+impl Dram {
+    pub fn new(cfg: DramConfig, size: u32) -> Self {
+        let banks = cfg.banks;
+        Dram {
+            cfg,
+            data: vec![0; size as usize],
+            open_row: vec![None; banks],
+            accesses: 0,
+            row_hits: 0,
+            row_misses: 0,
+            bytes_transferred: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    pub fn config(&self) -> &DramConfig {
+        &self.cfg
+    }
+
+    fn bank_row(&self, addr: u32) -> (usize, u64) {
+        let row = addr as u64 / self.cfg.row_bytes;
+        (row as usize % self.cfg.banks, row / self.cfg.banks as u64)
+    }
+
+    /// Latency (cycles) of a burst of `len` bytes starting at `addr`,
+    /// updating row-buffer state. This is the single timing primitive the
+    /// CPU (scalar access) and the uDMA (bulk streaming) both use.
+    pub fn access_latency(&mut self, addr: u32, len: u32) -> u64 {
+        self.accesses += 1;
+        self.bytes_transferred += len as u64;
+        let mut cycles = self.cfg.t_req + self.cfg.t_cas;
+        // Walk the row spans the burst touches.
+        let mut cur = addr as u64;
+        let end = addr as u64 + len as u64;
+        while cur < end {
+            let (bank, row) = self.bank_row(cur as u32);
+            match self.open_row[bank] {
+                Some(r) if r == row => self.row_hits += 1,
+                Some(_) => {
+                    self.row_misses += 1;
+                    cycles += self.cfg.t_rp + self.cfg.t_rcd;
+                    self.open_row[bank] = Some(row);
+                }
+                None => {
+                    self.row_misses += 1;
+                    cycles += self.cfg.t_rcd;
+                    self.open_row[bank] = Some(row);
+                }
+            }
+            let row_end = (cur / self.cfg.row_bytes + 1) * self.cfg.row_bytes;
+            cur = row_end.min(end);
+        }
+        cycles += (len as u64).div_ceil(self.cfg.bytes_per_cycle);
+        self.busy_cycles += cycles;
+        cycles
+    }
+
+    pub fn read_u32(&self, offset: u32) -> Result<u32> {
+        let i = offset as usize;
+        anyhow::ensure!(i + 4 <= self.data.len(), "DRAM read OOB at {offset:#x}");
+        Ok(u32::from_le_bytes([
+            self.data[i],
+            self.data[i + 1],
+            self.data[i + 2],
+            self.data[i + 3],
+        ]))
+    }
+
+    pub fn write_u32(&mut self, offset: u32, v: u32) -> Result<()> {
+        let i = offset as usize;
+        anyhow::ensure!(i + 4 <= self.data.len(), "DRAM write OOB at {offset:#x}");
+        self.data[i..i + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    pub fn read_u8(&self, offset: u32) -> Result<u8> {
+        self.data
+            .get(offset as usize)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("DRAM read OOB at {offset:#x}"))
+    }
+
+    pub fn write_u8(&mut self, offset: u32, v: u8) -> Result<()> {
+        let i = offset as usize;
+        anyhow::ensure!(i < self.data.len(), "DRAM write OOB at {offset:#x}");
+        self.data[i] = v;
+        Ok(())
+    }
+
+    /// Host-side bulk load (weights/audio staged in DRAM before boot).
+    pub fn load(&mut self, offset: u32, bytes: &[u8]) -> Result<()> {
+        let i = offset as usize;
+        anyhow::ensure!(i + bytes.len() <= self.data.len(), "DRAM load OOB");
+        self.data[i..i + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    pub fn slice(&self, offset: u32, len: u32) -> Result<&[u8]> {
+        let i = offset as usize;
+        anyhow::ensure!(i + len as usize <= self.data.len(), "DRAM slice OOB");
+        Ok(&self.data[i..i + len as usize])
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.accesses = 0;
+        self.row_hits = 0;
+        self.row_misses = 0;
+        self.bytes_transferred = 0;
+        self.busy_cycles = 0;
+        self.open_row.fill(None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_hit_cheaper_than_miss() {
+        let mut d = Dram::new(DramConfig::default(), 1 << 20);
+        let miss = d.access_latency(0, 4);
+        let hit = d.access_latency(4, 4);
+        assert!(hit < miss, "hit {hit} vs miss {miss}");
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_bursts() {
+        let mut d = Dram::new(DramConfig::default(), 1 << 20);
+        let cfg = DramConfig::default();
+        let lat = d.access_latency(0, 64 * 1024);
+        let floor = 64 * 1024 / cfg.bytes_per_cycle;
+        assert!(lat >= floor);
+        assert!(lat < floor + 1000, "overheads should be small vs streaming");
+    }
+
+    #[test]
+    fn sequential_same_row_hits() {
+        let mut d = Dram::new(DramConfig::default(), 1 << 20);
+        d.access_latency(0, 4);
+        d.access_latency(8, 4);
+        d.access_latency(16, 4);
+        assert_eq!(d.row_misses, 1);
+        assert_eq!(d.row_hits, 2);
+    }
+
+    #[test]
+    fn data_roundtrip() {
+        let mut d = Dram::new(DramConfig::default(), 4096);
+        d.write_u32(100, 0xCAFE_F00D).unwrap();
+        assert_eq!(d.read_u32(100).unwrap(), 0xCAFE_F00D);
+        assert!(d.read_u32(4094).is_err());
+    }
+
+    #[test]
+    fn bank_interleave_rows() {
+        let d = Dram::new(DramConfig::default(), 1 << 20);
+        let (b0, r0) = d.bank_row(0);
+        let (b1, _r1) = d.bank_row(2048);
+        assert_ne!((b0, r0), (b1, 0), "consecutive rows map to different banks");
+    }
+}

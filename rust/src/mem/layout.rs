@@ -1,0 +1,112 @@
+//! SoC memory map (paper Fig. 2: instruction memory, 256 Kb feature-map
+//! SRAM, 512 Kb weight SRAM, DRAM behind the uDMA, PULPissimo-style MMIO).
+
+/// Instruction memory base (boot vector = 0).
+pub const IMEM_BASE: u32 = 0x0000_0000;
+pub const IMEM_SIZE: u32 = 256 * 1024;
+
+/// Data RAM (stack + scalars for the RISC-V pre/post-processing).
+pub const DMEM_BASE: u32 = 0x1000_0000;
+pub const DMEM_SIZE: u32 = 256 * 1024;
+
+/// Feature-map SRAM: 256 Kb = 32 KiB (paper Fig. 2).
+pub const FM_BASE: u32 = 0x2000_0000;
+pub const FM_SIZE: u32 = 32 * 1024;
+
+/// Weight SRAM: 512 Kb = 64 KiB (paper Fig. 2).
+pub const WT_BASE: u32 = 0x3000_0000;
+pub const WT_SIZE: u32 = 64 * 1024;
+
+/// External DRAM window (model weights, input audio, baseline FM spill).
+pub const DRAM_BASE: u32 = 0x4000_0000;
+pub const DRAM_SIZE: u32 = 16 * 1024 * 1024;
+
+/// MMIO device registers.
+pub const MMIO_BASE: u32 = 0x5000_0000;
+pub const MMIO_SIZE: u32 = 0x1000;
+
+// --- MMIO register offsets (word-aligned) -----------------------------------
+
+/// uDMA source address (DRAM byte address).
+pub const MMIO_UDMA_SRC: u32 = 0x00;
+/// uDMA destination address (on-chip byte address).
+pub const MMIO_UDMA_DST: u32 = 0x04;
+/// uDMA transfer length in bytes.
+pub const MMIO_UDMA_LEN: u32 = 0x08;
+/// Write 1 to start (enqueues a descriptor when busy — PULPissimo-style
+/// linked transfers); reads as 1 while busy or descriptors pend.
+pub const MMIO_UDMA_CTRL: u32 = 0x0C;
+/// Completed-transfer counter (descriptor-chain progress polling).
+pub const MMIO_UDMA_DONE: u32 = 0x2C;
+/// Cycle counter (low 32 bits).
+pub const MMIO_CYCLE_LO: u32 = 0x10;
+/// Cycle counter (high 32 bits).
+pub const MMIO_CYCLE_HI: u32 = 0x14;
+/// CIM unit configuration — see `cim::mode::CimConfig` for the bit layout
+/// (mode, pool_or, window_words, row_base, col_base).
+pub const MMIO_CIM_CFG: u32 = 0x18;
+/// Write: halt the simulation with this exit code.
+pub const MMIO_HOST_EXIT: u32 = 0x1C;
+/// Write: debug character output (trace).
+pub const MMIO_HOST_PUTC: u32 = 0x20;
+/// Write: address (in DMEM) where the program left its result vector.
+pub const MMIO_HOST_RESULT: u32 = 0x24;
+/// Write: phase marker — the bus records (value, cycle) so experiments can
+/// attribute latency to preprocessing / weight / conv phases.
+pub const MMIO_HOST_PHASE: u32 = 0x28;
+
+/// CIM_CFG bits (see `cim::mode::CimConfig::to_bits`).
+pub const CIM_CFG_YMODE: u32 = 1 << 0;
+pub const CIM_CFG_POOL_OR: u32 = 1 << 1;
+
+/// Which region does a byte address fall in?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    Imem,
+    Dmem,
+    FmSram,
+    WtSram,
+    Dram,
+    Mmio,
+}
+
+/// Decode an address to (region, offset). `None` for unmapped holes.
+pub fn decode(addr: u32) -> Option<(Region, u32)> {
+    match addr {
+        _ if (IMEM_BASE..IMEM_BASE + IMEM_SIZE).contains(&addr) => {
+            Some((Region::Imem, addr - IMEM_BASE))
+        }
+        _ if (DMEM_BASE..DMEM_BASE + DMEM_SIZE).contains(&addr) => {
+            Some((Region::Dmem, addr - DMEM_BASE))
+        }
+        _ if (FM_BASE..FM_BASE + FM_SIZE).contains(&addr) => Some((Region::FmSram, addr - FM_BASE)),
+        _ if (WT_BASE..WT_BASE + WT_SIZE).contains(&addr) => Some((Region::WtSram, addr - WT_BASE)),
+        _ if (DRAM_BASE..DRAM_BASE + DRAM_SIZE).contains(&addr) => {
+            Some((Region::Dram, addr - DRAM_BASE))
+        }
+        _ if (MMIO_BASE..MMIO_BASE + MMIO_SIZE).contains(&addr) => Some((Region::Mmio, addr - MMIO_BASE)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_regions() {
+        assert_eq!(decode(0), Some((Region::Imem, 0)));
+        assert_eq!(decode(FM_BASE + 4), Some((Region::FmSram, 4)));
+        assert_eq!(decode(WT_BASE + WT_SIZE - 1), Some((Region::WtSram, WT_SIZE - 1)));
+        assert_eq!(decode(DRAM_BASE), Some((Region::Dram, 0)));
+        assert_eq!(decode(MMIO_BASE + MMIO_UDMA_CTRL), Some((Region::Mmio, 0x0C)));
+        assert_eq!(decode(0x6000_0000), None);
+        assert_eq!(decode(FM_BASE + FM_SIZE), None);
+    }
+
+    #[test]
+    fn sram_sizes_match_paper() {
+        assert_eq!(FM_SIZE * 8, 256 * 1024); // 256 Kb
+        assert_eq!(WT_SIZE * 8, 512 * 1024); // 512 Kb
+    }
+}

@@ -1,0 +1,16 @@
+//! On-chip and off-chip memory subsystem.
+//!
+//! * [`layout`] — the SoC memory map (instruction / data / feature-map /
+//!   weight SRAMs, DRAM window, MMIO).
+//! * [`sram`]   — single-cycle on-chip SRAM banks with access accounting.
+//! * [`dram`]   — DDR4-like bank/row timing model (the latency source the
+//!   paper's three optimizations attack).
+//! * [`udma`]   — the paper's "uDAM" engine: CPU-free bulk DRAM -> weight
+//!   SRAM transfers, overlapped with CIM compute (weight fusion).
+//! * [`bus`]    — address decode + MMIO device registers.
+
+pub mod bus;
+pub mod dram;
+pub mod layout;
+pub mod sram;
+pub mod udma;

@@ -1,0 +1,163 @@
+//! Single-cycle on-chip SRAM banks with access accounting (for the energy
+//! model) and word/halfword/byte access.
+
+use anyhow::{bail, Result};
+
+/// An on-chip SRAM bank. Accesses are single-cycle (the paper's CIM
+/// instructions read FM SRAM and write results in the same cycle).
+#[derive(Debug, Clone)]
+pub struct Sram {
+    name: &'static str,
+    data: Vec<u8>,
+    /// Read/write word-access counters (energy accounting).
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl Sram {
+    pub fn new(name: &'static str, size: u32) -> Self {
+        Sram { name, data: vec![0; size as usize], reads: 0, writes: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn check(&self, offset: u32, width: u32) -> Result<usize> {
+        let end = offset as usize + width as usize;
+        if end > self.data.len() {
+            bail!(
+                "{}: access at {:#x}+{} out of bounds (size {:#x})",
+                self.name,
+                offset,
+                width,
+                self.data.len()
+            );
+        }
+        Ok(offset as usize)
+    }
+
+    pub fn read_u8(&mut self, offset: u32) -> Result<u8> {
+        let i = self.check(offset, 1)?;
+        self.reads += 1;
+        Ok(self.data[i])
+    }
+
+    pub fn read_u16(&mut self, offset: u32) -> Result<u16> {
+        let i = self.check(offset, 2)?;
+        self.reads += 1;
+        Ok(u16::from_le_bytes([self.data[i], self.data[i + 1]]))
+    }
+
+    pub fn read_u32(&mut self, offset: u32) -> Result<u32> {
+        let i = self.check(offset, 4)?;
+        self.reads += 1;
+        Ok(u32::from_le_bytes([
+            self.data[i],
+            self.data[i + 1],
+            self.data[i + 2],
+            self.data[i + 3],
+        ]))
+    }
+
+    /// Read without bumping the access counters (host/debug access).
+    pub fn peek_u32(&self, offset: u32) -> Result<u32> {
+        let i = self.check(offset, 4)?;
+        Ok(u32::from_le_bytes([
+            self.data[i],
+            self.data[i + 1],
+            self.data[i + 2],
+            self.data[i + 3],
+        ]))
+    }
+
+    pub fn write_u8(&mut self, offset: u32, v: u8) -> Result<()> {
+        let i = self.check(offset, 1)?;
+        self.writes += 1;
+        self.data[i] = v;
+        Ok(())
+    }
+
+    pub fn write_u16(&mut self, offset: u32, v: u16) -> Result<()> {
+        let i = self.check(offset, 2)?;
+        self.writes += 1;
+        self.data[i..i + 2].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    pub fn write_u32(&mut self, offset: u32, v: u32) -> Result<()> {
+        let i = self.check(offset, 4)?;
+        self.writes += 1;
+        self.data[i..i + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    /// Write without bumping counters (host-side initialization).
+    pub fn poke_u32(&mut self, offset: u32, v: u32) -> Result<()> {
+        let i = self.check(offset, 4)?;
+        self.data[i..i + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    /// Bulk host-side load (program/weight images).
+    pub fn load(&mut self, offset: u32, bytes: &[u8]) -> Result<()> {
+        let i = self.check(offset, bytes.len() as u32)?;
+        self.data[i..i + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Raw view (host-side result extraction).
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.reads = 0;
+        self.writes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_roundtrip_widths() {
+        let mut s = Sram::new("t", 64);
+        s.write_u32(0, 0xDEAD_BEEF).unwrap();
+        assert_eq!(s.read_u32(0).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(s.read_u16(0).unwrap(), 0xBEEF);
+        assert_eq!(s.read_u8(3).unwrap(), 0xDE);
+        s.write_u8(1, 0x00).unwrap();
+        assert_eq!(s.read_u32(0).unwrap(), 0xDEAD_00EF);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut s = Sram::new("t", 8);
+        assert!(s.read_u32(5).is_err());
+        assert!(s.write_u32(8, 0).is_err());
+        assert!(s.read_u8(7).is_ok());
+    }
+
+    #[test]
+    fn counters_track_accesses() {
+        let mut s = Sram::new("t", 16);
+        s.write_u32(0, 1).unwrap();
+        s.read_u32(0).unwrap();
+        s.read_u32(4).unwrap();
+        s.peek_u32(0).unwrap(); // peek doesn't count
+        assert_eq!((s.reads, s.writes), (2, 1));
+    }
+
+    #[test]
+    fn little_endian() {
+        let mut s = Sram::new("t", 8);
+        s.load(0, &[0x78, 0x56, 0x34, 0x12]).unwrap();
+        assert_eq!(s.read_u32(0).unwrap(), 0x1234_5678);
+    }
+}

@@ -1,0 +1,112 @@
+//! Synthetic-GSCD test vectors and eval sets exported by `make artifacts`
+//! (see `python/compile/data.py` for the corpus definition and DESIGN.md
+//! §2 for why a synthetic corpus substitutes the real GSCD).
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::util::io::{read_f32, read_i32};
+
+/// A set of utterances with golden labels (and optionally golden logits).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub audio_len: usize,
+    /// Flattened (n, audio_len) waveforms.
+    pub audio: Vec<f32>,
+    pub labels: Vec<i32>,
+    /// Golden logits from the JAX reference path (test vectors only).
+    pub logits: Option<Vec<f32>>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn utterance(&self, i: usize) -> &[f32] {
+        &self.audio[i * self.audio_len..(i + 1) * self.audio_len]
+    }
+
+    pub fn golden_logits(&self, i: usize) -> Option<&[f32]> {
+        self.logits
+            .as_ref()
+            .map(|l| &l[i * self.n_classes..(i + 1) * self.n_classes])
+    }
+
+    /// Load the small test-vector set (audio + golden logits + labels).
+    pub fn load_testvec(dir: &Path, audio_len: usize, n_classes: usize) -> Result<Self> {
+        let audio = read_f32(&dir.join("testvec/audio.bin"))?;
+        let labels = read_i32(&dir.join("testvec/labels.bin"))?;
+        let logits = read_f32(&dir.join("testvec/logits.bin"))?;
+        ensure!(audio.len() == labels.len() * audio_len, "testvec audio size");
+        ensure!(logits.len() == labels.len() * n_classes, "testvec logits size");
+        Ok(Dataset { audio_len, audio, labels, logits: Some(logits), n_classes })
+    }
+
+    /// Load the larger eval set (audio + labels, no golden logits).
+    pub fn load_eval(dir: &Path, audio_len: usize, n_classes: usize) -> Result<Self> {
+        let audio = read_f32(&dir.join("testvec/eval_audio.bin"))?;
+        let labels = read_i32(&dir.join("testvec/eval_labels.bin"))?;
+        ensure!(audio.len() == labels.len() * audio_len, "eval audio size");
+        Ok(Dataset { audio_len, audio, labels, logits: None, n_classes })
+    }
+}
+
+/// Generate a synthetic utterance on the Rust side (workload generator for
+/// benches that must not depend on artifacts). This does NOT reproduce the
+/// Python corpus bit-for-bit (different RNG); it reproduces its *shape*:
+/// class-dependent burst envelopes on a sinusoid carrier plus noise.
+pub fn synth_utterance(label: usize, seed: u64, audio_len: usize, noise: f64) -> Vec<f32> {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed ^ 0xC13B_0000);
+    let t = 128;
+    let frame = audio_len / t;
+    // Deterministic per-class envelope (mirrors data.class_envelope's idea).
+    let mut env = vec![0.0f64; t];
+    let mut crng = Rng::new(0xC13B + label as u64);
+    let n_bursts = 3 + label % 4;
+    for _ in 0..n_bursts {
+        let start = crng.range(0, t - 8);
+        let width = crng.range(6, 24);
+        let level = 0.5 + 0.5 * crng.f64();
+        for e in env.iter_mut().skip(start).take(width) {
+            *e = (*e + level).min(1.5);
+        }
+    }
+    let scale = 0.7 + 0.6 * rng.f64();
+    let freq = 0.15 + 0.02 * (label % 5) as f64;
+    let phase = rng.f64() * std::f64::consts::TAU;
+    (0..audio_len)
+        .map(|i| {
+            let carrier = (std::f64::consts::TAU * freq * i as f64 + phase).sin();
+            (carrier * env[i / frame] * scale + noise * rng.normal()) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_deterministic_and_class_dependent() {
+        let a = synth_utterance(3, 7, 16000, 0.1);
+        let b = synth_utterance(3, 7, 16000, 0.1);
+        let c = synth_utterance(4, 7, 16000, 0.1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 16000);
+    }
+
+    #[test]
+    fn synth_amplitude_bounded() {
+        let a = synth_utterance(0, 1, 16000, 0.0);
+        assert!(a.iter().all(|x| x.abs() <= 1.5 * 1.3 + 0.01));
+    }
+}

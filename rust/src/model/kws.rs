@@ -1,0 +1,243 @@
+//! Model container: loads `artifacts/kws_manifest.json` + weight payloads
+//! produced by `python/compile/aot.py` (the deployment half of the paper's
+//! "full stack flow").
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::io::read_f32;
+use crate::util::json::Json;
+
+/// One convolution layer of Table II.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kernel: usize,
+    /// Max-pool 2:1 after this layer?
+    pub pooled: bool,
+    /// Binarized output (SA compare) or raw sums (final layer)?
+    pub binarized: bool,
+    /// Weights, tap-major/channel-minor rows: `w[(j*c_in+ci)*c_out + co]`
+    /// in {-1, +1} — row index matches the macro wordline (im2col order).
+    pub weights: Vec<i8>,
+    /// Per-output-channel SA thresholds (empty for the raw final layer).
+    pub thresholds: Vec<i32>,
+}
+
+impl LayerSpec {
+    pub fn rows(&self) -> usize {
+        self.kernel * self.c_in
+    }
+
+    pub fn weight_bits(&self) -> usize {
+        self.rows() * self.c_out
+    }
+
+    pub fn weight(&self, row: usize, co: usize) -> i8 {
+        self.weights[row * self.c_out + co]
+    }
+}
+
+/// The full model + preprocessing parameters.
+#[derive(Debug, Clone)]
+pub struct KwsModel {
+    pub audio_len: usize,
+    pub t: usize,
+    pub c: usize,
+    pub n_classes: usize,
+    pub fusion_split: usize,
+    pub layers: Vec<LayerSpec>,
+    /// Preprocessing BN (float, RISC-V high-precision path).
+    pub bn_gamma: Vec<f32>,
+    pub bn_beta: Vec<f32>,
+    pub bn_mean: Vec<f32>,
+    pub bn_var: Vec<f32>,
+    /// BN folded to integer feature thresholds: (floor(tau), direction).
+    pub pre_thr: Vec<i64>,
+    pub pre_dir: Vec<i8>,
+    /// Whether the weights came from a trained checkpoint.
+    pub trained: bool,
+    pub artifacts_dir: PathBuf,
+}
+
+impl KwsModel {
+    /// Load from an artifacts directory (see `util::io::artifacts_dir`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("kws_manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let m = Json::parse(&text).context("parsing kws_manifest.json")?;
+
+        let cfg = m.get("config")?;
+        let t = cfg.get("t")?.as_usize()?;
+        let c = cfg.get("c")?.as_usize()?;
+        let kernel = cfg.get("kernel")?.as_usize()?;
+        let n_classes = cfg.get("n_classes")?.as_usize()?;
+        let audio_len = cfg.get("audio_len")?.as_usize()?;
+        let fusion_split = cfg.get("fusion_split")?.as_usize()?;
+        let channels = cfg.get("channels")?.as_arr()?;
+
+        let read_param = |name: &str| -> Result<Vec<f32>> {
+            read_f32(&dir.join("weights").join(format!("{name}.bin")))
+        };
+
+        let n_layers = channels.len();
+        let mut layers = Vec::with_capacity(n_layers);
+        for (i, ch) in channels.iter().enumerate() {
+            let pair = ch.as_arr()?;
+            let c_in = pair[0].as_usize()?;
+            let c_out = pair[1].as_usize()?;
+            let w = read_param(&format!("conv{i}"))?;
+            ensure!(
+                w.len() == kernel * c_in * c_out,
+                "conv{i}: got {} weights, want {}",
+                w.len(),
+                kernel * c_in * c_out
+            );
+            // f32 {-1,+1} -> i8, laid out [k][ci][co] == row-major rows.
+            let weights: Vec<i8> = w
+                .iter()
+                .map(|&v| {
+                    ensure!(v == 1.0 || v == -1.0, "non-binary weight {v}");
+                    Ok(if v > 0.0 { 1i8 } else { -1 })
+                })
+                .collect::<Result<_>>()?;
+            let binarized = i < n_layers - 1;
+            let thresholds = if binarized {
+                let th = read_param(&format!("th{i}"))?;
+                ensure!(th.len() == c_out, "th{i} length");
+                th.iter()
+                    .map(|&v| {
+                        ensure!(v == v.round(), "non-integer threshold {v}");
+                        Ok(v as i32)
+                    })
+                    .collect::<Result<_>>()?
+            } else {
+                Vec::new()
+            };
+            layers.push(LayerSpec {
+                c_in,
+                c_out,
+                kernel,
+                pooled: binarized, // pools follow layers 0..=5 (Table II)
+                binarized,
+                weights,
+                thresholds,
+            });
+        }
+
+        let bn_gamma = read_param("bn_gamma")?;
+        let bn_beta = read_param("bn_beta")?;
+        let bn_mean = read_param("bn_mean")?;
+        let bn_var = read_param("bn_var")?;
+        ensure!(bn_gamma.len() == c, "bn size");
+
+        let (pre_thr, pre_dir) = fold_bn(&bn_gamma, &bn_beta, &bn_mean, &bn_var);
+
+        Ok(KwsModel {
+            audio_len,
+            t,
+            c,
+            n_classes,
+            fusion_split,
+            layers,
+            bn_gamma,
+            bn_beta,
+            bn_mean,
+            bn_var,
+            pre_thr,
+            pre_dir,
+            trained: m.get("trained").and_then(|j| j.as_bool()).unwrap_or(false),
+            artifacts_dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&crate::util::io::artifacts_dir()?)
+    }
+
+    /// Total weight bits resident before the weight-fusion boundary.
+    pub fn resident_bits(&self) -> usize {
+        self.layers[..self.fusion_split].iter().map(|l| l.weight_bits()).sum()
+    }
+
+    /// Weight bits streamed from DRAM during compute (weight fusion).
+    pub fn streamed_bits(&self) -> usize {
+        self.layers[self.fusion_split..].iter().map(|l| l.weight_bits()).sum()
+    }
+
+    /// Time length at the input of layer `i` (pools halve it).
+    pub fn t_at_layer(&self, i: usize) -> usize {
+        let pools = self.layers[..i].iter().filter(|l| l.pooled).count();
+        self.t >> pools
+    }
+}
+
+/// Fold BN + binarize into integer feature compares (mirrors
+/// `python/compile/kernels/ref.py::bn_fold_thresholds`; f64 on both sides
+/// so floor() ties break identically).
+pub fn fold_bn(gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32]) -> (Vec<i64>, Vec<i8>) {
+    let eps = 1e-5f64;
+    let mut thr = Vec::with_capacity(gamma.len());
+    let mut dir = Vec::with_capacity(gamma.len());
+    for i in 0..gamma.len() {
+        let g = gamma[i] as f64;
+        let b = beta[i] as f64;
+        let m = mean[i] as f64;
+        let s = ((var[i] as f64) + eps).sqrt();
+        let tau = m - b * s / if g == 0.0 { 1.0 } else { g };
+        thr.push(tau.floor() as i64);
+        dir.push(if g > 0.0 {
+            1
+        } else if g < 0.0 {
+            -1
+        } else {
+            0
+        });
+    }
+    (thr, dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_bn_directions() {
+        // gamma>0: f > tau; gamma<0: f < tau; gamma=0: constant.
+        let (thr, dir) = fold_bn(&[1.0, -1.0, 0.0], &[0.0, 0.0, 1.0], &[5.5, 5.5, 0.0], &[1.0, 1.0, 1.0]);
+        assert_eq!(dir, vec![1, -1, 0]);
+        assert_eq!(thr[0], 5);
+        assert_eq!(thr[1], 5);
+    }
+
+    #[test]
+    fn fold_bn_matches_float_bn_on_integers() {
+        // Exhaustive check on a grid of integer features.
+        let gamma = [0.7f32, -2.3, 1.1];
+        let beta = [0.4f32, -0.2, 3.0];
+        let mean = [100.0f32, 50.0, 7.0];
+        let var = [400.0f32, 25.0, 1.0];
+        let (thr, dir) = fold_bn(&gamma, &beta, &mean, &var);
+        for ch in 0..3 {
+            for f in -20..200i64 {
+                let float_bit = {
+                    let std = ((var[ch] as f64) + 1e-5).sqrt();
+                    gamma[ch] as f64 * (f as f64 - mean[ch] as f64) / std + beta[ch] as f64 > 0.0
+                };
+                let int_bit = match dir[ch] {
+                    1 => f > thr[ch],
+                    -1 => f < thr[ch] + 1,
+                    _ => beta[ch] > 0.0,
+                };
+                assert_eq!(int_bit, float_bit, "ch {ch} f {f}");
+            }
+        }
+    }
+
+    // Manifest-dependent tests live in rust/tests/integration.rs (they
+    // need `make artifacts` to have run).
+}

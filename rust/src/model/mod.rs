@@ -1,0 +1,9 @@
+//! The keyword-spotting model (paper Table II) on the Rust side:
+//! manifest + weight loading, the bit-exact host reference implementation,
+//! and the synthetic-GSCD test vectors exported by `make artifacts`.
+
+pub mod dataset;
+pub mod kws;
+pub mod reference;
+
+pub use kws::{KwsModel, LayerSpec};

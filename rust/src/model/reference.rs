@@ -1,0 +1,278 @@
+//! Host reference implementation of quantized KWS inference — the Rust
+//! mirror of `python/compile/kernels/ref.py`, bit-exact against both the
+//! AOT-lowered JAX model (checked in `rust/tests/golden_crosscheck.rs`)
+//! and the cycle-level ISS run (checked in `rust/tests/integration.rs`).
+//!
+//! Everything after the ADC is integer arithmetic; the only floats are the
+//! final GAP division (exact: integer sums, power-of-two divisor regime is
+//! not needed — f32 division of an integer-valued sum by a small integer
+//! matches jnp.mean's float math for our magnitudes... see note on `gap`).
+
+use super::kws::KwsModel;
+
+/// A binary (t, c) feature map, bit-packed per row: `words_per_row =
+/// ceil(c/32)`, bit (r, ch) at word `r*wpr + ch/32`, bit `ch%32`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitMap {
+    pub t: usize,
+    pub c: usize,
+    pub words: Vec<u32>,
+}
+
+impl BitMap {
+    pub fn zero(t: usize, c: usize) -> Self {
+        BitMap { t, c, words: vec![0; t * c.div_ceil(32)] }
+    }
+
+    pub fn wpr(&self) -> usize {
+        self.c.div_ceil(32)
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, ch: usize) -> bool {
+        (self.words[r * self.wpr() + ch / 32] >> (ch % 32)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, ch: usize) {
+        let w = self.wpr();
+        self.words[r * w + ch / 32] |= 1 << (ch % 32);
+    }
+
+    /// Count of set bits (tests/diagnostics).
+    pub fn popcount(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+}
+
+/// ADC quantization: float waveform -> integer samples (11 bit + sign),
+/// mirror of `ref.quantize_audio`.
+pub fn quantize_audio(audio: &[f32]) -> Vec<i32> {
+    audio
+        .iter()
+        .map(|&x| (x.clamp(-1.0, 1.0) * 2048.0).round_ties_even() as i32)
+        .collect()
+}
+
+/// Integer preprocessing: pre-emphasis + frame features + folded-BN
+/// compare -> binary (t, c) feature map. Mirror of `ref.ref_preprocess`
+/// with BN folded to integer thresholds (`kws::fold_bn`).
+pub fn preprocess(model: &KwsModel, audio: &[f32]) -> BitMap {
+    let q = quantize_audio(audio);
+    let frame = model.audio_len / model.t;
+    let mut bits = BitMap::zero(model.t, model.c);
+    for t in 0..model.t {
+        for ch in 0..model.c {
+            let idx = t * frame + ch;
+            let x = q[idx] as i64;
+            let prev = if idx == 0 { 0 } else { q[idx - 1] as i64 };
+            let y = 32 * x - 31 * prev;
+            let f = y.abs();
+            let on = match model.pre_dir[ch] {
+                1 => f > model.pre_thr[ch],
+                -1 => f < model.pre_thr[ch] + 1,
+                _ => model.bn_beta[ch] > 0.0,
+            };
+            if on {
+                bits.set(t, ch);
+            }
+        }
+    }
+    bits
+}
+
+/// Binary conv1d row sums at position `t` for all output channels:
+/// integer MAC over the tap-major/channel-minor im2col window with
+/// symmetric zero padding (pad = (k-1)/2), identical to
+/// `ref.ref_conv1d_binary`.
+pub fn conv_sums(x: &BitMap, w: &super::kws::LayerSpec, t: usize) -> Vec<i32> {
+    let k = w.kernel;
+    let pad = (k - 1) / 2;
+    let mut sums = vec![0i32; w.c_out];
+    for j in 0..k {
+        let tt = t as isize + j as isize - pad as isize;
+        if tt < 0 || tt >= x.t as isize {
+            continue; // zero padding contributes nothing
+        }
+        let row = tt as usize;
+        for ci in 0..w.c_in {
+            if x.get(row, ci) {
+                let r = j * w.c_in + ci;
+                for (co, s) in sums.iter_mut().enumerate() {
+                    *s += w.weight(r, co) as i32;
+                }
+            }
+        }
+    }
+    sums
+}
+
+/// One binarized conv layer (+ optional 2:1 max pool fused).
+pub fn conv_layer(x: &BitMap, layer: &super::kws::LayerSpec) -> BitMap {
+    assert!(layer.binarized);
+    let t_out = if layer.pooled { x.t / 2 } else { x.t };
+    let mut out = BitMap::zero(t_out, layer.c_out);
+    for t in 0..x.t {
+        let sums = conv_sums(x, layer, t);
+        let ot = if layer.pooled { t / 2 } else { t };
+        if ot >= t_out {
+            break; // odd tail dropped by pooling
+        }
+        for co in 0..layer.c_out {
+            if sums[co] > layer.thresholds[co] {
+                out.set(ot, co); // pooled max == OR of the pair
+            }
+        }
+    }
+    out
+}
+
+/// The raw final layer + global average pooling -> logits. The division
+/// is f32 like jnp.mean; sums and t are small integers so it is exact.
+pub fn final_layer_gap(x: &BitMap, layer: &super::kws::LayerSpec) -> Vec<f32> {
+    assert!(!layer.binarized);
+    let mut acc = vec![0i64; layer.c_out];
+    for t in 0..x.t {
+        for (co, s) in conv_sums(x, layer, t).iter().enumerate() {
+            acc[co] += *s as i64;
+        }
+    }
+    acc.iter().map(|&s| s as f32 / x.t as f32).collect()
+}
+
+/// Full inference: audio -> logits. Bit-exact vs the JAX golden model.
+pub fn infer(model: &KwsModel, audio: &[f32]) -> Vec<f32> {
+    let mut x = preprocess(model, audio);
+    for layer in &model.layers[..model.layers.len() - 1] {
+        x = conv_layer(&x, layer);
+    }
+    final_layer_gap(&x, model.layers.last().unwrap())
+}
+
+/// Argmax helper (accuracy eval).
+pub fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::kws::LayerSpec;
+
+    fn tiny_layer(c_in: usize, c_out: usize, pooled: bool, binarized: bool) -> LayerSpec {
+        // deterministic weights: +1 iff (row + co) even
+        let k = 3;
+        let rows = k * c_in;
+        let weights = (0..rows * c_out)
+            .map(|i| {
+                let (r, co) = (i / c_out, i % c_out);
+                if (r + co) % 2 == 0 { 1i8 } else { -1 }
+            })
+            .collect();
+        LayerSpec {
+            c_in,
+            c_out,
+            kernel: k,
+            pooled,
+            binarized,
+            weights,
+            thresholds: if binarized { vec![0; c_out] } else { vec![] },
+        }
+    }
+
+    #[test]
+    fn bitmap_roundtrip() {
+        let mut b = BitMap::zero(4, 70);
+        b.set(0, 0);
+        b.set(3, 69);
+        b.set(2, 32);
+        assert!(b.get(0, 0) && b.get(3, 69) && b.get(2, 32));
+        assert!(!b.get(1, 0) && !b.get(3, 68));
+        assert_eq!(b.popcount(), 3);
+    }
+
+    #[test]
+    fn conv_padding_zero_at_edges() {
+        let layer = tiny_layer(4, 2, false, true);
+        let mut x = BitMap::zero(3, 4);
+        // only row 0 has bits -> position 2's window (rows 1,2,3) sums 0.
+        x.set(0, 0);
+        x.set(0, 3);
+        let s0 = conv_sums(&x, &layer, 0);
+        let s2 = conv_sums(&x, &layer, 2);
+        assert_eq!(s2, vec![0, 0]);
+        // Row 0 enters position 0's window at tap j=1 (center).
+        // r = 1*4+0 = 4: w(4, 0) = +1; r = 1*4+3 = 7: w(7,0) = -1 -> 0.
+        assert_eq!(s0[0], 0);
+        // co=1: w(4,1) = -1, w(7,1) = +1 -> 0.
+        assert_eq!(s0[1], 0);
+    }
+
+    #[test]
+    fn conv_sums_match_naive() {
+        // Naive O(t*k*ci*co) vs conv_sums on random-ish bits.
+        let layer = tiny_layer(8, 4, false, true);
+        let mut x = BitMap::zero(10, 8);
+        for t in 0..10 {
+            for c in 0..8 {
+                if (t * 7 + c * 3) % 5 < 2 {
+                    x.set(t, c);
+                }
+            }
+        }
+        for t in 0..10 {
+            let got = conv_sums(&x, &layer, t);
+            let mut want = vec![0i32; 4];
+            for j in 0..3 {
+                let tt = t as isize + j as isize - 1;
+                if tt < 0 || tt >= 10 {
+                    continue;
+                }
+                for ci in 0..8 {
+                    if x.get(tt as usize, ci) {
+                        for (co, wv) in want.iter_mut().enumerate() {
+                            *wv += layer.weight(j * 8 + ci, co) as i32;
+                        }
+                    }
+                }
+            }
+            assert_eq!(got, want, "position {t}");
+        }
+    }
+
+    #[test]
+    fn pooled_layer_is_or_of_pairs() {
+        let layer = tiny_layer(4, 4, true, true);
+        let mut x = BitMap::zero(6, 4);
+        x.set(1, 1);
+        x.set(4, 2);
+        let pooled = conv_layer(&x, &layer);
+        // Unpooled computed by a non-pooled twin must OR pairwise.
+        let mut twin = layer.clone();
+        twin.pooled = false;
+        let unpooled = conv_layer(&x, &twin);
+        assert_eq!(pooled.t, 3);
+        for t in 0..3 {
+            for co in 0..4 {
+                assert_eq!(
+                    pooled.get(t, co),
+                    unpooled.get(2 * t, co) || unpooled.get(2 * t + 1, co)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_is_clamped_and_integral() {
+        let q = quantize_audio(&[-2.0, -1.0, 0.0, 0.4999, 1.0, 2.0]);
+        assert_eq!(q[0], -2048);
+        assert_eq!(q[1], -2048);
+        assert_eq!(q[2], 0);
+        assert_eq!(q[4], 2048);
+        assert_eq!(q[5], 2048);
+    }
+}

@@ -1,0 +1,85 @@
+//! The golden KWS model: HLO text -> PJRT executable -> logits.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::io::read_f32;
+use crate::util::json::Json;
+
+/// A compiled golden model plus its parameter payloads (fed as PJRT
+/// inputs in manifest order on every call).
+pub struct GoldenModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// (shape, payload) per parameter after the audio input.
+    params: Vec<(Vec<usize>, Vec<f32>)>,
+    pub audio_len: usize,
+    pub n_classes: usize,
+}
+
+impl GoldenModel {
+    /// Load `model.hlo.txt` + weights from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest: Json = Json::parse(
+            &std::fs::read_to_string(dir.join("kws_manifest.json"))
+                .context("reading kws_manifest.json")?,
+        )?;
+        let audio_len = manifest.path(&["config", "audio_len"])?.as_usize()?;
+        let n_classes = manifest.path(&["config", "n_classes"])?.as_usize()?;
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let hlo_path = dir.join(manifest.path(&["hlo", "model"])?.as_str()?);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("hlo path utf-8")?,
+        )
+        .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+
+        // Parameters in manifest order (the lowering's argument order).
+        let mut params = Vec::new();
+        for w in manifest.get("weights")?.as_arr()? {
+            let file = w.get("file")?.as_str()?;
+            let shape: Vec<usize> = w
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?;
+            let data = read_f32(&dir.join(file))?;
+            ensure!(
+                data.len() == shape.iter().product::<usize>().max(1),
+                "{file}: payload/shape mismatch"
+            );
+            params.push((shape, data));
+        }
+        Ok(GoldenModel { exe, params, audio_len, n_classes })
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&crate::util::io::artifacts_dir()?)
+    }
+
+    /// Run one utterance through the golden model.
+    pub fn infer(&self, audio: &[f32]) -> Result<Vec<f32>> {
+        ensure!(audio.len() == self.audio_len, "audio length {}", audio.len());
+        let mut literals = Vec::with_capacity(1 + self.params.len());
+        literals.push(to_literal(audio, &[audio.len()])?);
+        for (shape, data) in &self.params {
+            literals.push(to_literal(data, shape)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: a 1-tuple of the logits vector.
+        let out = result.to_tuple1()?;
+        let logits = out.to_vec::<f32>()?;
+        ensure!(logits.len() == self.n_classes, "logits length {}", logits.len());
+        Ok(logits)
+    }
+}
+
+fn to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+// Exercised by rust/tests/golden_crosscheck.rs (needs artifacts on disk).

@@ -1,0 +1,11 @@
+//! PJRT golden-model runtime: loads the AOT-lowered JAX/Pallas HLO text
+//! (`artifacts/*.hlo.txt`) and executes it on the CPU PJRT client — the
+//! bit-exact oracle the cycle simulator is checked against.
+//!
+//! Python never runs here: `make artifacts` ran once at build time; the
+//! interchange format is HLO *text* (the image's xla_extension 0.5.1
+//! rejects jax>=0.5's 64-bit-id serialized protos — see DESIGN.md).
+
+pub mod golden;
+
+pub use golden::GoldenModel;

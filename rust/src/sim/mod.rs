@@ -1,0 +1,9 @@
+//! The SoC: wires the 2-stage core, CIM macro, SRAMs, uDMA and DRAM
+//! together (paper Fig. 2) and runs compiled programs cycle by cycle.
+
+pub mod soc;
+pub mod trace;
+pub mod stats;
+
+pub use soc::{RunResult, Soc};
+pub use stats::PhaseBreakdown;

@@ -1,0 +1,302 @@
+//! Top-level simulator: load a program image, stage an utterance, run to
+//! halt, extract results + statistics.
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::Program;
+use crate::cpu::{Cpu, StepOutcome};
+use crate::energy::{EnergyReport, EnergyTable};
+use crate::mem::bus::Bus;
+use crate::mem::dram::DramConfig;
+use crate::mem::layout;
+use crate::model::reference::argmax;
+
+use super::stats::PhaseBreakdown;
+
+/// Default step budget: generously above any KWS inference (~10^6).
+const MAX_STEPS: u64 = 200_000_000;
+
+/// One completed run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// GAP logits (result sums / final_t), comparable to the golden model.
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    pub cycles: u64,
+    pub instret: u64,
+    pub phases: PhaseBreakdown,
+    pub energy: EnergyReport,
+    /// Wall-clock seconds at the paper's 50 MHz clock.
+    pub seconds_at_50mhz: f64,
+    pub console: String,
+}
+
+/// The SoC instance (reusable across inferences: weights stay staged).
+pub struct Soc {
+    pub bus: Bus,
+    program: Program,
+    /// Predecoded instruction image (§Perf: decode once, not per step).
+    decoded: Vec<crate::isa::Instr>,
+    energy_table: EnergyTable,
+    /// Whether to reset access counters before each run.
+    reset_stats_per_run: bool,
+}
+
+impl Soc {
+    /// Build a SoC with a program image loaded (IMEM + DRAM weights +
+    /// DMEM tables). Audio is staged per-run.
+    pub fn new(program: Program, dram_cfg: DramConfig) -> Result<Self> {
+        let mut bus = Bus::new(dram_cfg);
+        for (i, w) in program.imem.iter().enumerate() {
+            bus.imem.poke_u32((i * 4) as u32, *w)?;
+        }
+        for (off, bytes) in &program.dram {
+            bus.dram.load(*off, bytes)?;
+        }
+        for (off, words) in &program.dmem {
+            for (i, w) in words.iter().enumerate() {
+                bus.dmem.poke_u32(off + (i * 4) as u32, *w)?;
+            }
+        }
+        let decoded = program
+            .imem
+            .iter()
+            .map(|&w| crate::isa::decode(w))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Soc { bus, program, decoded, energy_table: EnergyTable::default(), reset_stats_per_run: true })
+    }
+
+    pub fn with_energy_table(mut self, t: EnergyTable) -> Self {
+        self.energy_table = t;
+        self
+    }
+
+    /// Inject a variation model into the macro (robustness experiments).
+    pub fn with_variation(mut self, v: crate::cim::VariationModel) -> Self {
+        self.bus.cim.variation = Some(v);
+        self
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    /// Stage one utterance (float waveform -> i16 ADC image in DRAM).
+    pub fn stage_audio(&mut self, audio: &[f32]) -> Result<()> {
+        let q = crate::model::reference::quantize_audio(audio);
+        let mut bytes = Vec::with_capacity(q.len() * 2);
+        for v in &q {
+            bytes.extend_from_slice(&(*v as i16).to_le_bytes());
+        }
+        self.bus.dram.load(crate::dataflow::plan::DRAM_AUDIO, &bytes)?;
+        Ok(())
+    }
+
+    /// Run one inference to halt.
+    pub fn run(&mut self) -> Result<RunResult> {
+        if self.reset_stats_per_run {
+            self.bus.fm.reset_counters();
+            self.bus.wt.reset_counters();
+            self.bus.dmem.reset_counters();
+            self.bus.imem.reset_counters();
+            self.bus.dram.reset_counters();
+            self.bus.cim.reset_stats();
+            self.bus.udma.transfers = 0;
+            self.bus.udma.bytes = 0;
+            self.bus.udma.busy_cycles = 0;
+            self.bus.phases.clear();
+            self.bus.exit_code = None;
+            self.bus.console.clear();
+        }
+        let mut cpu = Cpu::new(0);
+        let mut now: u64 = 0;
+        let mut steps: u64 = 0;
+        loop {
+            self.bus.tick(now)?;
+            match cpu
+                .step_predecoded(&mut self.bus, &self.decoded)
+                .with_context(|| format!("cycle {now}"))?
+            {
+                StepOutcome::Retired { cycles } => now += cycles,
+                StepOutcome::Halted => break,
+            }
+            steps += 1;
+            if steps > MAX_STEPS {
+                bail!("program did not halt within {MAX_STEPS} steps");
+            }
+        }
+        // Drain any in-flight uDMA bookkeeping.
+        self.bus.tick(u64::MAX)?;
+        self.bus.now = now;
+
+        match self.bus.exit_code {
+            Some(0) => {}
+            Some(c) => bail!("program exited with code {c}"),
+            None => bail!("program halted without HOST_EXIT"),
+        }
+
+        // Extract GAP sums from DMEM and divide by final T (f32, matching
+        // jnp.mean over integer-valued sums).
+        anyhow::ensure!(self.bus.result_addr != 0, "program did not publish a result address");
+        let base = self.bus.result_addr - layout::DMEM_BASE;
+        let n = self.program.n_classes;
+        let mut logits = Vec::with_capacity(n);
+        for c in 0..n {
+            let raw = self.bus.dmem.peek_u32(base + (c * 4) as u32)? as i32;
+            logits.push(raw as f32 / self.program.final_t as f32);
+        }
+
+        let phases = PhaseBreakdown::from_markers(&self.bus.phases, cpu.stats.cycles);
+        let energy = EnergyReport::from_run(&self.energy_table, &cpu.stats, &self.bus);
+        Ok(RunResult {
+            predicted: argmax(&logits),
+            logits,
+            cycles: cpu.stats.cycles,
+            instret: cpu.stats.instret,
+            phases,
+            energy,
+            seconds_at_50mhz: cpu.stats.cycles as f64 / 50e6,
+            console: self.bus.console.clone(),
+        })
+    }
+
+    /// Convenience: stage + run.
+    pub fn infer(&mut self, audio: &[f32]) -> Result<RunResult> {
+        self.stage_audio(audio)?;
+        self.run()
+    }
+}
+
+/// Build a ready SoC for the default artifacts model.
+pub fn build_default_soc(opt: crate::baselines::OptLevel) -> Result<Soc> {
+    let model = crate::model::KwsModel::load_default()?;
+    let program = crate::compiler::build_kws_program(&model, opt)?;
+    Soc::new(program, DramConfig::default())
+}
+
+// Integration-level tests live in rust/tests/ (they need artifacts); the
+// unit tests here use the synthetic fake model from codegen's tests via a
+// minimal end-to-end run.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::OptLevel;
+    use crate::compiler::build_kws_program;
+    use crate::model::kws::LayerSpec;
+    use crate::model::reference;
+    use crate::model::KwsModel;
+
+    fn fake_model(seed: u64) -> KwsModel {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let mut mk = |ci: usize, co: usize, pooled: bool, binarized: bool| LayerSpec {
+            c_in: ci,
+            c_out: co,
+            kernel: 3,
+            pooled,
+            binarized,
+            weights: (0..3 * ci * co).map(|_| rng.pm1()).collect(),
+            thresholds: if binarized {
+                (0..co).map(|_| rng.range(0, 9) as i32 - 4).collect()
+            } else {
+                vec![]
+            },
+        };
+        let layers =
+            vec![mk(64, 64, true, true), mk(64, 32, true, true), mk(32, 12, false, false)];
+        KwsModel {
+            audio_len: 16000,
+            t: 128,
+            c: 64,
+            n_classes: 12,
+            fusion_split: 2,
+            layers,
+            bn_gamma: vec![1.0; 64],
+            bn_beta: vec![0.5; 64],
+            bn_mean: vec![20000.0; 64],
+            bn_var: vec![4.0e8; 64],
+            pre_thr: crate::model::kws::fold_bn(
+                &[1.0; 64],
+                &[0.5; 64],
+                &[20000.0; 64],
+                &[4.0e8; 64],
+            )
+            .0,
+            pre_dir: vec![1; 64],
+            trained: false,
+            artifacts_dir: std::path::PathBuf::new(),
+        }
+    }
+
+    fn test_audio(seed: u64) -> Vec<f32> {
+        crate::model::dataset::synth_utterance(3, seed, 16000, 0.3)
+    }
+
+    #[test]
+    fn iss_matches_host_reference_all_opt_levels() {
+        // THE core system test: the cycle-level ISS program must produce
+        // bit-identical logits to the host reference implementation, for
+        // every optimization level (optimizations change timing, never
+        // values).
+        let m = fake_model(42);
+        let audio = test_audio(7);
+        let want = reference::infer(&m, &audio);
+        for (name, opt) in OptLevel::ladder() {
+            let prog = build_kws_program(&m, opt).unwrap();
+            let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+            let r = soc.infer(&audio).unwrap();
+            assert_eq!(r.logits, want, "logits mismatch at {name}");
+        }
+    }
+
+    #[test]
+    fn optimizations_strictly_reduce_cycles() {
+        let m = fake_model(1);
+        let audio = test_audio(2);
+        let mut prev = u64::MAX;
+        for (name, opt) in OptLevel::ladder() {
+            let prog = build_kws_program(&m, opt).unwrap();
+            let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+            let r = soc.infer(&audio).unwrap();
+            assert!(r.cycles < prev, "{name}: {} !< {prev}", r.cycles);
+            prev = r.cycles;
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let m = fake_model(5);
+        let audio = test_audio(9);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+        let a = soc.infer(&audio).unwrap();
+        let b = soc.infer(&audio).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn phase_markers_cover_run() {
+        let m = fake_model(3);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+        let r = soc.infer(&test_audio(1)).unwrap();
+        assert!(r.phases.boot > 0);
+        assert!(r.phases.preprocess > 0);
+        assert!(r.phases.weights > 0);
+        assert!(r.phases.conv > 0);
+        let total = r.phases.boot + r.phases.preprocess + r.phases.weights + r.phases.conv + r.phases.tail;
+        assert_eq!(total, r.cycles);
+    }
+
+    #[test]
+    fn energy_report_nonzero() {
+        let m = fake_model(4);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+        let r = soc.infer(&test_audio(4)).unwrap();
+        assert!(r.energy.total_pj > 0.0);
+        assert!(r.energy.macro_pj > 0.0);
+        assert!(r.energy.tops_per_w() > 0.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Phase attribution from the program's MMIO phase markers.
+
+
+/// Cycle counts per program phase (paper Fig. 10's three modes plus boot).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseBreakdown {
+    /// One-time boot: audio staging + mask-plane init (+ L0 prefetch).
+    pub boot: u64,
+    /// RISC-V preprocessing (high-pass, features, BN compare).
+    pub preprocess: u64,
+    /// Weight phases: uDMA waits + cim_w bursts across all layers.
+    pub weights: u64,
+    /// Convolution phases (incl. unfused pooling passes and FM spills).
+    pub conv: u64,
+    /// Everything after the last marker (result publication).
+    pub tail: u64,
+}
+
+impl PhaseBreakdown {
+    /// Attribute cycles from (marker id, cycle) pairs.
+    pub fn from_markers(markers: &[(u32, u64)], total: u64) -> Self {
+        let mut b = PhaseBreakdown::default();
+        let mut prev = 0u64;
+        for &(id, at) in markers {
+            let span = at.saturating_sub(prev);
+            match id {
+                1 => b.boot += span,
+                2 => b.preprocess += span,
+                10..=29 => b.weights += span,
+                30..=49 => b.conv += span,
+                _ => b.tail += span,
+            }
+            prev = at;
+        }
+        b.tail += total.saturating_sub(prev);
+        b
+    }
+
+    /// The "accelerated" share the paper's three optimizations attack
+    /// (weights + conv; preprocessing/boot run on the RISC-V either way).
+    pub fn accelerated(&self) -> u64 {
+        self.weights + self.conv
+    }
+
+    pub fn total(&self) -> u64 {
+        self.boot + self.preprocess + self.weights + self.conv + self.tail
+    }
+
+    pub fn render(&self) -> String {
+        let pct = |x: u64| 100.0 * x as f64 / self.total().max(1) as f64;
+        format!(
+            "cycles {}: boot {} ({:.1}%) | preprocess {} ({:.1}%) | weights {} ({:.1}%) | conv {} ({:.1}%) | tail {}",
+            self.total(),
+            self.boot,
+            pct(self.boot),
+            self.preprocess,
+            pct(self.preprocess),
+            self.weights,
+            pct(self.weights),
+            self.conv,
+            pct(self.conv),
+            self.tail,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attribution_spans() {
+        // boot done @100, preprocess @400, weights L0 @600, conv L0 @900,
+        // weights L1 @1000, conv L1 @1100; total 1150.
+        let markers =
+            vec![(1, 100), (2, 400), (10, 600), (30, 900), (11, 1000), (31, 1100)];
+        let b = PhaseBreakdown::from_markers(&markers, 1150);
+        assert_eq!(b.boot, 100);
+        assert_eq!(b.preprocess, 300);
+        assert_eq!(b.weights, 200 + 100);
+        assert_eq!(b.conv, 300 + 100);
+        assert_eq!(b.tail, 50);
+        assert_eq!(b.total(), 1150);
+        assert_eq!(b.accelerated(), 700);
+    }
+
+    #[test]
+    fn empty_markers_all_tail() {
+        let b = PhaseBreakdown::from_markers(&[], 500);
+        assert_eq!(b.tail, 500);
+        assert_eq!(b.total(), 500);
+    }
+}

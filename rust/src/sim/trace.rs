@@ -1,0 +1,149 @@
+//! Execution tracing: disassembled instruction streams with cycle stamps
+//! and register effects — the debugging view a real devboard bring-up
+//! would give you through JTAG.
+
+use anyhow::Result;
+
+use crate::compiler::Program;
+use crate::cpu::{Cpu, StepOutcome};
+use crate::isa::{decode, disasm};
+use crate::mem::bus::Bus;
+use crate::mem::dram::DramConfig;
+
+/// One traced instruction.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub cycle: u64,
+    pub pc: u32,
+    pub text: String,
+    /// Register file delta (abi name, new value), if any.
+    pub wrote: Option<(String, u32)>,
+}
+
+impl TraceEntry {
+    pub fn render(&self) -> String {
+        match &self.wrote {
+            Some((r, v)) => format!("[{:>8}] {:#010x}  {:<36} {r} <- {v:#010x}", self.cycle, self.pc, self.text),
+            None => format!("[{:>8}] {:#010x}  {}", self.cycle, self.pc, self.text),
+        }
+    }
+}
+
+/// Run a program from reset, collecting up to `max` trace entries
+/// (optionally skipping the first `skip` retired instructions). The run
+/// continues to halt so the trace is taken from a *valid* execution.
+pub fn trace_program(program: &Program, skip: u64, max: usize) -> Result<Vec<TraceEntry>> {
+    let mut bus = Bus::new(DramConfig::default());
+    for (i, w) in program.imem.iter().enumerate() {
+        bus.imem.poke_u32((i * 4) as u32, *w)?;
+    }
+    for (off, bytes) in &program.dram {
+        bus.dram.load(*off, bytes)?;
+    }
+    for (off, words) in &program.dmem {
+        for (i, w) in words.iter().enumerate() {
+            bus.dmem.poke_u32(off + (i * 4) as u32, *w)?;
+        }
+    }
+    let mut cpu = Cpu::new(0);
+    let mut now = 0u64;
+    let mut out = Vec::new();
+    let mut retired = 0u64;
+    loop {
+        bus.tick(now)?;
+        let pc = cpu.pc;
+        let before = cpu.regs.snapshot();
+        let word = bus.fetch(pc).unwrap_or(0);
+        match cpu.step(&mut bus)? {
+            StepOutcome::Retired { cycles } => {
+                if retired >= skip && out.len() < max {
+                    let text = decode(word).map(|i| disasm(&i)).unwrap_or_else(|_| "<raw>".into());
+                    let after = cpu.regs.snapshot();
+                    let wrote = (0..32)
+                        .find(|&i| after[i] != before[i])
+                        .map(|i| (crate::isa::Reg(i as u8).abi().to_string(), after[i]));
+                    out.push(TraceEntry { cycle: now, pc, text, wrote });
+                }
+                now += cycles;
+                retired += 1;
+            }
+            StepOutcome::Halted => break,
+        }
+        if retired > 50_000_000 {
+            anyhow::bail!("trace runaway");
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::OptLevel;
+    use crate::compiler::build_kws_program;
+    use crate::model::kws::LayerSpec;
+    use crate::model::KwsModel;
+
+    fn tiny_model() -> KwsModel {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let mk = |rng: &mut Rng, ci: usize, co: usize, last: bool| LayerSpec {
+            c_in: ci,
+            c_out: co,
+            kernel: 3,
+            pooled: !last,
+            binarized: !last,
+            weights: (0..3 * ci * co).map(|_| rng.pm1()).collect(),
+            thresholds: if last { vec![] } else { vec![0; co] },
+        };
+        let layers = vec![mk(&mut rng, 32, 32, false), mk(&mut rng, 32, 12, true)];
+        KwsModel {
+            audio_len: 16000,
+            t: 128,
+            c: 32,
+            n_classes: 12,
+            fusion_split: 1,
+            layers,
+            bn_gamma: vec![1.0; 32],
+            bn_beta: vec![0.0; 32],
+            bn_mean: vec![20000.0; 32],
+            bn_var: vec![4e8; 32],
+            pre_thr: vec![20000; 32],
+            pre_dir: vec![1; 32],
+            trained: false,
+            artifacts_dir: std::path::PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn trace_captures_boot_instructions() {
+        let prog = build_kws_program(&tiny_model(), OptLevel::FULL).unwrap();
+        let t = trace_program(&prog, 0, 12).unwrap();
+        assert_eq!(t.len(), 12);
+        // Boot starts by loading the MMIO base.
+        assert!(t[0].text.starts_with("lui"), "{}", t[0].text);
+        assert_eq!(t[0].pc, 0);
+        assert!(t[0].wrote.is_some());
+        // Cycles are monotone.
+        assert!(t.windows(2).all(|w| w[0].cycle < w[1].cycle));
+    }
+
+    #[test]
+    fn trace_skip_window() {
+        let prog = build_kws_program(&tiny_model(), OptLevel::FULL).unwrap();
+        let a = trace_program(&prog, 0, 30).unwrap();
+        let b = trace_program(&prog, 10, 5).unwrap();
+        assert_eq!(b[0].pc, a[10].pc);
+        assert_eq!(b.len(), 5);
+    }
+
+    #[test]
+    fn trace_renders() {
+        let prog = build_kws_program(&tiny_model(), OptLevel::FULL).unwrap();
+        let t = trace_program(&prog, 0, 3).unwrap();
+        for e in &t {
+            let s = e.render();
+            assert!(s.contains("0x"));
+        }
+    }
+}

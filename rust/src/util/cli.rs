@@ -1,0 +1,122 @@
+//! Tiny CLI argument parser (the image has no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args —
+//! enough for the `cimrv` launcher and the examples.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit arg list (no program name).
+    /// `flag_names` lists options that take no value.
+    pub fn parse_from(args: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{rest} expects a value"))?;
+                    out.options.insert(rest.to_string(), v.clone());
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("short options are not supported: {a}");
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process command line.
+    pub fn parse(flag_names: &[&str]) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse_from(&argv, flag_names)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse_from(&s(&["run", "--steps", "10", "--mode=fused", "prog.bin"]), &[])
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt("steps"), Some("10"));
+        assert_eq!(a.opt("mode"), Some("fused"));
+        assert_eq!(a.positional, vec!["prog.bin"]);
+    }
+
+    #[test]
+    fn flags() {
+        let a = Args::parse_from(&s(&["bench", "--verbose", "--n", "3"]), &["verbose"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse_from(&s(&["run", "--steps"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse_from(&s(&["x", "--f", "2.5"]), &[]).unwrap();
+        assert_eq!(a.opt_f64("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.opt_f64("g", 1.5).unwrap(), 1.5);
+        assert!(a.opt_usize("f", 0).is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! Binary artifact I/O: the f32/i32 little-endian payloads written by
+//! `python/compile/aot.py` (weights, test vectors, eval sets).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Read a little-endian f32 payload.
+pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a little-endian i32 payload.
+pub fn read_i32(path: &Path) -> Result<Vec<i32>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 payload.
+pub fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Locate the artifacts directory: `$CIMRV_ARTIFACTS`, else `./artifacts`,
+/// else `../artifacts` (so tests/examples work from any workspace cwd).
+pub fn artifacts_dir() -> Result<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("CIMRV_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.is_dir() {
+            return Ok(p);
+        }
+        bail!("CIMRV_ARTIFACTS={} is not a directory", p.display());
+    }
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join("kws_manifest.json").is_file() {
+            return Ok(p);
+        }
+    }
+    bail!("artifacts/ not found — run `make artifacts` first")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let dir = std::env::temp_dir().join("cimrv_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let data = vec![0.0f32, -1.5, 3.25, f32::MAX];
+        write_f32(&p, &data).unwrap();
+        assert_eq!(read_f32(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let dir = std::env::temp_dir().join("cimrv_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ragged.bin");
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        assert!(read_f32(&p).is_err());
+        assert!(read_i32(&p).is_err());
+    }
+}

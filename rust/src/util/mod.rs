@@ -1,0 +1,8 @@
+//! Small in-tree replacements for crates missing from the offline image
+//! (serde_json, clap, rand, proptest) plus binary-artifact I/O helpers.
+
+pub mod cli;
+pub mod io;
+pub mod json;
+pub mod proptest;
+pub mod rng;

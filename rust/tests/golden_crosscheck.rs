@@ -1,0 +1,47 @@
+//! THE three-layer cross-check: the cycle-level Rust SoC (L3) running the
+//! compiled RV32IM+CIM program must be bit-exact against the AOT-lowered
+//! JAX+Pallas model (L2/L1) executed through PJRT — the same weights, the
+//! same audio, logits compared with `==`.
+
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::build_kws_program;
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::{dataset, reference, KwsModel};
+use cimrv::runtime::GoldenModel;
+use cimrv::sim::Soc;
+use cimrv::util::io::artifacts_dir;
+
+#[test]
+fn golden_pjrt_matches_host_reference_on_testvecs() {
+    let dir = artifacts_dir().expect("run `make artifacts`");
+    let m = KwsModel::load(&dir).unwrap();
+    let golden = GoldenModel::load(&dir).unwrap();
+    let tv = dataset::Dataset::load_testvec(&dir, m.audio_len, m.n_classes).unwrap();
+    for i in 0..tv.len().min(8) {
+        let audio = tv.utterance(i);
+        let g = golden.infer(audio).unwrap();
+        // vs the exported JAX logits (same path, round-tripped through
+        // HLO text + PJRT) ...
+        assert_eq!(g.as_slice(), tv.golden_logits(i).unwrap(), "PJRT vs export {i}");
+        // ... and vs the Rust host reference.
+        assert_eq!(g, reference::infer(&m, audio), "PJRT vs host ref {i}");
+    }
+}
+
+#[test]
+fn full_stack_iss_vs_pjrt_bit_exact() {
+    let dir = artifacts_dir().expect("run `make artifacts`");
+    let m = KwsModel::load(&dir).unwrap();
+    let golden = GoldenModel::load(&dir).unwrap();
+    let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+    let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+    for (label, seed) in [(0usize, 1u64), (5, 2), (11, 3)] {
+        let audio = dataset::synth_utterance(label, seed, m.audio_len, 0.37);
+        let iss = soc.infer(&audio).unwrap();
+        let pjrt = golden.infer(&audio).unwrap();
+        assert_eq!(
+            iss.logits, pjrt,
+            "cycle-level ISS vs AOT JAX+Pallas mismatch (label {label})"
+        );
+    }
+}

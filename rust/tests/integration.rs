@@ -1,0 +1,179 @@
+//! Integration tests over the real artifacts (require `make artifacts`):
+//! model loading, the ISS vs host-reference bit-exactness on the trained
+//! model, the optimization ladder, accuracy, and the coordinator.
+
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::build_kws_program;
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::{dataset, reference, KwsModel};
+use cimrv::sim::Soc;
+use cimrv::util::io::artifacts_dir;
+
+fn model() -> KwsModel {
+    KwsModel::load_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_matches_table2_topology() {
+    let m = model();
+    assert_eq!(m.layers.len(), 7, "Table II: 7 convolutions");
+    assert_eq!(m.n_classes, 12, "GSCD 12 classes");
+    assert_eq!(m.fusion_split, 5, "weight fusion after 5 conv+pool blocks");
+    assert!(m.layers[..6].iter().all(|l| l.binarized && l.pooled));
+    let last = m.layers.last().unwrap();
+    assert!(!last.binarized && !last.pooled);
+    assert_eq!(last.c_out, 12);
+    // Weight-SRAM premise of Fig. 9.
+    assert!(m.resident_bits() <= 512 * 1024);
+    assert!(m.streamed_bits() > 0);
+}
+
+#[test]
+fn iss_bit_exact_vs_host_reference_trained_model() {
+    let m = model();
+    let audio = dataset::synth_utterance(5, 11, m.audio_len, 0.37);
+    let want = reference::infer(&m, &audio);
+    let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+    let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+    let r = soc.infer(&audio).unwrap();
+    assert_eq!(r.logits, want);
+}
+
+#[test]
+fn ladder_monotone_on_trained_model() {
+    let m = model();
+    let audio = dataset::synth_utterance(2, 3, m.audio_len, 0.37);
+    let mut prev_accel = u64::MAX;
+    let mut logits: Option<Vec<f32>> = None;
+    for (name, opt) in OptLevel::ladder() {
+        let prog = build_kws_program(&m, opt).unwrap();
+        let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+        let r = soc.infer(&audio).unwrap();
+        assert!(
+            r.phases.accelerated() < prev_accel,
+            "{name}: accelerated cycles must strictly drop"
+        );
+        prev_accel = r.phases.accelerated();
+        // Optimizations must never change values.
+        if let Some(l) = &logits {
+            assert_eq!(&r.logits, l, "{name} changed logits");
+        }
+        logits = Some(r.logits);
+    }
+}
+
+#[test]
+fn host_reference_matches_exported_golden_logits() {
+    // The aot.py test vectors carry logits computed by the JAX reference
+    // path; our Rust host reference must reproduce them bit-for-bit.
+    let m = model();
+    let dir = artifacts_dir().unwrap();
+    let tv = dataset::Dataset::load_testvec(&dir, m.audio_len, m.n_classes).unwrap();
+    assert!(tv.len() >= 8);
+    for i in 0..tv.len() {
+        let got = reference::infer(&m, tv.utterance(i));
+        let want = tv.golden_logits(i).unwrap();
+        assert_eq!(got.as_slice(), want, "utterance {i}");
+    }
+}
+
+#[test]
+fn eval_accuracy_in_paper_regime() {
+    // Host-reference accuracy on the exported eval set should be in the
+    // paper's 94%-class regime (trained to ~96% on the synthetic corpus;
+    // the assertion guards against silent weight/preprocessing skew, not
+    // the exact number).
+    let m = model();
+    let dir = artifacts_dir().unwrap();
+    let eval = dataset::Dataset::load_eval(&dir, m.audio_len, m.n_classes).unwrap();
+    let mut hits = 0;
+    for i in 0..eval.len() {
+        let logits = reference::infer(&m, eval.utterance(i));
+        if reference::argmax(&logits) == eval.labels[i] as usize {
+            hits += 1;
+        }
+    }
+    let acc = hits as f64 / eval.len() as f64;
+    assert!(acc > 0.85, "accuracy collapsed: {acc}");
+}
+
+#[test]
+fn iss_accuracy_matches_host_on_subset() {
+    let m = model();
+    let dir = artifacts_dir().unwrap();
+    let eval = dataset::Dataset::load_eval(&dir, m.audio_len, m.n_classes).unwrap();
+    let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+    let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+    for i in 0..4.min(eval.len()) {
+        let r = soc.infer(eval.utterance(i)).unwrap();
+        let host = reference::infer(&m, eval.utterance(i));
+        assert_eq!(r.logits, host, "utterance {i}");
+    }
+}
+
+#[test]
+fn coordinator_end_to_end_on_trained_model() {
+    use cimrv::coordinator::{Coordinator, InferenceRequest};
+    let m = model();
+    let coord = Coordinator::start(&m, OptLevel::FULL, 2).unwrap();
+    let reqs: Vec<_> = (0..4)
+        .map(|i| InferenceRequest {
+            id: i as u64,
+            audio: dataset::synth_utterance(i % 12, 50 + i as u64, m.audio_len, 0.37),
+            label: Some((i % 12) as i32),
+        })
+        .collect();
+    let resps = coord.serve_batch(reqs).unwrap();
+    assert_eq!(resps.len(), 4);
+    assert!(resps.iter().all(|r| r.chip_cycles > 0));
+    coord.shutdown();
+}
+
+#[test]
+fn energy_efficiency_in_calibrated_range() {
+    // A full-opt run's measured end-to-end TOPS/W sits far below the
+    // 3707.84 peak: the macro fires on ~0.5% of cycles (preprocessing and
+    // weight loading dominate the KWS inference), which is exactly why
+    // the paper quotes the peak number. The assertion pins the envelope:
+    // strictly positive, strictly below peak.
+    let m = model();
+    let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+    let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+    let audio = dataset::synth_utterance(1, 2, m.audio_len, 0.37);
+    let r = soc.infer(&audio).unwrap();
+    let ee = r.energy.tops_per_w();
+    assert!(ee > 0.5 && ee < 3707.84, "measured EE {ee}");
+}
+
+#[test]
+fn variation_injection_degrades_gracefully() {
+    // Symmetric mapping at moderate sigma should usually preserve the
+    // prediction; single-ended with strong NL should visibly disturb raw
+    // sums (the §II-B robustness argument). We assert on logits change,
+    // not accuracy (one utterance).
+    use cimrv::cim::VariationModel;
+    let m = model();
+    let audio = dataset::synth_utterance(4, 8, m.audio_len, 0.37);
+    let clean = reference::infer(&m, &audio);
+
+    let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+    let mut sym = Soc::new(prog.clone(), DramConfig::default())
+        .unwrap()
+        .with_variation(VariationModel::new(0.02, 0.1, true, 7));
+    let r_sym = sym.infer(&audio).unwrap();
+
+    let mut single = Soc::new(prog, DramConfig::default())
+        .unwrap()
+        .with_variation(VariationModel::new(0.02, 0.5, false, 7));
+    let r_single = single.infer(&audio).unwrap();
+
+    // Symmetric: logits stay close to clean (allow small drift).
+    let drift_sym: f32 =
+        r_sym.logits.iter().zip(&clean).map(|(a, b)| (a - b).abs()).sum();
+    let drift_single: f32 =
+        r_single.logits.iter().zip(&clean).map(|(a, b)| (a - b).abs()).sum();
+    assert!(
+        drift_sym < drift_single,
+        "symmetric mapping must be more robust: {drift_sym} vs {drift_single}"
+    );
+}

@@ -1,0 +1,372 @@
+//! Property tests (in-tree harness — the image has no proptest crate):
+//! ISA round-trips, macro-vs-reference MAC equivalence, allocator/plan
+//! invariants, coordinator batching invariants.
+
+use cimrv::cim::{weight_map, CimMacro, Mode};
+use cimrv::isa::rv32::{AluOp, BranchKind, Instr, LoadKind, MulOp, StoreKind};
+use cimrv::isa::{decode, encode, CimFunct, CimInstr, Reg};
+use cimrv::util::proptest::check;
+use cimrv::util::rng::Rng;
+
+fn rand_reg(rng: &mut Rng) -> Reg {
+    Reg(rng.range(0, 32) as u8)
+}
+
+fn rand_instr(rng: &mut Rng) -> Instr {
+    match rng.range(0, 12) {
+        0 => Instr::Lui { rd: rand_reg(rng), imm: rng.range(0, 1 << 20) as i32 },
+        1 => Instr::Auipc { rd: rand_reg(rng), imm: rng.range(0, 1 << 20) as i32 },
+        2 => Instr::Jal { rd: rand_reg(rng), offset: (rng.range(0, 1 << 20) as i32 - (1 << 19)) * 2 },
+        3 => Instr::Jalr {
+            rd: rand_reg(rng),
+            rs1: rand_reg(rng),
+            offset: rng.range(0, 4096) as i32 - 2048,
+        },
+        4 => {
+            let kinds = [BranchKind::Beq, BranchKind::Bne, BranchKind::Blt, BranchKind::Bge, BranchKind::Bltu, BranchKind::Bgeu];
+            Instr::Branch {
+                kind: kinds[rng.range(0, kinds.len())],
+                rs1: rand_reg(rng),
+                rs2: rand_reg(rng),
+                offset: (rng.range(0, 4096) as i32 - 2048) * 2,
+            }
+        }
+        5 => {
+            let kinds = [LoadKind::Lb, LoadKind::Lh, LoadKind::Lw, LoadKind::Lbu, LoadKind::Lhu];
+            Instr::Load {
+                kind: kinds[rng.range(0, kinds.len())],
+                rd: rand_reg(rng),
+                rs1: rand_reg(rng),
+                offset: rng.range(0, 4096) as i32 - 2048,
+            }
+        }
+        6 => {
+            let kinds = [StoreKind::Sb, StoreKind::Sh, StoreKind::Sw];
+            Instr::Store {
+                kind: kinds[rng.range(0, kinds.len())],
+                rs1: rand_reg(rng),
+                rs2: rand_reg(rng),
+                offset: rng.range(0, 4096) as i32 - 2048,
+            }
+        }
+        7 => {
+            let ops = [AluOp::Add, AluOp::Slt, AluOp::Sltu, AluOp::Xor, AluOp::Or, AluOp::And];
+            Instr::OpImm {
+                op: ops[rng.range(0, ops.len())],
+                rd: rand_reg(rng),
+                rs1: rand_reg(rng),
+                imm: rng.range(0, 4096) as i32 - 2048,
+            }
+        }
+        8 => {
+            let ops = [AluOp::Sll, AluOp::Srl, AluOp::Sra];
+            Instr::OpImm {
+                op: ops[rng.range(0, ops.len())],
+                rd: rand_reg(rng),
+                rs1: rand_reg(rng),
+                imm: rng.range(0, 32) as i32,
+            }
+        }
+        9 => {
+            let ops = [
+                AluOp::Add, AluOp::Sub, AluOp::Sll, AluOp::Slt, AluOp::Sltu,
+                AluOp::Xor, AluOp::Srl, AluOp::Sra, AluOp::Or, AluOp::And,
+            ];
+            Instr::Op {
+                op: ops[rng.range(0, ops.len())],
+                rd: rand_reg(rng),
+                rs1: rand_reg(rng),
+                rs2: rand_reg(rng),
+            }
+        }
+        10 => {
+            let ops = [MulOp::Mul, MulOp::Mulh, MulOp::Mulhsu, MulOp::Mulhu, MulOp::Div, MulOp::Divu, MulOp::Rem, MulOp::Remu];
+            Instr::MulDiv {
+                op: ops[rng.range(0, ops.len())],
+                rd: rand_reg(rng),
+                rs1: rand_reg(rng),
+                rs2: rand_reg(rng),
+            }
+        }
+        _ => {
+            let functs = [CimFunct::Conv, CimFunct::Read, CimFunct::Write];
+            let funct = functs[rng.range(0, 3)];
+            let conv = funct == CimFunct::Conv;
+            Instr::Cim(CimInstr {
+                funct,
+                rs1: Reg(10 + rng.range(0, 4) as u8),
+                rs2: Reg(10 + rng.range(0, 4) as u8),
+                imm_s: rng.range(0, 256) as u16,
+                imm_d: rng.range(0, 128) as u16,
+                wd: if conv { rng.range(0, 8) as u8 } else { 0 },
+                sh: conv && rng.bool(0.5),
+            })
+        }
+    }
+}
+
+#[test]
+fn prop_isa_encode_decode_roundtrip() {
+    check("isa roundtrip", 5000, |rng| {
+        let i = rand_instr(rng);
+        let w = encode(&i).unwrap();
+        let back = decode(w).unwrap_or_else(|e| panic!("{i:?} -> {w:#010x}: {e}"));
+        assert_eq!(back, i, "word {w:#010x}");
+    });
+}
+
+#[test]
+fn prop_decode_never_panics_on_random_words() {
+    check("decode total", 20000, |rng| {
+        let w = rng.next_u32();
+        let _ = decode(w); // must return Ok or Err, never panic
+    });
+}
+
+#[test]
+fn prop_macro_mac_equals_naive_reference() {
+    check("macro MAC", 60, |rng| {
+        let mode = if rng.bool(0.5) { Mode::X } else { Mode::Y };
+        let max_rows = mode.wordlines();
+        let rows = 32 * rng.range(1, max_rows / 32 + 1);
+        let cols = rng.range(1, mode.sense_amps() + 1);
+        let ternary = rng.bool(0.3);
+        let w: Vec<Vec<i8>> = (0..rows)
+            .map(|_| {
+                (0..cols)
+                    .map(|_| if ternary && rng.bool(0.15) { 0 } else { rng.pm1() })
+                    .collect()
+            })
+            .collect();
+        let th: Vec<i32> = (0..cols).map(|_| rng.range(0, 15) as i32 - 7).collect();
+        let x: Vec<u8> = (0..rows).map(|_| rng.bool(0.5) as u8).collect();
+
+        let mut m = CimMacro::new();
+        m.cfg.mode = mode;
+        m.cfg.window_words = (rows / 32) as u8;
+        let img = weight_map::WeightImage::from_layer(mode, rows, cols, |r, c| w[r][c], &th);
+        m.load_image(&img).unwrap();
+        for j in 0..rows / 32 {
+            let mut word = 0u32;
+            for b in 0..32 {
+                if x[j * 32 + b] == 1 {
+                    word |= 1 << b;
+                }
+            }
+            m.shift_in(word);
+        }
+        m.fire();
+        for c in 0..cols {
+            let want: i32 = (0..rows).filter(|&r| x[r] == 1).map(|r| w[r][c] as i32).sum();
+            assert_eq!(m.raw_sum(c), want, "col {c} ({mode:?}, rows {rows})");
+            let bit = (m.latch_word(c / 32) >> (c % 32)) & 1 == 1;
+            assert_eq!(bit, want > th[c], "latch col {c}");
+        }
+    });
+}
+
+#[test]
+fn prop_plan_invariants() {
+    // For random Table-II-shaped models: streams fit weight-SRAM halves,
+    // DRAM streams are disjoint, window fits the input buffer.
+    use cimrv::dataflow::KwsPlan;
+    use cimrv::model::kws::LayerSpec;
+    use cimrv::model::KwsModel;
+    check("plan invariants", 200, |rng| {
+        let depth = rng.range(2, 8);
+        let mut layers = Vec::new();
+        let mut ci = 32 * rng.range(1, 5);
+        let first_c = ci;
+        for d in 0..depth {
+            let last = d == depth - 1;
+            let co = if last { 12 } else { 32 * rng.range(1, 9) };
+            if 3 * ci > 1024 {
+                return; // config invalid by construction; skip case
+            }
+            layers.push(LayerSpec {
+                c_in: ci,
+                c_out: co,
+                kernel: 3,
+                pooled: !last,
+                binarized: !last,
+                weights: vec![1; 3 * ci * co],
+                thresholds: if last { vec![] } else { vec![0; co] },
+            });
+            ci = co;
+        }
+        let t = 1 << rng.range(5, 9); // 32..256 frames
+        if t >> (depth - 1) < 2 {
+            return;
+        }
+        let m = KwsModel {
+            audio_len: 16000,
+            t,
+            c: first_c,
+            n_classes: 12,
+            fusion_split: depth - 1,
+            layers,
+            bn_gamma: vec![1.0; first_c],
+            bn_beta: vec![0.0; first_c],
+            bn_mean: vec![0.0; first_c],
+            bn_var: vec![1.0; first_c],
+            pre_thr: vec![0; first_c],
+            pre_dir: vec![1; first_c],
+            trained: false,
+            artifacts_dir: std::path::PathBuf::new(),
+        };
+        let Ok(p) = KwsPlan::new(&m) else { return };
+        let mut prev_end = 0u32;
+        let mut t_cur = t;
+        for lp in &p.layers {
+            assert!(lp.window_words <= 32);
+            assert!(lp.stream_bytes() <= 0x8000);
+            assert!(lp.dram_offset >= prev_end);
+            prev_end = lp.dram_offset + lp.stream_bytes();
+            assert_eq!(lp.t_in, t_cur);
+            t_cur = lp.t_out;
+            assert_eq!(lp.t_out, if lp.pooled { lp.t_in / 2 } else { lp.t_in });
+        }
+    });
+}
+
+#[test]
+fn prop_pooled_conv_commutes_with_reference() {
+    // Host reference: fused pool == unfused conv then pairwise OR.
+    use cimrv::model::kws::LayerSpec;
+    use cimrv::model::reference::{conv_layer, BitMap};
+    check("pool commutes", 150, |rng| {
+        let t = 2 * rng.range(2, 20);
+        let ci = 8 * rng.range(1, 9);
+        let co = rng.range(1, 40);
+        let mut rng2 = Rng::new(rng.next_u64());
+        let layer = LayerSpec {
+            c_in: ci,
+            c_out: co,
+            kernel: 3,
+            pooled: true,
+            binarized: true,
+            weights: (0..3 * ci * co).map(|_| rng2.pm1()).collect(),
+            thresholds: (0..co).map(|_| rng2.range(0, 9) as i32 - 4).collect(),
+        };
+        let mut x = BitMap::zero(t, ci);
+        for r in 0..t {
+            for c in 0..ci {
+                if rng2.bool(0.5) {
+                    x.set(r, c);
+                }
+            }
+        }
+        let pooled = conv_layer(&x, &layer);
+        let mut twin = layer.clone();
+        twin.pooled = false;
+        let unpooled = conv_layer(&x, &twin);
+        for ot in 0..pooled.t {
+            for c in 0..co {
+                assert_eq!(
+                    pooled.get(ot, c),
+                    unpooled.get(2 * ot, c) || unpooled.get(2 * ot + 1, c)
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use cimrv::util::json::Json;
+    fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.range(0, 1 << 20) as f64) - (1 << 19) as f64),
+            3 => Json::Str(format!("s{}-\"q\"\\n{}", rng.range(0, 100), rng.range(0, 10))),
+            4 => Json::Arr((0..rng.range(0, 5)).map(|_| rand_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.range(0, 5))
+                    .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", 500, |rng| {
+        let j = rand_json(rng, 3);
+        let s = j.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+        assert_eq!(back, j, "{s}");
+    });
+}
+
+#[test]
+fn prop_random_models_iss_bit_exact_vs_reference() {
+    // The strongest end-to-end property: for random small binary CNNs and
+    // random audio, the compiled program on the cycle-level SoC produces
+    // bit-identical logits to the host reference, at a random opt level.
+    use cimrv::baselines::OptLevel;
+    use cimrv::compiler::build_kws_program;
+    use cimrv::mem::dram::DramConfig;
+    use cimrv::model::kws::{fold_bn, LayerSpec};
+    use cimrv::model::{dataset, reference, KwsModel};
+    use cimrv::sim::Soc;
+    check("random models bit-exact", 8, |rng| {
+        let depth = rng.range(2, 5);
+        let mut channels = Vec::new();
+        let mut ci = 32 * rng.range(1, 3);
+        let c0 = ci;
+        for d in 0..depth {
+            let co = if d == depth - 1 { rng.range(2, 13) } else { 32 * rng.range(1, 5) };
+            channels.push((ci, co));
+            ci = co;
+        }
+        let mut wrng = Rng::new(rng.next_u64());
+        let n = channels.len();
+        let layers: Vec<LayerSpec> = channels
+            .iter()
+            .enumerate()
+            .map(|(i, &(ci, co))| {
+                let last = i == n - 1;
+                LayerSpec {
+                    c_in: ci,
+                    c_out: co,
+                    kernel: 3,
+                    pooled: !last,
+                    binarized: !last,
+                    weights: (0..3 * ci * co).map(|_| wrng.pm1()).collect(),
+                    thresholds: if last {
+                        vec![]
+                    } else {
+                        (0..co).map(|_| wrng.range(0, 11) as i32 - 5).collect()
+                    },
+                }
+            })
+            .collect();
+        let gamma = vec![1.0; c0];
+        let beta = vec![0.3; c0];
+        let mean = vec![22_000.0; c0];
+        let var = vec![5.0e8; c0];
+        let (pre_thr, pre_dir) = fold_bn(&gamma, &beta, &mean, &var);
+        let model = KwsModel {
+            audio_len: 16000,
+            t: 128,
+            c: c0,
+            n_classes: channels[n - 1].1,
+            fusion_split: n - 1,
+            layers,
+            bn_gamma: gamma,
+            bn_beta: beta,
+            bn_mean: mean,
+            bn_var: var,
+            pre_thr,
+            pre_dir,
+            trained: false,
+            artifacts_dir: std::path::PathBuf::new(),
+        };
+        let opts = cimrv::baselines::OptLevel::ladder();
+        let (_, opt): (&str, OptLevel) = opts[rng.range(0, 4)];
+        let audio = dataset::synth_utterance(rng.range(0, 12), rng.next_u64(), 16000, 0.3);
+        let want = reference::infer(&model, &audio);
+        let prog = build_kws_program(&model, opt).unwrap();
+        let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+        let got = soc.infer(&audio).unwrap();
+        assert_eq!(got.logits, want, "depth {depth}, opt {opt}");
+    });
+}
