@@ -1,0 +1,80 @@
+//! Backend throughput: inferences/sec of the cycle-level SoC vs the fast
+//! functional simulator on the same compiled program — the headline
+//! number for the `backend` subsystem (target: >= 20x; in practice the
+//! fast backend lands orders of magnitude higher because it skips the
+//! ~10^6-step CPU loop entirely).
+//!
+//! Runs on the trained artifacts when present, else on the synthetic
+//! model, so it works straight after `cargo build`.
+
+use std::time::Instant;
+
+use cimrv::backend::{self, BackendKind, InferenceBackend};
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::build_kws_program;
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::{dataset, KwsModel};
+
+fn main() {
+    let model = KwsModel::load_default().unwrap_or_else(|_| {
+        println!("(artifacts not found: benchmarking the synthetic model)");
+        KwsModel::synthetic(1)
+    });
+    let prog = build_kws_program(&model, OptLevel::FULL).expect("codegen");
+    let audios: Vec<Vec<f32>> = (0..32)
+        .map(|i| dataset::synth_utterance(i % 12, i as u64, model.audio_len, 0.37))
+        .collect();
+
+    // --- cycle-level baseline -------------------------------------------
+    let mut cycle = backend::build(BackendKind::Cycle, prog.clone(), DramConfig::default())
+        .expect("cycle backend");
+    let n_cycle = 4;
+    let t0 = Instant::now();
+    let mut cycle_ref = None;
+    for audio in audios.iter().take(n_cycle) {
+        cycle_ref = Some(cycle.run(audio).expect("cycle inference"));
+    }
+    let cycle_s = t0.elapsed().as_secs_f64() / n_cycle as f64;
+    println!(
+        "cycle backend: {:8.2} ms/inference ({:8.1} inf/s)",
+        1e3 * cycle_s,
+        1.0 / cycle_s
+    );
+
+    // --- fast functional simulator --------------------------------------
+    let t0 = Instant::now();
+    let mut fast = backend::build(BackendKind::Fast, prog, DramConfig::default())
+        .expect("fast backend");
+    let setup_s = t0.elapsed().as_secs_f64();
+    let n_fast = 256;
+    let t0 = Instant::now();
+    let mut fast_ref = None;
+    for i in 0..n_fast {
+        fast_ref = Some(fast.run(&audios[i % audios.len()]).expect("fast inference"));
+    }
+    let fast_s = t0.elapsed().as_secs_f64() / n_fast as f64;
+    println!(
+        "fast backend:  {:8.2} ms/inference ({:8.1} inf/s; one-time setup {:.2} ms)",
+        1e3 * fast_s,
+        1.0 / fast_s,
+        1e3 * setup_s
+    );
+    println!("speedup: {:.1}x inferences/sec", cycle_s / fast_s);
+
+    // Parity spot check on the last shared utterance.
+    let idx = (n_fast - 1) % audios.len();
+    let want = cycle.run(&audios[idx]).expect("cycle inference");
+    let got = fast.run(&audios[idx]).expect("fast inference");
+    assert_eq!(want.logits, got.logits, "backends disagree on logits");
+    let (c, f) = (cycle_ref.unwrap(), fast_ref.unwrap());
+    println!(
+        "latency model: fast {} vs cycle {} chip cycles on their last runs",
+        f.cycles, c.cycles
+    );
+    assert!(
+        cycle_s / fast_s >= 20.0,
+        "fast backend must be >= 20x the cycle backend ({:.1}x measured)",
+        cycle_s / fast_s
+    );
+    println!("parity: logits bit-identical \u{2713}");
+}

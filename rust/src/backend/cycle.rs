@@ -1,0 +1,41 @@
+//! The cycle-level SoC behind the backend contract.
+
+use anyhow::Result;
+
+use crate::compiler::Program;
+use crate::mem::dram::DramConfig;
+use crate::sim::{RunResult, Soc};
+
+use super::InferenceBackend;
+
+/// Adapter: one [`Soc`] instance serving requests serially (the chip is
+/// single-tenant; parallelism comes from running one backend per worker).
+pub struct CycleBackend {
+    soc: Soc,
+}
+
+impl CycleBackend {
+    pub fn new(program: Program, dram_cfg: DramConfig) -> Result<Self> {
+        Ok(CycleBackend { soc: Soc::new(program, dram_cfg)? })
+    }
+
+    /// Direct access for callers that need SoC-only features (variation
+    /// injection, tracing).
+    pub fn soc_mut(&mut self) -> &mut Soc {
+        &mut self.soc
+    }
+}
+
+impl InferenceBackend for CycleBackend {
+    fn name(&self) -> &'static str {
+        "cycle"
+    }
+
+    fn run(&mut self, audio: &[f32]) -> Result<RunResult> {
+        self.soc.infer(audio)
+    }
+
+    fn program(&self) -> &Program {
+        self.soc.program()
+    }
+}

@@ -1,0 +1,55 @@
+//! The functional simulator behind the backend contract.
+
+use anyhow::Result;
+
+use crate::compiler::Program;
+use crate::fsim::{Calibration, FastSim};
+use crate::mem::dram::DramConfig;
+use crate::sim::RunResult;
+
+use super::InferenceBackend;
+
+/// Tensor-level engine: bit-identical logits, analytical latency/energy
+/// (optionally snap-calibrated from one cycle-level run).
+pub struct FastBackend {
+    sim: FastSim,
+}
+
+impl FastBackend {
+    pub fn new(program: Program, dram_cfg: DramConfig) -> Result<Self> {
+        Ok(FastBackend { sim: FastSim::new(program, dram_cfg)? })
+    }
+
+    /// Wrap an already-built simulator (the decode + analytical walk are
+    /// immutable, so one `FastSim` can be cloned across workers instead
+    /// of re-deriving it per thread).
+    pub fn from_sim(sim: FastSim) -> Self {
+        FastBackend { sim }
+    }
+
+    /// Replace the analytical latency/energy numbers with exact ones
+    /// measured on the cycle simulator (valid for all inputs: the
+    /// compiled program's latency is data-independent).
+    pub fn with_calibration(mut self, c: Calibration) -> Self {
+        self.sim = self.sim.with_calibration(c);
+        self
+    }
+
+    pub fn sim(&self) -> &FastSim {
+        &self.sim
+    }
+}
+
+impl InferenceBackend for FastBackend {
+    fn name(&self) -> &'static str {
+        "fast"
+    }
+
+    fn run(&mut self, audio: &[f32]) -> Result<RunResult> {
+        Ok(self.sim.infer(audio))
+    }
+
+    fn program(&self) -> &Program {
+        self.sim.program()
+    }
+}

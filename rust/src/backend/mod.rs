@@ -1,0 +1,97 @@
+//! Pluggable inference backends: one request contract, interchangeable
+//! execution engines.
+//!
+//! Everything that serves inferences — the coordinator's workers, the CLI
+//! `run`/`serve` subcommands, the throughput benches — goes through
+//! [`InferenceBackend`], so engines can be swapped per deployment:
+//!
+//! * [`CycleBackend`] — the cycle-level [`crate::sim::Soc`]: exact
+//!   timing/energy, ~ms of host time per inference. The ground truth.
+//! * [`FastBackend`]  — the functional simulator [`crate::fsim::FastSim`]:
+//!   bit-identical logits, analytical (or snap-calibrated) timing, orders
+//!   of magnitude more inferences/sec (`benches/backend_throughput.rs`).
+//!
+//! This seam is where future scaling work lands: request batching,
+//! multi-macro sharding and remote workers all implement the same trait.
+
+pub mod cycle;
+pub mod fast;
+
+pub use cycle::CycleBackend;
+pub use fast::FastBackend;
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::compiler::Program;
+use crate::mem::dram::DramConfig;
+use crate::sim::RunResult;
+
+/// A loaded inference engine for one compiled program.
+pub trait InferenceBackend: Send {
+    /// Stable engine name (reports, response attribution).
+    fn name(&self) -> &'static str;
+
+    /// Run one utterance end-to-end: audio in, logits + latency/energy
+    /// accounting out. Implementations must produce logits bit-identical
+    /// to the cycle-level SoC for the same program.
+    fn run(&mut self, audio: &[f32]) -> Result<RunResult>;
+
+    /// The program image this backend serves.
+    fn program(&self) -> &Program;
+}
+
+/// Which engine to construct (`--backend` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Cycle,
+    Fast,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cycle" | "iss" | "soc" => BackendKind::Cycle,
+            "fast" | "fsim" | "functional" => BackendKind::Fast,
+            _ => bail!("unknown backend {s:?} (cycle|fast)"),
+        })
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BackendKind::Cycle => "cycle",
+            BackendKind::Fast => "fast",
+        })
+    }
+}
+
+/// Construct a backend of `kind` for a compiled program.
+pub fn build(
+    kind: BackendKind,
+    program: Program,
+    dram_cfg: DramConfig,
+) -> Result<Box<dyn InferenceBackend>> {
+    let backend: Box<dyn InferenceBackend> = match kind {
+        BackendKind::Cycle => Box::new(CycleBackend::new(program, dram_cfg)?),
+        BackendKind::Fast => Box::new(FastBackend::new(program, dram_cfg)?),
+    };
+    Ok(backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_and_display() {
+        assert_eq!(BackendKind::parse("cycle").unwrap(), BackendKind::Cycle);
+        assert_eq!(BackendKind::parse("fast").unwrap(), BackendKind::Fast);
+        assert_eq!(BackendKind::parse("fsim").unwrap(), BackendKind::Fast);
+        assert!(BackendKind::parse("quantum").is_err());
+        assert_eq!(BackendKind::Cycle.to_string(), "cycle");
+        assert_eq!(BackendKind::Fast.to_string(), "fast");
+    }
+}

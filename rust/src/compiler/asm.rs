@@ -9,6 +9,22 @@ use anyhow::{anyhow, bail, Result};
 use crate::isa::rv32::{AluOp, BranchKind, Instr, LoadKind, StoreKind};
 use crate::isa::{encode, CimInstr, Reg};
 
+/// Number of instructions [`Asm::li`] expands to for a value — the
+/// single source of truth shared with the analytical latency model
+/// (`fsim::latency`), asserted against the real expansion in `li`.
+pub fn li_len(v: i64) -> usize {
+    let v = v as i32;
+    if (-2048..=2047).contains(&v) {
+        return 1;
+    }
+    let lo = (v << 20) >> 20;
+    if lo != 0 {
+        2
+    } else {
+        1
+    }
+}
+
 /// A label handle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Label(usize);
@@ -69,17 +85,20 @@ impl Asm {
 
     /// Load a 32-bit immediate (lui+addi or single addi).
     pub fn li(&mut self, rd: Reg, v: i64) -> &mut Self {
+        let before = self.here();
         let v = v as i32;
         if (-2048..=2047).contains(&v) {
-            return self.addi(rd, Reg::ZERO, v);
+            self.addi(rd, Reg::ZERO, v);
+        } else {
+            // lui loads the upper 20 bits; addi sign-extends, so round up.
+            let lo = ((v << 20) >> 20) as i32; // low 12, sign-extended
+            let hi = (v.wrapping_sub(lo) as u32) >> 12;
+            self.raw(Instr::Lui { rd, imm: hi as i32 });
+            if lo != 0 {
+                self.addi(rd, rd, lo);
+            }
         }
-        // lui loads the upper 20 bits; addi sign-extends, so round up.
-        let lo = ((v << 20) >> 20) as i32; // low 12, sign-extended
-        let hi = (v.wrapping_sub(lo) as u32) >> 12;
-        self.raw(Instr::Lui { rd, imm: hi as i32 });
-        if lo != 0 {
-            self.addi(rd, rd, lo);
-        }
+        debug_assert_eq!(self.here() - before, li_len(v as i64));
         self
     }
 

@@ -458,6 +458,7 @@ pub fn build_kws_program(model: &KwsModel, opt: OptLevel) -> Result<Program> {
         final_t,
         opt,
         n_classes: model.n_classes,
+        plan: p,
     })
 }
 

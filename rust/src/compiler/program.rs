@@ -1,7 +1,9 @@
-//! The linked program image produced by codegen and consumed by the SoC
-//! loader (`sim::soc`).
+//! The linked program image produced by codegen and consumed by both
+//! execution engines: the cycle-level SoC loader (`sim::soc`) and the
+//! fast functional simulator (`fsim`).
 
 use crate::baselines::OptLevel;
+use crate::dataflow::plan::KwsPlan;
 
 /// Phase marker ids written to `MMIO_HOST_PHASE` (cycle attribution).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,6 +44,11 @@ pub struct Program {
     /// The optimization level this program was compiled with.
     pub opt: OptLevel,
     pub n_classes: usize,
+    /// The address/schedule plan the image was generated from. Carried in
+    /// the image so tensor-level backends (`fsim`) can reconstruct layer
+    /// geometry and decode the DRAM weight streams without the source
+    /// model — the program is the single deployable artifact.
+    pub plan: KwsPlan,
 }
 
 impl Program {

@@ -1,4 +1,5 @@
-//! Leader/worker inference service over the cycle-level SoC.
+//! Leader/worker inference service over a pluggable execution backend
+//! (cycle-level SoC or the fast functional simulator).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -8,11 +9,13 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::backend::{self, BackendKind, FastBackend, InferenceBackend};
 use crate::baselines::OptLevel;
 use crate::compiler::build_kws_program;
+use crate::fsim::FastSim;
 use crate::mem::dram::DramConfig;
 use crate::model::KwsModel;
-use crate::sim::{RunResult, Soc};
+use crate::sim::RunResult;
 
 /// One utterance to classify.
 #[derive(Debug, Clone)]
@@ -37,10 +40,12 @@ pub struct InferenceResponse {
     /// Energy per inference (uJ).
     pub energy_uj: f64,
     pub correct: Option<bool>,
+    /// Which execution engine served this request.
+    pub backend: &'static str,
 }
 
 impl InferenceResponse {
-    fn from_run(id: u64, r: &RunResult, label: Option<i32>, host: f64) -> Self {
+    fn from_run(id: u64, r: &RunResult, label: Option<i32>, host: f64, backend: &'static str) -> Self {
         InferenceResponse {
             id,
             predicted: r.predicted,
@@ -50,6 +55,7 @@ impl InferenceResponse {
             host_seconds: host,
             energy_uj: r.energy.total_uj(),
             correct: label.map(|l| l as usize == r.predicted),
+            backend,
         }
     }
 }
@@ -72,32 +78,59 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spin up `n_workers` workers for `model` at `opt`.
+    /// Spin up `n_workers` cycle-level workers for `model` at `opt`
+    /// (the original single-engine entry point).
     pub fn start(model: &KwsModel, opt: OptLevel, n_workers: usize) -> Result<Self> {
+        Self::start_with(model, opt, n_workers, BackendKind::Cycle)
+    }
+
+    /// Spin up `n_workers` workers, each owning one `kind` backend for
+    /// the compiled program (`--backend {cycle,fast}` on the CLI).
+    pub fn start_with(
+        model: &KwsModel,
+        opt: OptLevel,
+        n_workers: usize,
+        kind: BackendKind,
+    ) -> Result<Self> {
         let program = build_kws_program(model, opt)?;
+        // Build every worker's backend up front so construction errors
+        // surface here with their real cause (not as a silent worker
+        // exit). The functional simulator is immutable across requests:
+        // decode the image and run the analytical walk once, then clone
+        // the result per worker. The cycle SoC is stateful, so each
+        // cycle worker gets its own instance.
+        let fast_proto = match kind {
+            BackendKind::Fast => Some(FastSim::new(program.clone(), DramConfig::default())?),
+            BackendKind::Cycle => None,
+        };
+        let mut backends: Vec<Box<dyn InferenceBackend>> = Vec::new();
+        for _ in 0..n_workers.max(1) {
+            let be: Box<dyn InferenceBackend> = match &fast_proto {
+                Some(sim) => Box::new(FastBackend::from_sim(sim.clone())),
+                None => backend::build(kind, program.clone(), DramConfig::default())?,
+            };
+            backends.push(be);
+        }
         let stats = Arc::new(ServiceStats::default());
         let (tx, rx) = mpsc::channel::<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)>();
         let rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::new();
-        for _ in 0..n_workers.max(1) {
+        for mut be in backends {
             let rx = Arc::clone(&rx);
             let stats = Arc::clone(&stats);
-            let program = program.clone();
             workers.push(thread::spawn(move || {
-                let mut soc = match Soc::new(program, DramConfig::default()) {
-                    Ok(s) => s,
-                    Err(_) => return,
-                };
+                let bname = be.name();
                 loop {
                     let job = { rx.lock().unwrap().recv() };
                     let Ok((req, reply)) = job else { break };
                     let t0 = Instant::now();
-                    let out = soc.infer(&req.audio).map(|r| {
+                    let out = be.run(&req.audio).map(|r| {
                         let resp = InferenceResponse::from_run(
                             req.id,
                             &r,
                             req.label,
                             t0.elapsed().as_secs_f64(),
+                            bname,
                         );
                         stats.served.fetch_add(1, Ordering::Relaxed);
                         stats.chip_cycles.fetch_add(r.cycles, Ordering::Relaxed);
@@ -218,6 +251,39 @@ mod tests {
             assert_eq!(r.chip_cycles, resps[0].chip_cycles);
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn fast_backend_serves_identical_logits() {
+        // The same requests through cycle and fast coordinators must
+        // yield bit-identical logits (the backend parity contract).
+        let m = fake_model();
+        let reqs = |n: u64| -> Vec<InferenceRequest> {
+            (0..n)
+                .map(|i| InferenceRequest {
+                    id: i,
+                    audio: crate::model::dataset::synth_utterance(
+                        i as usize % 12,
+                        i,
+                        16000,
+                        0.3,
+                    ),
+                    label: None,
+                })
+                .collect()
+        };
+        let cyc = Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Cycle).unwrap();
+        let a = cyc.serve_batch(reqs(4)).unwrap();
+        cyc.shutdown();
+        let fast = Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Fast).unwrap();
+        let b = fast.serve_batch(reqs(4)).unwrap();
+        fast.shutdown();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.logits, y.logits, "request {}", x.id);
+            assert_eq!(x.predicted, y.predicted);
+        }
+        assert!(a.iter().all(|r| r.backend == "cycle"));
+        assert!(b.iter().all(|r| r.backend == "fast"));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Control and status registers. We implement the counters the paper's
-//! flow actually uses (cycle, instret, and a scratch register) — enough
-//! for self-timing programs — and fault on anything else.
+//! flow actually uses (cycle/instret and their machine-mode aliases,
+//! plus a scratch register) — enough for self-timing programs — and
+//! fault on anything else.
 
 use anyhow::{bail, Result};
 
@@ -9,6 +10,14 @@ pub const CSR_CYCLE: u16 = 0xC00;
 pub const CSR_CYCLEH: u16 = 0xC80;
 pub const CSR_INSTRET: u16 = 0xC02;
 pub const CSR_INSTRETH: u16 = 0xC82;
+/// Machine-mode counter aliases (mcycle/minstret + high halves): firmware
+/// written against M-mode reads these instead of the user-mode shadows,
+/// and long-running self-timed loops need the high halves once the run
+/// crosses 2^32 cycles.
+pub const CSR_MCYCLE: u16 = 0xB00;
+pub const CSR_MCYCLEH: u16 = 0xB80;
+pub const CSR_MINSTRET: u16 = 0xB02;
+pub const CSR_MINSTRETH: u16 = 0xB82;
 /// mscratch: free scratch register.
 pub const CSR_MSCRATCH: u16 = 0x340;
 
@@ -20,10 +29,10 @@ pub struct CsrFile {
 impl CsrFile {
     pub fn read(&self, csr: u16, cycle: u64, instret: u64) -> Result<u32> {
         Ok(match csr {
-            CSR_CYCLE => cycle as u32,
-            CSR_CYCLEH => (cycle >> 32) as u32,
-            CSR_INSTRET => instret as u32,
-            CSR_INSTRETH => (instret >> 32) as u32,
+            CSR_CYCLE | CSR_MCYCLE => cycle as u32,
+            CSR_CYCLEH | CSR_MCYCLEH => (cycle >> 32) as u32,
+            CSR_INSTRET | CSR_MINSTRET => instret as u32,
+            CSR_INSTRETH | CSR_MINSTRETH => (instret >> 32) as u32,
             CSR_MSCRATCH => self.mscratch,
             _ => bail!("unimplemented CSR {csr:#x}"),
         })
@@ -35,6 +44,10 @@ impl CsrFile {
             CSR_CYCLE | CSR_CYCLEH | CSR_INSTRET | CSR_INSTRETH => {
                 bail!("CSR {csr:#x} is read-only")
             }
+            // The hardware counters are writable in M-mode on real cores;
+            // our programs never preset them, so accept and ignore the
+            // write instead of faulting mid-run.
+            CSR_MCYCLE | CSR_MCYCLEH | CSR_MINSTRET | CSR_MINSTRETH => {}
             _ => bail!("unimplemented CSR {csr:#x}"),
         }
         Ok(())
@@ -55,5 +68,19 @@ mod tests {
         assert_eq!(c.read(CSR_MSCRATCH, 0, 0).unwrap(), 99);
         assert!(c.write(CSR_CYCLE, 0).is_err());
         assert!(c.read(0x300, 0, 0).is_err());
+    }
+
+    #[test]
+    fn machine_mode_counter_aliases() {
+        let mut c = CsrFile::default();
+        let cycle = 0x2_0000_0007u64;
+        let instret = 0x3_0000_0009u64;
+        assert_eq!(c.read(CSR_MCYCLE, cycle, instret).unwrap(), 7);
+        assert_eq!(c.read(CSR_MCYCLEH, cycle, instret).unwrap(), 2);
+        assert_eq!(c.read(CSR_MINSTRET, cycle, instret).unwrap(), 9);
+        assert_eq!(c.read(CSR_MINSTRETH, cycle, instret).unwrap(), 3);
+        // M-mode counter writes are accepted (and ignored), not faults.
+        c.write(CSR_MCYCLE, 0).unwrap();
+        c.write(CSR_MINSTRETH, 0).unwrap();
     }
 }

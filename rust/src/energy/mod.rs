@@ -12,5 +12,5 @@ pub mod power;
 pub mod table;
 pub mod tops;
 
-pub use power::EnergyReport;
+pub use power::{ActivityCounts, EnergyReport};
 pub use table::EnergyTable;

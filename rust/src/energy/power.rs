@@ -7,6 +7,33 @@ use crate::mem::bus::Bus;
 use super::table::EnergyTable;
 use super::tops::{achieved_tops, CLOCK_HZ};
 
+/// Device-activity event counts — the inputs of the energy model in one
+/// bus-independent struct, so analytical backends (`fsim`) and the
+/// cycle-level run can share one accounting formula.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ActivityCounts {
+    pub instret: u64,
+    pub muldiv: u64,
+    /// CIM macro full-array fires / input-buffer shifts.
+    pub fires: u64,
+    pub shifts: u64,
+    /// Weight-port words written (`cim_w`) / read (`cim_r`).
+    pub weight_writes: u64,
+    pub weight_reads: u64,
+    /// FM / weight SRAM word accesses.
+    pub fm_reads: u64,
+    pub fm_writes: u64,
+    pub wt_reads: u64,
+    pub wt_writes: u64,
+    /// DMEM word accesses (reads + writes).
+    pub dmem_accesses: u64,
+    /// DRAM bytes moved (device side) and uDMA bytes moved (on-chip side).
+    pub dram_bytes: u64,
+    pub udma_bytes: u64,
+    pub cycles: u64,
+    pub macs: u64,
+}
+
 /// Energy breakdown of one simulated run (picojoules).
 #[derive(Debug, Clone, Default)]
 pub struct EnergyReport {
@@ -24,22 +51,44 @@ pub struct EnergyReport {
 }
 
 impl EnergyReport {
-    /// Account a completed run.
+    /// Account a completed cycle-level run.
     pub fn from_run(table: &EnergyTable, cpu: &ExecStats, bus: &Bus) -> Self {
         let cim: &CimStats = &bus.cim.stats;
-        let core_pj = table.core_instr * cpu.instret as f64 + table.core_muldiv * cpu.muldiv as f64;
-        let macro_pj = table.macro_fire * cim.fires as f64
-            + table.input_shift * cim.shifts as f64
-            + table.weight_write * cim.weight_writes as f64
-            + table.weight_read * cim.weight_reads as f64;
-        let fm_sram_pj =
-            table.fm_read * bus.fm.reads as f64 + table.fm_write * bus.fm.writes as f64;
-        let wt_sram_pj =
-            table.wt_read * bus.wt.reads as f64 + table.wt_write * bus.wt.writes as f64;
-        let dmem_pj = table.dmem_access * (bus.dmem.reads + bus.dmem.writes) as f64;
-        let dram_pj = table.dram_byte * bus.dram.bytes_transferred as f64;
-        let udma_pj = table.udma_word * (bus.udma.bytes / 4) as f64;
-        let static_pj = table.static_cycle * cpu.cycles as f64;
+        Self::from_counts(
+            table,
+            &ActivityCounts {
+                instret: cpu.instret,
+                muldiv: cpu.muldiv,
+                fires: cim.fires,
+                shifts: cim.shifts,
+                weight_writes: cim.weight_writes,
+                weight_reads: cim.weight_reads,
+                fm_reads: bus.fm.reads,
+                fm_writes: bus.fm.writes,
+                wt_reads: bus.wt.reads,
+                wt_writes: bus.wt.writes,
+                dmem_accesses: bus.dmem.reads + bus.dmem.writes,
+                dram_bytes: bus.dram.bytes_transferred,
+                udma_bytes: bus.udma.bytes,
+                cycles: cpu.cycles,
+                macs: cim.macs,
+            },
+        )
+    }
+
+    /// Account from bare activity counts (analytical backends).
+    pub fn from_counts(table: &EnergyTable, c: &ActivityCounts) -> Self {
+        let core_pj = table.core_instr * c.instret as f64 + table.core_muldiv * c.muldiv as f64;
+        let macro_pj = table.macro_fire * c.fires as f64
+            + table.input_shift * c.shifts as f64
+            + table.weight_write * c.weight_writes as f64
+            + table.weight_read * c.weight_reads as f64;
+        let fm_sram_pj = table.fm_read * c.fm_reads as f64 + table.fm_write * c.fm_writes as f64;
+        let wt_sram_pj = table.wt_read * c.wt_reads as f64 + table.wt_write * c.wt_writes as f64;
+        let dmem_pj = table.dmem_access * c.dmem_accesses as f64;
+        let dram_pj = table.dram_byte * c.dram_bytes as f64;
+        let udma_pj = table.udma_word * (c.udma_bytes / 4) as f64;
+        let static_pj = table.static_cycle * c.cycles as f64;
         let total_pj =
             core_pj + macro_pj + fm_sram_pj + wt_sram_pj + dmem_pj + dram_pj + udma_pj + static_pj;
         EnergyReport {
@@ -51,8 +100,8 @@ impl EnergyReport {
             dram_pj,
             udma_pj,
             total_pj,
-            cycles: cpu.cycles,
-            macs: cim.macs,
+            cycles: c.cycles,
+            macs: c.macs,
         }
     }
 

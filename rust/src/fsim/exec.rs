@@ -1,0 +1,239 @@
+//! Functional (tensor-level) execution of a compiled program image.
+//!
+//! The cycle-level SoC interprets the RV32IM+CIM instruction stream one
+//! step at a time (~10^6 steps per KWS inference). This module instead
+//! executes the *same deployable artifact* — the linked [`Program`] — at
+//! the op level: it decodes the DRAM weight streams back into per-layer
+//! sign matrices (the inverse of `KwsPlan::build_dram_weights`), reads the
+//! folded-BN threshold/flip tables out of the DMEM image, and then runs
+//! the shared quantized kernels (`model::reference`) over them. Because
+//! both engines bottom out in the same integer semantics — the macro's
+//! `2*pop(x&sign&mask) - pop(x&mask)` MAC equals the reference conv — the
+//! logits are bit-identical to the cycle simulator's (asserted by
+//! `rust/tests/backend_parity.rs`).
+//!
+//! Nothing here consults the source `KwsModel`: if the compiler or weight
+//! streaming were wrong, fsim would disagree with the host reference, so
+//! the decode path doubles as a check on the program image itself.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::compiler::Program;
+use crate::dataflow::plan;
+use crate::model::kws::LayerSpec;
+use crate::model::reference::{self, BitMap};
+
+/// A program image decoded back to tensor-level form.
+#[derive(Debug, Clone)]
+pub struct DecodedProgram {
+    /// Per-layer specs reconstructed from the DRAM sign/threshold streams.
+    pub layers: Vec<LayerSpec>,
+    /// Folded-BN feature thresholds (DMEM table, one i32 per channel).
+    pub thr: Vec<i32>,
+    /// Per-word flip masks applied to each packed feature word.
+    pub flip: Vec<u32>,
+    /// Input feature-map geometry.
+    pub t: usize,
+    pub c: usize,
+    pub audio_len: usize,
+    pub n_classes: usize,
+    pub final_t: usize,
+}
+
+fn le_u32(bytes: &[u8], word: usize) -> u32 {
+    let i = word * 4;
+    u32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]])
+}
+
+fn dmem_chunk(program: &Program, off: u32) -> Result<&Vec<u32>> {
+    program
+        .dmem
+        .iter()
+        .find(|(o, _)| *o == off)
+        .map(|(_, w)| w)
+        .ok_or_else(|| anyhow!("DMEM table at {off:#x} missing from image"))
+}
+
+impl DecodedProgram {
+    /// Decode a compiled image. Fails loudly if the image is not a KWS
+    /// program in the shape the row-wise dataflow compiler emits.
+    pub fn decode(program: &Program) -> Result<Self> {
+        let p = &program.plan;
+        ensure!(!p.layers.is_empty(), "program plan has no layers");
+        let t = p.layers[0].t_in;
+        let c = p.layers[0].s_words * 32;
+        let audio_len = p.audio_bytes as usize / 2;
+
+        // DMEM constant tables: thresholds then flip words.
+        let thr_words = dmem_chunk(program, plan::DMEM_THR)?;
+        let flip_words = dmem_chunk(program, plan::DMEM_FLIP)?;
+        ensure!(thr_words.len() == c, "threshold table length {} != c {c}", thr_words.len());
+        ensure!(flip_words.len() == c / 32, "flip table length");
+        let thr: Vec<i32> = thr_words.iter().map(|&w| w as i32).collect();
+        let flip = flip_words.clone();
+
+        // Per-layer weight streams: sign words (column-major bursts) then
+        // threshold words, exactly as `build_dram_weights` laid them out.
+        let mut layers = Vec::with_capacity(p.layers.len());
+        for lp in &p.layers {
+            let bytes = program
+                .dram
+                .iter()
+                .find(|(off, _)| *off == lp.dram_offset)
+                .map(|(_, b)| b)
+                .ok_or_else(|| {
+                    anyhow!("layer {} weight stream missing from DRAM image", lp.index)
+                })?;
+            ensure!(
+                bytes.len() == (lp.sign_words + lp.th_words) * 4,
+                "layer {}: stream is {} bytes, want {}",
+                lp.index,
+                bytes.len(),
+                (lp.sign_words + lp.th_words) * 4
+            );
+            let aw = lp.window_words;
+            let c_in = lp.s_words * 32;
+            ensure!(aw * 32 % c_in == 0, "layer {}: window not a whole kernel", lp.index);
+            let kernel = aw * 32 / c_in;
+            ensure!(kernel == 3, "fsim supports the paper's k=3 row-wise dataflow");
+            let rows = aw * 32;
+
+            // Sign bit set -> +1, clear -> -1 (the boot sequence arms the
+            // whole mask plane, so every cell is active: binary weights).
+            let mut weights = vec![-1i8; rows * lp.c_out];
+            for co in 0..lp.c_out {
+                for wj in 0..aw {
+                    let sign = le_u32(bytes, co * aw + wj);
+                    for b in 0..32 {
+                        if (sign >> b) & 1 == 1 {
+                            weights[(wj * 32 + b) * lp.c_out + co] = 1;
+                        }
+                    }
+                }
+            }
+            let thresholds: Vec<i32> = if lp.binarized {
+                (0..lp.th_words).map(|j| le_u32(bytes, lp.sign_words + j) as i32).collect()
+            } else {
+                Vec::new()
+            };
+            layers.push(LayerSpec {
+                c_in,
+                c_out: lp.c_out,
+                kernel,
+                pooled: lp.pooled,
+                binarized: lp.binarized,
+                weights,
+                thresholds,
+            });
+        }
+        ensure!(
+            layers[..layers.len() - 1].iter().all(|l| l.binarized),
+            "only the final layer may be raw"
+        );
+        ensure!(!layers.last().unwrap().binarized, "final layer must be raw (GAP path)");
+
+        Ok(DecodedProgram {
+            layers,
+            thr,
+            flip,
+            t,
+            c,
+            audio_len,
+            n_classes: program.n_classes,
+            final_t: program.final_t,
+        })
+    }
+
+    /// Integer preprocessing from the image's DMEM tables — the same
+    /// pre-emphasis / magnitude / threshold-compare / flip pipeline the
+    /// emitted RISC-V code runs, over the quantized ADC samples.
+    pub fn preprocess(&self, audio: &[f32]) -> BitMap {
+        let q = reference::quantize_audio(audio);
+        let frame = self.audio_len / self.t;
+        let mut bits = BitMap::zero(self.t, self.c);
+        for t in 0..self.t {
+            for ch in 0..self.c {
+                let idx = t * frame + ch;
+                let x = q.get(idx).copied().unwrap_or(0);
+                let prev = if idx == 0 { 0 } else { q.get(idx - 1).copied().unwrap_or(0) };
+                // y = 32x - 31*prev; |y| <= 32*2048 + 31*2048, fits i32.
+                let f = (32 * x - 31 * prev).abs();
+                let flipped = (self.flip[ch / 32] >> (ch % 32)) & 1 == 1;
+                if (self.thr[ch] < f) != flipped {
+                    bits.set(t, ch);
+                }
+            }
+        }
+        bits
+    }
+
+    /// Full inference: audio -> (logits, argmax). Runs the shared
+    /// quantized kernels over the decoded layers.
+    pub fn infer(&self, audio: &[f32]) -> (Vec<f32>, usize) {
+        let mut x = self.preprocess(audio);
+        for spec in &self.layers[..self.layers.len() - 1] {
+            x = reference::conv_layer(&x, spec);
+        }
+        let logits = reference::final_layer_gap(&x, self.layers.last().unwrap());
+        let predicted = reference::argmax(&logits);
+        (logits, predicted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::OptLevel;
+    use crate::compiler::build_kws_program;
+    use crate::model::{dataset, KwsModel};
+
+    #[test]
+    fn decode_recovers_layer_geometry() {
+        let m = KwsModel::synthetic(11);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let d = DecodedProgram::decode(&prog).unwrap();
+        assert_eq!(d.layers.len(), m.layers.len());
+        assert_eq!(d.t, m.t);
+        assert_eq!(d.c, m.c);
+        assert_eq!(d.n_classes, m.n_classes);
+        for (got, want) in d.layers.iter().zip(&m.layers) {
+            assert_eq!(got.c_in, want.c_in);
+            assert_eq!(got.c_out, want.c_out);
+            assert_eq!(got.kernel, want.kernel);
+            assert_eq!(got.pooled, want.pooled);
+            assert_eq!(got.binarized, want.binarized);
+            // Binary models round-trip through the sign stream exactly.
+            assert_eq!(got.weights, want.weights);
+            assert_eq!(got.thresholds, want.thresholds);
+        }
+    }
+
+    #[test]
+    fn decoded_inference_matches_host_reference() {
+        let m = KwsModel::synthetic(5);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let d = DecodedProgram::decode(&prog).unwrap();
+        for seed in 0..3u64 {
+            let audio = dataset::synth_utterance(seed as usize % 12, seed, m.audio_len, 0.3);
+            let (logits, predicted) = d.infer(&audio);
+            let want = crate::model::reference::infer(&m, &audio);
+            assert_eq!(logits, want, "seed {seed}");
+            assert_eq!(predicted, crate::model::reference::argmax(&want));
+        }
+    }
+
+    #[test]
+    fn opt_level_never_changes_decoded_values() {
+        let m = KwsModel::synthetic(2);
+        let audio = dataset::synth_utterance(4, 9, m.audio_len, 0.3);
+        let mut logits: Option<Vec<f32>> = None;
+        for (name, opt) in OptLevel::ladder() {
+            let prog = build_kws_program(&m, opt).unwrap();
+            let (l, _) = DecodedProgram::decode(&prog).unwrap().infer(&audio);
+            if let Some(prev) = &logits {
+                assert_eq!(&l, prev, "{name} changed logits");
+            }
+            logits = Some(l);
+        }
+    }
+}

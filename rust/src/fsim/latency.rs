@@ -1,0 +1,615 @@
+//! Analytical latency + activity model for compiled KWS programs.
+//!
+//! Walks the *same emission structure* as `compiler::codegen` — boot,
+//! preprocessing, per-layer weight bursts and row-wise convolution — but
+//! instead of emitting instructions it accumulates their documented cycle
+//! costs (`cpu` module timing model: ALU/CIM 1, loads 2, stores 1, taken
+//! branches 2, see `cpu/mod.rs`) plus a uDMA/DRAM timeline built on the
+//! real `mem::dram` timing primitive. The result is a cycle estimate with
+//! the same phase markers the cycle simulator records, calibrated against
+//! `sim::stats::PhaseBreakdown` (the parity suite bounds the error at
+//! ≤ 5%; the remaining slack is descriptor-chain launch quantization —
+//! the real uDMA launches chained transfers on the next CPU tick, the
+//! model launches them at the exact completion cycle).
+//!
+//! Because the per-device event counts fall out of the same walk, the
+//! model also produces an [`ActivityCounts`] for `energy::EnergyTable`
+//! accounting — `fsim` fills `RunResult::energy` from it.
+
+use std::collections::VecDeque;
+
+use crate::baselines::OptLevel;
+use crate::cim::mode::{CimConfig, Mode};
+use crate::cim::weight_map;
+use crate::compiler::Program;
+use crate::dataflow::plan::{self, KwsPlan};
+use crate::energy::ActivityCounts;
+use crate::mem::dram::{Dram, DramConfig};
+use crate::mem::layout;
+use crate::sim::PhaseBreakdown;
+
+const FM: i64 = layout::FM_BASE as i64;
+const DMEM: i64 = layout::DMEM_BASE as i64;
+const WT: i64 = layout::WT_BASE as i64;
+const DRAM: i64 = layout::DRAM_BASE as i64;
+const MMIO: i64 = layout::MMIO_BASE as i64;
+
+/// The model's output: cycle/instruction totals, phase attribution and
+/// device activity for the energy table.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    pub cycles: u64,
+    pub instret: u64,
+    pub phases: PhaseBreakdown,
+    pub counts: ActivityCounts,
+}
+
+/// Instruction count of `Asm::li` for a value (lui+addi or single addi) —
+/// shared with the assembler so the split rule cannot diverge.
+fn li_len(v: i64) -> u64 {
+    crate::compiler::asm::li_len(v) as u64
+}
+
+/// The walker: a cycle counter plus the uDMA transfer timeline.
+struct Walker {
+    now: u64,
+    counts: ActivityCounts,
+    markers: Vec<(u32, u64)>,
+    dram: Dram,
+    /// In-flight transfer completion cycle.
+    dma_inflight: Option<u64>,
+    /// Queued descriptors: (DRAM byte offset, length).
+    dma_queue: VecDeque<(u32, u32)>,
+    /// Completed-transfer count (MMIO_UDMA_DONE readback).
+    dma_done: u32,
+}
+
+impl Walker {
+    fn new(cfg: &DramConfig) -> Self {
+        Walker {
+            now: 0,
+            counts: ActivityCounts::default(),
+            markers: Vec::new(),
+            // Timing-only instance: access_latency never touches data.
+            dram: Dram::new(cfg.clone(), 0),
+            dma_inflight: None,
+            dma_queue: VecDeque::new(),
+            dma_done: 0,
+        }
+    }
+
+    // --- instruction-class costs (cpu module timing model) --------------
+
+    /// `n` single-cycle instructions (ALU, lui, mv, untaken side of li).
+    fn alu(&mut self, n: u64) {
+        self.now += n;
+        self.counts.instret += n;
+    }
+
+    fn li(&mut self, v: i64) {
+        self.alu(li_len(v));
+    }
+
+    /// 2-cycle load (on-chip / MMIO: no DRAM stalls in these programs).
+    fn load(&mut self) {
+        self.now += 2;
+        self.counts.instret += 1;
+    }
+
+    fn load_dmem(&mut self) {
+        self.load();
+        self.counts.dmem_accesses += 1;
+    }
+
+    fn load_fm(&mut self) {
+        self.load();
+        self.counts.fm_reads += 1;
+    }
+
+    /// Single-cycle store (on-chip / MMIO).
+    fn store(&mut self) {
+        self.now += 1;
+        self.counts.instret += 1;
+    }
+
+    fn store_dmem(&mut self) {
+        self.store();
+        self.counts.dmem_accesses += 1;
+    }
+
+    fn store_fm(&mut self) {
+        self.store();
+        self.counts.fm_writes += 1;
+    }
+
+    /// Conditional branch: 2 cycles taken (front-end flush), 1 not.
+    fn branch(&mut self, taken: bool) {
+        self.now += if taken { 2 } else { 1 };
+        self.counts.instret += 1;
+    }
+
+    // --- CIM instruction events -----------------------------------------
+
+    /// `cim_conv`: optional FM shift-in, fire on wd==0, always stores one
+    /// latch word back to FM SRAM. Single cycle.
+    fn cim_conv(&mut self, shift: bool, fire: bool) {
+        self.now += 1;
+        self.counts.instret += 1;
+        if shift {
+            self.counts.fm_reads += 1;
+            self.counts.shifts += 1;
+        }
+        if fire {
+            self.counts.fires += 1;
+        }
+        self.counts.fm_writes += 1;
+    }
+
+    /// `cim_w` sourcing the FM SRAM (mask-plane boot burst).
+    fn cim_w_from_fm(&mut self) {
+        self.now += 1;
+        self.counts.instret += 1;
+        self.counts.fm_reads += 1;
+        self.counts.weight_writes += 1;
+    }
+
+    /// `cim_w` sourcing the weight SRAM (layer sign/threshold bursts).
+    fn cim_w_from_wt(&mut self) {
+        self.now += 1;
+        self.counts.instret += 1;
+        self.counts.wt_reads += 1;
+        self.counts.weight_writes += 1;
+    }
+
+    /// `cim_r` draining a raw sum into DMEM (final layer).
+    fn cim_r_to_dmem(&mut self) {
+        self.now += 1;
+        self.counts.instret += 1;
+        self.counts.weight_reads += 1;
+        self.counts.dmem_accesses += 1;
+    }
+
+    // --- uDMA timeline ---------------------------------------------------
+
+    fn dma_launch(&mut self, at: u64, off: u32, len: u32) {
+        let lat = self.dram.access_latency(off, len);
+        self.counts.dram_bytes += len as u64;
+        self.counts.udma_bytes += len as u64;
+        self.dma_inflight = Some(at + lat);
+    }
+
+    /// Retire completed transfers and chain queued descriptors (the real
+    /// engine does this on CPU ticks; we do it at completion cycles).
+    fn dma_advance(&mut self, now: u64) {
+        while let Some(done_at) = self.dma_inflight {
+            if done_at > now {
+                break;
+            }
+            self.dma_inflight = None;
+            self.dma_done += 1;
+            if let Some((off, len)) = self.dma_queue.pop_front() {
+                self.dma_launch(done_at, off, len);
+            }
+        }
+    }
+
+    fn dma_busy(&mut self, now: u64) -> bool {
+        self.dma_advance(now);
+        self.dma_inflight.map_or(false, |d| d > now) || !self.dma_queue.is_empty()
+    }
+
+    /// Mirror of `emit_udma_start`: three li+sw register writes, then the
+    /// CTRL write that launches (or enqueues) the transfer.
+    fn udma_start(&mut self, src: i64, dst: i64, len: i64, dram_off: u32) {
+        self.li(src);
+        self.store();
+        self.li(dst);
+        self.store();
+        self.li(len);
+        self.store();
+        self.li(1);
+        let at = self.now; // MMIO write sees the pre-instruction clock
+        if self.dma_busy(at) {
+            self.dma_queue.push_back((dram_off, len as u32));
+        } else {
+            self.dma_launch(at, dram_off, len as u32);
+        }
+        self.store();
+    }
+
+    /// Mirror of `emit_udma_wait`: lw CTRL + bne poll loop.
+    fn udma_wait(&mut self) {
+        loop {
+            let busy = self.dma_busy(self.now);
+            self.load();
+            if busy {
+                self.branch(true);
+            } else {
+                self.branch(false);
+                break;
+            }
+        }
+    }
+
+    /// Mirror of the weight-fusion descriptor poll: lw DONE + blt loop.
+    fn udma_poll_done(&mut self, need: u32) {
+        loop {
+            self.dma_advance(self.now);
+            let done = self.dma_done;
+            self.load();
+            if done < need {
+                self.branch(true);
+            } else {
+                self.branch(false);
+                break;
+            }
+        }
+    }
+
+    /// Mirror of `emit_phase`: li + MMIO store, marker at the store's
+    /// pre-instruction clock (what `Bus::mmio_write` records).
+    fn phase(&mut self, id: u32) {
+        self.li(id as i64);
+        self.markers.push((id, self.now));
+        self.store();
+    }
+}
+
+/// Mirror of `emit_boot`.
+fn boot(w: &mut Walker, p: &KwsPlan, opt: OptLevel) {
+    w.li(MMIO); // t6 = MMIO base
+    w.udma_start(
+        DRAM + plan::DRAM_AUDIO as i64,
+        DMEM + plan::DMEM_AUDIO as i64,
+        p.audio_bytes as i64,
+        plan::DRAM_AUDIO,
+    );
+    w.li(FM + plan::FM_ONES as i64); // a1
+    w.li(weight_map::MASK_BASE as i64); // a2
+    w.li((weight_map::MASK_BASE + weight_map::MASK_WORDS) as i64); // t1
+    w.li(0xFFFF_FFFFu32 as i64); // t0 (the ones word)
+    w.store_fm(); // sw a1, t0
+    for i in 0..weight_map::MASK_WORDS {
+        w.cim_w_from_fm();
+        w.alu(1); // addi a2
+        w.branch(i + 1 != weight_map::MASK_WORDS);
+    }
+    w.udma_wait(); // audio must have landed
+    if opt.weight_fusion {
+        for lp in &p.layers {
+            w.udma_start(
+                DRAM + lp.dram_offset as i64,
+                WT + lp.wt_offset as i64,
+                lp.stream_bytes() as i64,
+                lp.dram_offset,
+            );
+        }
+    }
+    w.phase(1);
+}
+
+/// Mirror of `emit_preprocess`.
+fn preprocess(w: &mut Walker, t_frames: usize, c: usize) {
+    let wpr = c / 32;
+    w.li(DMEM + plan::DMEM_AUDIO as i64); // s0
+    w.li(FM + plan::FM_BUF_A as i64); // s1
+    w.li(t_frames as i64); // s2
+    for t in 0..t_frames {
+        w.li(DMEM + plan::DMEM_THR as i64); // s4
+        for wd in 0..wpr {
+            w.li(0); // t3 = 0
+            for cbit in 0..32 {
+                w.load_dmem(); // lh x
+                w.load_dmem(); // lh prev
+                w.alu(4); // slli slli sub sub (pre-emphasis)
+                w.alu(3); // srai xor sub (|y|)
+                w.load_dmem(); // lw threshold
+                w.alu(1); // slt
+                if cbit > 0 {
+                    w.alu(1); // slli into bit position
+                }
+                w.alu(1); // or into the word accumulator
+            }
+            w.li(DMEM + plan::DMEM_FLIP as i64 + (wd * 4) as i64); // li t4
+            w.load_dmem(); // lw flip word
+            w.alu(1); // xor
+            w.store_fm(); // sw packed word
+        }
+        w.alu(3); // addi s1, s0, s2
+        w.branch(t + 1 != t_frames);
+    }
+    w.phase(2);
+}
+
+/// Mirror of `emit_weight_phase`.
+fn weight_phase(w: &mut Walker, p: &KwsPlan, i: usize, opt: OptLevel) {
+    let lp = &p.layers[i];
+    if opt.weight_fusion {
+        w.li(i as i64 + 2); // t1 = needed done-count
+        w.udma_poll_done(i as u32 + 2);
+    } else {
+        w.udma_start(
+            DRAM + lp.dram_offset as i64,
+            WT + lp.wt_offset as i64,
+            lp.stream_bytes() as i64,
+            lp.dram_offset,
+        );
+        w.udma_wait();
+    }
+    let aw = lp.window_words;
+    w.li(WT + lp.wt_offset as i64); // a1
+    w.li(weight_map::SIGN_BASE as i64); // a2
+    w.li(lp.c_out as i64); // s5
+    for col in 0..lp.c_out {
+        for _ in 0..aw {
+            w.cim_w_from_wt();
+        }
+        w.alu(3); // addi a1, a2, s5
+        w.branch(col + 1 != lp.c_out);
+    }
+    if lp.th_words > 0 {
+        w.li(weight_map::TH_BASE as i64); // a2
+        w.li(lp.th_words as i64); // s5
+        for j in 0..lp.th_words {
+            w.cim_w_from_wt();
+            w.alu(3); // addi a1, a2, s5
+            w.branch(j + 1 != lp.th_words);
+        }
+    }
+    w.phase(10 + i as u32);
+}
+
+/// Mirror of `emit_conv_layer`.
+fn conv_layer(w: &mut Walker, p: &KwsPlan, i: usize, opt: OptLevel) {
+    let lp = &p.layers[i];
+    let s = lp.s_words;
+    let o = lp.o_words;
+    let t_len = lp.t_in;
+    let fused_pool = opt.conv_pool_pipeline && lp.pooled;
+
+    let cfg = CimConfig {
+        mode: Mode::X,
+        pool_or: fused_pool,
+        window_words: lp.window_words as u8,
+        row_base: 0,
+        col_base: 0,
+    };
+    w.li(cfg.to_bits() as i64);
+    w.store(); // MMIO_CIM_CFG
+
+    let conv_dst = if fused_pool || !lp.pooled {
+        FM + p.out_buf(i) as i64
+    } else {
+        FM + plan::FM_PREPOOL as i64
+    };
+    w.li(FM + p.in_buf(i) as i64); // a0
+    w.li(FM + plan::FM_SCRATCH as i64); // a2
+    w.li(conv_dst); // a3
+    w.li(FM + plan::FM_ZERO as i64); // a1
+    for _ in 0..s {
+        w.cim_conv(true, false); // prefill: zero row
+    }
+    for _ in 0..2 * s {
+        w.cim_conv(true, false); // prefill: rows 0, 1
+    }
+    w.alu(1); // addi a0
+
+    for t in 0..t_len {
+        let drains = if fused_pool { t % 2 == 1 } else { true };
+        if drains {
+            w.cim_conv(false, true); // wd=0 fire + real store
+            for _ in 1..o {
+                w.cim_conv(false, false);
+            }
+            w.alu(1); // addi a3
+        } else {
+            w.cim_conv(false, true); // fire, dummy store
+        }
+        if t + 2 < t_len {
+            for _ in 0..s {
+                w.cim_conv(true, false);
+            }
+            w.alu(1); // addi a0
+        } else if t + 2 == t_len {
+            for _ in 0..s {
+                w.cim_conv(true, false); // boundary zero row
+            }
+        }
+    }
+
+    if lp.pooled && !fused_pool {
+        // RISC-V OR pooling pass (Fig. 7 baseline).
+        w.li(FM + plan::FM_PREPOOL as i64); // s0
+        w.li(FM + p.out_buf(i) as i64); // s1
+        w.li(lp.t_out as i64); // s2
+        for t in 0..lp.t_out {
+            for _ in 0..o {
+                w.load_fm();
+                w.load_fm();
+                w.alu(1); // or
+                w.store_fm();
+            }
+            w.alu(3); // addi s0, s1, s2
+            w.branch(t + 1 != lp.t_out);
+        }
+    }
+
+    if !opt.layer_fusion && i + 1 < p.layers.len() {
+        // Baseline FM round trip through DRAM (Fig. 6 baseline).
+        let out = p.out_buf(i) as i64;
+        let bytes = lp.out_bytes() as i64;
+        w.udma_start(FM + out, DRAM + plan::DRAM_FM_SPILL as i64, bytes, plan::DRAM_FM_SPILL);
+        w.udma_wait();
+        w.udma_start(DRAM + plan::DRAM_FM_SPILL as i64, FM + out, bytes, plan::DRAM_FM_SPILL);
+        w.udma_wait();
+    }
+    w.phase(30 + i as u32);
+}
+
+/// Mirror of `emit_final_layer`.
+fn final_layer(w: &mut Walker, p: &KwsPlan, n: usize) {
+    let i = p.layers.len() - 1;
+    let lp = &p.layers[i];
+    let s = lp.s_words;
+    let t_len = lp.t_in;
+
+    let cfg = CimConfig {
+        mode: Mode::X,
+        pool_or: false,
+        window_words: lp.window_words as u8,
+        row_base: 0,
+        col_base: 0,
+    };
+    w.li(cfg.to_bits() as i64);
+    w.store(); // MMIO_CIM_CFG
+
+    w.li(FM + p.in_buf(i) as i64); // a0
+    w.li(FM + plan::FM_ZERO as i64); // a1
+    w.li(FM + plan::FM_SCRATCH as i64); // a2
+    w.li(DMEM + plan::DMEM_RAWDUMP as i64); // a3
+    for _ in 0..s {
+        w.cim_conv(true, false);
+    }
+    for _ in 0..2 * s {
+        w.cim_conv(true, false);
+    }
+    w.alu(1); // addi a0
+    w.li(weight_map::RAW_BASE as i64); // s3
+
+    for t in 0..t_len {
+        w.cim_conv(false, true); // fire, dummy store
+        w.alu(1); // mv a1, s3
+        for _ in 0..n {
+            w.cim_r_to_dmem();
+        }
+        w.li(FM + plan::FM_ZERO as i64); // restore a1
+        w.alu(1); // addi a3
+        if t + 2 < t_len {
+            for _ in 0..s {
+                w.cim_conv(true, false);
+            }
+            w.alu(1); // addi a0
+        } else if t + 2 == t_len {
+            for _ in 0..s {
+                w.cim_conv(true, false);
+            }
+        }
+    }
+
+    // GAP accumulate.
+    w.li(DMEM + plan::DMEM_RAWDUMP as i64); // s0
+    w.li(DMEM + plan::DMEM_RESULT as i64); // s1
+    for _ in 0..n {
+        w.store_dmem(); // zero the accumulators
+    }
+    w.li(t_len as i64); // s2
+    for t in 0..t_len {
+        for _ in 0..n {
+            w.load_dmem();
+            w.load_dmem();
+            w.alu(1); // add
+            w.store_dmem();
+        }
+        w.alu(2); // addi s0, s2
+        w.branch(t + 1 != t_len);
+    }
+    w.phase(30 + i as u32);
+}
+
+/// Estimate cycles/instret/phases/activity for one inference of this
+/// program (inference latency is data-independent: every branch in the
+/// emitted code is a loop counter, never a value compare).
+pub fn estimate(program: &Program, dram_cfg: &DramConfig) -> Estimate {
+    let p = &program.plan;
+    let mut w = Walker::new(dram_cfg);
+
+    boot(&mut w, p, program.opt);
+    let t = p.layers[0].t_in;
+    let c = p.layers[0].s_words * 32;
+    preprocess(&mut w, t, c);
+    for i in 0..p.layers.len() {
+        weight_phase(&mut w, p, i, program.opt);
+        if p.layers[i].binarized {
+            conv_layer(&mut w, p, i, program.opt);
+        } else {
+            final_layer(&mut w, p, program.n_classes);
+        }
+    }
+    // Result publication + HOST_EXIT (the halting store retires normally).
+    w.li(DMEM + plan::DMEM_RESULT as i64);
+    w.store();
+    w.li(0);
+    w.store();
+
+    let cycles = w.now;
+    let mut counts = w.counts;
+    counts.cycles = cycles;
+    counts.macs = counts.fires * Mode::X.macs_per_fire();
+    Estimate {
+        cycles,
+        instret: counts.instret,
+        phases: PhaseBreakdown::from_markers(&w.markers, cycles),
+        counts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::build_kws_program;
+    use crate::model::KwsModel;
+
+    #[test]
+    fn li_len_matches_assembler_split() {
+        assert_eq!(li_len(0), 1);
+        assert_eq!(li_len(2047), 1);
+        assert_eq!(li_len(-2048), 1);
+        assert_eq!(li_len(2048), 2); // lui + addi
+        assert_eq!(li_len(0x2000_0000), 1); // lui only
+        assert_eq!(li_len(0x2000_0100), 2);
+        assert_eq!(li_len(0xFFFF_FFFFu32 as i64), 1); // -1 fits addi
+    }
+
+    #[test]
+    fn phases_partition_total() {
+        let m = KwsModel::synthetic(1);
+        for (_, opt) in OptLevel::ladder() {
+            let prog = build_kws_program(&m, opt).unwrap();
+            let e = estimate(&prog, &DramConfig::default());
+            assert!(e.cycles > 0 && e.instret > 0);
+            assert_eq!(e.phases.total(), e.cycles);
+            assert!(e.phases.boot > 0 && e.phases.preprocess > 0);
+            assert!(e.phases.weights > 0 && e.phases.conv > 0);
+        }
+    }
+
+    #[test]
+    fn estimated_ladder_is_monotone() {
+        // The analytical model must reproduce the paper's ordering: each
+        // added optimization strictly reduces estimated cycles.
+        let m = KwsModel::synthetic(4);
+        let mut prev = u64::MAX;
+        for (name, opt) in OptLevel::ladder() {
+            let prog = build_kws_program(&m, opt).unwrap();
+            let e = estimate(&prog, &DramConfig::default());
+            assert!(e.cycles < prev, "{name}: {} !< {prev}", e.cycles);
+            prev = e.cycles;
+        }
+    }
+
+    #[test]
+    fn activity_counts_are_plausible() {
+        let m = KwsModel::synthetic(7);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let e = estimate(&prog, &DramConfig::default());
+        // One fire per row position per layer.
+        let want_fires: u64 = prog.plan.layers.iter().map(|l| l.t_in as u64).sum();
+        assert_eq!(e.counts.fires, want_fires);
+        // Mask-plane init plus every sign/threshold word.
+        let want_w: u64 =
+            weight_map::MASK_WORDS as u64 + prog.plan.total_cim_w();
+        assert_eq!(e.counts.weight_writes, want_w);
+        assert!(e.counts.dram_bytes >= prog.plan.total_weight_bytes());
+        assert_eq!(e.counts.macs, e.counts.fires * Mode::X.macs_per_fire());
+    }
+}

@@ -1,0 +1,181 @@
+//! The fast functional simulator: tensor-level execution of compiled
+//! program images with analytical latency/energy accounting.
+//!
+//! The cycle-level [`crate::sim::Soc`] is the ground truth but costs
+//! ~10^6 simulated steps per inference — far too slow to serve traffic.
+//! [`FastSim`] executes the same [`Program`] in three parts:
+//!
+//! * [`exec`]    — decodes the image's weight streams + DMEM tables and
+//!   runs the shared quantized kernels: logits bit-identical to the SoC.
+//! * [`latency`] — an analytical cycle/phase model that mirrors the code
+//!   generator's emission structure (calibrated against
+//!   `sim::stats::PhaseBreakdown`; parity-tested to ≤ 5% error).
+//! * energy      — `energy::EnergyTable` applied to the walk's activity
+//!   counts (`EnergyReport::from_counts`).
+//!
+//! Inference latency and energy are data-independent (every branch the
+//! compiler emits is a loop counter), so a [`Calibration`] captured from
+//! one cycle-accurate run can optionally replace the analytical numbers
+//! with exact ones — that is what `backend::FastBackend` exposes.
+
+pub mod exec;
+pub mod latency;
+
+pub use exec::DecodedProgram;
+pub use latency::Estimate;
+
+use anyhow::Result;
+
+use crate::compiler::Program;
+use crate::energy::{EnergyReport, EnergyTable};
+use crate::mem::dram::DramConfig;
+use crate::sim::{PhaseBreakdown, RunResult};
+
+/// Exact timing/energy numbers captured from one cycle-level run of the
+/// same program (valid for every input: latency is data-independent).
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub cycles: u64,
+    pub instret: u64,
+    pub phases: PhaseBreakdown,
+    pub energy: EnergyReport,
+}
+
+impl Calibration {
+    pub fn from_run(r: &RunResult) -> Self {
+        Calibration {
+            cycles: r.cycles,
+            instret: r.instret,
+            phases: r.phases,
+            energy: r.energy.clone(),
+        }
+    }
+}
+
+/// The fast functional simulator for one compiled program.
+#[derive(Debug, Clone)]
+pub struct FastSim {
+    program: Program,
+    decoded: DecodedProgram,
+    estimate: Estimate,
+    energy_table: EnergyTable,
+    calibration: Option<Calibration>,
+}
+
+impl FastSim {
+    /// Build from a compiled image (decodes weights, runs the analytical
+    /// latency walk once — both are reused across all inferences).
+    pub fn new(program: Program, dram_cfg: DramConfig) -> Result<Self> {
+        let decoded = DecodedProgram::decode(&program)?;
+        let estimate = latency::estimate(&program, &dram_cfg);
+        Ok(FastSim {
+            program,
+            decoded,
+            estimate,
+            energy_table: EnergyTable::default(),
+            calibration: None,
+        })
+    }
+
+    pub fn with_energy_table(mut self, t: EnergyTable) -> Self {
+        self.energy_table = t;
+        self
+    }
+
+    /// Snap latency/energy to numbers measured on the cycle simulator.
+    pub fn with_calibration(mut self, c: Calibration) -> Self {
+        self.calibration = Some(c);
+        self
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    pub fn decoded(&self) -> &DecodedProgram {
+        &self.decoded
+    }
+
+    pub fn estimate(&self) -> &Estimate {
+        &self.estimate
+    }
+
+    pub fn is_calibrated(&self) -> bool {
+        self.calibration.is_some()
+    }
+
+    /// One inference. Logits are bit-identical to `Soc::infer` on the
+    /// same program; cycles/energy come from the analytical model (or the
+    /// calibration when present). Note `&self`: the functional simulator
+    /// is stateless across requests and safe to share behind an `Arc`.
+    pub fn infer(&self, audio: &[f32]) -> RunResult {
+        let (logits, predicted) = self.decoded.infer(audio);
+        let (cycles, instret, phases, energy) = match &self.calibration {
+            Some(c) => (c.cycles, c.instret, c.phases, c.energy.clone()),
+            None => (
+                self.estimate.cycles,
+                self.estimate.instret,
+                self.estimate.phases,
+                EnergyReport::from_counts(&self.energy_table, &self.estimate.counts),
+            ),
+        };
+        RunResult {
+            logits,
+            predicted,
+            cycles,
+            instret,
+            phases,
+            energy,
+            seconds_at_50mhz: cycles as f64 / 50e6,
+            console: String::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::OptLevel;
+    use crate::compiler::build_kws_program;
+    use crate::model::{dataset, KwsModel};
+
+    #[test]
+    fn fastsim_runs_and_reports() {
+        let m = KwsModel::synthetic(3);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let sim = FastSim::new(prog, DramConfig::default()).unwrap();
+        let audio = dataset::synth_utterance(2, 5, m.audio_len, 0.3);
+        let r = sim.infer(&audio);
+        assert_eq!(r.logits.len(), m.n_classes);
+        assert!(r.cycles > 0 && r.instret > 0);
+        assert_eq!(r.phases.total(), r.cycles);
+        assert!(r.energy.total_pj > 0.0 && r.energy.macro_pj > 0.0);
+        assert!(r.seconds_at_50mhz > 0.0);
+        // Stateless: repeated inference is identical.
+        let r2 = sim.infer(&audio);
+        assert_eq!(r.logits, r2.logits);
+        assert_eq!(r.cycles, r2.cycles);
+    }
+
+    #[test]
+    fn calibration_overrides_analytical_numbers() {
+        let m = KwsModel::synthetic(6);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let sim = FastSim::new(prog, DramConfig::default()).unwrap();
+        let audio = dataset::synth_utterance(0, 1, m.audio_len, 0.3);
+        let base = sim.infer(&audio);
+        let cal = Calibration {
+            cycles: 123_456,
+            instret: 99,
+            phases: PhaseBreakdown::default(),
+            energy: EnergyReport::default(),
+        };
+        let sim = sim.with_calibration(cal);
+        assert!(sim.is_calibrated());
+        let r = sim.infer(&audio);
+        assert_eq!(r.cycles, 123_456);
+        assert_eq!(r.instret, 99);
+        // Logits are untouched by calibration.
+        assert_eq!(r.logits, base.logits);
+    }
+}

@@ -25,6 +25,11 @@
 //!   normalization formulas of Table I.
 //! * [`sim`] — the SoC: wires core, macro, memories, DMA together and runs
 //!   programs cycle by cycle with full stats.
+//! * [`fsim`] — the fast functional simulator: executes the same compiled
+//!   program at the tensor/op level (bit-identical logits) with an
+//!   analytical latency/energy model — the serving-speed engine.
+//! * [`backend`] — the pluggable `InferenceBackend` seam over both
+//!   engines (`--backend {cycle,fast}` on the CLI).
 //! * [`runtime`] — PJRT golden model: loads `artifacts/*.hlo.txt` (AOT-
 //!   lowered JAX/Pallas) and executes it for bit-exact cross-checking.
 //! * [`coordinator`] — the edge-inference request loop (threaded leader /
@@ -36,6 +41,7 @@
 //! carries small in-tree replacements (JSON, RNG, CLI, property-testing,
 //! micro-bench harness) instead of serde/clap/proptest/criterion.
 
+pub mod backend;
 pub mod baselines;
 pub mod cim;
 pub mod compiler;
@@ -43,6 +49,7 @@ pub mod coordinator;
 pub mod cpu;
 pub mod dataflow;
 pub mod energy;
+pub mod fsim;
 pub mod isa;
 pub mod mem;
 pub mod model;

@@ -1,17 +1,18 @@
 //! `cimrv` — the CIMR-V launcher.
 //!
 //! Subcommands:
-//!   run        one inference on the cycle-level SoC (+ golden cross-check)
+//!   run        one inference (+ golden cross-check); --backend cycle|fast
 //!   ablation   the Fig. 6/7/9 + §III-A optimization ladder
 //!   table1     Table I comparison (+ measured TOPS/W and accuracy)
 //!   accuracy   synthetic-GSCD accuracy on the ISS vs the host reference
-//!   serve      threaded coordinator demo (batch of requests)
+//!   serve      threaded coordinator demo; --backend cycle|fast
 //!   disasm     decode a hex instruction word
 //!
 //! Run from the repo root after `make artifacts && cargo build --release`.
 
 use anyhow::{bail, Context, Result};
 
+use cimrv::backend::{self, BackendKind, InferenceBackend};
 use cimrv::baselines::{comparison, OptLevel};
 use cimrv::compiler::build_kws_program;
 use cimrv::coordinator::report::{ladder_json, render_ladder, LadderPoint};
@@ -35,7 +36,8 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: cimrv <run|ablation|table1|accuracy|serve|trace|disasm> [--opt LEVEL] \
-                 [--n N] [--workers W] [--label L] [--seed S] [--skip K] [--no-golden] [--json]"
+                 [--backend cycle|fast] [--n N] [--workers W] [--label L] [--seed S] [--skip K] \
+                 [--no-golden] [--json]"
             );
             Ok(())
         }
@@ -49,19 +51,20 @@ fn load_model() -> Result<KwsModel> {
 fn cmd_run(args: &Args) -> Result<()> {
     let model = load_model()?;
     let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
+    let kind = BackendKind::parse(&args.opt_or("backend", "cycle"))?;
     let label = args.opt_usize("label", 3)?;
     let seed = args.opt_usize("seed", 1)? as u64;
     let audio = dataset::synth_utterance(label, seed, model.audio_len, 0.37);
 
     let program = build_kws_program(&model, opt)?;
     println!(
-        "program: {} instructions ({} KiB IMEM), opt {}",
+        "program: {} instructions ({} KiB IMEM), opt {}, backend {kind}",
         program.imem.len(),
         program.imem_bytes() / 1024,
         opt
     );
-    let mut soc = Soc::new(program, DramConfig::default())?;
-    let r = soc.infer(&audio)?;
+    let mut be = backend::build(kind, program, DramConfig::default())?;
+    let r = be.run(&audio)?;
     println!("predicted class {} (true {label}), logits {:?}", r.predicted, r.logits);
     println!("{}", r.phases.render());
     println!("{}", r.energy.breakdown());
@@ -182,7 +185,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.opt_usize("workers", 4)?;
     let n = args.opt_usize("n", 24)?;
     let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
-    let coord = Coordinator::start(&model, opt, workers)?;
+    let kind = BackendKind::parse(&args.opt_or("backend", "cycle"))?;
+    let coord = Coordinator::start_with(&model, opt, workers, kind)?;
     let t0 = std::time::Instant::now();
     let reqs: Vec<_> = (0..n)
         .map(|i| InferenceRequest {
@@ -195,7 +199,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let chip: u64 = resps.iter().map(|r| r.chip_cycles).sum();
     println!(
-        "served {n} requests on {workers} workers in {wall:.2}s host time \
+        "served {n} requests on {workers} {kind}-backend workers in {wall:.2}s host time \
          ({:.1} req/s host, {:.1} req/s chip-time)",
         n as f64 / wall,
         n as f64 / (chip as f64 / 50e6)

@@ -174,6 +174,51 @@ impl KwsModel {
         let pools = self.layers[..i].iter().filter(|l| l.pooled).count();
         self.t >> pools
     }
+
+    /// Deterministic synthetic model (no artifacts needed): three conv
+    /// layers shaped like a shrunken Table II — two binarized+pooled, one
+    /// raw classifier — with pseudo-random ±1 weights. Used by benches
+    /// and tests that must run before `make artifacts`.
+    pub fn synthetic(seed: u64) -> KwsModel {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let mut mk = |ci: usize, co: usize, pooled: bool, binarized: bool| LayerSpec {
+            c_in: ci,
+            c_out: co,
+            kernel: 3,
+            pooled,
+            binarized,
+            weights: (0..3 * ci * co).map(|_| rng.pm1()).collect(),
+            thresholds: if binarized {
+                (0..co).map(|_| rng.range(0, 9) as i32 - 4).collect()
+            } else {
+                vec![]
+            },
+        };
+        let layers =
+            vec![mk(64, 64, true, true), mk(64, 32, true, true), mk(32, 12, false, false)];
+        let gamma = vec![1.0f32; 64];
+        let beta = vec![0.5f32; 64];
+        let mean = vec![20000.0f32; 64];
+        let var = vec![4.0e8f32; 64];
+        let (pre_thr, pre_dir) = fold_bn(&gamma, &beta, &mean, &var);
+        KwsModel {
+            audio_len: 16000,
+            t: 128,
+            c: 64,
+            n_classes: 12,
+            fusion_split: 2,
+            layers,
+            bn_gamma: gamma,
+            bn_beta: beta,
+            bn_mean: mean,
+            bn_var: var,
+            pre_thr,
+            pre_dir,
+            trained: false,
+            artifacts_dir: std::path::PathBuf::new(),
+        }
+    }
 }
 
 /// Fold BN + binarize into integer feature compares (mirrors

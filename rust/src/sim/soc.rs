@@ -82,12 +82,20 @@ impl Soc {
     }
 
     /// Stage one utterance (float waveform -> i16 ADC image in DRAM).
+    /// The staged image is exactly the plan's audio region: shorter
+    /// waveforms are zero-padded so a reused SoC never reads the previous
+    /// request's samples (history-independent, bit-identical to the
+    /// functional backend which treats missing samples as zero), and
+    /// longer ones are truncated so they cannot overwrite the weight
+    /// streams that live right above the region (the program only ever
+    /// reads `audio_len` samples).
     pub fn stage_audio(&mut self, audio: &[f32]) -> Result<()> {
         let q = crate::model::reference::quantize_audio(audio);
         let mut bytes = Vec::with_capacity(q.len() * 2);
         for v in &q {
             bytes.extend_from_slice(&(*v as i16).to_le_bytes());
         }
+        bytes.resize(self.program.plan.audio_bytes as usize, 0);
         self.bus.dram.load(crate::dataflow::plan::DRAM_AUDIO, &bytes)?;
         Ok(())
     }

@@ -1,0 +1,112 @@
+//! Backend parity suite: the fast functional simulator must be
+//! indistinguishable from the cycle-level SoC on values (bit-identical
+//! logits across models, seeds and optimization levels) and close on
+//! timing (analytical latency within 5% of measured cycles; snap
+//! calibration exact). No artifacts required — runs on synthetic models.
+
+use cimrv::backend::{self, BackendKind, InferenceBackend};
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::build_kws_program;
+use cimrv::fsim::{Calibration, FastSim};
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::{dataset, KwsModel};
+use cimrv::sim::Soc;
+
+#[test]
+fn fsim_logits_bit_identical_across_seeds_and_opt_levels() {
+    for model_seed in [1u64, 42] {
+        let m = KwsModel::synthetic(model_seed);
+        for (name, opt) in OptLevel::ladder() {
+            let prog = build_kws_program(&m, opt).unwrap();
+            let mut soc = Soc::new(prog.clone(), DramConfig::default()).unwrap();
+            let fast = FastSim::new(prog, DramConfig::default()).unwrap();
+            for audio_seed in [3u64, 9] {
+                let audio = dataset::synth_utterance(
+                    audio_seed as usize % 12,
+                    audio_seed,
+                    m.audio_len,
+                    0.37,
+                );
+                let want = soc.infer(&audio).unwrap();
+                let got = fast.infer(&audio);
+                assert_eq!(
+                    got.logits, want.logits,
+                    "model {model_seed} / {name} / audio {audio_seed}"
+                );
+                assert_eq!(got.predicted, want.predicted);
+            }
+        }
+    }
+}
+
+#[test]
+fn analytical_latency_within_5_percent_of_cycle_sim() {
+    let m = KwsModel::synthetic(3);
+    let audio = dataset::synth_utterance(5, 7, m.audio_len, 0.37);
+    for (name, opt) in OptLevel::ladder() {
+        let prog = build_kws_program(&m, opt).unwrap();
+        let mut soc = Soc::new(prog.clone(), DramConfig::default()).unwrap();
+        let actual = soc.infer(&audio).unwrap();
+        let fast = FastSim::new(prog, DramConfig::default()).unwrap();
+        let est = fast.infer(&audio);
+
+        let err = (est.cycles as f64 - actual.cycles as f64).abs() / actual.cycles as f64;
+        assert!(
+            err <= 0.05,
+            "{name}: analytical {} vs measured {} cycles ({:.2}% error)",
+            est.cycles,
+            actual.cycles,
+            100.0 * err
+        );
+        // Instruction count and energy track the same walk.
+        let ierr =
+            (est.instret as f64 - actual.instret as f64).abs() / actual.instret as f64;
+        assert!(ierr <= 0.05, "{name}: instret error {:.2}%", 100.0 * ierr);
+        let eerr = (est.energy.total_pj - actual.energy.total_pj).abs()
+            / actual.energy.total_pj;
+        assert!(eerr <= 0.05, "{name}: energy error {:.2}%", 100.0 * eerr);
+        // Phase attribution stays in the same regime per phase.
+        assert!(est.phases.boot > 0 && est.phases.preprocess > 0);
+        assert_eq!(est.phases.total(), est.cycles);
+    }
+}
+
+#[test]
+fn calibrated_fast_backend_is_cycle_exact() {
+    let m = KwsModel::synthetic(8);
+    let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+    let mut soc = Soc::new(prog.clone(), DramConfig::default()).unwrap();
+    let audio = dataset::synth_utterance(1, 4, m.audio_len, 0.37);
+    let measured = soc.infer(&audio).unwrap();
+
+    let fast = FastSim::new(prog, DramConfig::default())
+        .unwrap()
+        .with_calibration(Calibration::from_run(&measured));
+    // Latency is data-independent, so the calibration from one utterance
+    // holds for a different one.
+    let other = dataset::synth_utterance(9, 77, m.audio_len, 0.37);
+    let want_other = soc.infer(&other).unwrap();
+    let got = fast.infer(&other);
+    assert_eq!(got.cycles, want_other.cycles, "calibrated cycles must be exact");
+    assert_eq!(got.instret, want_other.instret);
+    assert_eq!(got.logits, want_other.logits);
+    assert!((got.energy.total_pj - want_other.energy.total_pj).abs() < 1e-6);
+}
+
+#[test]
+fn backend_trait_serves_both_engines() {
+    let m = KwsModel::synthetic(12);
+    let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+    let audio = dataset::synth_utterance(6, 2, m.audio_len, 0.37);
+    let mut cycle = backend::build(BackendKind::Cycle, prog.clone(), DramConfig::default())
+        .unwrap();
+    let mut fast = backend::build(BackendKind::Fast, prog, DramConfig::default()).unwrap();
+    assert_eq!(cycle.name(), "cycle");
+    assert_eq!(fast.name(), "fast");
+    assert_eq!(cycle.program().n_classes, fast.program().n_classes);
+    let a = cycle.run(&audio).unwrap();
+    let b = fast.run(&audio).unwrap();
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.predicted, b.predicted);
+    assert!(a.cycles > 0 && b.cycles > 0);
+}
