@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     let n = 16.min(eval.len());
 
     // L3: the coordinator with a fleet of simulated chips.
-    let coord = Coordinator::start(&model, OptLevel::FULL, 4)?;
+    let mut coord = Coordinator::start(&model, OptLevel::FULL, 4)?;
     let reqs: Vec<_> = (0..n)
         .map(|i| InferenceRequest {
             id: i as u64,

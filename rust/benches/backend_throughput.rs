@@ -1,25 +1,64 @@
-//! Backend throughput: inferences/sec of the cycle-level SoC vs the fast
-//! functional simulator on the same compiled program — the headline
-//! number for the `backend` subsystem (target: >= 20x; in practice the
-//! fast backend lands orders of magnitude higher because it skips the
-//! ~10^6-step CPU loop entirely).
+//! Backend + kernel throughput: the headline numbers for the serving
+//! stack, machine-readable in `BENCH_kernels.json`.
+//!
+//! Three levels, each asserted:
+//!
+//! * cycle SoC vs the fast functional simulator (target: >= 20x — in
+//!   practice orders of magnitude, the fast path skips the ~10^6-step CPU
+//!   loop entirely);
+//! * the packed XNOR-popcount fsim vs the PR 1 scalar kernels on the same
+//!   decoded program (target: >= 5x inferences/sec);
+//! * kernel-level micro benches (preprocess, each conv layer, the GAP
+//!   layer) — scalar vs packed, written to `BENCH_kernels.json` so the
+//!   perf trajectory is tracked run over run.
 //!
 //! Runs on the trained artifacts when present, else on the synthetic
-//! model, so it works straight after `cargo build`.
+//! model, so it works straight after `cargo build`. Set
+//! `CIMRV_BENCH_QUICK=1` for a short-iteration smoke run (CI).
 
+use std::hint::black_box;
 use std::time::Instant;
 
 use cimrv::backend::{self, BackendKind, InferenceBackend};
 use cimrv::baselines::OptLevel;
 use cimrv::compiler::build_kws_program;
+use cimrv::fsim::FastSim;
 use cimrv::mem::dram::DramConfig;
+use cimrv::model::reference::{
+    self, conv_layer, conv_layer_packed, final_layer_gap, final_layer_gap_packed, BitMap,
+};
 use cimrv::model::{dataset, KwsModel};
 
+/// Seconds per iteration of `f` over `iters` runs.
+fn time_per<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+struct KernelRow {
+    name: String,
+    scalar_us: f64,
+    packed_us: f64,
+}
+
+impl KernelRow {
+    fn speedup(&self) -> f64 {
+        self.scalar_us / self.packed_us
+    }
+}
+
 fn main() {
-    let model = KwsModel::load_default().unwrap_or_else(|_| {
-        println!("(artifacts not found: benchmarking the synthetic model)");
-        KwsModel::synthetic(1)
-    });
+    let quick = std::env::var("CIMRV_BENCH_QUICK").is_ok_and(|v| v != "0" && !v.is_empty());
+    let (model, model_kind) = match KwsModel::load_default() {
+        Ok(m) => (m, "trained"),
+        Err(_) => {
+            println!("(artifacts not found: benchmarking the synthetic model)");
+            (KwsModel::synthetic(1), "synthetic")
+        }
+    };
     let prog = build_kws_program(&model, OptLevel::FULL).expect("codegen");
     let audios: Vec<Vec<f32>> = (0..32)
         .map(|i| dataset::synth_utterance(i % 12, i as u64, model.audio_len, 0.37))
@@ -28,53 +67,168 @@ fn main() {
     // --- cycle-level baseline -------------------------------------------
     let mut cycle = backend::build(BackendKind::Cycle, prog.clone(), DramConfig::default())
         .expect("cycle backend");
-    let n_cycle = 4;
-    let t0 = Instant::now();
-    let mut cycle_ref = None;
-    for audio in audios.iter().take(n_cycle) {
-        cycle_ref = Some(cycle.run(audio).expect("cycle inference"));
-    }
-    let cycle_s = t0.elapsed().as_secs_f64() / n_cycle as f64;
+    let n_cycle = if quick { 2 } else { 4 };
+    let cycle_s = {
+        let mut i = 0;
+        time_per(n_cycle, || {
+            cycle.run(&audios[i % audios.len()]).expect("cycle inference");
+            i += 1;
+        })
+    };
     println!(
-        "cycle backend: {:8.2} ms/inference ({:8.1} inf/s)",
+        "cycle backend:       {:8.2} ms/inference ({:8.1} inf/s)",
         1e3 * cycle_s,
         1.0 / cycle_s
     );
 
-    // --- fast functional simulator --------------------------------------
+    // --- fast functional simulator (packed XNOR-popcount kernels) -------
     let t0 = Instant::now();
-    let mut fast = backend::build(BackendKind::Fast, prog, DramConfig::default())
+    let mut fast = backend::build(BackendKind::Fast, prog.clone(), DramConfig::default())
         .expect("fast backend");
     let setup_s = t0.elapsed().as_secs_f64();
-    let n_fast = 256;
-    let t0 = Instant::now();
-    let mut fast_ref = None;
-    for i in 0..n_fast {
-        fast_ref = Some(fast.run(&audios[i % audios.len()]).expect("fast inference"));
-    }
-    let fast_s = t0.elapsed().as_secs_f64() / n_fast as f64;
+    let n_fast = if quick { 32 } else { 256 };
+    let fast_s = {
+        let mut i = 0;
+        time_per(n_fast, || {
+            fast.run(&audios[i % audios.len()]).expect("fast inference");
+            i += 1;
+        })
+    };
     println!(
-        "fast backend:  {:8.2} ms/inference ({:8.1} inf/s; one-time setup {:.2} ms)",
+        "fast backend:        {:8.2} ms/inference ({:8.1} inf/s; one-time setup {:.2} ms)",
         1e3 * fast_s,
         1.0 / fast_s,
         1e3 * setup_s
     );
-    println!("speedup: {:.1}x inferences/sec", cycle_s / fast_s);
 
-    // Parity spot check on the last shared utterance.
-    let idx = (n_fast - 1) % audios.len();
-    let want = cycle.run(&audios[idx]).expect("cycle inference");
-    let got = fast.run(&audios[idx]).expect("fast inference");
-    assert_eq!(want.logits, got.logits, "backends disagree on logits");
-    let (c, f) = (cycle_ref.unwrap(), fast_ref.unwrap());
+    // --- PR 1 scalar fsim path on the same decoded program ---------------
+    let sim = FastSim::new(prog, DramConfig::default()).expect("fsim");
+    let decoded = sim.decoded();
+    let specs = decoded.to_layer_specs();
+    let n_scalar = if quick { 8 } else { 32 };
+    // black_box on every direct (non-vtable) call below: the results are
+    // otherwise dead and the optimizer could elide the measured work.
+    let scalar_s = {
+        let mut i = 0;
+        time_per(n_scalar, || {
+            black_box(decoded.infer_scalar(black_box(&specs), &audios[i % audios.len()]));
+            i += 1;
+        })
+    };
     println!(
-        "latency model: fast {} vs cycle {} chip cycles on their last runs",
-        f.cycles, c.cycles
+        "fsim scalar kernels: {:8.2} ms/inference ({:8.1} inf/s — the PR 1 path)",
+        1e3 * scalar_s,
+        1.0 / scalar_s
     );
+    println!(
+        "speedup: fast vs cycle {:.1}x | packed vs scalar kernels {:.2}x",
+        cycle_s / fast_s,
+        scalar_s / fast_s
+    );
+
+    // Parity: the three paths agree bit-for-bit on a shared utterance.
+    let probe = &audios[7];
+    let want = cycle.run(probe).expect("cycle inference");
+    let got = fast.run(probe).expect("fast inference");
+    let (scalar_logits, _) = decoded.infer_scalar(&specs, probe);
+    assert_eq!(want.logits, got.logits, "fast backend disagrees with cycle on logits");
+    assert_eq!(scalar_logits, got.logits, "scalar kernels disagree with packed kernels");
+    println!("parity: cycle / packed / scalar logits bit-identical \u{2713}");
+
+    // --- kernel-level micro benches --------------------------------------
+    // Walk the net once to capture each layer's real input feature map,
+    // then time scalar vs packed per stage.
+    let (k_iters_s, k_iters_p) = if quick { (3, 30) } else { (20, 200) };
+    let mut rows: Vec<KernelRow> = Vec::new();
+    let pre_audio = &audios[3];
+    rows.push(KernelRow {
+        name: "preprocess".into(),
+        scalar_us: 1e6 * time_per(k_iters_s, || {
+            black_box(decoded.preprocess_scalar(black_box(pre_audio)));
+        }),
+        packed_us: 1e6 * time_per(k_iters_p, || {
+            black_box(decoded.preprocess(black_box(pre_audio)));
+        }),
+    });
+    let mut x: BitMap = decoded.preprocess(pre_audio);
+    let n_layers = decoded.layers.len();
+    for (i, (packed, spec)) in decoded.layers.iter().zip(&specs).enumerate() {
+        let name = format!(
+            "layer{i}_{}x{}{}",
+            spec.c_in,
+            spec.c_out,
+            if spec.pooled { "_pool" } else { "" }
+        );
+        if i < n_layers - 1 {
+            rows.push(KernelRow {
+                name: format!("conv_{name}"),
+                scalar_us: 1e6 * time_per(k_iters_s, || {
+                    black_box(conv_layer(black_box(&x), spec));
+                }),
+                packed_us: 1e6 * time_per(k_iters_p, || {
+                    black_box(conv_layer_packed(black_box(&x), packed));
+                }),
+            });
+            x = conv_layer_packed(&x, packed);
+        } else {
+            rows.push(KernelRow {
+                name: format!("gap_{name}"),
+                scalar_us: 1e6 * time_per(k_iters_s, || {
+                    black_box(final_layer_gap(black_box(&x), spec));
+                }),
+                packed_us: 1e6 * time_per(k_iters_p, || {
+                    black_box(final_layer_gap_packed(black_box(&x), packed));
+                }),
+            });
+        }
+    }
+    // Sanity on the captured pipeline: packed forward equals the oracle.
+    assert_eq!(
+        reference::infer_packed(&model, pre_audio),
+        reference::infer(&model, pre_audio),
+        "packed model-level inference diverged from the scalar oracle"
+    );
+
+    println!("\nkernel             scalar us    packed us   speedup");
+    for r in &rows {
+        println!("{:<18} {:>9.1} {:>12.1} {:>8.2}x", r.name, r.scalar_us, r.packed_us, r.speedup());
+    }
+
+    // --- BENCH_kernels.json ----------------------------------------------
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"model\": \"{model_kind}\",\n"));
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str("  \"inference\": {\n");
+    json.push_str(&format!("    \"cycle_ms\": {:.4},\n", 1e3 * cycle_s));
+    json.push_str(&format!("    \"fsim_scalar_ms\": {:.4},\n", 1e3 * scalar_s));
+    json.push_str(&format!("    \"fsim_packed_ms\": {:.4},\n", 1e3 * fast_s));
+    json.push_str(&format!("    \"packed_vs_scalar\": {:.2},\n", scalar_s / fast_s));
+    json.push_str(&format!("    \"fast_vs_cycle\": {:.1}\n", cycle_s / fast_s));
+    json.push_str("  },\n");
+    json.push_str("  \"kernels\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"scalar_us\": {:.2}, \"packed_us\": {:.2}, \"speedup\": {:.2}}}{}\n",
+            r.name,
+            r.scalar_us,
+            r.packed_us,
+            r.speedup(),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_kernels.json", &json).expect("writing BENCH_kernels.json");
+    println!("\nwrote BENCH_kernels.json");
+
     assert!(
         cycle_s / fast_s >= 20.0,
         "fast backend must be >= 20x the cycle backend ({:.1}x measured)",
         cycle_s / fast_s
     );
-    println!("parity: logits bit-identical \u{2713}");
+    assert!(
+        scalar_s / fast_s >= 5.0,
+        "packed kernels must be >= 5x the PR 1 scalar fsim path ({:.2}x measured)",
+        scalar_s / fast_s
+    );
+    println!("asserts: fast >= 20x cycle, packed >= 5x scalar \u{2713}");
 }

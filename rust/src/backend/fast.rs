@@ -1,5 +1,7 @@
 //! The functional simulator behind the backend contract.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::compiler::Program;
@@ -11,32 +13,37 @@ use super::InferenceBackend;
 
 /// Tensor-level engine: bit-identical logits, analytical latency/energy
 /// (optionally snap-calibrated from one cycle-level run).
+///
+/// Holds the simulator behind an `Arc`: `FastSim::infer` is `&self` and
+/// stateless, so a whole worker fleet shares one decoded program + one
+/// analytical walk instead of cloning them per thread
+/// (`Coordinator::start_with_options` does exactly that).
 pub struct FastBackend {
-    sim: FastSim,
+    sim: Arc<FastSim>,
 }
 
 impl FastBackend {
     pub fn new(program: Program, dram_cfg: DramConfig) -> Result<Self> {
-        Ok(FastBackend { sim: FastSim::new(program, dram_cfg)? })
+        Ok(FastBackend { sim: Arc::new(FastSim::new(program, dram_cfg)?) })
     }
 
-    /// Wrap an already-built simulator (the decode + analytical walk are
-    /// immutable, so one `FastSim` can be cloned across workers instead
-    /// of re-deriving it per thread).
-    pub fn from_sim(sim: FastSim) -> Self {
+    /// Share an already-built simulator across workers: the decode and
+    /// the analytical walk exist once per program, not once per thread.
+    pub fn shared(sim: Arc<FastSim>) -> Self {
         FastBackend { sim }
     }
 
     /// Replace the analytical latency/energy numbers with exact ones
     /// measured on the cycle simulator (valid for all inputs: the
-    /// compiled program's latency is data-independent).
-    pub fn with_calibration(mut self, c: Calibration) -> Self {
-        self.sim = self.sim.with_calibration(c);
-        self
+    /// compiled program's latency is data-independent). Rebuilds the
+    /// shared handle, so calibrate *before* fanning out to workers.
+    pub fn with_calibration(self, c: Calibration) -> Self {
+        let sim = (*self.sim).clone().with_calibration(c);
+        FastBackend { sim: Arc::new(sim) }
     }
 
     pub fn sim(&self) -> &FastSim {
-        &self.sim
+        self.sim.as_ref()
     }
 }
 

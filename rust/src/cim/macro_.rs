@@ -219,6 +219,28 @@ impl CimMacro {
         Ok(())
     }
 
+    /// Host-side bulk load of a packed binary layer at
+    /// (`row_base`,`col_base`) x32-blocks: the sign planes are already in
+    /// the port's column-major word layout, so the image is built by word
+    /// copy (`WeightImage::from_packed_at`), not a per-bit walk. Bypasses
+    /// cycle accounting like `load_image`; the *timed* path is the
+    /// `cim_w` burst the compiler emits.
+    pub fn load_packed(
+        &mut self,
+        layer: &crate::model::reference::PackedLayer,
+        row_base: usize,
+        col_base: usize,
+    ) -> Result<()> {
+        let mode = self.cfg.mode;
+        if row_base * 32 + layer.rows() > mode.wordlines() {
+            bail!("packed layer rows overflow {mode:?}");
+        }
+        if col_base * 32 + layer.c_out > mode.sense_amps() {
+            bail!("packed layer cols overflow {mode:?}");
+        }
+        self.load_image(&weight_map::WeightImage::from_packed_at(mode, row_base, col_base, layer))
+    }
+
     pub fn reset_stats(&mut self) {
         self.stats = CimStats::default();
     }
@@ -392,6 +414,65 @@ mod tests {
         m.fire();
         assert_eq!(m.store_word(0), 0xFFFF_FFFF, "cols 32..64 all hot");
         assert_eq!(m.latch_word(0), 0, "cols 0..32 dark (no weights)");
+    }
+
+    #[test]
+    fn load_packed_fires_identically_to_image_load() {
+        use crate::model::kws::LayerSpec;
+        use crate::model::reference::PackedLayer;
+        let mut rng = Rng::new(77);
+        let (c_in, c_out) = (24, 40); // rows = 72: non-word-aligned tail
+        let spec = LayerSpec {
+            c_in,
+            c_out,
+            kernel: 3,
+            pooled: false,
+            binarized: true,
+            weights: (0..3 * c_in * c_out).map(|_| rng.pm1()).collect(),
+            thresholds: (0..c_out).map(|_| rng.range(0, 9) as i32 - 4).collect(),
+        };
+        let rows = spec.rows();
+        let x: Vec<u8> = (0..rows).map(|_| rng.bool(0.5) as u8).collect();
+        let shift = |m: &mut CimMacro| {
+            for j in 0..rows.div_ceil(32) {
+                let mut word = 0u32;
+                for b in 0..32 {
+                    if j * 32 + b < rows && x[j * 32 + b] == 1 {
+                        word |= 1 << b;
+                    }
+                }
+                m.shift_in(word);
+            }
+        };
+
+        let mut via_image = CimMacro::new();
+        via_image.cfg.window_words = rows.div_ceil(32) as u8;
+        let img = weight_map::WeightImage::from_layer(
+            Mode::X,
+            rows,
+            c_out,
+            |r, c| spec.weight(r, c),
+            &spec.thresholds,
+        );
+        via_image.load_image(&img).unwrap();
+        shift(&mut via_image);
+        via_image.fire();
+
+        let mut via_packed = CimMacro::new();
+        via_packed.cfg.window_words = rows.div_ceil(32) as u8;
+        via_packed.load_packed(&PackedLayer::from_spec(&spec), 0, 0).unwrap();
+        shift(&mut via_packed);
+        via_packed.fire();
+
+        for c in 0..c_out {
+            assert_eq!(via_packed.raw_sum(c), via_image.raw_sum(c), "col {c}");
+        }
+        assert_eq!(via_packed.latch_word(0), via_image.latch_word(0));
+        assert_eq!(via_packed.latch_word(1), via_image.latch_word(1));
+
+        // Overflow guards reject out-of-array placements.
+        assert!(via_packed.load_packed(&PackedLayer::from_spec(&spec), 31, 0).is_err());
+        assert!(via_packed.load_packed(&PackedLayer::from_spec(&spec), 0, 8).is_err());
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! is a contiguous run and a layer load is a linear `cim_w` burst.
 
 use super::mode::Mode;
+use crate::model::reference::PackedLayer;
 
 /// Word counts of the port address space.
 pub const SIGN_BASE: u32 = 0;
@@ -124,6 +125,41 @@ impl WeightImage {
         WeightImage { mode, words }
     }
 
+    /// Map a packed binary layer onto a rectangle of the macro. A
+    /// [`PackedLayer`]'s sign planes are already in the port's
+    /// column-major word layout, so each plane word is emitted verbatim —
+    /// no per-bit walk; the mask plane arms every in-window row (binary
+    /// weights, no ternary zeros) with the tail beyond `rows()` off.
+    /// Produces word-for-word the image `from_layer_at` builds from the
+    /// same layer's scalar form.
+    pub fn from_packed_at(mode: Mode, row_base: usize, col_base: usize, layer: &PackedLayer) -> Self {
+        let cw = mode.col_words();
+        let rows = layer.rows();
+        let aw = layer.plane_words;
+        assert!(row_base * 32 + rows <= mode.wordlines(), "rows overflow {mode:?}");
+        assert!(col_base * 32 + layer.c_out <= mode.sense_amps(), "cols overflow {mode:?}");
+        let mut words = Vec::with_capacity(layer.c_out * aw * 2 + layer.thresholds.len());
+        for co in 0..layer.c_out {
+            let c_abs = col_base * 32 + co;
+            for (wj, &sign) in layer.plane(co).iter().enumerate() {
+                let r0 = wj * 32;
+                let mask =
+                    if rows - r0 >= 32 { u32::MAX } else { (1u32 << (rows - r0)) - 1 };
+                words.push((SIGN_BASE + (c_abs * cw + row_base + wj) as u32, sign & mask));
+                words.push((MASK_BASE + (c_abs * cw + row_base + wj) as u32, mask));
+            }
+        }
+        for (c, &th) in layer.thresholds.iter().enumerate() {
+            words.push((TH_BASE + (col_base * 32 + c) as u32, th as u32));
+        }
+        WeightImage { mode, words }
+    }
+
+    /// `from_packed_at` anchored at the array origin.
+    pub fn from_packed(mode: Mode, layer: &PackedLayer) -> Self {
+        Self::from_packed_at(mode, 0, 0, layer)
+    }
+
     /// `from_layer_at` anchored at the array origin.
     pub fn from_layer(
         mode: Mode,
@@ -199,6 +235,40 @@ mod tests {
         assert!(addrs.contains(&(MASK_BASE + 64 * 32 + 6)));
         assert!(addrs.contains(&(TH_BASE + 64)));
         assert_eq!(img.words.len(), 3);
+    }
+
+    #[test]
+    fn packed_image_equals_scalar_image() {
+        // A ±1 layer must produce word-for-word the same burst whether it
+        // is mapped from the scalar weights or from the packed planes —
+        // the layouts coincide, which is the whole point of PackedLayer.
+        use crate::model::kws::LayerSpec;
+        use crate::model::reference::PackedLayer;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(31);
+        for (c_in, c_out, row_base, col_base) in [(32, 20, 0, 0), (24, 33, 2, 1)] {
+            let spec = LayerSpec {
+                c_in,
+                c_out,
+                kernel: 3,
+                pooled: false,
+                binarized: true,
+                weights: (0..3 * c_in * c_out).map(|_| rng.pm1()).collect(),
+                thresholds: (0..c_out).map(|_| rng.range(0, 9) as i32 - 4).collect(),
+            };
+            let packed = PackedLayer::from_spec(&spec);
+            let scalar_img = WeightImage::from_layer_at(
+                Mode::X,
+                row_base,
+                col_base,
+                spec.rows(),
+                c_out,
+                |r, c| spec.weight(r, c),
+                &spec.thresholds,
+            );
+            let packed_img = WeightImage::from_packed_at(Mode::X, row_base, col_base, &packed);
+            assert_eq!(packed_img.words, scalar_img.words, "c_in {c_in} c_out {c_out}");
+        }
     }
 
     #[test]

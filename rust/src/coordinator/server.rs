@@ -7,15 +7,15 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::backend::{self, BackendKind, FastBackend, InferenceBackend};
 use crate::baselines::OptLevel;
 use crate::compiler::build_kws_program;
-use crate::fsim::FastSim;
+use crate::fsim::{Calibration, FastSim};
 use crate::mem::dram::DramConfig;
 use crate::model::KwsModel;
-use crate::sim::RunResult;
+use crate::sim::{RunResult, Soc};
 
 /// One utterance to classify.
 #[derive(Debug, Clone)]
@@ -69,10 +69,22 @@ pub struct ServiceStats {
     pub chip_cycles: AtomicU64,
 }
 
+/// Serving options beyond the backend choice.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeOptions {
+    /// Run one cycle-level inference at coordinator start and snap the
+    /// fast backend's latency/energy to the measured numbers (compiled
+    /// KWS programs have data-independent latency, so one run calibrates
+    /// every request). Ignored by the cycle backend, which is exact.
+    pub calibrate: bool,
+}
+
 /// The leader: owns worker threads, each with its own SoC (the chip is
 /// single-tenant; a fleet of workers models a fleet of edge devices).
 pub struct Coordinator {
-    tx: mpsc::Sender<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)>,
+    /// `None` once shut down: `submit` then returns an error instead of
+    /// panicking on the closed channel.
+    tx: Option<mpsc::Sender<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)>>,
     pub stats: Arc<ServiceStats>,
     workers: Vec<thread::JoinHandle<()>>,
 }
@@ -92,21 +104,45 @@ impl Coordinator {
         n_workers: usize,
         kind: BackendKind,
     ) -> Result<Self> {
+        Self::start_with_options(model, opt, n_workers, kind, ServeOptions::default())
+    }
+
+    /// `start_with` plus [`ServeOptions`] (`--calibrate` on the CLI).
+    pub fn start_with_options(
+        model: &KwsModel,
+        opt: OptLevel,
+        n_workers: usize,
+        kind: BackendKind,
+        opts: ServeOptions,
+    ) -> Result<Self> {
         let program = build_kws_program(model, opt)?;
         // Build every worker's backend up front so construction errors
         // surface here with their real cause (not as a silent worker
-        // exit). The functional simulator is immutable across requests:
-        // decode the image and run the analytical walk once, then clone
-        // the result per worker. The cycle SoC is stateful, so each
+        // exit). The functional simulator is stateless across requests
+        // (`FastSim::infer` is `&self`): decode the image and run the
+        // analytical walk once, then share the one instance across every
+        // worker behind an `Arc`. The cycle SoC is stateful, so each
         // cycle worker gets its own instance.
-        let fast_proto = match kind {
-            BackendKind::Fast => Some(FastSim::new(program.clone(), DramConfig::default())?),
+        let fast_shared: Option<Arc<FastSim>> = match kind {
+            BackendKind::Fast => {
+                let mut sim = FastSim::new(program.clone(), DramConfig::default())?;
+                if opts.calibrate {
+                    // One cycle-accurate run (any utterance: latency is
+                    // data-independent) snaps served latency/energy from
+                    // analytical to exact.
+                    let mut soc = Soc::new(program.clone(), DramConfig::default())?;
+                    let silence = vec![0.0f32; model.audio_len];
+                    let measured = soc.infer(&silence)?;
+                    sim = sim.with_calibration(Calibration::from_run(&measured));
+                }
+                Some(Arc::new(sim))
+            }
             BackendKind::Cycle => None,
         };
         let mut backends: Vec<Box<dyn InferenceBackend>> = Vec::new();
         for _ in 0..n_workers.max(1) {
-            let be: Box<dyn InferenceBackend> = match &fast_proto {
-                Some(sim) => Box::new(FastBackend::from_sim(sim.clone())),
+            let be: Box<dyn InferenceBackend> = match &fast_shared {
+                Some(sim) => Box::new(FastBackend::shared(Arc::clone(sim))),
                 None => backend::build(kind, program.clone(), DramConfig::default())?,
             };
             backends.push(be);
@@ -146,19 +182,32 @@ impl Coordinator {
                 }
             }));
         }
-        Ok(Coordinator { tx, stats, workers })
+        Ok(Coordinator { tx: Some(tx), stats, workers })
     }
 
-    /// Submit one request; returns a receiver for the response.
-    pub fn submit(&self, req: InferenceRequest) -> mpsc::Receiver<Result<InferenceResponse>> {
+    /// Submit one request; returns a receiver for the response, or an
+    /// error if the coordinator has shut down (no panic).
+    pub fn submit(
+        &self,
+        req: InferenceRequest,
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        let id = req.id;
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("coordinator is shut down (request {id} rejected)"))?;
         let (rtx, rrx) = mpsc::channel();
-        self.tx.send((req, rtx)).expect("coordinator alive");
-        rrx
+        tx.send((req, rtx))
+            .map_err(|_| anyhow!("coordinator workers are gone (request {id} rejected)"))?;
+        Ok(rrx)
     }
 
     /// Serve a whole batch, preserving order.
     pub fn serve_batch(&self, reqs: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
-        let rxs: Vec<_> = reqs.into_iter().map(|r| self.submit(r)).collect();
+        let rxs: Vec<_> = reqs
+            .into_iter()
+            .map(|r| self.submit(r))
+            .collect::<Result<Vec<_>>>()?;
         rxs.into_iter()
             .map(|rx| rx.recv().context("worker dropped")?)
             .collect()
@@ -170,12 +219,19 @@ impl Coordinator {
         (l > 0).then(|| self.stats.correct.load(Ordering::Relaxed) as f64 / l as f64)
     }
 
-    /// Shut down: drop the queue and join workers.
-    pub fn shutdown(self) {
-        drop(self.tx);
-        for w in self.workers {
+    /// Shut down: drop the queue and join workers. Subsequent `submit`
+    /// calls return an error.
+    pub fn shutdown(&mut self) {
+        self.tx = None;
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -217,7 +273,7 @@ mod tests {
     #[test]
     fn serves_batches_in_order_across_workers() {
         let m = fake_model();
-        let coord = Coordinator::start(&m, OptLevel::FULL, 3).unwrap();
+        let mut coord = Coordinator::start(&m, OptLevel::FULL, 3).unwrap();
         let reqs: Vec<_> = (0..9)
             .map(|i| InferenceRequest {
                 id: i,
@@ -240,7 +296,7 @@ mod tests {
     fn responses_deterministic_across_workers() {
         // The same utterance must classify identically on every worker.
         let m = fake_model();
-        let coord = Coordinator::start(&m, OptLevel::FULL, 4).unwrap();
+        let mut coord = Coordinator::start(&m, OptLevel::FULL, 4).unwrap();
         let audio = crate::model::dataset::synth_utterance(5, 1, 16000, 0.3);
         let reqs: Vec<_> = (0..8)
             .map(|i| InferenceRequest { id: i, audio: audio.clone(), label: None })
@@ -272,10 +328,10 @@ mod tests {
                 })
                 .collect()
         };
-        let cyc = Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Cycle).unwrap();
+        let mut cyc = Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Cycle).unwrap();
         let a = cyc.serve_batch(reqs(4)).unwrap();
         cyc.shutdown();
-        let fast = Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Fast).unwrap();
+        let mut fast = Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Fast).unwrap();
         let b = fast.serve_batch(reqs(4)).unwrap();
         fast.shutdown();
         for (x, y) in a.iter().zip(&b) {
@@ -287,9 +343,55 @@ mod tests {
     }
 
     #[test]
+    fn submit_after_shutdown_errors_instead_of_panicking() {
+        let m = fake_model();
+        let mut coord =
+            Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Fast).unwrap();
+        let req = |id| InferenceRequest {
+            id,
+            audio: crate::model::dataset::synth_utterance(1, 2, 16000, 0.3),
+            label: None,
+        };
+        let rx = coord.submit(req(0)).unwrap();
+        assert!(rx.recv().unwrap().is_ok());
+        coord.shutdown();
+        let err = coord.submit(req(1)).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+        assert!(coord.serve_batch(vec![req(2)]).is_err());
+    }
+
+    #[test]
+    fn calibrated_fast_serving_is_cycle_exact() {
+        // --calibrate at coordinator start: served latency/energy snaps
+        // to the cycle simulator's numbers while logits stay identical.
+        let m = fake_model();
+        let audio = crate::model::dataset::synth_utterance(4, 11, 16000, 0.3);
+        let req = || {
+            vec![InferenceRequest { id: 0, audio: audio.clone(), label: None }]
+        };
+        let mut cyc = Coordinator::start_with(&m, OptLevel::FULL, 1, BackendKind::Cycle).unwrap();
+        let want = cyc.serve_batch(req()).unwrap();
+        cyc.shutdown();
+        let mut fast = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            3,
+            BackendKind::Fast,
+            ServeOptions { calibrate: true },
+        )
+        .unwrap();
+        let got = fast.serve_batch(req()).unwrap();
+        fast.shutdown();
+        assert_eq!(got[0].logits, want[0].logits);
+        assert_eq!(got[0].chip_cycles, want[0].chip_cycles, "snap calibration must be exact");
+        assert!((got[0].energy_uj - want[0].energy_uj).abs() < 1e-9);
+        assert_eq!(got[0].backend, "fast");
+    }
+
+    #[test]
     fn accuracy_accounting() {
         let m = fake_model();
-        let coord = Coordinator::start(&m, OptLevel::FULL, 2).unwrap();
+        let mut coord = Coordinator::start(&m, OptLevel::FULL, 2).unwrap();
         let reqs: Vec<_> = (0..4)
             .map(|i| InferenceRequest {
                 id: i,

@@ -3,14 +3,20 @@
 //! The cycle-level SoC interprets the RV32IM+CIM instruction stream one
 //! step at a time (~10^6 steps per KWS inference). This module instead
 //! executes the *same deployable artifact* — the linked [`Program`] — at
-//! the op level: it decodes the DRAM weight streams back into per-layer
-//! sign matrices (the inverse of `KwsPlan::build_dram_weights`), reads the
-//! folded-BN threshold/flip tables out of the DMEM image, and then runs
-//! the shared quantized kernels (`model::reference`) over them. Because
-//! both engines bottom out in the same integer semantics — the macro's
-//! `2*pop(x&sign&mask) - pop(x&mask)` MAC equals the reference conv — the
-//! logits are bit-identical to the cycle simulator's (asserted by
+//! the op level, and in the macro's own representation: the DRAM sign
+//! stream the compiler emits (`KwsPlan::build_dram_weights`, column-major
+//! sign words) *is already* the [`PackedLayer`] bit-plane form, so decode
+//! is a word copy, not an unpack, and inference runs the XNOR-popcount
+//! kernels (`model::reference::conv_layer_packed`) directly over it —
+//! `2*pop(x & sign) - pop(x)`, the same MAC the macro fires. Because both
+//! engines bottom out in identical integer semantics, the logits are
+//! bit-identical to the cycle simulator's (asserted by
 //! `rust/tests/backend_parity.rs`).
+//!
+//! The PR 1 scalar path (per-bit preprocess + per-channel i8 conv loops)
+//! is kept reachable through [`DecodedProgram::to_layer_specs`] /
+//! [`DecodedProgram::infer_scalar`] as the oracle and the benchmark
+//! baseline (`benches/backend_throughput.rs`).
 //!
 //! Nothing here consults the source `KwsModel`: if the compiler or weight
 //! streaming were wrong, fsim would disagree with the host reference, so
@@ -21,13 +27,14 @@ use anyhow::{anyhow, ensure, Result};
 use crate::compiler::Program;
 use crate::dataflow::plan;
 use crate::model::kws::LayerSpec;
-use crate::model::reference::{self, BitMap};
+use crate::model::reference::{self, BitMap, PackedLayer};
 
 /// A program image decoded back to tensor-level form.
 #[derive(Debug, Clone)]
 pub struct DecodedProgram {
-    /// Per-layer specs reconstructed from the DRAM sign/threshold streams.
-    pub layers: Vec<LayerSpec>,
+    /// Per-layer sign bit-planes, copied straight out of the DRAM weight
+    /// streams (the stream layout and the plane layout coincide).
+    pub layers: Vec<PackedLayer>,
     /// Folded-BN feature thresholds (DMEM table, one i32 per channel).
     pub thr: Vec<i32>,
     /// Per-word flip masks applied to each packed feature word.
@@ -74,6 +81,10 @@ impl DecodedProgram {
 
         // Per-layer weight streams: sign words (column-major bursts) then
         // threshold words, exactly as `build_dram_weights` laid them out.
+        // The sign words need no transformation — `co * aw + wj` stream
+        // order is the PackedLayer plane layout (bit set -> +1; the boot
+        // sequence arms the whole mask plane, so every cell is active:
+        // binary weights).
         let mut layers = Vec::with_capacity(p.layers.len());
         for lp in &p.layers {
             let bytes = program
@@ -96,33 +107,21 @@ impl DecodedProgram {
             ensure!(aw * 32 % c_in == 0, "layer {}: window not a whole kernel", lp.index);
             let kernel = aw * 32 / c_in;
             ensure!(kernel == 3, "fsim supports the paper's k=3 row-wise dataflow");
-            let rows = aw * 32;
 
-            // Sign bit set -> +1, clear -> -1 (the boot sequence arms the
-            // whole mask plane, so every cell is active: binary weights).
-            let mut weights = vec![-1i8; rows * lp.c_out];
-            for co in 0..lp.c_out {
-                for wj in 0..aw {
-                    let sign = le_u32(bytes, co * aw + wj);
-                    for b in 0..32 {
-                        if (sign >> b) & 1 == 1 {
-                            weights[(wj * 32 + b) * lp.c_out + co] = 1;
-                        }
-                    }
-                }
-            }
+            let planes: Vec<u32> = (0..lp.sign_words).map(|i| le_u32(bytes, i)).collect();
             let thresholds: Vec<i32> = if lp.binarized {
                 (0..lp.th_words).map(|j| le_u32(bytes, lp.sign_words + j) as i32).collect()
             } else {
                 Vec::new()
             };
-            layers.push(LayerSpec {
+            layers.push(PackedLayer {
                 c_in,
                 c_out: lp.c_out,
                 kernel,
                 pooled: lp.pooled,
                 binarized: lp.binarized,
-                weights,
+                plane_words: aw,
+                planes,
                 thresholds,
             });
         }
@@ -146,8 +145,40 @@ impl DecodedProgram {
 
     /// Integer preprocessing from the image's DMEM tables — the same
     /// pre-emphasis / magnitude / threshold-compare / flip pipeline the
-    /// emitted RISC-V code runs, over the quantized ADC samples.
+    /// emitted RISC-V code runs, vectorized: one frame's magnitudes in a
+    /// single pass, then 32 channel compares per packed word with the
+    /// flip word applied by XOR (decoded `c` is always a word multiple).
     pub fn preprocess(&self, audio: &[f32]) -> BitMap {
+        let q = reference::quantize_audio(audio);
+        let frame = self.audio_len / self.t;
+        let mut bits = BitMap::zero(self.t, self.c);
+        let wpr = bits.wpr();
+        let mut mags = vec![0i32; self.c];
+        for t in 0..self.t {
+            let base = t * frame;
+            for (ch, m) in mags.iter_mut().enumerate() {
+                let idx = base + ch;
+                let x = q.get(idx).copied().unwrap_or(0);
+                let prev = if idx == 0 { 0 } else { q.get(idx - 1).copied().unwrap_or(0) };
+                // y = 32x - 31*prev; |y| <= 32*2048 + 31*2048, fits i32.
+                *m = (32 * x - 31 * prev).abs();
+            }
+            for wi in 0..wpr {
+                let mut word = 0u32;
+                for b in 0..32 {
+                    if self.thr[wi * 32 + b] < mags[wi * 32 + b] {
+                        word |= 1 << b;
+                    }
+                }
+                bits.words[t * wpr + wi] = word ^ self.flip[wi];
+            }
+        }
+        bits
+    }
+
+    /// Bit-at-a-time preprocessing (the PR 1 form): the oracle for the
+    /// vectorized [`Self::preprocess`] and the benchmark baseline.
+    pub fn preprocess_scalar(&self, audio: &[f32]) -> BitMap {
         let q = reference::quantize_audio(audio);
         let frame = self.audio_len / self.t;
         let mut bits = BitMap::zero(self.t, self.c);
@@ -156,7 +187,6 @@ impl DecodedProgram {
                 let idx = t * frame + ch;
                 let x = q.get(idx).copied().unwrap_or(0);
                 let prev = if idx == 0 { 0 } else { q.get(idx - 1).copied().unwrap_or(0) };
-                // y = 32x - 31*prev; |y| <= 32*2048 + 31*2048, fits i32.
                 let f = (32 * x - 31 * prev).abs();
                 let flipped = (self.flip[ch / 32] >> (ch % 32)) & 1 == 1;
                 if (self.thr[ch] < f) != flipped {
@@ -167,14 +197,33 @@ impl DecodedProgram {
         bits
     }
 
-    /// Full inference: audio -> (logits, argmax). Runs the shared
-    /// quantized kernels over the decoded layers.
+    /// Full inference: audio -> (logits, argmax), through the packed
+    /// XNOR-popcount kernels over the decoded bit-planes.
     pub fn infer(&self, audio: &[f32]) -> (Vec<f32>, usize) {
         let mut x = self.preprocess(audio);
-        for spec in &self.layers[..self.layers.len() - 1] {
+        for packed in &self.layers[..self.layers.len() - 1] {
+            x = reference::conv_layer_packed(&x, packed);
+        }
+        let logits = reference::final_layer_gap_packed(&x, self.layers.last().unwrap());
+        let predicted = reference::argmax(&logits);
+        (logits, predicted)
+    }
+
+    /// Unpack every layer to the scalar tap-major/channel-minor form
+    /// (done once; pair with [`Self::infer_scalar`]).
+    pub fn to_layer_specs(&self) -> Vec<LayerSpec> {
+        self.layers.iter().map(PackedLayer::to_spec).collect()
+    }
+
+    /// The PR 1 scalar serving path over pre-unpacked `specs`: per-bit
+    /// preprocess + per-channel i8 conv loops. Kept as the oracle and the
+    /// throughput baseline for the packed engine.
+    pub fn infer_scalar(&self, specs: &[LayerSpec], audio: &[f32]) -> (Vec<f32>, usize) {
+        let mut x = self.preprocess_scalar(audio);
+        for spec in &specs[..specs.len() - 1] {
             x = reference::conv_layer(&x, spec);
         }
-        let logits = reference::final_layer_gap(&x, self.layers.last().unwrap());
+        let logits = reference::final_layer_gap(&x, specs.last().unwrap());
         let predicted = reference::argmax(&logits);
         (logits, predicted)
     }
@@ -197,14 +246,18 @@ mod tests {
         assert_eq!(d.c, m.c);
         assert_eq!(d.n_classes, m.n_classes);
         for (got, want) in d.layers.iter().zip(&m.layers) {
-            assert_eq!(got.c_in, want.c_in);
-            assert_eq!(got.c_out, want.c_out);
-            assert_eq!(got.kernel, want.kernel);
-            assert_eq!(got.pooled, want.pooled);
-            assert_eq!(got.binarized, want.binarized);
-            // Binary models round-trip through the sign stream exactly.
-            assert_eq!(got.weights, want.weights);
-            assert_eq!(got.thresholds, want.thresholds);
+            // The decoded planes ARE the packed form of the source layer:
+            // the DRAM stream round-trips without any re-packing.
+            assert_eq!(got, &PackedLayer::from_spec(want));
+            // And unpacking recovers the scalar weights exactly.
+            let spec = got.to_spec();
+            assert_eq!(spec.weights, want.weights);
+            assert_eq!(spec.thresholds, want.thresholds);
+            assert_eq!(spec.c_in, want.c_in);
+            assert_eq!(spec.c_out, want.c_out);
+            assert_eq!(spec.kernel, want.kernel);
+            assert_eq!(spec.pooled, want.pooled);
+            assert_eq!(spec.binarized, want.binarized);
         }
     }
 
@@ -219,6 +272,32 @@ mod tests {
             let want = crate::model::reference::infer(&m, &audio);
             assert_eq!(logits, want, "seed {seed}");
             assert_eq!(predicted, crate::model::reference::argmax(&want));
+        }
+    }
+
+    #[test]
+    fn vectorized_preprocess_matches_scalar() {
+        let m = KwsModel::synthetic(7);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let d = DecodedProgram::decode(&prog).unwrap();
+        for seed in [0u64, 5, 21] {
+            let audio = dataset::synth_utterance(seed as usize % 12, seed, m.audio_len, 0.37);
+            assert_eq!(d.preprocess(&audio), d.preprocess_scalar(&audio), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn packed_inference_matches_scalar_path() {
+        let m = KwsModel::synthetic(9);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let d = DecodedProgram::decode(&prog).unwrap();
+        let specs = d.to_layer_specs();
+        for seed in 0..4u64 {
+            let audio = dataset::synth_utterance(seed as usize % 12, seed, m.audio_len, 0.37);
+            let (packed, pp) = d.infer(&audio);
+            let (scalar, sp) = d.infer_scalar(&specs, &audio);
+            assert_eq!(packed, scalar, "seed {seed}");
+            assert_eq!(pp, sp);
         }
     }
 

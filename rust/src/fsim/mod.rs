@@ -5,8 +5,11 @@
 //! ~10^6 simulated steps per inference — far too slow to serve traffic.
 //! [`FastSim`] executes the same [`Program`] in three parts:
 //!
-//! * [`exec`]    — decodes the image's weight streams + DMEM tables and
-//!   runs the shared quantized kernels: logits bit-identical to the SoC.
+//! * [`exec`]    — decodes the image's weight streams + DMEM tables
+//!   (straight into packed sign bit-planes: the stream layout *is* the
+//!   [`model::reference::PackedLayer`](crate::model::reference::PackedLayer)
+//!   layout) and runs the XNOR-popcount kernels over them: logits
+//!   bit-identical to the SoC.
 //! * [`latency`] — an analytical cycle/phase model that mirrors the code
 //!   generator's emission structure (calibrated against
 //!   `sim::stats::PhaseBreakdown`; parity-tested to ≤ 5% error).

@@ -16,7 +16,7 @@ use cimrv::backend::{self, BackendKind, InferenceBackend};
 use cimrv::baselines::{comparison, OptLevel};
 use cimrv::compiler::build_kws_program;
 use cimrv::coordinator::report::{ladder_json, render_ladder, LadderPoint};
-use cimrv::coordinator::{Coordinator, InferenceRequest};
+use cimrv::coordinator::{Coordinator, InferenceRequest, ServeOptions};
 use cimrv::mem::dram::DramConfig;
 use cimrv::model::{dataset, reference, KwsModel};
 use cimrv::runtime::GoldenModel;
@@ -24,7 +24,7 @@ use cimrv::sim::Soc;
 use cimrv::util::cli::Args;
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["no-golden", "json", "verbose"])?;
+    let args = Args::parse(&["no-golden", "json", "verbose", "calibrate"])?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("ablation") => cmd_ablation(&args),
@@ -36,8 +36,8 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: cimrv <run|ablation|table1|accuracy|serve|trace|disasm> [--opt LEVEL] \
-                 [--backend cycle|fast] [--n N] [--workers W] [--label L] [--seed S] [--skip K] \
-                 [--no-golden] [--json]"
+                 [--backend cycle|fast] [--calibrate] [--n N] [--workers W] [--label L] \
+                 [--seed S] [--skip K] [--no-golden] [--json]"
             );
             Ok(())
         }
@@ -186,7 +186,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.opt_usize("n", 24)?;
     let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
     let kind = BackendKind::parse(&args.opt_or("backend", "cycle"))?;
-    let coord = Coordinator::start_with(&model, opt, workers, kind)?;
+    let opts = ServeOptions { calibrate: args.flag("calibrate") };
+    if opts.calibrate && kind == BackendKind::Cycle {
+        eprintln!("note: --calibrate is a fast-backend option (cycle is already exact)");
+    }
+    let mut coord = Coordinator::start_with_options(&model, opt, workers, kind, opts)?;
+    if opts.calibrate && kind == BackendKind::Fast {
+        println!("calibrated from one cycle-level run: served latency/energy are exact");
+    }
     let t0 = std::time::Instant::now();
     let reqs: Vec<_> = (0..n)
         .map(|i| InferenceRequest {

@@ -8,41 +8,251 @@
 //! not needed — f32 division of an integer-valued sum by a small integer
 //! matches jnp.mean's float math for our magnitudes... see note on `gap`).
 
-use super::kws::KwsModel;
+use super::kws::{KwsModel, LayerSpec};
 
 /// A binary (t, c) feature map, bit-packed per row: `words_per_row =
-/// ceil(c/32)`, bit (r, ch) at word `r*wpr + ch/32`, bit `ch%32`.
+/// ceil(c/32)`, bit (r, ch) at word `r*wpr + ch/32`, bit `ch%32`. Bits at
+/// or above `c` in a row's last word are always zero — the packed kernels
+/// rely on that to treat whole rows as word vectors.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BitMap {
     pub t: usize,
     pub c: usize,
+    /// Words per row, cached so `get`/`set` skip the division.
+    wpr: usize,
     pub words: Vec<u32>,
 }
 
 impl BitMap {
     pub fn zero(t: usize, c: usize) -> Self {
-        BitMap { t, c, words: vec![0; t * c.div_ceil(32)] }
+        let wpr = c.div_ceil(32);
+        BitMap { t, c, wpr, words: vec![0; t * wpr] }
     }
 
+    #[inline]
     pub fn wpr(&self) -> usize {
-        self.c.div_ceil(32)
+        self.wpr
     }
 
     #[inline]
     pub fn get(&self, r: usize, ch: usize) -> bool {
-        (self.words[r * self.wpr() + ch / 32] >> (ch % 32)) & 1 == 1
+        (self.words[r * self.wpr + ch / 32] >> (ch % 32)) & 1 == 1
     }
 
     #[inline]
     pub fn set(&mut self, r: usize, ch: usize) {
-        let w = self.wpr();
-        self.words[r * w + ch / 32] |= 1 << (ch % 32);
+        self.words[r * self.wpr + ch / 32] |= 1 << (ch % 32);
+    }
+
+    /// Row `r` as its packed word slice (word-level iteration for the
+    /// packed kernels; padding bits above `c` are zero).
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u32] {
+        &self.words[r * self.wpr..(r + 1) * self.wpr]
     }
 
     /// Count of set bits (tests/diagnostics).
     pub fn popcount(&self) -> u64 {
         self.words.iter().map(|w| w.count_ones() as u64).sum()
     }
+}
+
+/// A conv layer in the macro's native form: one sign bit-plane per output
+/// channel, `ceil(kernel*c_in/32)` words each, bit `r` set ⇔ weight
+/// `(r, co)` is +1. The planes are stored column-major (`co`-major,
+/// word-minor) — byte-for-byte the layout of the compiled image's DRAM
+/// sign stream (`KwsPlan::build_dram_weights`) and of one macro column in
+/// the weight port (`cim::weight_map`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedLayer {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kernel: usize,
+    pub pooled: bool,
+    pub binarized: bool,
+    /// Words per plane: `ceil(kernel*c_in/32)`.
+    pub plane_words: usize,
+    /// Sign planes, `c_out * plane_words` words; bits above `rows()` in a
+    /// plane's last word are zero.
+    pub planes: Vec<u32>,
+    /// Per-output-channel SA thresholds (empty for the raw final layer).
+    pub thresholds: Vec<i32>,
+}
+
+impl PackedLayer {
+    /// Pack a scalar layer's ±1 weights into sign bit-planes.
+    pub fn from_spec(spec: &LayerSpec) -> Self {
+        let rows = spec.rows();
+        let pw = rows.div_ceil(32);
+        let mut planes = vec![0u32; spec.c_out * pw];
+        for co in 0..spec.c_out {
+            let plane = &mut planes[co * pw..(co + 1) * pw];
+            for r in 0..rows {
+                if spec.weight(r, co) > 0 {
+                    plane[r / 32] |= 1 << (r % 32);
+                }
+            }
+        }
+        PackedLayer {
+            c_in: spec.c_in,
+            c_out: spec.c_out,
+            kernel: spec.kernel,
+            pooled: spec.pooled,
+            binarized: spec.binarized,
+            plane_words: pw,
+            planes,
+            thresholds: spec.thresholds.clone(),
+        }
+    }
+
+    /// Unpack to the tap-major/channel-minor scalar form (the oracle
+    /// representation; also the PR 1 serving representation).
+    pub fn to_spec(&self) -> LayerSpec {
+        let rows = self.rows();
+        let mut weights = vec![-1i8; rows * self.c_out];
+        for co in 0..self.c_out {
+            let plane = self.plane(co);
+            for (r, w) in weights.iter_mut().skip(co).step_by(self.c_out).enumerate() {
+                if (plane[r / 32] >> (r % 32)) & 1 == 1 {
+                    *w = 1;
+                }
+            }
+        }
+        LayerSpec {
+            c_in: self.c_in,
+            c_out: self.c_out,
+            kernel: self.kernel,
+            pooled: self.pooled,
+            binarized: self.binarized,
+            weights,
+            thresholds: self.thresholds.clone(),
+        }
+    }
+
+    /// Wordlines this layer occupies (`kernel * c_in`).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.kernel * self.c_in
+    }
+
+    /// Output channel `co`'s sign plane.
+    #[inline]
+    pub fn plane(&self, co: usize) -> &[u32] {
+        &self.planes[co * self.plane_words..(co + 1) * self.plane_words]
+    }
+}
+
+/// OR `src`'s bits into `dst` starting at bit `bit_off`. Bits of `src`
+/// beyond its meaningful length must be zero (BitMap's row-padding
+/// guarantee), so only real feature bits land in `dst`.
+#[inline]
+fn or_shifted(dst: &mut [u32], bit_off: usize, src: &[u32]) {
+    let word = bit_off / 32;
+    let sh = (bit_off % 32) as u32;
+    if sh == 0 {
+        for (d, &s) in dst[word..].iter_mut().zip(src) {
+            *d |= s;
+        }
+        return;
+    }
+    for (i, &s) in src.iter().enumerate() {
+        dst[word + i] |= s << sh;
+        let hi = s >> (32 - sh);
+        if hi != 0 {
+            dst[word + i + 1] |= hi;
+        }
+    }
+}
+
+/// Gather the im2col window at position `t` into packed words: input row
+/// `t + j - pad` occupies bits `[j*c_in, (j+1)*c_in)`, matching the
+/// wordline order `r = j*c_in + ci` of the scalar kernels and the macro.
+/// Padding rows (outside the map) contribute zeros.
+fn gather_window(x: &BitMap, kernel: usize, t: usize, out: &mut [u32]) {
+    let pad = (kernel - 1) / 2;
+    out.fill(0);
+    for j in 0..kernel {
+        let tt = t as isize + j as isize - pad as isize;
+        if tt < 0 || tt >= x.t as isize {
+            continue;
+        }
+        or_shifted(out, j * x.c, x.row_words(tt as usize));
+    }
+}
+
+/// `conv_sums` in the macro's arithmetic: with binary ±1 weights every
+/// cell is active, so the MAC collapses to
+/// `sum[co] = 2*popcount(x & sign[co]) - popcount(x)`
+/// over the packed window words — one AND+popcount per 32 taps instead of
+/// one scalar add per set input bit per channel.
+fn conv_sums_packed_into(x: &BitMap, w: &PackedLayer, t: usize, window: &mut [u32], sums: &mut [i32]) {
+    debug_assert_eq!(x.c, w.c_in, "feature map width must match the layer");
+    gather_window(x, w.kernel, t, window);
+    let act: u32 = window.iter().map(|v| v.count_ones()).sum();
+    for (co, s) in sums.iter_mut().enumerate() {
+        let plane = w.plane(co);
+        let mut pos = 0u32;
+        for (xv, pv) in window.iter().zip(plane) {
+            pos += (xv & pv).count_ones();
+        }
+        *s = (2 * pos) as i32 - act as i32;
+    }
+}
+
+/// Packed twin of [`conv_sums`]: bit-identical sums, popcount arithmetic.
+pub fn conv_sums_packed(x: &BitMap, w: &PackedLayer, t: usize) -> Vec<i32> {
+    let mut window = vec![0u32; w.plane_words];
+    let mut sums = vec![0i32; w.c_out];
+    conv_sums_packed_into(x, w, t, &mut window, &mut sums);
+    sums
+}
+
+/// Packed twin of [`conv_layer`] (+ optional fused 2:1 max pool).
+pub fn conv_layer_packed(x: &BitMap, layer: &PackedLayer) -> BitMap {
+    assert!(layer.binarized);
+    let t_out = if layer.pooled { x.t / 2 } else { x.t };
+    let mut out = BitMap::zero(t_out, layer.c_out);
+    let mut window = vec![0u32; layer.plane_words];
+    let mut sums = vec![0i32; layer.c_out];
+    for t in 0..x.t {
+        let ot = if layer.pooled { t / 2 } else { t };
+        if ot >= t_out {
+            break; // odd tail dropped by pooling
+        }
+        conv_sums_packed_into(x, layer, t, &mut window, &mut sums);
+        for (co, &s) in sums.iter().enumerate() {
+            if s > layer.thresholds[co] {
+                out.set(ot, co); // pooled max == OR of the pair
+            }
+        }
+    }
+    out
+}
+
+/// Packed twin of [`final_layer_gap`]: raw sums + GAP, f32 division last.
+pub fn final_layer_gap_packed(x: &BitMap, layer: &PackedLayer) -> Vec<f32> {
+    assert!(!layer.binarized);
+    let mut acc = vec![0i64; layer.c_out];
+    let mut window = vec![0u32; layer.plane_words];
+    let mut sums = vec![0i32; layer.c_out];
+    for t in 0..x.t {
+        conv_sums_packed_into(x, layer, t, &mut window, &mut sums);
+        for (a, &s) in acc.iter_mut().zip(sums.iter()) {
+            *a += s as i64;
+        }
+    }
+    acc.iter().map(|&s| s as f32 / x.t as f32).collect()
+}
+
+/// Full inference through the packed engine (packs the model's layers
+/// once per call; hot paths pack at load time instead — see
+/// `fsim::DecodedProgram`). Bit-identical to [`infer`].
+pub fn infer_packed(model: &KwsModel, audio: &[f32]) -> Vec<f32> {
+    let mut x = preprocess(model, audio);
+    for layer in &model.layers[..model.layers.len() - 1] {
+        x = conv_layer_packed(&x, &PackedLayer::from_spec(layer));
+    }
+    final_layer_gap_packed(&x, &PackedLayer::from_spec(model.layers.last().unwrap()))
 }
 
 /// ADC quantization: float waveform -> integer samples (11 bit + sign),
@@ -263,6 +473,79 @@ mod tests {
                     unpooled.get(2 * t, co) || unpooled.get(2 * t + 1, co)
                 );
             }
+        }
+    }
+
+    #[test]
+    fn bitmap_row_words_and_padding() {
+        let mut b = BitMap::zero(3, 40);
+        b.set(1, 0);
+        b.set(1, 39);
+        assert_eq!(b.wpr(), 2);
+        assert_eq!(b.row_words(0), &[0, 0]);
+        assert_eq!(b.row_words(1), &[1, 1 << 7]);
+        // Padding bits above c stay zero (packed-kernel invariant).
+        assert_eq!(b.row_words(1)[1] >> 8, 0);
+    }
+
+    #[test]
+    fn packed_roundtrips_through_spec() {
+        let layer = tiny_layer(5, 3, true, true);
+        let packed = PackedLayer::from_spec(&layer);
+        assert_eq!(packed.plane_words, (3 * 5usize).div_ceil(32));
+        let back = packed.to_spec();
+        assert_eq!(back.weights, layer.weights);
+        assert_eq!(back.thresholds, layer.thresholds);
+        assert_eq!((back.c_in, back.c_out, back.kernel), (5, 3, 3));
+        assert!(back.pooled && back.binarized);
+    }
+
+    #[test]
+    fn packed_sums_match_scalar_including_edges() {
+        // 70 channels: rows = 210 bits -> 7 window words, non-aligned rows.
+        let layer = tiny_layer(70, 5, false, true);
+        let packed = PackedLayer::from_spec(&layer);
+        let mut x = BitMap::zero(9, 70);
+        for t in 0..9 {
+            for c in 0..70 {
+                if (t * 11 + c * 5) % 7 < 3 {
+                    x.set(t, c);
+                }
+            }
+        }
+        for t in 0..9 {
+            assert_eq!(conv_sums_packed(&x, &packed, t), conv_sums(&x, &layer, t), "t {t}");
+        }
+    }
+
+    #[test]
+    fn packed_layer_and_gap_match_scalar() {
+        let conv = tiny_layer(40, 33, true, true);
+        let last = tiny_layer(33, 12, false, false);
+        let mut x = BitMap::zero(11, 40); // odd t: pooling drops the tail
+        for t in 0..11 {
+            for c in 0..40 {
+                if (t * 13 + c * 3) % 5 < 2 {
+                    x.set(t, c);
+                }
+            }
+        }
+        let mid_scalar = conv_layer(&x, &conv);
+        let mid_packed = conv_layer_packed(&x, &PackedLayer::from_spec(&conv));
+        assert_eq!(mid_packed, mid_scalar);
+        assert_eq!(
+            final_layer_gap_packed(&mid_packed, &PackedLayer::from_spec(&last)),
+            final_layer_gap(&mid_scalar, &last)
+        );
+    }
+
+    #[test]
+    fn infer_packed_matches_infer() {
+        let model = crate::model::KwsModel::synthetic(17);
+        for seed in 0..3u64 {
+            let audio =
+                crate::model::dataset::synth_utterance(seed as usize % 12, seed, model.audio_len, 0.3);
+            assert_eq!(infer_packed(&model, &audio), infer(&model, &audio), "seed {seed}");
         }
     }
 

@@ -79,7 +79,7 @@ fn calibrated_fast_backend_is_cycle_exact() {
     let audio = dataset::synth_utterance(1, 4, m.audio_len, 0.37);
     let measured = soc.infer(&audio).unwrap();
 
-    let fast = FastSim::new(prog, DramConfig::default())
+    let fast = FastSim::new(prog.clone(), DramConfig::default())
         .unwrap()
         .with_calibration(Calibration::from_run(&measured));
     // Latency is data-independent, so the calibration from one utterance
@@ -91,6 +91,45 @@ fn calibrated_fast_backend_is_cycle_exact() {
     assert_eq!(got.instret, want_other.instret);
     assert_eq!(got.logits, want_other.logits);
     assert!((got.energy.total_pj - want_other.energy.total_pj).abs() < 1e-6);
+
+    // The backend-level wrapper carries the same calibration semantics.
+    let mut be = backend::FastBackend::new(prog, DramConfig::default())
+        .unwrap()
+        .with_calibration(Calibration::from_run(&measured));
+    let r = be.run(&other).unwrap();
+    assert_eq!(r.cycles, want_other.cycles);
+    assert_eq!(r.logits, want_other.logits);
+}
+
+#[test]
+fn packed_kernels_bit_identical_to_scalar_oracle_and_cycle_soc() {
+    // The tentpole contract: the XNOR-popcount engine, the PR 1 scalar
+    // kernels, and the cycle-level SoC all agree bit-for-bit on the same
+    // compiled image.
+    for model_seed in [4u64, 23] {
+        let m = KwsModel::synthetic(model_seed);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let mut soc = Soc::new(prog.clone(), DramConfig::default()).unwrap();
+        let fast = FastSim::new(prog, DramConfig::default()).unwrap();
+        let specs = fast.decoded().to_layer_specs();
+        for audio_seed in [0u64, 8, 31] {
+            let audio =
+                dataset::synth_utterance(audio_seed as usize % 12, audio_seed, m.audio_len, 0.37);
+            let cycle = soc.infer(&audio).unwrap();
+            let (packed_logits, packed_pred) = fast.decoded().infer(&audio);
+            let (scalar_logits, scalar_pred) = fast.decoded().infer_scalar(&specs, &audio);
+            assert_eq!(
+                packed_logits, cycle.logits,
+                "packed vs cycle: model {model_seed} audio {audio_seed}"
+            );
+            assert_eq!(
+                packed_logits, scalar_logits,
+                "packed vs scalar: model {model_seed} audio {audio_seed}"
+            );
+            assert_eq!(packed_pred, cycle.predicted);
+            assert_eq!(packed_pred, scalar_pred);
+        }
+    }
 }
 
 #[test]

@@ -124,7 +124,7 @@ fn iss_accuracy_matches_host_on_subset() {
 fn coordinator_end_to_end_on_trained_model() {
     use cimrv::coordinator::{Coordinator, InferenceRequest};
     let Some(m) = model() else { return };
-    let coord = Coordinator::start(&m, OptLevel::FULL, 2).unwrap();
+    let mut coord = Coordinator::start(&m, OptLevel::FULL, 2).unwrap();
     let reqs: Vec<_> = (0..4)
         .map(|i| InferenceRequest {
             id: i as u64,

@@ -1,0 +1,160 @@
+//! Packed-vs-scalar kernel parity: the XNOR-popcount engine
+//! (`PackedLayer` + `conv_*_packed`) must be bit-identical to the scalar
+//! i8 oracle on randomized layers — odd and even `t`, `c_in` that is not
+//! a word multiple, pooled and unpooled, kernels 1/3/5 (edge-padding rows
+//! included: every position of small maps is checked, so the zero-padded
+//! windows at t=0 and t=t-1 are always exercised). No artifacts needed.
+
+use cimrv::model::kws::LayerSpec;
+use cimrv::model::reference::{
+    conv_layer, conv_layer_packed, conv_sums, conv_sums_packed, final_layer_gap,
+    final_layer_gap_packed, BitMap, PackedLayer,
+};
+use cimrv::util::proptest::check;
+use cimrv::util::rng::Rng;
+
+fn random_layer(rng: &mut Rng, binarized: bool) -> LayerSpec {
+    let kernel = [1, 3, 5][rng.range(0, 3)];
+    // Deliberately spans word-unaligned widths (not multiples of 32).
+    let c_in = rng.range(1, 100);
+    let c_out = rng.range(1, 40);
+    LayerSpec {
+        c_in,
+        c_out,
+        kernel,
+        pooled: binarized && rng.bool(0.5),
+        binarized,
+        weights: (0..kernel * c_in * c_out).map(|_| rng.pm1()).collect(),
+        thresholds: if binarized {
+            (0..c_out).map(|_| rng.range(0, 9) as i32 - 4).collect()
+        } else {
+            vec![]
+        },
+    }
+}
+
+fn random_bits(rng: &mut Rng, t: usize, c: usize) -> BitMap {
+    let mut x = BitMap::zero(t, c);
+    let density = rng.f64();
+    for r in 0..t {
+        for ch in 0..c {
+            if rng.bool(density) {
+                x.set(r, ch);
+            }
+        }
+    }
+    x
+}
+
+#[test]
+fn prop_packed_conv_sums_match_scalar() {
+    check("packed conv sums", 120, |rng| {
+        let layer = random_layer(rng, true);
+        let t = rng.range(1, 16); // odd and even, incl t=1 (all-padding windows)
+        let x = random_bits(rng, t, layer.c_in);
+        let packed = PackedLayer::from_spec(&layer);
+        for pos in 0..t {
+            assert_eq!(
+                conv_sums_packed(&x, &packed, pos),
+                conv_sums(&x, &layer, pos),
+                "k {} c_in {} c_out {} t {t} pos {pos}",
+                layer.kernel,
+                layer.c_in,
+                layer.c_out
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_packed_conv_layer_matches_scalar() {
+    check("packed conv layer", 120, |rng| {
+        let layer = random_layer(rng, true);
+        // Odd t exercises the dropped pooling tail.
+        let t = rng.range(2, 24);
+        let x = random_bits(rng, t, layer.c_in);
+        let packed = PackedLayer::from_spec(&layer);
+        assert_eq!(
+            conv_layer_packed(&x, &packed),
+            conv_layer(&x, &layer),
+            "k {} c_in {} c_out {} pooled {} t {t}",
+            layer.kernel,
+            layer.c_in,
+            layer.c_out,
+            layer.pooled
+        );
+    });
+}
+
+#[test]
+fn prop_packed_gap_matches_scalar() {
+    check("packed GAP", 100, |rng| {
+        let layer = random_layer(rng, false);
+        let t = rng.range(1, 20);
+        let x = random_bits(rng, t, layer.c_in);
+        let packed = PackedLayer::from_spec(&layer);
+        // f32 equality is exact here: both sides divide the same integer
+        // sums by the same t.
+        assert_eq!(
+            final_layer_gap_packed(&x, &packed),
+            final_layer_gap(&x, &layer),
+            "k {} c_in {} c_out {} t {t}",
+            layer.kernel,
+            layer.c_in,
+            layer.c_out
+        );
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    check("pack/unpack roundtrip", 150, |rng| {
+        let layer = random_layer(rng, rng.bool(0.5));
+        let packed = PackedLayer::from_spec(&layer);
+        assert_eq!(packed.plane_words, layer.rows().div_ceil(32));
+        // Plane padding bits above rows() stay clear (kernel invariant).
+        let tail = layer.rows() % 32;
+        if tail != 0 {
+            for co in 0..layer.c_out {
+                assert_eq!(packed.plane(co)[packed.plane_words - 1] >> tail, 0, "co {co}");
+            }
+        }
+        let back = packed.to_spec();
+        assert_eq!(back.weights, layer.weights);
+        assert_eq!(back.thresholds, layer.thresholds);
+    });
+}
+
+#[test]
+fn packed_chain_matches_scalar_on_a_model_shaped_stack() {
+    // A Table-II-shaped two-conv + GAP stack, scalar vs packed end to end,
+    // with a word-unaligned middle width.
+    let mut rng = Rng::new(0xBEEF);
+    let mut mk = |c_in: usize, c_out: usize, pooled: bool, binarized: bool| LayerSpec {
+        c_in,
+        c_out,
+        kernel: 3,
+        pooled,
+        binarized,
+        weights: (0..3 * c_in * c_out).map(|_| rng.pm1()).collect(),
+        thresholds: if binarized {
+            (0..c_out).map(|_| rng.range(0, 9) as i32 - 4).collect()
+        } else {
+            vec![]
+        },
+    };
+    let layers = [mk(64, 48, true, true), mk(48, 33, true, true), mk(33, 12, false, false)];
+    let mut rng2 = Rng::new(0xF00D);
+    let x0 = random_bits(&mut rng2, 21, 64); // odd t through two pools
+    let mut scalar = x0.clone();
+    let mut packed = x0;
+    for l in &layers[..2] {
+        scalar = conv_layer(&scalar, l);
+        packed = conv_layer_packed(&packed, &PackedLayer::from_spec(l));
+        assert_eq!(packed, scalar);
+    }
+    assert_eq!(
+        final_layer_gap_packed(&packed, &PackedLayer::from_spec(&layers[2])),
+        final_layer_gap(&scalar, &layers[2])
+    );
+}

@@ -144,8 +144,26 @@ fn prop_macro_mac_equals_naive_reference() {
         let mut m = CimMacro::new();
         m.cfg.mode = mode;
         m.cfg.window_words = (rows / 32) as u8;
-        let img = weight_map::WeightImage::from_layer(mode, rows, cols, |r, c| w[r][c], &th);
-        m.load_image(&img).unwrap();
+        if ternary {
+            let img = weight_map::WeightImage::from_layer(mode, rows, cols, |r, c| w[r][c], &th);
+            m.load_image(&img).unwrap();
+        } else {
+            // Binary (±1) layers go through the packed-plane load path —
+            // the same planes the fsim kernels use — so `load_packed` is
+            // exercised across random modes and shapes too.
+            use cimrv::model::kws::LayerSpec;
+            use cimrv::model::reference::PackedLayer;
+            let spec = LayerSpec {
+                c_in: rows,
+                c_out: cols,
+                kernel: 1,
+                pooled: false,
+                binarized: true,
+                weights: (0..rows * cols).map(|i| w[i / cols][i % cols]).collect(),
+                thresholds: th.clone(),
+            };
+            m.load_packed(&PackedLayer::from_spec(&spec), 0, 0).unwrap();
+        }
         for j in 0..rows / 32 {
             let mut word = 0u32;
             for b in 0..32 {
