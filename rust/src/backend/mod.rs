@@ -11,8 +11,22 @@
 //!   bit-identical logits, analytical (or snap-calibrated) timing, orders
 //!   of magnitude more inferences/sec (`benches/backend_throughput.rs`).
 //!
-//! This seam is where future scaling work lands: request batching,
-//! multi-macro sharding and remote workers all implement the same trait.
+//! ## The shard seam
+//!
+//! Multi-macro sharding threads through this boundary *in the program
+//! image*, not the trait: `compiler::build_kws_program_sharded(model,
+//! opt, n_macros)` stamps a [`crate::dataflow::shard::ShardPlan`] into
+//! `Program::shards`, and each backend honors it natively — the SoC sizes
+//! its macro bank and executes the interleaved fire sequences the sharded
+//! codegen emits; `FastSim` pre-slices per-macro `PackedLayer` groups and
+//! concatenates channel ranges (optionally on one thread per macro).
+//! Every `RunResult` carries `shard_fires` (per-macro utilization), which
+//! the coordinator aggregates into `ServiceStats::shard_fires`. Sharded
+//! and unsharded logits are bit-identical by construction — enforced by
+//! `rust/tests/shard_parity.rs`.
+//!
+//! Remaining scaling work on this seam: request batching on the shared
+//! `FastSim` and remote workers (both implement the same trait).
 
 pub mod cycle;
 pub mod fast;

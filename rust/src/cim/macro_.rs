@@ -476,6 +476,18 @@ mod tests {
     }
 
     #[test]
+    fn default_is_a_fresh_macro() {
+        // `CimMacro::default()` (used by container types and the macro
+        // bank) must equal `new()`: zeroed planes/stats, X-mode config.
+        let mut d = CimMacro::default();
+        assert_eq!(d.stats.fires, 0);
+        assert_eq!(d.port_read(weight_map::SIGN_BASE).unwrap(), 0);
+        assert_eq!(d.port_read(weight_map::MASK_BASE).unwrap(), 0);
+        assert!(matches!(d.cfg.mode, Mode::X));
+        assert_eq!(d.cfg.window_words, 32);
+    }
+
+    #[test]
     fn stats_accumulate() {
         let mut m = CimMacro::new();
         m.cfg.window_words = 1;

@@ -19,6 +19,6 @@ pub mod mode;
 pub mod variation;
 pub mod weight_map;
 
-pub use macro_::CimMacro;
+pub use macro_::{CimMacro, CimStats};
 pub use mode::{CimConfig, Mode};
 pub use variation::VariationModel;

@@ -16,6 +16,7 @@ use crate::baselines::OptLevel;
 use crate::cim::mode::{CimConfig, Mode};
 use crate::cim::weight_map;
 use crate::dataflow::plan::{self, KwsPlan};
+use crate::dataflow::shard::ShardPlan;
 use crate::isa::{CimInstr, Reg};
 use crate::mem::layout;
 use crate::model::KwsModel;
@@ -55,10 +56,24 @@ fn emit_phase(a: &mut Asm, id: u32) {
     mmio_sw(a, Reg::T0, layout::MMIO_HOST_PHASE);
 }
 
+/// Select a macro of the bank (`m`), or broadcast with
+/// `layout::CIM_SEL_BROADCAST as i64`. Only emitted by sharded programs
+/// (`n_macros > 1`) so single-macro images stay byte-identical.
+fn emit_sel(a: &mut Asm, m: i64) {
+    a.li(Reg::T0, m);
+    mmio_sw(a, Reg::T0, layout::MMIO_CIM_SEL);
+}
+
+const SEL_BROADCAST: i64 = layout::CIM_SEL_BROADCAST as i64;
+
 /// Boot: stage audio into DMEM (uDMA), initialise the macro mask plane to
 /// all-ones (binary weights: every cell active), set MMIO base register.
-fn emit_boot(a: &mut Asm, p: &KwsPlan, opt: OptLevel) {
+fn emit_boot(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, opt: OptLevel) {
     a.li(Reg::T6, layout::MMIO_BASE as i64);
+    if shards.n_macros > 1 {
+        // One broadcast burst arms every macro's mask plane below.
+        emit_sel(a, SEL_BROADCAST);
+    }
     // Audio: DRAM -> DMEM (background; mask init runs meanwhile).
     emit_udma_start(
         a,
@@ -148,9 +163,13 @@ fn emit_preprocess(a: &mut Asm, model: &KwsModel) {
 }
 
 /// Weight phase of layer `i`: make the stream resident in the weight-SRAM
-/// half, then burst it into the macro with `cim_w`.
-fn emit_weight_phase(a: &mut Asm, p: &KwsPlan, i: usize, opt: OptLevel) {
+/// half, then burst it into the macro(s) with `cim_w`. Under sharding each
+/// macro receives its own contiguous column range of the stream (the sign
+/// words are column-major, so a channel range is a contiguous slice) and
+/// its shard's thresholds at SA 0..len.
+fn emit_weight_phase(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: OptLevel) {
     let lp = &p.layers[i];
+    let multi = shards.n_macros > 1;
     if opt.weight_fusion {
         // The descriptor chain was enqueued at boot (audio first, then one
         // descriptor per layer); wait until this layer's stream (done
@@ -171,44 +190,69 @@ fn emit_weight_phase(a: &mut Asm, p: &KwsPlan, i: usize, opt: OptLevel) {
         emit_udma_wait(a);
     }
 
-    // cim_w burst: signs, column-major. a1 = stream ptr, a2 = port addr.
     let aw = lp.window_words;
-    a.li(Reg::A1, layout::WT_BASE as i64 + lp.wt_offset as i64);
-    a.li(Reg::A2, weight_map::SIGN_BASE as i64);
-    a.li(Reg::S5, lp.c_out as i64);
-    let col_top = a.here_label();
-    for j in 0..aw {
-        a.cim(CimInstr::write(Reg::A1, j as u16, Reg::A2, j as u16));
-    }
-    a.addi(Reg::A1, Reg::A1, (4 * aw) as i32);
-    a.addi(Reg::A2, Reg::A2, Mode::X.col_words() as i32);
-    a.addi(Reg::S5, Reg::S5, -1);
-    a.bne(Reg::S5, Reg::ZERO, col_top);
-
-    // Thresholds (binarized layers): one word per output channel.
-    if lp.th_words > 0 {
-        a.li(Reg::A2, weight_map::TH_BASE as i64);
-        a.li(Reg::S5, lp.th_words as i64);
-        let th_top = a.here_label();
-        a.cim(CimInstr::write(Reg::A1, 0, Reg::A2, 0));
-        a.addi(Reg::A1, Reg::A1, 4);
-        a.addi(Reg::A2, Reg::A2, 1);
+    for (m, c0, c1) in shards.layers[i].non_empty() {
+        if multi {
+            emit_sel(a, m as i64);
+        }
+        // cim_w burst: signs, column-major. a1 = stream ptr (this shard's
+        // column range), a2 = port addr.
+        a.li(Reg::A1, layout::WT_BASE as i64 + lp.wt_offset as i64 + (4 * c0 * aw) as i64);
+        a.li(Reg::A2, weight_map::SIGN_BASE as i64);
+        a.li(Reg::S5, (c1 - c0) as i64);
+        let col_top = a.here_label();
+        for j in 0..aw {
+            a.cim(CimInstr::write(Reg::A1, j as u16, Reg::A2, j as u16));
+        }
+        a.addi(Reg::A1, Reg::A1, (4 * aw) as i32);
+        a.addi(Reg::A2, Reg::A2, Mode::X.col_words() as i32);
         a.addi(Reg::S5, Reg::S5, -1);
-        a.bne(Reg::S5, Reg::ZERO, th_top);
+        a.bne(Reg::S5, Reg::ZERO, col_top);
+
+        // Thresholds (binarized layers): one word per owned channel. For
+        // the single-macro plan a1 already points at the threshold words
+        // (they follow the signs); a shard's range needs a reload.
+        if lp.th_words > 0 {
+            if multi {
+                a.li(
+                    Reg::A1,
+                    layout::WT_BASE as i64 + lp.wt_offset as i64 + (4 * (lp.sign_words + c0)) as i64,
+                );
+            }
+            a.li(Reg::A2, weight_map::TH_BASE as i64);
+            a.li(Reg::S5, (c1 - c0) as i64);
+            let th_top = a.here_label();
+            a.cim(CimInstr::write(Reg::A1, 0, Reg::A2, 0));
+            a.addi(Reg::A1, Reg::A1, 4);
+            a.addi(Reg::A2, Reg::A2, 1);
+            a.addi(Reg::S5, Reg::S5, -1);
+            a.bne(Reg::S5, Reg::ZERO, th_top);
+        }
     }
 
     emit_phase(a, Phase::weight_done(i));
 }
 
 /// Convolution phase of a binarized layer (row-wise dataflow, Fig. 5).
-fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, i: usize, opt: OptLevel) {
+///
+/// Under sharding, shifts broadcast to every macro (the shared input bus)
+/// while fires and drains interleave per macro: each owner is selected,
+/// fired, and drains its latch words at its word-aligned channel offset of
+/// the packed output row — bit-identical rows, per-macro `CimStats`.
+fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: OptLevel) {
     let lp = &p.layers[i];
     let s = lp.s_words;
     let o = lp.o_words;
     let t_len = lp.t_in;
     let fused_pool = opt.conv_pool_pipeline && lp.pooled;
+    let multi = shards.n_macros > 1;
+    let groups = shards.layers[i].non_empty();
 
-    // Configure the CIM unit for this layer.
+    // Configure the CIM unit for this layer (broadcast: every macro runs
+    // the same window geometry, each over its own column range).
+    if multi {
+        emit_sel(a, SEL_BROADCAST);
+    }
     let cfg = CimConfig {
         mode: Mode::X,
         pool_or: fused_pool,
@@ -230,7 +274,7 @@ fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, i: usize, opt: OptLevel) {
     a.li(Reg::A2, FM + plan::FM_SCRATCH as i64); // dummy store target
     a.li(Reg::A3, conv_dst); // real drain pointer
 
-    // Prefill: zero row (pad), then rows 0 and 1.
+    // Prefill: zero row (pad), then rows 0 and 1 (broadcast shifts).
     a.li(Reg::A1, FM + plan::FM_ZERO as i64);
     for j in 0..s {
         a.cim(CimInstr::conv(Reg::A1, j as u16, Reg::A2, 0, 7, true));
@@ -244,17 +288,37 @@ fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, i: usize, opt: OptLevel) {
     for t in 0..t_len {
         // Does this position drain to the real output?
         let drains = if fused_pool { t % 2 == 1 } else { true };
-        // Fire (wd = 0). Its store is word 0: real when draining.
         if drains {
-            a.cim(CimInstr::conv(Reg::A0, 0, Reg::A3, 0, 0, false));
-            for wd in 1..o {
-                a.cim(CimInstr::conv(Reg::A0, 0, Reg::A3, wd as u16, wd as u8, false));
+            // Fire each owner (wd = 0 fires and stores its word 0 at the
+            // shard's word offset), then drain its remaining latch words.
+            for &(m, c0, c1) in &groups {
+                if multi {
+                    emit_sel(a, m as i64);
+                }
+                let base = c0 / 32; // word-aligned shard start
+                let words = (c1 - c0).div_ceil(32);
+                a.cim(CimInstr::conv(Reg::A0, 0, Reg::A3, base as u16, 0, false));
+                for wd in 1..words {
+                    a.cim(CimInstr::conv(Reg::A0, 0, Reg::A3, (base + wd) as u16, wd as u8, false));
+                }
             }
             a.addi(Reg::A3, Reg::A3, (4 * o) as i32);
         } else {
-            a.cim(CimInstr::conv(Reg::A0, 0, Reg::A2, 0, 0, false));
+            // Non-draining (even pooled position): every owner still
+            // fires so its pool register rolls; stores are dummies.
+            for &(m, ..) in &groups {
+                if multi {
+                    emit_sel(a, m as i64);
+                }
+                a.cim(CimInstr::conv(Reg::A0, 0, Reg::A2, 0, 0, false));
+            }
         }
-        // Shift in row t+2 for the next position.
+        // Shift in row t+2 for the next position (broadcast).
+        if t + 2 <= t_len {
+            if multi {
+                emit_sel(a, SEL_BROADCAST);
+            }
+        }
         if t + 2 < t_len {
             for j in 0..s {
                 a.cim(CimInstr::conv(Reg::A0, j as u16, Reg::A2, 0, 7, true));
@@ -313,13 +377,20 @@ fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, i: usize, opt: OptLevel) {
 
 /// Final layer: raw sums via the `cim_r` high-precision port, accumulated
 /// into the GAP result vector on the RISC-V side (Fig. 10 post-processing).
-fn emit_final_layer(a: &mut Asm, p: &KwsPlan, model: &KwsModel, opt: OptLevel) {
+/// Under sharding each owner macro is fired and its raw shard columns
+/// drain to their global class offsets of the DMEM dump row.
+fn emit_final_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, model: &KwsModel, opt: OptLevel) {
     let i = p.layers.len() - 1;
     let lp = &p.layers[i];
     let s = lp.s_words;
     let t_len = lp.t_in;
     let n = model.n_classes;
+    let multi = shards.n_macros > 1;
+    let groups = shards.layers[i].non_empty();
 
+    if multi {
+        emit_sel(a, SEL_BROADCAST);
+    }
     let cfg = CimConfig {
         mode: Mode::X,
         pool_or: false,
@@ -335,7 +406,7 @@ fn emit_final_layer(a: &mut Asm, p: &KwsPlan, model: &KwsModel, opt: OptLevel) {
     a.li(Reg::A2, FM + plan::FM_SCRATCH as i64);
     a.li(Reg::A3, DMEM + plan::DMEM_RAWDUMP as i64);
 
-    // Prefill rows -1, 0, 1.
+    // Prefill rows -1, 0, 1 (broadcast shifts).
     for j in 0..s {
         a.cim(CimInstr::conv(Reg::A1, j as u16, Reg::A2, 0, 7, true));
     }
@@ -347,15 +418,24 @@ fn emit_final_layer(a: &mut Asm, p: &KwsPlan, model: &KwsModel, opt: OptLevel) {
     // s3 = raw port base (register operand for cim_r).
     a.li(Reg::S3, weight_map::RAW_BASE as i64);
     for t in 0..t_len {
-        // Fire; the binarized store goes to scratch (we read raw sums).
-        a.cim(CimInstr::conv(Reg::A0, 0, Reg::A2, 0, 0, false));
-        // Raw sums of columns 0..n -> DMEM dump (a1 temporarily = port base).
-        a.mv(Reg::A1, Reg::S3);
-        for c in 0..n {
-            a.cim(CimInstr::read(Reg::A1, c as u16, Reg::A3, c as u16));
+        for &(m, c0, c1) in &groups {
+            if multi {
+                emit_sel(a, m as i64);
+            }
+            // Fire; the binarized store goes to scratch (we read raw sums).
+            a.cim(CimInstr::conv(Reg::A0, 0, Reg::A2, 0, 0, false));
+            // Raw sums of this shard's columns -> their class offsets in
+            // the DMEM dump row (a1 temporarily = port base).
+            a.mv(Reg::A1, Reg::S3);
+            for c in 0..c1 - c0 {
+                a.cim(CimInstr::read(Reg::A1, c as u16, Reg::A3, (c0 + c) as u16));
+            }
+            a.li(Reg::A1, FM + plan::FM_ZERO as i64);
         }
-        a.li(Reg::A1, FM + plan::FM_ZERO as i64);
         a.addi(Reg::A3, Reg::A3, (4 * n) as i32);
+        if t + 2 <= t_len && multi {
+            emit_sel(a, SEL_BROADCAST);
+        }
         if t + 2 < t_len {
             for j in 0..s {
                 a.cim(CimInstr::conv(Reg::A0, j as u16, Reg::A2, 0, 7, true));
@@ -390,19 +470,33 @@ fn emit_final_layer(a: &mut Asm, p: &KwsPlan, model: &KwsModel, opt: OptLevel) {
     let _ = opt;
 }
 
-/// Build the complete program for one inference.
+/// Build the complete program for one inference (single macro).
 pub fn build_kws_program(model: &KwsModel, opt: OptLevel) -> Result<Program> {
+    build_kws_program_sharded(model, opt, 1)
+}
+
+/// Build a program whose layers are sharded across `n_macros` CIM macros
+/// (`--macros N`): output channels split word-aligned per layer, weight
+/// bursts routed per macro, fire sequences interleaved, drains at shard
+/// offsets. `n_macros == 1` produces exactly the classic image.
+pub fn build_kws_program_sharded(
+    model: &KwsModel,
+    opt: OptLevel,
+    n_macros: usize,
+) -> Result<Program> {
     let p = KwsPlan::new(model)?;
+    let shards = ShardPlan::word_aligned(&p, n_macros.max(1))?;
+    anyhow::ensure!(shards.is_word_aligned(), "cycle-engine shard plan must be word-aligned");
     let mut a = Asm::new();
 
-    emit_boot(&mut a, &p, opt);
+    emit_boot(&mut a, &p, &shards, opt);
     emit_preprocess(&mut a, model);
     for i in 0..p.layers.len() {
-        emit_weight_phase(&mut a, &p, i, opt);
+        emit_weight_phase(&mut a, &p, &shards, i, opt);
         if p.layers[i].binarized {
-            emit_conv_layer(&mut a, &p, i, opt);
+            emit_conv_layer(&mut a, &p, &shards, i, opt);
         } else {
-            emit_final_layer(&mut a, &p, model, opt);
+            emit_final_layer(&mut a, &p, &shards, model, opt);
         }
     }
     // Publish the result and halt.
@@ -459,6 +553,7 @@ pub fn build_kws_program(model: &KwsModel, opt: OptLevel) -> Result<Program> {
         opt,
         n_classes: model.n_classes,
         plan: p,
+        shards,
     })
 }
 
@@ -521,6 +616,26 @@ mod tests {
             base.imem.len(),
             full.imem.len()
         );
+    }
+
+    #[test]
+    fn sharded_build_encodes_and_single_matches_classic() {
+        let m = fake_model();
+        let classic = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let one = build_kws_program_sharded(&m, OptLevel::FULL, 1).unwrap();
+        // n_macros = 1 must be byte-identical to the classic image.
+        assert_eq!(one.imem, classic.imem);
+        assert_eq!(one.shards.n_macros, 1);
+        for n in 2..=4 {
+            let prog = build_kws_program_sharded(&m, OptLevel::FULL, n).unwrap();
+            assert_eq!(prog.shards.n_macros, n);
+            assert!(prog.shards.is_word_aligned());
+            // Sharded programs interleave selects: strictly more instrs.
+            assert!(prog.imem.len() > classic.imem.len());
+            for (i, w) in prog.imem.iter().enumerate() {
+                decode(*w).unwrap_or_else(|e| panic!("n={n} word {i}: {e}"));
+            }
+        }
     }
 
     #[test]

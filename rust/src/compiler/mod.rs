@@ -15,5 +15,5 @@ pub mod asm;
 pub mod codegen;
 pub mod program;
 
-pub use codegen::build_kws_program;
+pub use codegen::{build_kws_program, build_kws_program_sharded};
 pub use program::{Phase, Program};

@@ -4,6 +4,7 @@
 
 use crate::baselines::OptLevel;
 use crate::dataflow::plan::KwsPlan;
+use crate::dataflow::shard::ShardPlan;
 
 /// Phase marker ids written to `MMIO_HOST_PHASE` (cycle attribution).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,6 +50,11 @@ pub struct Program {
     /// geometry and decode the DRAM weight streams without the source
     /// model — the program is the single deployable artifact.
     pub plan: KwsPlan,
+    /// Multi-macro sharding metadata: which macro owns which output
+    /// channels of each layer (`ShardPlan::single` for classic one-macro
+    /// programs). Both engines consume it — the SoC sizes its macro bank
+    /// from it, `fsim` pre-slices its packed layers from it.
+    pub shards: ShardPlan,
 }
 
 impl Program {

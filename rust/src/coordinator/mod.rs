@@ -11,4 +11,4 @@
 pub mod report;
 pub mod server;
 
-pub use server::{Coordinator, InferenceRequest, InferenceResponse, ServeOptions};
+pub use server::{Coordinator, InferenceRequest, InferenceResponse, ServeOptions, ServiceStats};

@@ -1,7 +1,10 @@
 //! Experiment reporting: JSON + human-readable summaries shared by the
 //! CLI subcommands and the benches.
 
+use std::sync::atomic::Ordering;
+
 use crate::baselines::OptLevel;
+use crate::coordinator::ServiceStats;
 use crate::sim::RunResult;
 use crate::util::json::Json;
 
@@ -57,6 +60,20 @@ pub fn render_ladder(points: &[LadderPoint]) -> String {
     s
 }
 
+/// Render per-shard macro utilization accumulated by a serving run
+/// (`--macros N`): each macro's fire count and its share of the bank's
+/// total work. Idle shards (empty channel ranges) show 0.0%.
+pub fn render_shard_utilization(stats: &ServiceStats) -> String {
+    let fires: Vec<u64> = stats.shard_fires.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+    let total: u64 = fires.iter().sum();
+    let mut s = String::from("per-shard macro utilization:\n");
+    for (m, f) in fires.iter().enumerate() {
+        let pct = if total > 0 { 100.0 * *f as f64 / total as f64 } else { 0.0 };
+        s.push_str(&format!("  macro {m}: {f:>10} fires ({pct:5.1}% of bank work)\n"));
+    }
+    s
+}
+
 /// Ladder as JSON (machine-readable experiment record).
 pub fn ladder_json(points: &[LadderPoint]) -> Json {
     Json::Arr(
@@ -87,6 +104,20 @@ mod tests {
             accelerated_cycles: accel,
             preprocess_cycles: total - accel,
         }
+    }
+
+    #[test]
+    fn shard_utilization_renders_shares() {
+        let stats = ServiceStats::for_shards(2);
+        stats.shard_fires[0].fetch_add(300, Ordering::Relaxed);
+        stats.shard_fires[1].fetch_add(100, Ordering::Relaxed);
+        let s = render_shard_utilization(&stats);
+        assert!(s.contains("macro 0"));
+        assert!(s.contains("75.0%"));
+        assert!(s.contains("25.0%"));
+        // Zero-work stats render without dividing by zero.
+        let empty = ServiceStats::for_shards(1);
+        assert!(render_shard_utilization(&empty).contains("0.0%"));
     }
 
     #[test]

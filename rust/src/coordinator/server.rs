@@ -11,7 +11,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::backend::{self, BackendKind, FastBackend, InferenceBackend};
 use crate::baselines::OptLevel;
-use crate::compiler::build_kws_program;
+use crate::compiler::build_kws_program_sharded;
 use crate::fsim::{Calibration, FastSim};
 use crate::mem::dram::DramConfig;
 use crate::model::KwsModel;
@@ -67,16 +67,42 @@ pub struct ServiceStats {
     pub correct: AtomicU64,
     pub labeled: AtomicU64,
     pub chip_cycles: AtomicU64,
+    /// Per-shard macro fire counts accumulated across every served
+    /// request (one entry per macro; empty only for a default-constructed
+    /// stats block). Idle shards stay at zero — the utilization signal
+    /// rendered by `report::render_shard_utilization`.
+    pub shard_fires: Vec<AtomicU64>,
+}
+
+impl ServiceStats {
+    /// Stats block sized for an `n`-macro deployment.
+    pub fn for_shards(n: usize) -> Self {
+        ServiceStats {
+            shard_fires: (0..n.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        }
+    }
 }
 
 /// Serving options beyond the backend choice.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
     /// Run one cycle-level inference at coordinator start and snap the
     /// fast backend's latency/energy to the measured numbers (compiled
     /// KWS programs have data-independent latency, so one run calibrates
     /// every request). Ignored by the cycle backend, which is exact.
     pub calibrate: bool,
+    /// Shard every layer's output channels across this many simulated CIM
+    /// macros (`--macros N`; 1 = the classic single-macro chip). Both
+    /// backends honor it: the cycle SoC drives a macro bank, the fast
+    /// simulator executes per-shard packed groups.
+    pub macros: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { calibrate: false, macros: 1 }
+    }
 }
 
 /// The leader: owns worker threads, each with its own SoC (the chip is
@@ -115,7 +141,7 @@ impl Coordinator {
         kind: BackendKind,
         opts: ServeOptions,
     ) -> Result<Self> {
-        let program = build_kws_program(model, opt)?;
+        let program = build_kws_program_sharded(model, opt, opts.macros.max(1))?;
         // Build every worker's backend up front so construction errors
         // surface here with their real cause (not as a silent worker
         // exit). The functional simulator is stateless across requests
@@ -147,7 +173,7 @@ impl Coordinator {
             };
             backends.push(be);
         }
-        let stats = Arc::new(ServiceStats::default());
+        let stats = Arc::new(ServiceStats::for_shards(opts.macros.max(1)));
         let (tx, rx) = mpsc::channel::<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)>();
         let rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::new();
@@ -170,6 +196,9 @@ impl Coordinator {
                         );
                         stats.served.fetch_add(1, Ordering::Relaxed);
                         stats.chip_cycles.fetch_add(r.cycles, Ordering::Relaxed);
+                        for (shard, fires) in stats.shard_fires.iter().zip(&r.shard_fires) {
+                            shard.fetch_add(*fires, Ordering::Relaxed);
+                        }
                         if let Some(c) = resp.correct {
                             stats.labeled.fetch_add(1, Ordering::Relaxed);
                             if c {
@@ -202,8 +231,13 @@ impl Coordinator {
         Ok(rrx)
     }
 
-    /// Serve a whole batch, preserving order.
+    /// Serve a whole batch, preserving order. An empty batch returns
+    /// `Ok(vec![])` immediately without touching the worker queue (so it
+    /// succeeds even after shutdown — there is nothing to serve).
     pub fn serve_batch(&self, reqs: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
         let rxs: Vec<_> = reqs
             .into_iter()
             .map(|r| self.submit(r))
@@ -377,7 +411,7 @@ mod tests {
             OptLevel::FULL,
             3,
             BackendKind::Fast,
-            ServeOptions { calibrate: true },
+            ServeOptions { calibrate: true, ..Default::default() },
         )
         .unwrap();
         let got = fast.serve_batch(req()).unwrap();
@@ -386,6 +420,57 @@ mod tests {
         assert_eq!(got[0].chip_cycles, want[0].chip_cycles, "snap calibration must be exact");
         assert!((got[0].energy_uj - want[0].energy_uj).abs() < 1e-9);
         assert_eq!(got[0].backend, "fast");
+    }
+
+    #[test]
+    fn empty_batch_returns_ok_without_round_trip() {
+        let m = fake_model();
+        let mut coord = Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Fast).unwrap();
+        assert!(coord.serve_batch(vec![]).unwrap().is_empty());
+        assert_eq!(coord.stats.served.load(Ordering::Relaxed), 0, "no worker round trip");
+        coord.shutdown();
+        // Even after shutdown: nothing to serve, so still Ok.
+        assert!(coord.serve_batch(vec![]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn sharded_serving_identical_logits_and_per_shard_utilization() {
+        let m = fake_model();
+        let reqs = |n: u64| -> Vec<InferenceRequest> {
+            (0..n)
+                .map(|i| InferenceRequest {
+                    id: i,
+                    audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
+                    label: None,
+                })
+                .collect()
+        };
+        let mut single =
+            Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Fast).unwrap();
+        let want = single.serve_batch(reqs(4)).unwrap();
+        single.shutdown();
+
+        let mut sharded = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            2,
+            BackendKind::Fast,
+            ServeOptions { macros: 2, ..Default::default() },
+        )
+        .unwrap();
+        let got = sharded.serve_batch(reqs(4)).unwrap();
+        for (x, y) in want.iter().zip(&got) {
+            assert_eq!(x.logits, y.logits, "request {}", x.id);
+        }
+        // Per-shard utilization accumulated across every request; the
+        // fake model's 32- and 12-wide layers fit one latch word, so the
+        // word-aligned split leaves macro 1 idle — visible in the stats.
+        assert_eq!(sharded.stats.shard_fires.len(), 2);
+        let f0 = sharded.stats.shard_fires[0].load(Ordering::Relaxed);
+        let f1 = sharded.stats.shard_fires[1].load(Ordering::Relaxed);
+        assert!(f0 > 0);
+        assert!(f0 > f1, "macro 0 owns every layer's leading channels: {f0} vs {f1}");
+        sharded.shutdown();
     }
 
     #[test]

@@ -274,12 +274,12 @@ impl Cpu {
                 if c.sh {
                     let src = self.regs.read(c.rs1).wrapping_add(4 * c.imm_s as u32);
                     let word = read_onchip_word(bus, src)?;
-                    bus.cim.shift_in(word);
+                    bus.cim_shift_in(word);
                 }
                 if c.wd == 0 {
-                    bus.cim.fire();
+                    bus.cim_fire();
                 }
-                let out = bus.cim.store_word(c.wd);
+                let out = bus.cim_mut().store_word(c.wd);
                 let dst = self.regs.read(c.rs2).wrapping_add(4 * c.imm_d as u32);
                 write_onchip_word(bus, dst, out)?;
             }
@@ -288,12 +288,12 @@ impl Cpu {
                 let src = self.regs.read(c.rs1).wrapping_add(4 * c.imm_s as u32);
                 let word = read_onchip_word(bus, src)?;
                 let port = self.regs.read(c.rs2).wrapping_add(c.imm_d as u32);
-                bus.cim.port_write(port, word)?;
+                bus.cim_port_write(port, word)?;
             }
             CimFunct::Read => {
                 self.stats.cim_r += 1;
                 let port = self.regs.read(c.rs1).wrapping_add(c.imm_s as u32);
-                let word = bus.cim.port_read(port)?;
+                let word = bus.cim_mut().port_read(port)?;
                 let dst = self.regs.read(c.rs2).wrapping_add(4 * c.imm_d as u32);
                 write_onchip_word(bus, dst, word)?;
             }
@@ -452,8 +452,8 @@ mod tests {
         ]);
         let (cpu, bus) = run_program(&prog);
         assert_eq!(cpu.stats.cim_conv, 1);
-        assert_eq!(bus.cim.stats.fires, 1);
-        assert_eq!(bus.cim.stats.shifts, 1);
+        assert_eq!(bus.cim().stats.fires, 1);
+        assert_eq!(bus.cim().stats.shifts, 1);
         // 3 ALU-ish (1 cycle each... lui=1) + cim 1 = instret 5 incl ebreak
         assert_eq!(cpu.stats.instret, 5);
     }

@@ -71,6 +71,34 @@ mod tests {
     }
 
     #[test]
+    fn counter_carry_at_the_2_to_32_boundary() {
+        // The low word wraps 0xFFFF_FFFF -> 0 exactly when the high word
+        // carries 0 -> 1, and the user-mode shadows agree with the
+        // machine-mode aliases at both sides of the boundary.
+        let c = CsrFile::default();
+        let before = u32::MAX as u64; // 2^32 - 1
+        let after = before + 1; // 2^32
+        for (lo, hi, mlo, mhi) in [
+            (CSR_CYCLE, CSR_CYCLEH, CSR_MCYCLE, CSR_MCYCLEH),
+            (CSR_INSTRET, CSR_INSTRETH, CSR_MINSTRET, CSR_MINSTRETH),
+        ] {
+            for csr_lo in [lo, mlo] {
+                assert_eq!(c.read(csr_lo, before, before).unwrap(), u32::MAX);
+                assert_eq!(c.read(csr_lo, after, after).unwrap(), 0);
+            }
+            for csr_hi in [hi, mhi] {
+                assert_eq!(c.read(csr_hi, before, before).unwrap(), 0);
+                assert_eq!(c.read(csr_hi, after, after).unwrap(), 1);
+            }
+        }
+        // Reassembling (hi << 32) | lo recovers the exact 64-bit count.
+        let big = 0x7_8000_0001u64;
+        let lo = c.read(CSR_MCYCLE, big, 0).unwrap() as u64;
+        let hi = c.read(CSR_MCYCLEH, big, 0).unwrap() as u64;
+        assert_eq!((hi << 32) | lo, big);
+    }
+
+    #[test]
     fn machine_mode_counter_aliases() {
         let mut c = CsrFile::default();
         let cycle = 0x2_0000_0007u64;

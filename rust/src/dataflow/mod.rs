@@ -7,5 +7,7 @@
 //! codegen, the SoC loader and the analytical models all agree.
 
 pub mod plan;
+pub mod shard;
 
 pub use plan::{KwsPlan, LayerPlan};
+pub use shard::{LayerShards, ShardPlan};

@@ -1,0 +1,252 @@
+//! Multi-macro sharding plan: split each layer's output channels across
+//! N simulated CIM macros.
+//!
+//! One 16 KB macro bounds throughput; output channels are the natural
+//! parallel axis (every macro sees the same input window and owns a
+//! disjoint column range — cf. PSCNN's single large reconfigurable array
+//! and CIMPool's weight partitioning). A [`ShardPlan`] assigns each layer
+//! a per-macro channel range, reusing the per-layer rectangles the
+//! compiler plan already carries ([`KwsPlan`]):
+//!
+//! * [`ShardPlan::even`] — channel-granular split (uneven `c_out % n`
+//!   remainders go to the leading shards). Used by the functional
+//!   simulator, which can merge at bit granularity.
+//! * [`ShardPlan::word_aligned`] — 32-channel (output-latch word) granular
+//!   split. Used by the cycle engine: each macro's latch words drain
+//!   straight into the packed FM row at a word offset, so the row-wise
+//!   drain loop needs no cross-word shifts.
+//!
+//! Both splits are value-preserving by construction: a channel's sums and
+//! thresholds do not depend on which macro computes it, so sharded logits
+//! are bit-identical to the single-macro run (property-tested in
+//! `rust/tests/shard_parity.rs`).
+
+use anyhow::{ensure, Result};
+
+use super::plan::KwsPlan;
+
+/// Per-layer output-channel ranges, one `[start, end)` per macro (empty
+/// ranges allowed: a 12-channel classifier on 4 macros leaves 3 idle).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerShards {
+    pub index: usize,
+    pub c_out: usize,
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl LayerShards {
+    /// Channels owned by macro `m`.
+    pub fn len(&self, m: usize) -> usize {
+        let (a, b) = self.ranges[m];
+        b - a
+    }
+
+    pub fn is_empty(&self, m: usize) -> bool {
+        self.len(m) == 0
+    }
+
+    /// `(macro, start, end)` for every macro that owns channels, in
+    /// macro order — the interleave order of the cycle engine's fire
+    /// sequences and the shard order of the functional simulator.
+    pub fn non_empty(&self) -> Vec<(usize, usize, usize)> {
+        self.ranges
+            .iter()
+            .enumerate()
+            .filter(|(_, (a, b))| b > a)
+            .map(|(m, &(a, b))| (m, a, b))
+            .collect()
+    }
+}
+
+/// The whole-model sharding: one [`LayerShards`] per layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub n_macros: usize,
+    pub layers: Vec<LayerShards>,
+}
+
+impl ShardPlan {
+    /// The trivial single-macro plan (every layer in macro 0).
+    pub fn single(plan: &KwsPlan) -> Self {
+        ShardPlan {
+            n_macros: 1,
+            layers: plan
+                .layers
+                .iter()
+                .map(|lp| LayerShards {
+                    index: lp.index,
+                    c_out: lp.c_out,
+                    ranges: vec![(0, lp.c_out)],
+                })
+                .collect(),
+        }
+    }
+
+    /// Channel-granular even split: shard sizes differ by at most one,
+    /// remainders assigned to the leading shards.
+    pub fn even(plan: &KwsPlan, n: usize) -> Result<Self> {
+        ensure!(n >= 1, "shard count must be >= 1");
+        let layers = plan
+            .layers
+            .iter()
+            .map(|lp| {
+                let base = lp.c_out / n;
+                let rem = lp.c_out % n;
+                let mut ranges = Vec::with_capacity(n);
+                let mut at = 0;
+                for m in 0..n {
+                    let len = base + usize::from(m < rem);
+                    ranges.push((at, at + len));
+                    at += len;
+                }
+                LayerShards { index: lp.index, c_out: lp.c_out, ranges }
+            })
+            .collect();
+        let sp = ShardPlan { n_macros: n, layers };
+        sp.validate()?;
+        Ok(sp)
+    }
+
+    /// Output-latch-word (32-channel) granular split for the cycle
+    /// engine: every shard starts on a word boundary, words distributed
+    /// as evenly as possible, the last owning word truncated to `c_out`.
+    pub fn word_aligned(plan: &KwsPlan, n: usize) -> Result<Self> {
+        ensure!(n >= 1, "shard count must be >= 1");
+        let layers = plan
+            .layers
+            .iter()
+            .map(|lp| {
+                let words = lp.c_out.div_ceil(32);
+                let base = words / n;
+                let rem = words % n;
+                let mut ranges = Vec::with_capacity(n);
+                let mut at_word = 0;
+                for m in 0..n {
+                    let w = base + usize::from(m < rem);
+                    let start = (at_word * 32).min(lp.c_out);
+                    let end = ((at_word + w) * 32).min(lp.c_out);
+                    ranges.push((start, end));
+                    at_word += w;
+                }
+                LayerShards { index: lp.index, c_out: lp.c_out, ranges }
+            })
+            .collect();
+        let sp = ShardPlan { n_macros: n, layers };
+        sp.validate()?;
+        Ok(sp)
+    }
+
+    /// Structural invariants: per layer, `n_macros` contiguous ranges
+    /// covering exactly `[0, c_out)`.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_macros >= 1, "shard plan needs at least one macro");
+        for ls in &self.layers {
+            ensure!(
+                ls.ranges.len() == self.n_macros,
+                "layer {}: {} ranges for {} macros",
+                ls.index,
+                ls.ranges.len(),
+                self.n_macros
+            );
+            let mut at = 0;
+            for &(a, b) in &ls.ranges {
+                ensure!(a == at && b >= a, "layer {}: ranges must tile [0, c_out)", ls.index);
+                at = b;
+            }
+            ensure!(at == ls.c_out, "layer {}: ranges cover {at}, want {}", ls.index, ls.c_out);
+        }
+        Ok(())
+    }
+
+    /// True when every **non-empty** range starts on an output-latch word
+    /// boundary (required by the cycle engine's drain addressing; empty
+    /// ranges are never drained, and a trailing empty range necessarily
+    /// starts at `c_out`, which need not be a word multiple).
+    pub fn is_word_aligned(&self) -> bool {
+        self.layers
+            .iter()
+            .all(|ls| ls.ranges.iter().all(|&(a, b)| b == a || a % 32 == 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::kws::LayerSpec;
+    use crate::model::KwsModel;
+
+    fn plan() -> KwsPlan {
+        let mk = |ci: usize, co: usize, pooled: bool, binarized: bool| LayerSpec {
+            c_in: ci,
+            c_out: co,
+            kernel: 3,
+            pooled,
+            binarized,
+            weights: vec![1; 3 * ci * co],
+            thresholds: if binarized { vec![0; co] } else { vec![] },
+        };
+        let m = KwsModel {
+            audio_len: 16000,
+            t: 128,
+            c: 64,
+            n_classes: 12,
+            fusion_split: 1,
+            layers: vec![mk(64, 70, true, true), mk(64, 64, true, true), mk(64, 12, false, false)],
+            bn_gamma: vec![1.0; 64],
+            bn_beta: vec![0.0; 64],
+            bn_mean: vec![0.0; 64],
+            bn_var: vec![1.0; 64],
+            pre_thr: vec![0; 64],
+            pre_dir: vec![1; 64],
+            trained: false,
+            artifacts_dir: std::path::PathBuf::new(),
+        };
+        // c_out=70 is not macro-legal for c_in (s_words) purposes? It is:
+        // only c_in must be a word multiple.
+        KwsPlan::new(&m).unwrap()
+    }
+
+    #[test]
+    fn even_split_covers_and_balances() {
+        let p = plan();
+        for n in 1..=4 {
+            let sp = ShardPlan::even(&p, n).unwrap();
+            sp.validate().unwrap();
+            assert_eq!(sp.n_macros, n);
+            for ls in &sp.layers {
+                let lens: Vec<usize> = (0..n).map(|m| ls.len(m)).collect();
+                let total: usize = lens.iter().sum();
+                assert_eq!(total, ls.c_out);
+                let max = *lens.iter().max().unwrap();
+                let min = *lens.iter().min().unwrap();
+                assert!(max - min <= 1, "uneven split must differ by <= 1: {lens:?}");
+            }
+        }
+        // 70 % 4 != 0: the leading shards take the remainder.
+        let sp = ShardPlan::even(&p, 4).unwrap();
+        assert_eq!(sp.layers[0].ranges, vec![(0, 18), (18, 36), (36, 53), (53, 70)]);
+    }
+
+    #[test]
+    fn word_aligned_split_is_word_aligned() {
+        let p = plan();
+        for n in 1..=4 {
+            let sp = ShardPlan::word_aligned(&p, n).unwrap();
+            sp.validate().unwrap();
+            assert!(sp.is_word_aligned());
+        }
+        // 70 channels = 3 latch words over 2 macros: 2 + 1 words.
+        let sp = ShardPlan::word_aligned(&p, 2).unwrap();
+        assert_eq!(sp.layers[0].ranges, vec![(0, 64), (64, 70)]);
+        // 12 channels on 4 macros: macro 0 owns all, 1..3 idle.
+        assert_eq!(sp.layers[2].ranges, vec![(0, 12), (12, 12), (12, 12), (12, 12)]);
+        assert_eq!(sp.layers[2].non_empty(), vec![(0, 0, 12)]);
+    }
+
+    #[test]
+    fn single_plan_matches_even_1() {
+        let p = plan();
+        assert_eq!(ShardPlan::single(&p), ShardPlan::even(&p, 1).unwrap());
+        assert!(ShardPlan::even(&p, 0).is_err());
+    }
+}

@@ -53,7 +53,9 @@ pub struct EnergyReport {
 impl EnergyReport {
     /// Account a completed cycle-level run.
     pub fn from_run(table: &EnergyTable, cpu: &ExecStats, bus: &Bus) -> Self {
-        let cim: &CimStats = &bus.cim.stats;
+        // Aggregate over the macro bank: every macro's fires/shifts cost
+        // energy, whether the program uses one macro or a sharded set.
+        let cim: CimStats = bus.cim_stats_total();
         Self::from_counts(
             table,
             &ActivityCounts {
@@ -156,9 +158,9 @@ mod tests {
         let table = EnergyTable::default();
         let mut bus = Bus::new(DramConfig::default());
         let cycles = 1000u64;
-        bus.cim.stats.fires = cycles;
-        bus.cim.stats.shifts = cycles;
-        bus.cim.stats.macs = cycles * crate::cim::Mode::X.macs_per_fire();
+        bus.cims[0].stats.fires = cycles;
+        bus.cims[0].stats.shifts = cycles;
+        bus.cims[0].stats.macs = cycles * crate::cim::Mode::X.macs_per_fire();
         bus.fm.reads = cycles;
         bus.fm.writes = cycles;
         let cpu = ExecStats { instret: cycles, cycles, ..Default::default() };
@@ -179,7 +181,7 @@ mod tests {
     fn breakdown_percentages_sum() {
         let table = EnergyTable::default();
         let mut bus = Bus::new(DramConfig::default());
-        bus.cim.stats.fires = 10;
+        bus.cims[0].stats.fires = 10;
         bus.dram.bytes_transferred = 100;
         let cpu = ExecStats { instret: 100, cycles: 100, ..Default::default() };
         let r = EnergyReport::from_run(&table, &cpu, &bus);

@@ -22,10 +22,13 @@
 //! streaming were wrong, fsim would disagree with the host reference, so
 //! the decode path doubles as a check on the program image itself.
 
+use std::sync::{Barrier, Mutex, RwLock};
+
 use anyhow::{anyhow, ensure, Result};
 
 use crate::compiler::Program;
 use crate::dataflow::plan;
+use crate::dataflow::shard::ShardPlan;
 use crate::model::kws::LayerSpec;
 use crate::model::reference::{self, BitMap, PackedLayer};
 
@@ -45,6 +48,21 @@ pub struct DecodedProgram {
     pub audio_len: usize,
     pub n_classes: usize,
     pub final_t: usize,
+}
+
+/// A decoded program pre-sliced for multi-macro execution: per macro,
+/// per layer, the channel offset and the sub-[`PackedLayer`] that macro
+/// owns (`None` where the split leaves a macro idle for that layer).
+#[derive(Debug, Clone)]
+pub struct ShardedProgram {
+    /// Macro count (shard plan's `n_macros`).
+    pub n: usize,
+    /// `per_macro[m][layer] = Some((channel offset, shard))`.
+    pub per_macro: Vec<Vec<Option<(usize, PackedLayer)>>>,
+    /// Fires each macro performs per inference (one per row position of
+    /// every layer it owns channels of) — the per-shard utilization
+    /// surfaced by `ServiceStats` and the coordinator report.
+    pub fires_per_macro: Vec<u64>,
 }
 
 fn le_u32(bytes: &[u8], word: usize) -> u32 {
@@ -209,6 +227,150 @@ impl DecodedProgram {
         (logits, predicted)
     }
 
+    /// Pre-slice the decoded layers for a [`ShardPlan`]: each macro gets
+    /// its channel range of every layer's sign planes (a contiguous word
+    /// copy). Built once per (program, plan); reused across inferences.
+    pub fn shard(&self, plan: &ShardPlan) -> Result<ShardedProgram> {
+        plan.validate()?;
+        ensure!(
+            plan.layers.len() == self.layers.len(),
+            "shard plan has {} layers, program has {}",
+            plan.layers.len(),
+            self.layers.len()
+        );
+        for (ls, l) in plan.layers.iter().zip(&self.layers) {
+            ensure!(
+                ls.c_out == l.c_out,
+                "layer {}: shard plan c_out {} != decoded {}",
+                ls.index,
+                ls.c_out,
+                l.c_out
+            );
+        }
+        let n = plan.n_macros;
+        let mut per_macro: Vec<Vec<Option<(usize, PackedLayer)>>> = vec![Vec::new(); n];
+        for (ls, l) in plan.layers.iter().zip(&self.layers) {
+            for (m, shards) in per_macro.iter_mut().enumerate() {
+                let (a, b) = ls.ranges[m];
+                shards.push((b > a).then(|| (a, l.slice_channels(a, b))));
+            }
+        }
+        // Fire accounting mirrors the cycle engine's interleave: a macro
+        // fires once per row position of every layer it owns channels of.
+        let mut t = self.t;
+        let mut t_ins = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            t_ins.push(t as u64);
+            if l.pooled {
+                t /= 2;
+            }
+        }
+        let fires_per_macro: Vec<u64> = (0..n)
+            .map(|m| {
+                per_macro[m]
+                    .iter()
+                    .zip(&t_ins)
+                    .filter(|(s, _)| s.is_some())
+                    .map(|(_, &t_in)| t_in)
+                    .sum()
+            })
+            .collect();
+        Ok(ShardedProgram { n, per_macro, fires_per_macro })
+    }
+
+    /// Sharded inference: every layer computed as per-macro channel
+    /// shards, concatenated back to the full-width map (bit-identical to
+    /// [`Self::infer`]; property-tested in `tests/shard_parity.rs`).
+    pub fn infer_sharded(&self, audio: &[f32], sp: &ShardedProgram) -> (Vec<f32>, usize) {
+        let n_layers = self.layers.len();
+        let mut x = self.preprocess(audio);
+        for li in 0..n_layers - 1 {
+            let full = &self.layers[li];
+            let t_out = if full.pooled { x.t / 2 } else { x.t };
+            let mut out = BitMap::zero(t_out, full.c_out);
+            for shards in &sp.per_macro {
+                if let Some((off, shard)) = &shards[li] {
+                    let part = reference::conv_layer_packed(&x, shard);
+                    reference::merge_shard(&mut out, *off, &part);
+                }
+            }
+            x = out;
+        }
+        let mut logits = vec![0.0f32; self.n_classes];
+        for shards in &sp.per_macro {
+            if let Some((off, shard)) = &shards[n_layers - 1] {
+                let part = reference::final_layer_gap_packed(&x, shard);
+                logits[*off..*off + part.len()].copy_from_slice(&part);
+            }
+        }
+        let predicted = reference::argmax(&logits);
+        (logits, predicted)
+    }
+
+    /// [`Self::infer_sharded`] with one OS thread per macro: threads
+    /// compute their shard of each layer concurrently and rendezvous on a
+    /// barrier while one of them concatenates the channel ranges. Same
+    /// bits, wall-clock scales with the widest layer's split.
+    pub fn infer_sharded_parallel(&self, audio: &[f32], sp: &ShardedProgram) -> (Vec<f32>, usize) {
+        let n = sp.n;
+        if n <= 1 {
+            return self.infer_sharded(audio, sp);
+        }
+        let n_layers = self.layers.len();
+        let conv_meta: Vec<(bool, usize)> =
+            self.layers[..n_layers - 1].iter().map(|l| (l.pooled, l.c_out)).collect();
+        let barrier = Barrier::new(n);
+        let current = RwLock::new(self.preprocess(audio));
+        let partials: Vec<Mutex<Option<(usize, BitMap)>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let logit_parts: Mutex<Vec<(usize, Vec<f32>)>> = Mutex::new(Vec::new());
+
+        std::thread::scope(|s| {
+            for (m, macro_shards) in sp.per_macro.iter().enumerate() {
+                let barrier = &barrier;
+                let current = &current;
+                let partials = &partials;
+                let logit_parts = &logit_parts;
+                let conv_meta = &conv_meta;
+                s.spawn(move || {
+                    for (li, &(pooled, c_out)) in conv_meta.iter().enumerate() {
+                        {
+                            let x = current.read().unwrap();
+                            let part = macro_shards[li]
+                                .as_ref()
+                                .map(|(off, shard)| (*off, reference::conv_layer_packed(&x, shard)));
+                            *partials[m].lock().unwrap() = part;
+                        }
+                        if barrier.wait().is_leader() {
+                            let mut cur = current.write().unwrap();
+                            let t_out = if pooled { cur.t / 2 } else { cur.t };
+                            let mut out = BitMap::zero(t_out, c_out);
+                            for p in partials.iter() {
+                                if let Some((off, bm)) = p.lock().unwrap().take() {
+                                    reference::merge_shard(&mut out, off, &bm);
+                                }
+                            }
+                            *cur = out;
+                        }
+                        barrier.wait(); // merged map visible to everyone
+                    }
+                    if let Some((off, shard)) = &macro_shards[n_layers - 1] {
+                        let x = current.read().unwrap();
+                        let part = reference::final_layer_gap_packed(&x, shard);
+                        logit_parts.lock().unwrap().push((*off, part));
+                    }
+                });
+            }
+        });
+
+        let mut logits = vec![0.0f32; self.n_classes];
+        for (off, part) in logit_parts.into_inner().unwrap() {
+            logits[off..off + part.len()].copy_from_slice(&part);
+        }
+        let predicted = reference::argmax(&logits);
+        (logits, predicted)
+    }
+
     /// Unpack every layer to the scalar tap-major/channel-minor form
     /// (done once; pair with [`Self::infer_scalar`]).
     pub fn to_layer_specs(&self) -> Vec<LayerSpec> {
@@ -299,6 +461,48 @@ mod tests {
             assert_eq!(packed, scalar, "seed {seed}");
             assert_eq!(pp, sp);
         }
+    }
+
+    #[test]
+    fn sharded_inference_bit_identical_sequential_and_parallel() {
+        use crate::dataflow::shard::ShardPlan;
+        let m = KwsModel::synthetic(13);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let d = DecodedProgram::decode(&prog).unwrap();
+        let audio = dataset::synth_utterance(6, 3, m.audio_len, 0.37);
+        let (want, wp) = d.infer(&audio);
+        for n in 1..=4 {
+            let plan = ShardPlan::even(&prog.plan, n).unwrap();
+            let sp = d.shard(&plan).unwrap();
+            let (seq, sq) = d.infer_sharded(&audio, &sp);
+            assert_eq!(seq, want, "sequential n={n}");
+            assert_eq!(sq, wp);
+            let (par, pp) = d.infer_sharded_parallel(&audio, &sp);
+            assert_eq!(par, want, "parallel n={n}");
+            assert_eq!(pp, wp);
+            // Idle macros fire nothing; owners fire once per position.
+            assert_eq!(
+                sp.fires_per_macro.iter().sum::<u64>(),
+                prog.plan
+                    .layers
+                    .iter()
+                    .map(|lp| {
+                        let owners = plan.layers[lp.index].non_empty().len() as u64;
+                        owners * lp.t_in as u64
+                    })
+                    .sum::<u64>()
+            );
+        }
+    }
+
+    #[test]
+    fn shard_rejects_mismatched_plan() {
+        use crate::dataflow::shard::ShardPlan;
+        let a = build_kws_program(&KwsModel::synthetic(1), OptLevel::FULL).unwrap();
+        let b = build_kws_program(&KwsModel::synthetic_wide(1), OptLevel::FULL).unwrap();
+        let d = DecodedProgram::decode(&a).unwrap();
+        let plan_b = ShardPlan::even(&b.plan, 2).unwrap();
+        assert!(d.shard(&plan_b).is_err());
     }
 
     #[test]

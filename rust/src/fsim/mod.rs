@@ -24,12 +24,13 @@
 pub mod exec;
 pub mod latency;
 
-pub use exec::DecodedProgram;
+pub use exec::{DecodedProgram, ShardedProgram};
 pub use latency::Estimate;
 
 use anyhow::Result;
 
 use crate::compiler::Program;
+use crate::dataflow::shard::ShardPlan;
 use crate::energy::{EnergyReport, EnergyTable};
 use crate::mem::dram::DramConfig;
 use crate::sim::{PhaseBreakdown, RunResult};
@@ -55,6 +56,17 @@ impl Calibration {
     }
 }
 
+/// Sharded execution state: the pre-sliced per-macro layers plus the
+/// threading choice.
+#[derive(Debug, Clone)]
+struct ShardedExec {
+    prog: ShardedProgram,
+    /// One OS thread per macro per inference (see
+    /// `DecodedProgram::infer_sharded_parallel`). Off by default in the
+    /// coordinator, whose workers already parallelize across requests.
+    parallel: bool,
+}
+
 /// The fast functional simulator for one compiled program.
 #[derive(Debug, Clone)]
 pub struct FastSim {
@@ -63,21 +75,52 @@ pub struct FastSim {
     estimate: Estimate,
     energy_table: EnergyTable,
     calibration: Option<Calibration>,
+    sharded: Option<ShardedExec>,
 }
 
 impl FastSim {
     /// Build from a compiled image (decodes weights, runs the analytical
-    /// latency walk once — both are reused across all inferences).
+    /// latency walk once — both are reused across all inferences). A
+    /// sharded image (`build_kws_program_sharded` with `n_macros > 1`)
+    /// automatically executes through per-macro shard groups.
     pub fn new(program: Program, dram_cfg: DramConfig) -> Result<Self> {
         let decoded = DecodedProgram::decode(&program)?;
         let estimate = latency::estimate(&program, &dram_cfg);
+        let sharded = if program.shards.n_macros > 1 {
+            Some(ShardedExec { prog: decoded.shard(&program.shards)?, parallel: false })
+        } else {
+            None
+        };
         Ok(FastSim {
             program,
             decoded,
             estimate,
             energy_table: EnergyTable::default(),
             calibration: None,
+            sharded,
         })
+    }
+
+    /// Execute through an explicit [`ShardPlan`] (any channel-granular
+    /// split — the cycle engine is limited to word-aligned plans, the
+    /// functional simulator is not). `parallel` runs one thread per macro
+    /// per inference.
+    pub fn with_shard_plan(mut self, plan: &ShardPlan, parallel: bool) -> Result<Self> {
+        self.sharded = if plan.n_macros > 1 || parallel {
+            Some(ShardedExec { prog: self.decoded.shard(plan)?, parallel })
+        } else {
+            None
+        };
+        Ok(self)
+    }
+
+    /// Per-macro fire counts of one inference (a single entry when the
+    /// program is unsharded).
+    pub fn shard_fires(&self) -> Vec<u64> {
+        match &self.sharded {
+            Some(se) => se.prog.fires_per_macro.clone(),
+            None => vec![self.estimate.counts.fires],
+        }
     }
 
     pub fn with_energy_table(mut self, t: EnergyTable) -> Self {
@@ -112,7 +155,11 @@ impl FastSim {
     /// calibration when present). Note `&self`: the functional simulator
     /// is stateless across requests and safe to share behind an `Arc`.
     pub fn infer(&self, audio: &[f32]) -> RunResult {
-        let (logits, predicted) = self.decoded.infer(audio);
+        let (logits, predicted) = match &self.sharded {
+            Some(se) if se.parallel => self.decoded.infer_sharded_parallel(audio, &se.prog),
+            Some(se) => self.decoded.infer_sharded(audio, &se.prog),
+            None => self.decoded.infer(audio),
+        };
         let (cycles, instret, phases, energy) = match &self.calibration {
             Some(c) => (c.cycles, c.instret, c.phases, c.energy.clone()),
             None => (
@@ -131,6 +178,7 @@ impl FastSim {
             energy,
             seconds_at_50mhz: cycles as f64 / 50e6,
             console: String::new(),
+            shard_fires: self.shard_fires(),
         }
     }
 }
@@ -158,6 +206,36 @@ mod tests {
         let r2 = sim.infer(&audio);
         assert_eq!(r.logits, r2.logits);
         assert_eq!(r.cycles, r2.cycles);
+    }
+
+    #[test]
+    fn sharded_fastsim_matches_unsharded_bits() {
+        let m = KwsModel::synthetic(8);
+        let single = FastSim::new(
+            crate::compiler::build_kws_program(&m, OptLevel::FULL).unwrap(),
+            DramConfig::default(),
+        )
+        .unwrap();
+        let audio = dataset::synth_utterance(1, 4, m.audio_len, 0.3);
+        let want = single.infer(&audio);
+        assert_eq!(want.shard_fires.len(), 1);
+
+        // Auto-sharded from program metadata...
+        let prog = crate::compiler::build_kws_program_sharded(&m, OptLevel::FULL, 2).unwrap();
+        let sharded = FastSim::new(prog, DramConfig::default()).unwrap();
+        let got = sharded.infer(&audio);
+        assert_eq!(got.logits, want.logits);
+        assert_eq!(got.shard_fires.len(), 2);
+        // ...and through an explicit uneven plan with threads.
+        let prog = crate::compiler::build_kws_program(&m, OptLevel::FULL).unwrap();
+        let plan = crate::dataflow::shard::ShardPlan::even(&prog.plan, 3).unwrap();
+        let threaded = FastSim::new(prog, DramConfig::default())
+            .unwrap()
+            .with_shard_plan(&plan, true)
+            .unwrap();
+        let got = threaded.infer(&audio);
+        assert_eq!(got.logits, want.logits);
+        assert_eq!(got.shard_fires.len(), 3);
     }
 
     #[test]

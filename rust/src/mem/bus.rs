@@ -32,7 +32,13 @@ pub struct Bus {
     pub wt: Sram,
     pub dram: Dram,
     pub udma: Udma,
-    pub cim: CimMacro,
+    /// The CIM macro bank: one macro for classic programs, N for sharded
+    /// ones (`--macros N`). `cim_sel` routes CIM instructions.
+    pub cims: Vec<CimMacro>,
+    /// Selected macro index, or `layout::CIM_SEL_BROADCAST` (shifts,
+    /// fires, weight writes and CFG go to every macro; reads and output
+    /// stores fall back to macro 0).
+    pub cim_sel: u32,
     /// Current cycle (SoC updates before each access batch).
     pub now: u64,
     /// Set by a HOST_EXIT write: simulation should halt.
@@ -49,6 +55,11 @@ pub struct Bus {
 
 impl Bus {
     pub fn new(dram_cfg: DramConfig) -> Self {
+        Self::new_with_macros(dram_cfg, 1)
+    }
+
+    /// A bus with `n` CIM macros (the multi-macro sharded SoC).
+    pub fn new_with_macros(dram_cfg: DramConfig, n: usize) -> Self {
         Bus {
             imem: Sram::new("imem", layout::IMEM_SIZE),
             dmem: Sram::new("dmem", layout::DMEM_SIZE),
@@ -56,7 +67,8 @@ impl Bus {
             wt: Sram::new("wt", layout::WT_SIZE),
             dram: Dram::new(dram_cfg, layout::DRAM_SIZE),
             udma: Udma::new(),
-            cim: CimMacro::new(),
+            cims: (0..n.max(1)).map(|_| CimMacro::new()).collect(),
+            cim_sel: 0,
             now: 0,
             exit_code: None,
             console: String::new(),
@@ -64,6 +76,78 @@ impl Bus {
             phases: Vec::new(),
             cpu_dram_stalls: 0,
         }
+    }
+
+    /// The selected macro (macro 0 under broadcast — defined so that
+    /// single-macro programs behave identically whatever `cim_sel` says).
+    pub fn cim(&self) -> &CimMacro {
+        let i = (self.cim_sel as usize).min(self.cims.len() - 1);
+        if self.cim_sel == layout::CIM_SEL_BROADCAST {
+            &self.cims[0]
+        } else {
+            &self.cims[i]
+        }
+    }
+
+    /// Mutable selected macro (macro 0 under broadcast).
+    pub fn cim_mut(&mut self) -> &mut CimMacro {
+        let i = if self.cim_sel == layout::CIM_SEL_BROADCAST {
+            0
+        } else {
+            (self.cim_sel as usize).min(self.cims.len() - 1)
+        };
+        &mut self.cims[i]
+    }
+
+    /// Shift one word into the input buffer(s): broadcast reaches every
+    /// macro (the shared input bus), otherwise only the selected one.
+    pub fn cim_shift_in(&mut self, word: u32) {
+        if self.cim_sel == layout::CIM_SEL_BROADCAST {
+            for m in &mut self.cims {
+                m.shift_in(word);
+            }
+        } else {
+            self.cim_mut().shift_in(word);
+        }
+    }
+
+    /// Fire the MAC on the selected macro (all macros under broadcast).
+    pub fn cim_fire(&mut self) {
+        if self.cim_sel == layout::CIM_SEL_BROADCAST {
+            for m in &mut self.cims {
+                m.fire();
+            }
+        } else {
+            self.cim_mut().fire();
+        }
+    }
+
+    /// `cim_w` port write: broadcast writes every macro (the boot-time
+    /// mask-plane init arms all macros in one burst).
+    pub fn cim_port_write(&mut self, addr: u32, value: u32) -> Result<()> {
+        if self.cim_sel == layout::CIM_SEL_BROADCAST {
+            for m in &mut self.cims {
+                m.port_write(addr, value)?;
+            }
+            Ok(())
+        } else {
+            self.cim_mut().port_write(addr, value)
+        }
+    }
+
+    /// Aggregate fire/shift/load statistics across the whole bank
+    /// (energy accounting: every macro's activity costs energy).
+    pub fn cim_stats_total(&self) -> crate::cim::CimStats {
+        let mut total = crate::cim::CimStats::default();
+        for m in &self.cims {
+            total.fires += m.stats.fires;
+            total.shifts += m.stats.shifts;
+            total.out_words += m.stats.out_words;
+            total.weight_writes += m.stats.weight_writes;
+            total.weight_reads += m.stats.weight_reads;
+            total.macs += m.stats.macs;
+        }
+        total
     }
 
     /// Advance time: retire a completed uDMA transfer if its deadline
@@ -149,7 +233,8 @@ impl Bus {
             layout::MMIO_UDMA_DONE => self.udma.done_count,
             layout::MMIO_CYCLE_LO => self.now as u32,
             layout::MMIO_CYCLE_HI => (self.now >> 32) as u32,
-            layout::MMIO_CIM_CFG => self.cim.cfg.to_bits(),
+            layout::MMIO_CIM_CFG => self.cim().cfg.to_bits(),
+            layout::MMIO_CIM_SEL => self.cim_sel,
             layout::MMIO_HOST_RESULT => self.result_addr,
             _ => bail!("MMIO read from unmapped offset {off:#x}"),
         })
@@ -165,7 +250,26 @@ impl Bus {
                     self.udma.start(self.now, &mut self.dram)?;
                 }
             }
-            layout::MMIO_CIM_CFG => self.cim.cfg = CimConfig::from_bits(value),
+            layout::MMIO_CIM_CFG => {
+                let cfg = CimConfig::from_bits(value);
+                if self.cim_sel == layout::CIM_SEL_BROADCAST {
+                    for m in &mut self.cims {
+                        m.cfg = cfg;
+                    }
+                } else {
+                    self.cim_mut().cfg = cfg;
+                }
+            }
+            layout::MMIO_CIM_SEL => {
+                if value != layout::CIM_SEL_BROADCAST && value as usize >= self.cims.len() {
+                    bail!(
+                        "CIM_SEL {value} out of range for {} macro(s) (broadcast is {:#x})",
+                        self.cims.len(),
+                        layout::CIM_SEL_BROADCAST
+                    );
+                }
+                self.cim_sel = value;
+            }
             layout::MMIO_HOST_EXIT => self.exit_code = Some(value),
             layout::MMIO_HOST_PUTC => self.console.push((value & 0xFF) as u8 as char),
             layout::MMIO_HOST_RESULT => self.result_addr = value,
@@ -272,13 +376,46 @@ mod tests {
             col_base: 2,
         };
         b.write(layout::MMIO_BASE + layout::MMIO_CIM_CFG, cfg.to_bits(), Width::Word).unwrap();
-        assert!(matches!(b.cim.cfg.mode, crate::cim::Mode::Y));
-        assert!(b.cim.cfg.pool_or);
-        assert_eq!(b.cim.cfg.window_words, 6);
-        assert_eq!(b.cim.cfg.row_base, 3);
-        assert_eq!(b.cim.cfg.col_base, 2);
+        assert!(matches!(b.cim().cfg.mode, crate::cim::Mode::Y));
+        assert!(b.cim().cfg.pool_or);
+        assert_eq!(b.cim().cfg.window_words, 6);
+        assert_eq!(b.cim().cfg.row_base, 3);
+        assert_eq!(b.cim().cfg.col_base, 2);
         let (v, _) = b.read(layout::MMIO_BASE + layout::MMIO_CIM_CFG, Width::Word).unwrap();
         assert_eq!(v, cfg.to_bits());
+    }
+
+    #[test]
+    fn macro_select_and_broadcast() {
+        let mut b = Bus::new_with_macros(DramConfig::default(), 3);
+        // Broadcast shift reaches every macro; selected shift only one.
+        b.write(
+            layout::MMIO_BASE + layout::MMIO_CIM_SEL,
+            layout::CIM_SEL_BROADCAST,
+            Width::Word,
+        )
+        .unwrap();
+        b.cim_shift_in(0xF);
+        assert!(b.cims.iter().all(|m| m.stats.shifts == 1));
+        b.write(layout::MMIO_BASE + layout::MMIO_CIM_SEL, 2, Width::Word).unwrap();
+        b.cim_shift_in(0xF);
+        assert_eq!(b.cims[2].stats.shifts, 2);
+        assert_eq!(b.cims[0].stats.shifts, 1);
+        // Broadcast port write arms every mask plane.
+        b.write(
+            layout::MMIO_BASE + layout::MMIO_CIM_SEL,
+            layout::CIM_SEL_BROADCAST,
+            Width::Word,
+        )
+        .unwrap();
+        b.cim_port_write(0, 0xAA).unwrap();
+        for m in &mut b.cims {
+            assert_eq!(m.port_read(0).unwrap(), 0xAA);
+        }
+        // Out-of-range select faults (program bug surfaced immediately).
+        assert!(b.write(layout::MMIO_BASE + layout::MMIO_CIM_SEL, 3, Width::Word).is_err());
+        // Aggregate stats sum across the bank.
+        assert_eq!(b.cim_stats_total().shifts, 4);
     }
 
     #[test]

@@ -54,6 +54,14 @@ pub const MMIO_HOST_RESULT: u32 = 0x24;
 /// Write: phase marker — the bus records (value, cycle) so experiments can
 /// attribute latency to preprocessing / weight / conv phases.
 pub const MMIO_HOST_PHASE: u32 = 0x28;
+/// CIM macro select for multi-macro (sharded) SoCs: a macro index routes
+/// subsequent CIM instructions / CFG writes to that macro; the broadcast
+/// value applies shifts, fires, weight writes and CFG to every macro at
+/// once (the shared input bus of a multi-macro chip). Single-macro
+/// programs never write it (reset value 0 selects the only macro).
+pub const MMIO_CIM_SEL: u32 = 0x30;
+/// Broadcast value for `MMIO_CIM_SEL`.
+pub const CIM_SEL_BROADCAST: u32 = 0xFFFF_FFFF;
 
 /// CIM_CFG bits (see `cim::mode::CimConfig::to_bits`).
 pub const CIM_CFG_YMODE: u32 = 1 << 0;

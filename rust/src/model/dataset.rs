@@ -6,7 +6,7 @@ use std::path::Path;
 
 use anyhow::{ensure, Result};
 
-use crate::util::io::{read_f32, read_i32};
+use crate::util::io::{read_audio_any, read_f32, read_i32};
 
 /// A set of utterances with golden labels (and optionally golden logits).
 #[derive(Debug, Clone)]
@@ -40,8 +40,11 @@ impl Dataset {
     }
 
     /// Load the small test-vector set (audio + golden logits + labels).
+    /// Audio may be stored as f32 (`make artifacts`) or compact i16
+    /// quantized samples (the checked-in testdata set) — see
+    /// `util::io::read_audio_any`.
     pub fn load_testvec(dir: &Path, audio_len: usize, n_classes: usize) -> Result<Self> {
-        let audio = read_f32(&dir.join("testvec/audio.bin"))?;
+        let audio = read_audio_any(&dir.join("testvec"), "audio")?;
         let labels = read_i32(&dir.join("testvec/labels.bin"))?;
         let logits = read_f32(&dir.join("testvec/logits.bin"))?;
         ensure!(audio.len() == labels.len() * audio_len, "testvec audio size");
@@ -51,7 +54,7 @@ impl Dataset {
 
     /// Load the larger eval set (audio + labels, no golden logits).
     pub fn load_eval(dir: &Path, audio_len: usize, n_classes: usize) -> Result<Self> {
-        let audio = read_f32(&dir.join("testvec/eval_audio.bin"))?;
+        let audio = read_audio_any(&dir.join("testvec"), "eval_audio")?;
         let labels = read_i32(&dir.join("testvec/eval_labels.bin"))?;
         ensure!(audio.len() == labels.len() * audio_len, "eval audio size");
         Ok(Dataset { audio_len, audio, labels, logits: None, n_classes })

@@ -83,27 +83,47 @@ impl KwsModel {
             read_f32(&dir.join("weights").join(format!("{name}.bin")))
         };
 
+        // Weight payload format: f32 ±1 values (the `make artifacts`
+        // export) or packed sign bits (the compact checked-in testdata
+        // set: bit idx of word idx/32 set ⇔ flat weight idx is +1, flat
+        // order = [k][ci][co] row-major, LSB-first).
+        let sign_bits = m
+            .get("format")
+            .and_then(|f| f.get("weights"))
+            .and_then(|w| w.as_str())
+            .map(|s| s == "sign_bits")
+            .unwrap_or(false);
+
         let n_layers = channels.len();
         let mut layers = Vec::with_capacity(n_layers);
         for (i, ch) in channels.iter().enumerate() {
             let pair = ch.as_arr()?;
             let c_in = pair[0].as_usize()?;
             let c_out = pair[1].as_usize()?;
-            let w = read_param(&format!("conv{i}"))?;
-            ensure!(
-                w.len() == kernel * c_in * c_out,
-                "conv{i}: got {} weights, want {}",
-                w.len(),
-                kernel * c_in * c_out
-            );
-            // f32 {-1,+1} -> i8, laid out [k][ci][co] == row-major rows.
-            let weights: Vec<i8> = w
-                .iter()
-                .map(|&v| {
-                    ensure!(v == 1.0 || v == -1.0, "non-binary weight {v}");
-                    Ok(if v > 0.0 { 1i8 } else { -1 })
-                })
-                .collect::<Result<_>>()?;
+            let n_w = kernel * c_in * c_out;
+            let weights: Vec<i8> = if sign_bits {
+                let words =
+                    crate::util::io::read_u32(&dir.join("weights").join(format!("conv{i}.bin")))?;
+                ensure!(
+                    words.len() == n_w.div_ceil(32),
+                    "conv{i}: got {} packed words, want {}",
+                    words.len(),
+                    n_w.div_ceil(32)
+                );
+                (0..n_w)
+                    .map(|idx| if (words[idx / 32] >> (idx % 32)) & 1 == 1 { 1i8 } else { -1 })
+                    .collect()
+            } else {
+                let w = read_param(&format!("conv{i}"))?;
+                ensure!(w.len() == n_w, "conv{i}: got {} weights, want {n_w}", w.len());
+                // f32 {-1,+1} -> i8, laid out [k][ci][co] == row-major rows.
+                w.iter()
+                    .map(|&v| {
+                        ensure!(v == 1.0 || v == -1.0, "non-binary weight {v}");
+                        Ok(if v > 0.0 { 1i8 } else { -1 })
+                    })
+                    .collect::<Result<_>>()?
+            };
             let binarized = i < n_layers - 1;
             let thresholds = if binarized {
                 let th = read_param(&format!("th{i}"))?;
@@ -197,6 +217,55 @@ impl KwsModel {
         };
         let layers =
             vec![mk(64, 64, true, true), mk(64, 32, true, true), mk(32, 12, false, false)];
+        let gamma = vec![1.0f32; 64];
+        let beta = vec![0.5f32; 64];
+        let mean = vec![20000.0f32; 64];
+        let var = vec![4.0e8f32; 64];
+        let (pre_thr, pre_dir) = fold_bn(&gamma, &beta, &mean, &var);
+        KwsModel {
+            audio_len: 16000,
+            t: 128,
+            c: 64,
+            n_classes: 12,
+            fusion_split: 2,
+            layers,
+            bn_gamma: gamma,
+            bn_beta: beta,
+            bn_mean: mean,
+            bn_var: var,
+            pre_thr,
+            pre_dir,
+            trained: false,
+            artifacts_dir: std::path::PathBuf::new(),
+        }
+    }
+
+    /// A heavier synthetic model for sharding/throughput work: output
+    /// channels up to 256 wide (several latch words per row), so a
+    /// multi-macro split has real work to divide. Same artifact-free
+    /// contract as [`Self::synthetic`].
+    pub fn synthetic_wide(seed: u64) -> KwsModel {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed ^ 0x57AD);
+        let mut mk = |ci: usize, co: usize, pooled: bool, binarized: bool| LayerSpec {
+            c_in: ci,
+            c_out: co,
+            kernel: 3,
+            pooled,
+            binarized,
+            weights: (0..3 * ci * co).map(|_| rng.pm1()).collect(),
+            thresholds: if binarized {
+                (0..co).map(|_| rng.range(0, 9) as i32 - 4).collect()
+            } else {
+                vec![]
+            },
+        };
+        let layers = vec![
+            mk(64, 256, true, true),
+            mk(256, 256, true, true),
+            mk(256, 192, true, true),
+            mk(192, 12, false, false),
+        ];
         let gamma = vec![1.0f32; 64];
         let beta = vec![0.5f32; 64];
         let mean = vec![20000.0f32; 64];

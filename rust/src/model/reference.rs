@@ -55,6 +55,17 @@ impl BitMap {
     pub fn popcount(&self) -> u64 {
         self.words.iter().map(|w| w.count_ones() as u64).sum()
     }
+
+    /// OR `src` (a packed row, padding bits above its meaningful length
+    /// zero) into row `r` starting at channel bit `bit_off`. The shard
+    /// merge primitive: a shard's output channels land at their global
+    /// channel positions, word-aligned or not. The caller guarantees
+    /// `bit_off + meaningful src bits <= c`.
+    #[inline]
+    pub fn or_row_at(&mut self, r: usize, bit_off: usize, src: &[u32]) {
+        let row = &mut self.words[r * self.wpr..(r + 1) * self.wpr];
+        or_shifted(row, bit_off, src);
+    }
 }
 
 /// A conv layer in the macro's native form: one sign bit-plane per output
@@ -126,6 +137,29 @@ impl PackedLayer {
             binarized: self.binarized,
             weights,
             thresholds: self.thresholds.clone(),
+        }
+    }
+
+    /// The sub-layer holding output channels `[c0, c1)` — the shard a
+    /// single macro owns under a `dataflow::shard::ShardPlan`. The planes
+    /// are column-major, so a channel range is a contiguous word range;
+    /// sums and thresholds of the retained channels are untouched, which
+    /// is what makes sharded inference bit-identical.
+    pub fn slice_channels(&self, c0: usize, c1: usize) -> PackedLayer {
+        assert!(c0 <= c1 && c1 <= self.c_out, "channel slice out of range");
+        PackedLayer {
+            c_in: self.c_in,
+            c_out: c1 - c0,
+            kernel: self.kernel,
+            pooled: self.pooled,
+            binarized: self.binarized,
+            plane_words: self.plane_words,
+            planes: self.planes[c0 * self.plane_words..c1 * self.plane_words].to_vec(),
+            thresholds: if self.thresholds.is_empty() {
+                Vec::new()
+            } else {
+                self.thresholds[c0..c1].to_vec()
+            },
         }
     }
 
@@ -242,6 +276,18 @@ pub fn final_layer_gap_packed(x: &BitMap, layer: &PackedLayer) -> Vec<f32> {
         }
     }
     acc.iter().map(|&s| s as f32 / x.t as f32).collect()
+}
+
+/// OR a shard's output feature map into the full-width map at channel
+/// offset `c_off` (rows must agree). The functional simulator's shard
+/// concatenation: each macro's channel range lands at its global bit
+/// position, aligned or not.
+pub fn merge_shard(dst: &mut BitMap, c_off: usize, shard: &BitMap) {
+    assert_eq!(dst.t, shard.t, "shard rows must match");
+    assert!(c_off + shard.c <= dst.c, "shard channels overflow the merged map");
+    for r in 0..shard.t {
+        dst.or_row_at(r, c_off, shard.row_words(r));
+    }
 }
 
 /// Full inference through the packed engine (packs the model's layers
@@ -547,6 +593,57 @@ mod tests {
                 crate::model::dataset::synth_utterance(seed as usize % 12, seed, model.audio_len, 0.3);
             assert_eq!(infer_packed(&model, &audio), infer(&model, &audio), "seed {seed}");
         }
+    }
+
+    #[test]
+    fn slice_channels_preserves_sums_and_thresholds() {
+        let layer = tiny_layer(70, 23, true, true); // non-word-aligned both ways
+        let packed = PackedLayer::from_spec(&layer);
+        let mut x = BitMap::zero(7, 70);
+        for t in 0..7 {
+            for c in 0..70 {
+                if (t * 5 + c * 3) % 4 < 2 {
+                    x.set(t, c);
+                }
+            }
+        }
+        for (c0, c1) in [(0, 23), (0, 7), (7, 23), (10, 11), (23, 23)] {
+            let shard = packed.slice_channels(c0, c1);
+            assert_eq!(shard.c_out, c1 - c0);
+            assert_eq!(shard.thresholds, layer.thresholds[c0..c1].to_vec());
+            for t in 0..7 {
+                let full = conv_sums_packed(&x, &packed, t);
+                let part = conv_sums_packed(&x, &shard, t);
+                assert_eq!(part.as_slice(), &full[c0..c1], "t {t} range {c0}..{c1}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_shard_reassembles_full_map_unaligned() {
+        // Split a map into 3 uneven channel ranges, merge, compare.
+        let mut full = BitMap::zero(5, 70);
+        for t in 0..5 {
+            for c in 0..70 {
+                if (t * 13 + c * 7) % 3 == 0 {
+                    full.set(t, c);
+                }
+            }
+        }
+        let ranges = [(0usize, 18usize), (18, 53), (53, 70)];
+        let mut merged = BitMap::zero(5, 70);
+        for &(a, b) in &ranges {
+            let mut part = BitMap::zero(5, b - a);
+            for t in 0..5 {
+                for c in a..b {
+                    if full.get(t, c) {
+                        part.set(t, c - a);
+                    }
+                }
+            }
+            merge_shard(&mut merged, a, &part);
+        }
+        assert_eq!(merged, full);
     }
 
     #[test]

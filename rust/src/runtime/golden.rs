@@ -60,6 +60,23 @@ impl GoldenModel {
         Self::load(&crate::util::io::artifacts_dir()?)
     }
 
+    /// Whether this artifact set carries a loadable PJRT golden model:
+    /// the manifest names an HLO file and that file exists on disk. The
+    /// checked-in `rust/testdata` set intentionally ships golden *logits*
+    /// instead of HLO (no Python/JAX in CI), so PJRT cross-checks gate on
+    /// this instead of failing.
+    pub fn available(dir: &Path) -> bool {
+        let check = || -> Result<bool> {
+            let manifest = Json::parse(
+                &std::fs::read_to_string(dir.join("kws_manifest.json"))
+                    .context("reading kws_manifest.json")?,
+            )?;
+            let hlo = manifest.path(&["hlo", "model"])?.as_str()?.to_string();
+            Ok(dir.join(hlo).is_file())
+        };
+        check().unwrap_or(false)
+    }
+
     /// Run one utterance through the golden model.
     pub fn infer(&self, audio: &[f32]) -> Result<Vec<f32>> {
         ensure!(audio.len() == self.audio_len, "audio length {}", audio.len());

@@ -29,6 +29,10 @@ pub struct RunResult {
     /// Wall-clock seconds at the paper's 50 MHz clock.
     pub seconds_at_50mhz: f64,
     pub console: String,
+    /// MAC fires per macro this run (one entry per macro; a single entry
+    /// for unsharded programs). Feeds the per-shard utilization counters
+    /// in `coordinator::ServiceStats`.
+    pub shard_fires: Vec<u64>,
 }
 
 /// The SoC instance (reusable across inferences: weights stay staged).
@@ -46,7 +50,7 @@ impl Soc {
     /// Build a SoC with a program image loaded (IMEM + DRAM weights +
     /// DMEM tables). Audio is staged per-run.
     pub fn new(program: Program, dram_cfg: DramConfig) -> Result<Self> {
-        let mut bus = Bus::new(dram_cfg);
+        let mut bus = Bus::new_with_macros(dram_cfg, program.shards.n_macros.max(1));
         for (i, w) in program.imem.iter().enumerate() {
             bus.imem.poke_u32((i * 4) as u32, *w)?;
         }
@@ -71,10 +75,17 @@ impl Soc {
         self
     }
 
-    /// Inject a variation model into the macro (robustness experiments).
+    /// Inject a variation model into the macro(s) (robustness experiments).
     pub fn with_variation(mut self, v: crate::cim::VariationModel) -> Self {
-        self.bus.cim.variation = Some(v);
+        for m in &mut self.bus.cims {
+            m.variation = Some(v.clone());
+        }
         self
+    }
+
+    /// Per-macro fire/shift/load statistics of the last run.
+    pub fn macro_stats(&self) -> Vec<crate::cim::CimStats> {
+        self.bus.cims.iter().map(|m| m.stats).collect()
     }
 
     pub fn program(&self) -> &Program {
@@ -108,7 +119,9 @@ impl Soc {
             self.bus.dmem.reset_counters();
             self.bus.imem.reset_counters();
             self.bus.dram.reset_counters();
-            self.bus.cim.reset_stats();
+            for m in &mut self.bus.cims {
+                m.reset_stats();
+            }
             self.bus.udma.transfers = 0;
             self.bus.udma.bytes = 0;
             self.bus.udma.busy_cycles = 0;
@@ -165,6 +178,7 @@ impl Soc {
             energy,
             seconds_at_50mhz: cpu.stats.cycles as f64 / 50e6,
             console: self.bus.console.clone(),
+            shard_fires: self.bus.cims.iter().map(|m| m.stats.fires).collect(),
         })
     }
 

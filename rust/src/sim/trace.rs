@@ -33,7 +33,7 @@ impl TraceEntry {
 /// (optionally skipping the first `skip` retired instructions). The run
 /// continues to halt so the trace is taken from a *valid* execution.
 pub fn trace_program(program: &Program, skip: u64, max: usize) -> Result<Vec<TraceEntry>> {
-    let mut bus = Bus::new(DramConfig::default());
+    let mut bus = Bus::new_with_macros(DramConfig::default(), program.shards.n_macros.max(1));
     for (i, w) in program.imem.iter().enumerate() {
         bus.imem.poke_u32((i * 4) as u32, *w)?;
     }

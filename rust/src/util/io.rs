@@ -30,6 +30,44 @@ pub fn read_i32(path: &Path) -> Result<Vec<i32>> {
         .collect())
 }
 
+/// Read a little-endian u32 payload (packed sign-bit weight planes of the
+/// checked-in testdata artifact format).
+pub fn read_u32(path: &Path) -> Result<Vec<u32>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read audio stored as little-endian i16 quantized samples (`k` such
+/// that the waveform value is `k / 2048`). The expansion is exact in f32
+/// (|k| <= 2048, power-of-two divisor), so artifacts shipped in this
+/// compact form reproduce the f32 pipeline bit for bit.
+pub fn read_i16_audio(path: &Path) -> Result<Vec<f32>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 2 != 0 {
+        bail!("{}: length {} not a multiple of 2", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| i16::from_le_bytes([c[0], c[1]]) as f32 / 2048.0)
+        .collect())
+}
+
+/// Read audio from `<base>.bin` (f32, the `make artifacts` export) or
+/// fall back to `<base>_i16.bin` (the compact checked-in testdata form).
+pub fn read_audio_any(dir: &Path, base: &str) -> Result<Vec<f32>> {
+    let f32_path = dir.join(format!("{base}.bin"));
+    if f32_path.is_file() {
+        return read_f32(&f32_path);
+    }
+    read_i16_audio(&dir.join(format!("{base}_i16.bin")))
+}
+
 /// Write a little-endian f32 payload.
 pub fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
     let mut bytes = Vec::with_capacity(data.len() * 4);
@@ -39,8 +77,10 @@ pub fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
     fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
 }
 
-/// Locate the artifacts directory: `$CIMRV_ARTIFACTS`, else `./artifacts`,
-/// else `../artifacts` (so tests/examples work from any workspace cwd).
+/// Locate the artifacts directory: `$CIMRV_ARTIFACTS`, else `./artifacts`
+/// / `../artifacts` (a `make artifacts` export), else the checked-in tiny
+/// pre-trained set under `rust/testdata/artifacts` — so tests, benches
+/// and the CLI work on a fresh checkout from any workspace cwd.
 pub fn artifacts_dir() -> Result<std::path::PathBuf> {
     if let Ok(dir) = std::env::var("CIMRV_ARTIFACTS") {
         let p = std::path::PathBuf::from(dir);
@@ -49,7 +89,15 @@ pub fn artifacts_dir() -> Result<std::path::PathBuf> {
         }
         bail!("CIMRV_ARTIFACTS={} is not a directory", p.display());
     }
-    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+    for cand in [
+        "artifacts",
+        "../artifacts",
+        "../../artifacts",
+        // Checked-in testdata set (cwd = rust/ under cargo, or repo root).
+        "testdata/artifacts",
+        "rust/testdata/artifacts",
+        "../rust/testdata/artifacts",
+    ] {
         let p = std::path::PathBuf::from(cand);
         if p.join("kws_manifest.json").is_file() {
             return Ok(p);
@@ -80,5 +128,28 @@ mod tests {
         std::fs::write(&p, [0u8; 7]).unwrap();
         assert!(read_f32(&p).is_err());
         assert!(read_i32(&p).is_err());
+        assert!(read_u32(&p).is_err());
+        assert!(read_i16_audio(&p).is_err());
+    }
+
+    #[test]
+    fn i16_audio_expands_exactly_and_any_prefers_f32() {
+        let dir = std::env::temp_dir().join("cimrv_io_test_audio");
+        std::fs::create_dir_all(&dir).unwrap();
+        // i16 form: k / 2048 exactly.
+        let ks: [i16; 5] = [-2048, -1, 0, 1, 2048];
+        let mut bytes = Vec::new();
+        for k in ks {
+            bytes.extend_from_slice(&k.to_le_bytes());
+        }
+        std::fs::write(dir.join("clip_i16.bin"), &bytes).unwrap();
+        let a = read_audio_any(&dir, "clip").unwrap();
+        assert_eq!(a, vec![-1.0, -1.0 / 2048.0, 0.0, 1.0 / 2048.0, 1.0]);
+        // Quantizing the expansion recovers k bit-for-bit.
+        let q = crate::model::reference::quantize_audio(&a);
+        assert_eq!(q, ks.iter().map(|&k| k as i32).collect::<Vec<_>>());
+        // An f32 file with the same base wins over the i16 fallback.
+        write_f32(&dir.join("clip.bin"), &[0.5]).unwrap();
+        assert_eq!(read_audio_any(&dir, "clip").unwrap(), vec![0.5]);
     }
 }

@@ -1,6 +1,12 @@
-//! Integration tests over the real artifacts (require `make artifacts`):
-//! model loading, the ISS vs host-reference bit-exactness on the trained
-//! model, the optimization ladder, accuracy, and the coordinator.
+//! Integration tests over the trained artifacts: model loading, the ISS
+//! vs host-reference bit-exactness on the trained model, the optimization
+//! ladder, accuracy, and the coordinator.
+//!
+//! An artifact set is always present on a fresh checkout: the tiny
+//! pre-trained set under `rust/testdata/artifacts` (generated once by
+//! `python/compile/make_testdata.py`, checked in) is found automatically
+//! by `util::io::artifacts_dir`, so this suite runs — rather than skips —
+//! in CI. A full `make artifacts` export takes precedence when present.
 
 use cimrv::baselines::OptLevel;
 use cimrv::compiler::build_kws_program;
@@ -78,7 +84,9 @@ fn host_reference_matches_exported_golden_logits() {
     let Some(m) = model() else { return };
     let dir = artifacts_dir().unwrap();
     let tv = dataset::Dataset::load_testvec(&dir, m.audio_len, m.n_classes).unwrap();
-    assert!(tv.len() >= 8);
+    // >= 3: the checked-in testdata set carries 3 golden utterances; a
+    // full `make artifacts` export carries more.
+    assert!(tv.len() >= 3);
     for i in 0..tv.len() {
         let got = reference::infer(&m, tv.utterance(i));
         let want = tv.golden_logits(i).unwrap();
@@ -136,6 +144,32 @@ fn coordinator_end_to_end_on_trained_model() {
     assert_eq!(resps.len(), 4);
     assert!(resps.iter().all(|r| r.chip_cycles > 0));
     coord.shutdown();
+}
+
+#[test]
+fn sharded_inference_bit_exact_on_trained_model() {
+    // The tentpole on the real weights: a 2-macro sharded program (cycle
+    // engine) and a 3-way sharded fast backend both reproduce the
+    // trained model's logits bit for bit.
+    use cimrv::compiler::build_kws_program_sharded;
+    use cimrv::dataflow::shard::ShardPlan;
+    use cimrv::fsim::FastSim;
+    let Some(m) = model() else { return };
+    let audio = dataset::synth_utterance(7, 21, m.audio_len, 0.37);
+    let want = reference::infer(&m, &audio);
+
+    let prog = build_kws_program_sharded(&m, OptLevel::FULL, 2).unwrap();
+    let mut soc = Soc::new(prog.clone(), DramConfig::default()).unwrap();
+    let r = soc.infer(&audio).unwrap();
+    assert_eq!(r.logits, want, "2-macro cycle engine");
+    assert_eq!(r.shard_fires.len(), 2);
+
+    let plan = ShardPlan::even(&prog.plan, 3).unwrap();
+    let fast = FastSim::new(build_kws_program(&m, OptLevel::FULL).unwrap(), DramConfig::default())
+        .unwrap()
+        .with_shard_plan(&plan, true)
+        .unwrap();
+    assert_eq!(fast.infer(&audio).logits, want, "3-way threaded fast backend");
 }
 
 #[test]

@@ -1,0 +1,239 @@
+//! Multi-macro sharding parity suite: splitting a layer's output channels
+//! across N macros must never change a single bit of the logits —
+//! whatever the split (even, uneven, word-aligned), the engine (cycle SoC
+//! with a macro bank vs functional simulator), the execution mode
+//! (sequential vs one-thread-per-macro), or the optimization level.
+//! No artifacts required — runs on synthetic models.
+
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::{build_kws_program, build_kws_program_sharded};
+use cimrv::dataflow::shard::ShardPlan;
+use cimrv::fsim::{latency, FastSim};
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::kws::LayerSpec;
+use cimrv::model::reference::PackedLayer;
+use cimrv::model::{dataset, reference, KwsModel};
+use cimrv::sim::Soc;
+
+/// A model with an unpooled mid layer and non-word-multiple shard loads
+/// (96 = 3 latch words), so the suite covers pooled/unpooled layers and
+/// splits whose per-macro word counts differ.
+fn mixed_model(seed: u64) -> KwsModel {
+    use cimrv::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut mk = |ci: usize, co: usize, pooled: bool, binarized: bool| LayerSpec {
+        c_in: ci,
+        c_out: co,
+        kernel: 3,
+        pooled,
+        binarized,
+        weights: (0..3 * ci * co).map(|_| rng.pm1()).collect(),
+        thresholds: if binarized {
+            (0..co).map(|_| rng.range(0, 9) as i32 - 4).collect()
+        } else {
+            vec![]
+        },
+    };
+    let layers = vec![
+        mk(64, 96, true, true),
+        mk(96, 64, false, true), // unpooled binarized layer
+        mk(64, 32, true, true),
+        mk(32, 12, false, false),
+    ];
+    let (pre_thr, pre_dir) =
+        cimrv::model::kws::fold_bn(&[1.0; 64], &[0.5; 64], &[20000.0; 64], &[4.0e8; 64]);
+    KwsModel {
+        audio_len: 16000,
+        t: 128,
+        c: 64,
+        n_classes: 12,
+        fusion_split: 2,
+        layers,
+        bn_gamma: vec![1.0; 64],
+        bn_beta: vec![0.5; 64],
+        bn_mean: vec![20000.0; 64],
+        bn_var: vec![4.0e8; 64],
+        pre_thr,
+        pre_dir,
+        trained: false,
+        artifacts_dir: std::path::PathBuf::new(),
+    }
+}
+
+#[test]
+fn fsim_sharded_bit_identical_n_1_to_4_even_and_uneven() {
+    // Channel-granular splits: 96/64/32/12-wide layers over N in 1..=4
+    // hit both exact divisions and uneven remainders (e.g. 96 % 4 == 0
+    // but 64 % 3 != 0 and 12 % 4 == 0 with idle macros elsewhere).
+    for model in [mixed_model(3), KwsModel::synthetic(11)] {
+        let prog = build_kws_program(&model, OptLevel::FULL).unwrap();
+        let single = FastSim::new(prog.clone(), DramConfig::default()).unwrap();
+        for n in 1..=4usize {
+            let plan = ShardPlan::even(&prog.plan, n).unwrap();
+            let seq = FastSim::new(prog.clone(), DramConfig::default())
+                .unwrap()
+                .with_shard_plan(&plan, false)
+                .unwrap();
+            let par = FastSim::new(prog.clone(), DramConfig::default())
+                .unwrap()
+                .with_shard_plan(&plan, true)
+                .unwrap();
+            for seed in [1u64, 9] {
+                let audio =
+                    dataset::synth_utterance(seed as usize % 12, seed, model.audio_len, 0.37);
+                let want = single.infer(&audio);
+                let s = seq.infer(&audio);
+                let p = par.infer(&audio);
+                assert_eq!(s.logits, want.logits, "sequential n={n} seed={seed}");
+                assert_eq!(p.logits, want.logits, "parallel n={n} seed={seed}");
+                assert_eq!(s.predicted, want.predicted);
+                assert_eq!(p.predicted, want.predicted);
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_shard_slices_match_scalar_oracle_per_shard() {
+    // Every shard's packed sub-layer, unpacked back to scalar form, must
+    // run the scalar kernels to exactly the full layer's channel range —
+    // packed-vs-scalar parity per shard, including uneven boundaries.
+    let model = mixed_model(7);
+    let audio = dataset::synth_utterance(4, 2, model.audio_len, 0.37);
+    let mut x = reference::preprocess(&model, &audio);
+    for layer in &model.layers[..model.layers.len() - 1] {
+        let packed = PackedLayer::from_spec(layer);
+        for n in [2usize, 3] {
+            let base = layer.c_out / n;
+            let rem = layer.c_out % n;
+            let mut at = 0usize;
+            for m in 0..n {
+                let len = base + usize::from(m < rem);
+                let shard = packed.slice_channels(at, at + len);
+                // Packed shard output vs scalar shard output (unpacked).
+                let shard_scalar = shard.to_spec();
+                let got = reference::conv_layer_packed(&x, &shard);
+                let want = reference::conv_layer(&x, &shard_scalar);
+                assert_eq!(got, want, "layer c_out={} shard {m}/{n}", layer.c_out);
+                at += len;
+            }
+        }
+        x = reference::conv_layer(&x, layer);
+    }
+}
+
+#[test]
+fn cycle_engine_sharded_logits_bit_identical_across_n() {
+    // The multi-macro SoC: same audio, N in 1..=4, every logit identical
+    // to the host reference and the single-macro chip, with per-shard
+    // fire statistics exposed.
+    let model = mixed_model(5);
+    let audio = dataset::synth_utterance(2, 6, model.audio_len, 0.37);
+    let want = reference::infer(&model, &audio);
+    for n in 1..=4usize {
+        let prog = build_kws_program_sharded(&model, OptLevel::FULL, n).unwrap();
+        let mut soc = Soc::new(prog.clone(), DramConfig::default()).unwrap();
+        let r = soc.infer(&audio).unwrap();
+        assert_eq!(r.logits, want, "cycle n={n}");
+        assert_eq!(r.shard_fires.len(), n);
+        let stats = soc.macro_stats();
+        assert_eq!(stats.len(), n);
+        // Owners fire once per row position of each layer they own;
+        // macros left idle by the word-aligned split fire nothing.
+        for (m, s) in stats.iter().enumerate() {
+            let expect: u64 = prog
+                .plan
+                .layers
+                .iter()
+                .map(|lp| {
+                    let owned = !prog.shards.layers[lp.index].is_empty(m);
+                    if owned { lp.t_in as u64 } else { 0 }
+                })
+                .sum();
+            assert_eq!(s.fires, expect, "macro {m} of {n}");
+        }
+    }
+}
+
+#[test]
+fn cycle_sharding_commutes_with_every_opt_level() {
+    // Sharding is orthogonal to the paper's three optimizations: at every
+    // ladder rung the 2-macro program produces the single-macro logits
+    // (unfused pooling passes and FM spills included).
+    let model = mixed_model(9);
+    let audio = dataset::synth_utterance(7, 3, model.audio_len, 0.37);
+    for (name, opt) in OptLevel::ladder() {
+        let single = build_kws_program(&model, opt).unwrap();
+        let sharded = build_kws_program_sharded(&model, opt, 2).unwrap();
+        let a = Soc::new(single, DramConfig::default()).unwrap().infer(&audio).unwrap();
+        let b = Soc::new(sharded, DramConfig::default()).unwrap().infer(&audio).unwrap();
+        assert_eq!(a.logits, b.logits, "{name}");
+    }
+}
+
+#[test]
+fn fsim_auto_shards_from_program_metadata_and_matches_cycle() {
+    // A sharded image drives both engines: the SoC's macro bank and the
+    // functional simulator's shard groups must agree bit for bit.
+    let model = mixed_model(1);
+    for n in [2usize, 3] {
+        let prog = build_kws_program_sharded(&model, OptLevel::FULL, n).unwrap();
+        let mut soc = Soc::new(prog.clone(), DramConfig::default()).unwrap();
+        let fast = FastSim::new(prog, DramConfig::default()).unwrap();
+        for seed in [0u64, 5] {
+            let audio = dataset::synth_utterance(seed as usize % 12, seed, model.audio_len, 0.37);
+            let want = soc.infer(&audio).unwrap();
+            let got = fast.infer(&audio);
+            assert_eq!(got.logits, want.logits, "n={n} seed={seed}");
+            // Per-shard fire accounting agrees between the engines.
+            assert_eq!(got.shard_fires, want.shard_fires, "n={n} seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn word_aligned_and_even_plans_agree_on_values() {
+    // Two different split geometries of the same program: identical bits.
+    let model = mixed_model(13);
+    let prog = build_kws_program(&model, OptLevel::FULL).unwrap();
+    let audio = dataset::synth_utterance(8, 8, model.audio_len, 0.37);
+    let base = FastSim::new(prog.clone(), DramConfig::default()).unwrap().infer(&audio);
+    for n in [2usize, 4] {
+        for plan in [
+            ShardPlan::even(&prog.plan, n).unwrap(),
+            ShardPlan::word_aligned(&prog.plan, n).unwrap(),
+        ] {
+            let sim = FastSim::new(prog.clone(), DramConfig::default())
+                .unwrap()
+                .with_shard_plan(&plan, false)
+                .unwrap();
+            assert_eq!(sim.infer(&audio).logits, base.logits, "n={n}");
+        }
+    }
+}
+
+#[test]
+fn sharded_analytical_latency_tracks_the_cycle_sim() {
+    // The latency walker mirrors the sharded emission instruction for
+    // instruction; the bound is looser than the single-macro 5% contract
+    // only to absorb DMA launch quantization across more phases.
+    let model = mixed_model(2);
+    let audio = dataset::synth_utterance(1, 1, model.audio_len, 0.37);
+    for n in [2usize, 4] {
+        let prog = build_kws_program_sharded(&model, OptLevel::FULL, n).unwrap();
+        let mut soc = Soc::new(prog.clone(), DramConfig::default()).unwrap();
+        let actual = soc.infer(&audio).unwrap();
+        let est = latency::estimate(&prog, &DramConfig::default());
+        let err = (est.cycles as f64 - actual.cycles as f64).abs() / actual.cycles as f64;
+        assert!(
+            err <= 0.10,
+            "n={n}: analytical {} vs measured {} cycles ({:.2}% error)",
+            est.cycles,
+            actual.cycles,
+            100.0 * err
+        );
+        // The overlapped multi-macro schedule only ever helps.
+        let overlapped = latency::estimate_overlapped(&prog, &DramConfig::default());
+        assert!(overlapped.cycles <= est.cycles, "n={n}");
+    }
+}
