@@ -1,13 +1,17 @@
 //! Backend + kernel throughput: the headline numbers for the serving
 //! stack, machine-readable in `BENCH_kernels.json`.
 //!
-//! Three levels, each asserted:
+//! Levels, each asserted:
 //!
 //! * cycle SoC vs the fast functional simulator (target: >= 20x — in
 //!   practice orders of magnitude, the fast path skips the ~10^6-step CPU
 //!   loop entirely);
 //! * the packed XNOR-popcount fsim vs the PR 1 scalar kernels on the same
 //!   decoded program (target: >= 5x inferences/sec);
+//! * **batched** fsim (`run_batch`, weight planes walked once per batch +
+//!   chunked thread fan-out) vs single-utterance `run` (target: >= 2x
+//!   inferences/sec at batch 8 on full runs with >= 4 cores; batch 2/4/8
+//!   rows always recorded, `--batch N` adds a custom row);
 //! * multi-macro sharded fsim (one thread per macro) vs the single-macro
 //!   packed path on a wide synthetic model (target: >= 1.5x at N=4 when
 //!   the host has >= 4 cores; N=2 and N=4 rows always recorded);
@@ -17,7 +21,9 @@
 //!
 //! Runs on the trained artifacts when present, else on the synthetic
 //! model, so it works straight after `cargo build`. Set
-//! `CIMRV_BENCH_QUICK=1` for a short-iteration smoke run (CI).
+//! `CIMRV_BENCH_QUICK=1` for a short-iteration smoke run (CI) — the
+//! batched rows and their parity checks run in quick mode too, so a
+//! regression in the batched path fails fast.
 
 use std::hint::black_box;
 use std::time::Instant;
@@ -56,6 +62,14 @@ impl KernelRow {
 
 fn main() {
     let quick = std::env::var("CIMRV_BENCH_QUICK").is_ok_and(|v| v != "0" && !v.is_empty());
+    // `cargo bench --bench backend_throughput -- --batch 16` appends a
+    // custom batch size to the standard 2/4/8 batched rows.
+    let argv: Vec<String> = std::env::args().collect();
+    let extra_batch: Option<usize> = argv
+        .iter()
+        .position(|a| a == "--batch")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok());
     let (model, model_kind) = match KwsModel::load_default() {
         Ok(m) => (m, "trained"),
         Err(_) => {
@@ -138,6 +152,42 @@ fn main() {
     assert_eq!(want.logits, got.logits, "fast backend disagrees with cycle on logits");
     assert_eq!(scalar_logits, got.logits, "scalar kernels disagree with packed kernels");
     println!("parity: cycle / packed / scalar logits bit-identical \u{2713}");
+
+    // --- batched fsim (run_batch) ----------------------------------------
+    // Weight planes walked once per batch + chunked thread fan-out vs the
+    // single-utterance `run` loop. Parity is checked on every row even in
+    // quick mode, so batched-path regressions fail fast in CI.
+    let mut batch_sizes = vec![2usize, 4, 8];
+    if let Some(b) = extra_batch {
+        if b >= 1 && !batch_sizes.contains(&b) {
+            batch_sizes.push(b);
+        }
+    }
+    let mut batched_rows: Vec<(usize, f64)> = Vec::new();
+    for &bs in &batch_sizes {
+        let refs: Vec<&[f32]> = (0..bs).map(|i| audios[i % audios.len()].as_slice()).collect();
+        let rs = fast.run_batch(&refs).expect("batched inference");
+        assert_eq!(rs.len(), bs, "run_batch must answer every element");
+        for (i, r) in rs.iter().enumerate() {
+            let want = fast.run(refs[i]).expect("fast inference");
+            assert_eq!(
+                r.logits, want.logits,
+                "batched element {i} of {bs} diverged from sequential run"
+            );
+        }
+        let iters = ((if quick { 32 } else { 256 }) / bs).max(2);
+        let per_inf = time_per(iters, || {
+            black_box(fast.run_batch(black_box(&refs)).expect("batched inference"));
+        }) / bs as f64;
+        println!(
+            "fast run_batch({bs:>2}): {:8.2} ms/inference ({:8.1} inf/s; {:.2}x vs batch 1)",
+            1e3 * per_inf,
+            1.0 / per_inf,
+            fast_s / per_inf
+        );
+        batched_rows.push((bs, per_inf));
+    }
+    println!("parity: batched logits bit-identical to sequential \u{2713}");
 
     // --- kernel-level micro benches --------------------------------------
     // Walk the net once to capture each layer's real input feature map,
@@ -258,6 +308,18 @@ fn main() {
     json.push_str(&format!("    \"packed_vs_scalar\": {:.2},\n", scalar_s / fast_s));
     json.push_str(&format!("    \"fast_vs_cycle\": {:.1}\n", cycle_s / fast_s));
     json.push_str("  },\n");
+    json.push_str("  \"batched\": {\n");
+    json.push_str(&format!("    \"single_ms\": {:.4},\n", 1e3 * fast_s));
+    json.push_str("    \"rows\": [\n");
+    for (i, (bs, s)) in batched_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "      {{\"batch\": {bs}, \"ms_per_inf\": {:.4}, \"speedup\": {:.2}}}{}\n",
+            1e3 * s,
+            fast_s / s,
+            if i + 1 < batched_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("    ]\n  },\n");
     json.push_str("  \"kernels\": [\n");
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
@@ -295,9 +357,32 @@ fn main() {
         "packed kernels must be >= 5x the PR 1 scalar fsim path ({:.2}x measured)",
         scalar_s / fast_s
     );
+    // Batched throughput: >= 2x single-utterance fsim at batch 8. Like
+    // the sharded assert below, the threshold is enforced on full runs
+    // with enough cores (a 2-core host's thread-fan-out ceiling is
+    // exactly 2x — no margin); quick CI smoke runs and small hosts
+    // still *record* the rows (and always parity-check them).
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let batch8 = batched_rows.iter().find(|(b, _)| *b == 8).map(|(_, s)| *s);
+    if let Some(s8) = batch8 {
+        if !quick && cores >= 4 {
+            assert!(
+                fast_s / s8 >= 2.0,
+                "batched fsim at batch 8 must be >= 2x single-utterance fsim \
+                 ({:.2}x measured on {cores} cores)",
+                fast_s / s8
+            );
+            println!("assert: batched fsim >= 2x single at batch 8 \u{2713}");
+        } else {
+            println!(
+                "(batched {:.2}x at batch 8 recorded; 2x threshold enforced on full \
+                 runs with >= 4 cores)",
+                fast_s / s8
+            );
+        }
+    }
     // Sharded throughput: assert only on full runs with enough cores —
     // quick CI smoke runs and small hosts still *record* the rows above.
-    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     let shard4 = shard_rows.iter().find(|(n, _)| *n == 4).map(|(_, s)| *s);
     if let Some(s4) = shard4 {
         if !quick && cores >= 4 {

@@ -31,8 +31,12 @@ impl InferenceBackend for CycleBackend {
         "cycle"
     }
 
-    fn run(&mut self, audio: &[f32]) -> Result<RunResult> {
-        self.soc.infer(audio)
+    /// The chip is single-tenant and exact: a batch is served as a plain
+    /// internal loop (no host-side amortization to model — the cycle
+    /// engine is the timing oracle, not the throughput path), which also
+    /// makes batched-vs-sequential parity trivially structural here.
+    fn run_batch(&mut self, batch: &[&[f32]]) -> Result<Vec<RunResult>> {
+        batch.iter().map(|audio| self.soc.infer(audio)).collect()
     }
 
     fn program(&self) -> &Program {

@@ -52,8 +52,12 @@ impl InferenceBackend for FastBackend {
         "fast"
     }
 
-    fn run(&mut self, audio: &[f32]) -> Result<RunResult> {
-        Ok(self.sim.infer(audio))
+    /// Real batch execution: `FastSim::infer_batch` walks each layer's
+    /// weight planes once for the whole batch (and fans large batches
+    /// out across threads) — this is the throughput path the
+    /// micro-batching coordinator and the benches drive.
+    fn run_batch(&mut self, batch: &[&[f32]]) -> Result<Vec<RunResult>> {
+        Ok(self.sim.infer_batch(batch))
     }
 
     fn program(&self) -> &Program {

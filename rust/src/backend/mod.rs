@@ -11,6 +11,23 @@
 //!   bit-identical logits, analytical (or snap-calibrated) timing, orders
 //!   of magnitude more inferences/sec (`benches/backend_throughput.rs`).
 //!
+//! ## The batch seam
+//!
+//! The contract is **batch-first**: [`InferenceBackend::run_batch`] takes
+//! a whole slice of utterances and is the required method;
+//! [`InferenceBackend::run`] is the provided 1-element convenience. CIMR-V
+//! amortizes data movement by keeping weights resident while activations
+//! stream past, and batching is the serving-side realization of the same
+//! idea — so the fast backend pushes real batch execution down every
+//! layer (each `PackedLayer`'s weight planes are walked once per batch,
+//! utterances innermost, optionally fanned out over threads in chunks),
+//! while the cycle backend simply loops: it is the timing oracle, not the
+//! throughput path, and the simulated chip serves utterances back to
+//! back either way. Per-element results are bit-identical between
+//! `run_batch` and N sequential `run` calls on both engines
+//! (`rust/tests/batch_parity.rs`), and chip-side cycles/energy are
+//! per-inference numbers unchanged by batching.
+//!
 //! ## The shard seam
 //!
 //! Multi-macro sharding threads through this boundary *in the program
@@ -20,13 +37,15 @@
 //! its macro bank and executes the interleaved fire sequences the sharded
 //! codegen emits; `FastSim` pre-slices per-macro `PackedLayer` groups and
 //! concatenates channel ranges (optionally on one thread per macro).
-//! Every `RunResult` carries `shard_fires` (per-macro utilization), which
-//! the coordinator aggregates into `ServiceStats::shard_fires`. Sharded
-//! and unsharded logits are bit-identical by construction — enforced by
+//! Batches compose with shards: each macro's channel slice carries the
+//! whole batch before the per-utterance merge. Every `RunResult` carries
+//! `shard_fires` (per-macro utilization), which the coordinator
+//! aggregates into `ServiceStats::shard_fires`. Sharded and unsharded
+//! logits are bit-identical by construction — enforced by
 //! `rust/tests/shard_parity.rs`.
 //!
-//! Remaining scaling work on this seam: request batching on the shared
-//! `FastSim` and remote workers (both implement the same trait).
+//! Remaining scaling work on this seam: remote workers (same trait, same
+//! batched contract).
 
 pub mod cycle;
 pub mod fast;
@@ -36,7 +55,7 @@ pub use fast::FastBackend;
 
 use std::fmt;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::compiler::Program;
 use crate::mem::dram::DramConfig;
@@ -47,10 +66,20 @@ pub trait InferenceBackend: Send {
     /// Stable engine name (reports, response attribution).
     fn name(&self) -> &'static str;
 
-    /// Run one utterance end-to-end: audio in, logits + latency/energy
-    /// accounting out. Implementations must produce logits bit-identical
-    /// to the cycle-level SoC for the same program.
-    fn run(&mut self, audio: &[f32]) -> Result<RunResult>;
+    /// Run a batch of utterances end-to-end: audio slices in, one
+    /// logits + latency/energy record per utterance out, order
+    /// preserved (`result.len() == batch.len()`; an empty batch is
+    /// `Ok(vec![])`). Implementations must produce logits bit-identical
+    /// to the cycle-level SoC for the same program, element for element,
+    /// regardless of how the batch is grouped.
+    fn run_batch(&mut self, batch: &[&[f32]]) -> Result<Vec<RunResult>>;
+
+    /// One utterance: the 1-element convenience over [`Self::run_batch`].
+    fn run(&mut self, audio: &[f32]) -> Result<RunResult> {
+        let mut out = self.run_batch(&[audio])?;
+        ensure!(out.len() == 1, "run_batch returned {} results for 1 input", out.len());
+        Ok(out.pop().unwrap())
+    }
 
     /// The program image this backend serves.
     fn program(&self) -> &Program;

@@ -126,22 +126,24 @@ impl WeightImage {
     }
 
     /// Map a packed binary layer onto a rectangle of the macro. A
-    /// [`PackedLayer`]'s sign planes are already in the port's
-    /// column-major word layout, so each plane word is emitted verbatim —
-    /// no per-bit walk; the mask plane arms every in-window row (binary
-    /// weights, no ternary zeros) with the tail beyond `rows()` off.
-    /// Produces word-for-word the image `from_layer_at` builds from the
-    /// same layer's scalar form.
+    /// [`PackedLayer`]'s sign planes are column-major u64 window words
+    /// whose little-endian u32 halves ARE the port's word layout
+    /// ([`PackedLayer::stream_word`]), so each stream word is emitted
+    /// verbatim — no per-bit walk; the mask plane arms every in-window
+    /// row (binary weights, no ternary zeros) with the tail beyond
+    /// `rows()` off. Produces word-for-word the image `from_layer_at`
+    /// builds from the same layer's scalar form.
     pub fn from_packed_at(mode: Mode, row_base: usize, col_base: usize, layer: &PackedLayer) -> Self {
         let cw = mode.col_words();
         let rows = layer.rows();
-        let aw = layer.plane_words;
+        let aw = layer.stream_words();
         assert!(row_base * 32 + rows <= mode.wordlines(), "rows overflow {mode:?}");
         assert!(col_base * 32 + layer.c_out <= mode.sense_amps(), "cols overflow {mode:?}");
         let mut words = Vec::with_capacity(layer.c_out * aw * 2 + layer.thresholds.len());
         for co in 0..layer.c_out {
             let c_abs = col_base * 32 + co;
-            for (wj, &sign) in layer.plane(co).iter().enumerate() {
+            for wj in 0..aw {
+                let sign = layer.stream_word(co, wj);
                 let r0 = wj * 32;
                 let mask =
                     if rows - r0 >= 32 { u32::MAX } else { (1u32 << (rows - r0)) - 1 };

@@ -74,6 +74,48 @@ pub fn render_shard_utilization(stats: &ServiceStats) -> String {
     s
 }
 
+/// Render the host-latency percentiles a serving run accumulated
+/// (p50/p95/p99 from submit to response, queue wait + linger included).
+/// Empty stats render a placeholder instead of panicking.
+pub fn render_latency_percentiles(stats: &ServiceStats) -> String {
+    match stats.host_latency_percentiles() {
+        Some([p50, p95, p99]) => format!(
+            "host latency: p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms\n",
+            1e3 * p50,
+            1e3 * p95,
+            1e3 * p99
+        ),
+        None => "host latency: no requests served yet\n".to_string(),
+    }
+}
+
+/// Render the micro-batch size histogram: how many worker batches formed
+/// at each size up to the `--batch` cap, plus the request-weighted mean
+/// (how big the average request's batch was).
+pub fn render_batch_histogram(stats: &ServiceStats) -> String {
+    let counts: Vec<u64> = stats.batch_sizes.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+    let batches: u64 = counts.iter().sum();
+    let requests: u64 = counts.iter().enumerate().map(|(b, n)| (b as u64 + 1) * n).sum();
+    let mut s = format!("micro-batches: {batches} formed over {requests} requests\n");
+    for (b, n) in counts.iter().enumerate() {
+        if *n > 0 {
+            let pct = 100.0 * (*n as f64) / batches.max(1) as f64;
+            s.push_str(&format!("  size {:>3}: {n:>8} batches ({pct:5.1}%)\n", b + 1));
+        }
+    }
+    if requests > 0 {
+        // sum(size^2 * count) / requests = the batch size the average
+        // request experienced.
+        let weighted: u64 =
+            counts.iter().enumerate().map(|(b, n)| (b as u64 + 1).pow(2) * n).sum();
+        s.push_str(&format!(
+            "  request-weighted mean batch size: {:.2}\n",
+            weighted as f64 / requests as f64
+        ));
+    }
+    s
+}
+
 /// Ladder as JSON (machine-readable experiment record).
 pub fn ladder_json(points: &[LadderPoint]) -> Json {
     Json::Arr(
@@ -118,6 +160,29 @@ mod tests {
         // Zero-work stats render without dividing by zero.
         let empty = ServiceStats::for_shards(1);
         assert!(render_shard_utilization(&empty).contains("0.0%"));
+    }
+
+    #[test]
+    fn latency_percentiles_and_batch_histogram_render() {
+        let stats = ServiceStats::sized(1, 4);
+        assert!(render_latency_percentiles(&stats).contains("no requests"));
+        for us in [1000u64, 2000, 3000, 40_000] {
+            stats.record_host_latency(us as f64 / 1e6);
+        }
+        let s = render_latency_percentiles(&stats);
+        assert!(s.contains("p50 2.00 ms"), "{s}");
+        assert!(s.contains("p99 40.00 ms"), "{s}");
+        stats.record_batch(1);
+        stats.record_batch(4);
+        stats.record_batch(4);
+        let h = render_batch_histogram(&stats);
+        assert!(h.contains("3 formed over 9 requests"), "{h}");
+        assert!(h.contains("size   1:"), "{h}");
+        assert!(h.contains("size   4:"), "{h}");
+        // (1*1 + 16*2) / 9
+        assert!(h.contains("mean batch size: 3.67"), "{h}");
+        // Empty histogram renders without dividing by zero.
+        assert!(render_batch_histogram(&ServiceStats::default()).contains("0 formed"));
     }
 
     #[test]

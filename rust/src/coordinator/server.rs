@@ -1,13 +1,22 @@
 //! Leader/worker inference service over a pluggable execution backend
 //! (cycle-level SoC or the fast functional simulator).
+//!
+//! Since the batch-first refactor the coordinator is a **micro-batching
+//! scheduler**: each worker drains the shared request queue into a
+//! coalesced batch (up to [`ServeOptions::batch`] requests, waiting at
+//! most [`ServeOptions::linger_us`] for stragglers after the first one
+//! arrives) and serves it through one `run_batch` call — the fast
+//! backend walks every layer's weight planes once per batch, which is
+//! where the throughput comes from. `--batch 1` degenerates to the old
+//! request-at-a-time loop with zero linger.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::mpsc::{self, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::backend::{self, BackendKind, FastBackend, InferenceBackend};
 use crate::baselines::OptLevel;
@@ -72,15 +81,61 @@ pub struct ServiceStats {
     /// stats block). Idle shards stay at zero — the utilization signal
     /// rendered by `report::render_shard_utilization`.
     pub shard_fires: Vec<AtomicU64>,
+    /// Micro-batch size histogram: bucket `b` counts worker batches of
+    /// exactly `b + 1` requests (the last bucket saturates). Sized to the
+    /// deployment's `--batch`; rendered by `report::render_batch_histogram`.
+    pub batch_sizes: Vec<AtomicU64>,
+    /// Per-request host latency samples (µs, submit -> response ready:
+    /// queue wait + linger + simulation). Source of the p50/p95/p99 in
+    /// the serve report.
+    host_us: Mutex<Vec<u64>>,
 }
 
 impl ServiceStats {
     /// Stats block sized for an `n`-macro deployment.
     pub fn for_shards(n: usize) -> Self {
+        Self::sized(n, 1)
+    }
+
+    /// Stats block sized for an `n_shards`-macro deployment serving
+    /// micro-batches of up to `batch_max` requests.
+    pub fn sized(n_shards: usize, batch_max: usize) -> Self {
         ServiceStats {
-            shard_fires: (0..n.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            shard_fires: (0..n_shards.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            batch_sizes: (0..batch_max.max(1)).map(|_| AtomicU64::new(0)).collect(),
             ..Default::default()
         }
+    }
+
+    /// Count one worker batch of `size` requests.
+    pub fn record_batch(&self, size: usize) {
+        if size == 0 || self.batch_sizes.is_empty() {
+            return;
+        }
+        let bucket = size.min(self.batch_sizes.len()) - 1;
+        self.batch_sizes[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request's host latency (seconds, submit -> response).
+    pub fn record_host_latency(&self, seconds: f64) {
+        self.host_us.lock().unwrap().push((seconds * 1e6) as u64);
+    }
+
+    /// `[p50, p95, p99]` host latency in seconds over every request
+    /// served so far (`None` before the first response). Nearest-rank
+    /// percentiles over the exact sample set — the coordinator serves
+    /// bounded demo/bench runs, so keeping every sample is fine.
+    pub fn host_latency_percentiles(&self) -> Option<[f64; 3]> {
+        let mut v = self.host_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return None;
+        }
+        v.sort_unstable();
+        let pick = |p: f64| -> f64 {
+            let rank = ((p * v.len() as f64).ceil() as usize).clamp(1, v.len());
+            v[rank - 1] as f64 / 1e6
+        };
+        Some([pick(0.50), pick(0.95), pick(0.99)])
     }
 }
 
@@ -97,12 +152,29 @@ pub struct ServeOptions {
     /// backends honor it: the cycle SoC drives a macro bank, the fast
     /// simulator executes per-shard packed groups.
     pub macros: usize,
+    /// Micro-batch cap (`--batch N`): each worker coalesces up to this
+    /// many queued requests into one `run_batch` call. 1 = classic
+    /// request-at-a-time serving. Must be >= 1 (0 is rejected at start).
+    pub batch: usize,
+    /// How long a worker lingers for follow-up requests after the first
+    /// one of a batch arrives (µs). Irrelevant when `batch == 1`. Small
+    /// by default: enough to coalesce a burst, not enough to be visible
+    /// next to a simulated inference.
+    pub linger_us: u64,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { calibrate: false, macros: 1 }
+        ServeOptions { calibrate: false, macros: 1, batch: 1, linger_us: 500 }
     }
+}
+
+/// One queued unit of work: the request, its enqueue instant (host
+/// latency is measured from here), and where the answer goes.
+struct Job {
+    req: InferenceRequest,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<InferenceResponse>>,
 }
 
 /// The leader: owns worker threads, each with its own SoC (the chip is
@@ -110,7 +182,7 @@ impl Default for ServeOptions {
 pub struct Coordinator {
     /// `None` once shut down: `submit` then returns an error instead of
     /// panicking on the closed channel.
-    tx: Option<mpsc::Sender<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)>>,
+    tx: Option<mpsc::Sender<Job>>,
     pub stats: Arc<ServiceStats>,
     workers: Vec<thread::JoinHandle<()>>,
 }
@@ -133,7 +205,10 @@ impl Coordinator {
         Self::start_with_options(model, opt, n_workers, kind, ServeOptions::default())
     }
 
-    /// `start_with` plus [`ServeOptions`] (`--calibrate` on the CLI).
+    /// `start_with` plus [`ServeOptions`] (`--calibrate`, `--macros`,
+    /// `--batch` on the CLI). Rejects degenerate deployments up front:
+    /// zero workers or a zero micro-batch cap could never serve a
+    /// request, so they are errors here rather than a silent hang.
     pub fn start_with_options(
         model: &KwsModel,
         opt: OptLevel,
@@ -141,6 +216,12 @@ impl Coordinator {
         kind: BackendKind,
         opts: ServeOptions,
     ) -> Result<Self> {
+        if n_workers == 0 {
+            bail!("coordinator needs at least one worker (got --workers 0)");
+        }
+        if opts.batch == 0 {
+            bail!("micro-batch cap must be >= 1 (got --batch 0; use 1 to disable batching)");
+        }
         let program = build_kws_program_sharded(model, opt, opts.macros.max(1))?;
         // Build every worker's backend up front so construction errors
         // surface here with their real cause (not as a silent worker
@@ -152,6 +233,12 @@ impl Coordinator {
         let fast_shared: Option<Arc<FastSim>> = match kind {
             BackendKind::Fast => {
                 let mut sim = FastSim::new(program.clone(), DramConfig::default())?;
+                if n_workers > 1 {
+                    // The worker fleet is already the parallelism: keep
+                    // each worker's batch on its own thread. A single
+                    // worker gets the in-batch thread fan-out instead.
+                    sim = sim.with_batch_threads(1);
+                }
                 if opts.calibrate {
                     // One cycle-accurate run (any utterance: latency is
                     // data-independent) snaps served latency/energy from
@@ -166,16 +253,18 @@ impl Coordinator {
             BackendKind::Cycle => None,
         };
         let mut backends: Vec<Box<dyn InferenceBackend>> = Vec::new();
-        for _ in 0..n_workers.max(1) {
+        for _ in 0..n_workers {
             let be: Box<dyn InferenceBackend> = match &fast_shared {
                 Some(sim) => Box::new(FastBackend::shared(Arc::clone(sim))),
                 None => backend::build(kind, program.clone(), DramConfig::default())?,
             };
             backends.push(be);
         }
-        let stats = Arc::new(ServiceStats::for_shards(opts.macros.max(1)));
-        let (tx, rx) = mpsc::channel::<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)>();
+        let stats = Arc::new(ServiceStats::sized(opts.macros.max(1), opts.batch));
+        let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        let linger = Duration::from_micros(opts.linger_us);
+        let batch_cap = opts.batch;
         let mut workers = Vec::new();
         for mut be in backends {
             let rx = Arc::clone(&rx);
@@ -183,31 +272,83 @@ impl Coordinator {
             workers.push(thread::spawn(move || {
                 let bname = be.name();
                 loop {
-                    let job = { rx.lock().unwrap().recv() };
-                    let Ok((req, reply)) = job else { break };
-                    let t0 = Instant::now();
-                    let out = be.run(&req.audio).map(|r| {
-                        let resp = InferenceResponse::from_run(
-                            req.id,
-                            &r,
-                            req.label,
-                            t0.elapsed().as_secs_f64(),
-                            bname,
-                        );
-                        stats.served.fetch_add(1, Ordering::Relaxed);
-                        stats.chip_cycles.fetch_add(r.cycles, Ordering::Relaxed);
-                        for (shard, fires) in stats.shard_fires.iter().zip(&r.shard_fires) {
-                            shard.fetch_add(*fires, Ordering::Relaxed);
+                    // Drain the queue into one coalesced micro-batch:
+                    // block for the first request, then keep the channel
+                    // (and the drain lock) until the cap is hit, the
+                    // linger window closes, or the queue goes quiet.
+                    let mut jobs: Vec<Job> = Vec::with_capacity(batch_cap);
+                    {
+                        let rx = rx.lock().unwrap();
+                        match rx.recv() {
+                            Ok(job) => jobs.push(job),
+                            Err(_) => break, // coordinator shut down
                         }
-                        if let Some(c) = resp.correct {
-                            stats.labeled.fetch_add(1, Ordering::Relaxed);
-                            if c {
-                                stats.correct.fetch_add(1, Ordering::Relaxed);
+                        let deadline = Instant::now() + linger;
+                        while jobs.len() < batch_cap {
+                            match rx.try_recv() {
+                                Ok(job) => jobs.push(job),
+                                Err(TryRecvError::Disconnected) => break,
+                                Err(TryRecvError::Empty) => {
+                                    let now = Instant::now();
+                                    if now >= deadline {
+                                        break;
+                                    }
+                                    match rx.recv_timeout(deadline - now) {
+                                        Ok(job) => jobs.push(job),
+                                        Err(_) => break,
+                                    }
+                                }
                             }
                         }
-                        resp
-                    });
-                    let _ = reply.send(out);
+                    }
+                    let audios: Vec<&[f32]> =
+                        jobs.iter().map(|j| j.req.audio.as_slice()).collect();
+                    stats.record_batch(jobs.len());
+                    match be.run_batch(&audios) {
+                        Ok(runs) if runs.len() == jobs.len() => {
+                            for (job, r) in jobs.iter().zip(&runs) {
+                                let host = job.enqueued.elapsed().as_secs_f64();
+                                let resp = InferenceResponse::from_run(
+                                    job.req.id,
+                                    r,
+                                    job.req.label,
+                                    host,
+                                    bname,
+                                );
+                                stats.served.fetch_add(1, Ordering::Relaxed);
+                                stats.chip_cycles.fetch_add(r.cycles, Ordering::Relaxed);
+                                stats.record_host_latency(host);
+                                for (shard, fires) in
+                                    stats.shard_fires.iter().zip(&r.shard_fires)
+                                {
+                                    shard.fetch_add(*fires, Ordering::Relaxed);
+                                }
+                                if let Some(c) = resp.correct {
+                                    stats.labeled.fetch_add(1, Ordering::Relaxed);
+                                    if c {
+                                        stats.correct.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                                let _ = job.reply.send(Ok(resp));
+                            }
+                        }
+                        Ok(runs) => {
+                            for job in &jobs {
+                                let _ = job.reply.send(Err(anyhow!(
+                                    "backend returned {} results for a batch of {}",
+                                    runs.len(),
+                                    jobs.len()
+                                )));
+                            }
+                        }
+                        Err(e) => {
+                            for job in &jobs {
+                                let _ = job.reply.send(Err(anyhow!(
+                                    "batched inference failed: {e}"
+                                )));
+                            }
+                        }
+                    }
                 }
             }));
         }
@@ -226,7 +367,7 @@ impl Coordinator {
             .as_ref()
             .ok_or_else(|| anyhow!("coordinator is shut down (request {id} rejected)"))?;
         let (rtx, rrx) = mpsc::channel();
-        tx.send((req, rtx))
+        tx.send(Job { req, enqueued: Instant::now(), reply: rtx })
             .map_err(|_| anyhow!("coordinator workers are gone (request {id} rejected)"))?;
         Ok(rrx)
     }
@@ -471,6 +612,90 @@ mod tests {
         assert!(f0 > 0);
         assert!(f0 > f1, "macro 0 owns every layer's leading channels: {f0} vs {f1}");
         sharded.shutdown();
+    }
+
+    #[test]
+    fn rejects_zero_workers_and_zero_batch() {
+        let m = fake_model();
+        let err = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            0,
+            BackendKind::Fast,
+            ServeOptions::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one worker"), "{err}");
+        let err = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            2,
+            BackendKind::Fast,
+            ServeOptions { batch: 0, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("--batch 0"), "{err}");
+    }
+
+    #[test]
+    fn micro_batched_serving_identical_logits_and_stats() {
+        let m = fake_model();
+        let reqs = |n: u64| -> Vec<InferenceRequest> {
+            (0..n)
+                .map(|i| InferenceRequest {
+                    id: i,
+                    audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
+                    label: Some((i % 12) as i32),
+                })
+                .collect()
+        };
+        let mut plain = Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Fast).unwrap();
+        let want = plain.serve_batch(reqs(9)).unwrap();
+        plain.shutdown();
+
+        // One worker + a generous linger forces real coalescing: 9
+        // requests cannot be served as 9 singleton batches.
+        let mut micro = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            1,
+            BackendKind::Fast,
+            ServeOptions { batch: 4, linger_us: 50_000, ..Default::default() },
+        )
+        .unwrap();
+        let got = micro.serve_batch(reqs(9)).unwrap();
+        for (x, y) in want.iter().zip(&got) {
+            assert_eq!(x.logits, y.logits, "request {}", x.id);
+            assert_eq!(x.predicted, y.predicted);
+        }
+        assert_eq!(micro.stats.served.load(Ordering::Relaxed), 9);
+        // Histogram: sized to the cap, everything accounted, and at
+        // least one multi-request batch actually formed.
+        assert_eq!(micro.stats.batch_sizes.len(), 4);
+        let hist: Vec<u64> =
+            micro.stats.batch_sizes.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let total_reqs: u64 =
+            hist.iter().enumerate().map(|(b, n)| (b as u64 + 1) * n).sum();
+        assert_eq!(total_reqs, 9, "histogram accounts for every request: {hist:?}");
+        assert!(hist[1..].iter().sum::<u64>() > 0, "no multi-request batch formed: {hist:?}");
+        // Latency percentiles exist and are ordered.
+        let [p50, p95, p99] = micro.stats.host_latency_percentiles().unwrap();
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        micro.shutdown();
+        assert!(micro.accuracy().is_some());
+    }
+
+    #[test]
+    fn batch_histogram_saturates_last_bucket() {
+        let s = ServiceStats::sized(1, 2);
+        s.record_batch(1);
+        s.record_batch(2);
+        s.record_batch(7); // beyond the cap -> last bucket
+        assert_eq!(s.batch_sizes[0].load(Ordering::Relaxed), 1);
+        assert_eq!(s.batch_sizes[1].load(Ordering::Relaxed), 2);
+        // Degenerate blocks don't panic.
+        ServiceStats::default().record_batch(3);
+        assert!(ServiceStats::default().host_latency_percentiles().is_none());
     }
 
     #[test]

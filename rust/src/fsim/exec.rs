@@ -36,7 +36,8 @@ use crate::model::reference::{self, BitMap, PackedLayer};
 #[derive(Debug, Clone)]
 pub struct DecodedProgram {
     /// Per-layer sign bit-planes, copied straight out of the DRAM weight
-    /// streams (the stream layout and the plane layout coincide).
+    /// streams (the stream layout and the plane layout coincide; pairs of
+    /// u32 stream words fold into the u64 window words the kernels use).
     pub layers: Vec<PackedLayer>,
     /// Folded-BN feature thresholds (DMEM table, one i32 per channel).
     pub thr: Vec<i32>,
@@ -99,10 +100,12 @@ impl DecodedProgram {
 
         // Per-layer weight streams: sign words (column-major bursts) then
         // threshold words, exactly as `build_dram_weights` laid them out.
-        // The sign words need no transformation — `co * aw + wj` stream
-        // order is the PackedLayer plane layout (bit set -> +1; the boot
+        // The sign bits need no reordering — `co * aw + wj` stream order
+        // is the PackedLayer plane layout (bit set -> +1; the boot
         // sequence arms the whole mask plane, so every cell is active:
-        // binary weights).
+        // binary weights). Each pair of consecutive u32 stream words
+        // folds into one u64 window word (little-endian halves), the
+        // widened form the popcount kernels run over.
         let mut layers = Vec::with_capacity(p.layers.len());
         for lp in &p.layers {
             let bytes = program
@@ -126,7 +129,14 @@ impl DecodedProgram {
             let kernel = aw * 32 / c_in;
             ensure!(kernel == 3, "fsim supports the paper's k=3 row-wise dataflow");
 
-            let planes: Vec<u32> = (0..lp.sign_words).map(|i| le_u32(bytes, i)).collect();
+            let pw = aw.div_ceil(2); // u64 words per plane == ceil(rows/64)
+            let mut planes = vec![0u64; lp.c_out * pw];
+            for co in 0..lp.c_out {
+                for wj in 0..aw {
+                    let word = le_u32(bytes, co * aw + wj) as u64;
+                    planes[co * pw + wj / 2] |= word << (32 * (wj % 2));
+                }
+            }
             let thresholds: Vec<i32> = if lp.binarized {
                 (0..lp.th_words).map(|j| le_u32(bytes, lp.sign_words + j) as i32).collect()
             } else {
@@ -138,7 +148,7 @@ impl DecodedProgram {
                 kernel,
                 pooled: lp.pooled,
                 binarized: lp.binarized,
-                plane_words: aw,
+                plane_words: pw,
                 planes,
                 thresholds,
             });
@@ -227,6 +237,34 @@ impl DecodedProgram {
         (logits, predicted)
     }
 
+    /// Decode/preprocess a whole batch of utterances into packed feature
+    /// maps (order preserved).
+    pub fn preprocess_batch(&self, batch: &[&[f32]]) -> Vec<BitMap> {
+        batch.iter().map(|a| self.preprocess(a)).collect()
+    }
+
+    /// Batched inference: every layer's weight planes are walked **once
+    /// per batch** (inner loops over utterances — see
+    /// `reference::conv_layer_packed_batch`), instead of once per
+    /// utterance. Bit-identical to [`Self::infer`] per element for any
+    /// batch size (property-tested in `tests/batch_parity.rs`).
+    pub fn infer_batch(&self, batch: &[&[f32]]) -> Vec<(Vec<f32>, usize)> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let mut xs = self.preprocess_batch(batch);
+        for packed in &self.layers[..self.layers.len() - 1] {
+            xs = reference::conv_layer_packed_batch(&xs, packed);
+        }
+        reference::final_layer_gap_packed_batch(&xs, self.layers.last().unwrap())
+            .into_iter()
+            .map(|logits| {
+                let predicted = reference::argmax(&logits);
+                (logits, predicted)
+            })
+            .collect()
+    }
+
     /// Pre-slice the decoded layers for a [`ShardPlan`]: each macro gets
     /// its channel range of every layer's sign planes (a contiguous word
     /// copy). Built once per (program, plan); reused across inferences.
@@ -305,6 +343,54 @@ impl DecodedProgram {
         }
         let predicted = reference::argmax(&logits);
         (logits, predicted)
+    }
+
+    /// Batched sharded inference: the batch is carried through every
+    /// macro's channel slice — each shard's (smaller) weight planes are
+    /// walked once per batch, then the per-utterance partial maps merge
+    /// at their global channel offsets. Bit-identical to
+    /// [`Self::infer_sharded`] per element.
+    pub fn infer_sharded_batch(
+        &self,
+        batch: &[&[f32]],
+        sp: &ShardedProgram,
+    ) -> Vec<(Vec<f32>, usize)> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let n_layers = self.layers.len();
+        let mut xs = self.preprocess_batch(batch);
+        for li in 0..n_layers - 1 {
+            let full = &self.layers[li];
+            let t_out = if full.pooled { xs[0].t / 2 } else { xs[0].t };
+            let mut outs: Vec<BitMap> =
+                xs.iter().map(|_| BitMap::zero(t_out, full.c_out)).collect();
+            for shards in &sp.per_macro {
+                if let Some((off, shard)) = &shards[li] {
+                    let parts = reference::conv_layer_packed_batch(&xs, shard);
+                    for (out, part) in outs.iter_mut().zip(&parts) {
+                        reference::merge_shard(out, *off, part);
+                    }
+                }
+            }
+            xs = outs;
+        }
+        let mut logits = vec![vec![0.0f32; self.n_classes]; xs.len()];
+        for shards in &sp.per_macro {
+            if let Some((off, shard)) = &shards[n_layers - 1] {
+                let parts = reference::final_layer_gap_packed_batch(&xs, shard);
+                for (l, part) in logits.iter_mut().zip(&parts) {
+                    l[*off..*off + part.len()].copy_from_slice(part);
+                }
+            }
+        }
+        logits
+            .into_iter()
+            .map(|l| {
+                let predicted = reference::argmax(&l);
+                (l, predicted)
+            })
+            .collect()
     }
 
     /// [`Self::infer_sharded`] with one OS thread per macro: threads
@@ -492,6 +578,31 @@ mod tests {
                     })
                     .sum::<u64>()
             );
+        }
+    }
+
+    #[test]
+    fn batched_inference_bit_identical_to_sequential() {
+        let m = KwsModel::synthetic(21);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let d = DecodedProgram::decode(&prog).unwrap();
+        let audios: Vec<Vec<f32>> = (0..5)
+            .map(|i| dataset::synth_utterance(i % 12, 40 + i as u64, m.audio_len, 0.37))
+            .collect();
+        let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+        let want: Vec<_> = refs.iter().map(|a| d.infer(a)).collect();
+        // Dense batch, including ragged sub-batches and a 1-element batch.
+        for take in [1usize, 2, 5] {
+            let got = d.infer_batch(&refs[..take]);
+            assert_eq!(got, want[..take], "batch size {take}");
+        }
+        assert!(d.infer_batch(&[]).is_empty());
+        // Sharded batch, even and uneven splits.
+        for n in 1..=3 {
+            let plan = ShardPlan::even(&prog.plan, n).unwrap();
+            let sp = d.shard(&plan).unwrap();
+            let got = d.infer_sharded_batch(&refs, &sp);
+            assert_eq!(got, want, "sharded batch n={n}");
         }
     }
 

@@ -76,6 +76,11 @@ pub struct FastSim {
     energy_table: EnergyTable,
     calibration: Option<Calibration>,
     sharded: Option<ShardedExec>,
+    /// Thread cap for [`Self::infer_batch`]'s chunked fan-out: `None` =
+    /// one thread per available core, `Some(1)` = stay on the caller's
+    /// thread (what the coordinator uses when its workers already
+    /// parallelize across requests).
+    batch_threads: Option<usize>,
 }
 
 impl FastSim {
@@ -98,6 +103,7 @@ impl FastSim {
             energy_table: EnergyTable::default(),
             calibration: None,
             sharded,
+            batch_threads: None,
         })
     }
 
@@ -134,6 +140,13 @@ impl FastSim {
         self
     }
 
+    /// Cap [`Self::infer_batch`]'s thread fan-out (`1` keeps the whole
+    /// batch on the caller's thread; the default is one per core).
+    pub fn with_batch_threads(mut self, n: usize) -> Self {
+        self.batch_threads = Some(n.max(1));
+        self
+    }
+
     pub fn program(&self) -> &Program {
         &self.program
     }
@@ -155,11 +168,63 @@ impl FastSim {
     /// calibration when present). Note `&self`: the functional simulator
     /// is stateless across requests and safe to share behind an `Arc`.
     pub fn infer(&self, audio: &[f32]) -> RunResult {
-        let (logits, predicted) = match &self.sharded {
+        let out = match &self.sharded {
             Some(se) if se.parallel => self.decoded.infer_sharded_parallel(audio, &se.prog),
             Some(se) => self.decoded.infer_sharded(audio, &se.prog),
             None => self.decoded.infer(audio),
         };
+        self.finish(out)
+    }
+
+    /// A batch of inferences in one call: each layer's weight planes are
+    /// walked once per batch (`DecodedProgram::infer_batch`) — the
+    /// serving-side realization of the macro's weight-stationary
+    /// dataflow — and large batches additionally fan out across up to
+    /// [`Self::with_batch_threads`] OS threads in contiguous chunks
+    /// (the simulator is `&self`-stateless, so chunks are independent).
+    /// Per-element results are bit-identical to [`Self::infer`];
+    /// chip-side cycles/energy are per-inference numbers, unchanged by
+    /// batching (the chip still runs utterances back to back — batching
+    /// amortizes *host* cost).
+    pub fn infer_batch(&self, batch: &[&[f32]]) -> Vec<RunResult> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        if batch.len() == 1 {
+            return vec![self.infer(batch[0])];
+        }
+        let workers = self
+            .batch_threads
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+            })
+            .clamp(1, batch.len());
+        let outs: Vec<(Vec<f32>, usize)> = if workers <= 1 {
+            self.infer_batch_chunk(batch)
+        } else {
+            let chunk = batch.len().div_ceil(workers);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = batch
+                    .chunks(chunk)
+                    .map(|c| s.spawn(move || self.infer_batch_chunk(c)))
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            })
+        };
+        outs.into_iter().map(|out| self.finish(out)).collect()
+    }
+
+    /// One contiguous chunk of a batch on the current thread, through the
+    /// batched (optionally sharded) kernels.
+    fn infer_batch_chunk(&self, batch: &[&[f32]]) -> Vec<(Vec<f32>, usize)> {
+        match &self.sharded {
+            Some(se) => self.decoded.infer_sharded_batch(batch, &se.prog),
+            None => self.decoded.infer_batch(batch),
+        }
+    }
+
+    /// Wrap raw (logits, argmax) in the full accounting record.
+    fn finish(&self, (logits, predicted): (Vec<f32>, usize)) -> RunResult {
         let (cycles, instret, phases, energy) = match &self.calibration {
             Some(c) => (c.cycles, c.instret, c.phases, c.energy.clone()),
             None => (
@@ -236,6 +301,36 @@ mod tests {
         let got = threaded.infer(&audio);
         assert_eq!(got.logits, want.logits);
         assert_eq!(got.shard_fires.len(), 3);
+    }
+
+    #[test]
+    fn infer_batch_matches_sequential_threaded_and_not() {
+        let m = KwsModel::synthetic(14);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let audios: Vec<Vec<f32>> = (0..7)
+            .map(|i| dataset::synth_utterance(i % 12, 60 + i as u64, m.audio_len, 0.37))
+            .collect();
+        let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+        for threads in [1usize, 3] {
+            for macros in [1usize, 2] {
+                let prog = crate::compiler::build_kws_program_sharded(&m, OptLevel::FULL, macros)
+                    .unwrap();
+                let sim = FastSim::new(prog, DramConfig::default())
+                    .unwrap()
+                    .with_batch_threads(threads);
+                let want: Vec<RunResult> = refs.iter().map(|a| sim.infer(a)).collect();
+                let got = sim.infer_batch(&refs);
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.logits, w.logits, "threads {threads} macros {macros}");
+                    assert_eq!(g.predicted, w.predicted);
+                    assert_eq!(g.cycles, w.cycles);
+                    assert_eq!(g.shard_fires, w.shard_fires);
+                }
+            }
+        }
+        let sim = FastSim::new(prog, DramConfig::default()).unwrap();
+        assert!(sim.infer_batch(&[]).is_empty());
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! `cimrv` — the CIMR-V launcher.
 //!
 //! Subcommands:
-//!   run        one inference (+ golden cross-check); --backend cycle|fast
+//!   run        one inference (+ golden cross-check); --backend cycle|fast,
+//!              --batch B for a batched run through run_batch
 //!   ablation   the Fig. 6/7/9 + §III-A optimization ladder
 //!   table1     Table I comparison (+ measured TOPS/W and accuracy)
 //!   accuracy   synthetic-GSCD accuracy on the ISS vs the host reference
-//!   serve      threaded coordinator demo; --backend cycle|fast
+//!   serve      threaded coordinator demo; --backend cycle|fast, --batch B
+//!              turns the workers into micro-batching schedulers
 //!   disasm     decode a hex instruction word
 //!
 //! Run from the repo root after `make artifacts && cargo build --release`.
@@ -15,7 +17,10 @@ use anyhow::{bail, Context, Result};
 use cimrv::backend::{self, BackendKind, InferenceBackend};
 use cimrv::baselines::{comparison, OptLevel};
 use cimrv::compiler::{build_kws_program, build_kws_program_sharded};
-use cimrv::coordinator::report::{ladder_json, render_ladder, render_shard_utilization, LadderPoint};
+use cimrv::coordinator::report::{
+    ladder_json, render_batch_histogram, render_ladder, render_latency_percentiles,
+    render_shard_utilization, LadderPoint,
+};
 use cimrv::coordinator::{Coordinator, InferenceRequest, ServeOptions};
 use cimrv::mem::dram::DramConfig;
 use cimrv::model::{dataset, reference, KwsModel};
@@ -36,8 +41,8 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: cimrv <run|ablation|table1|accuracy|serve|trace|disasm> [--opt LEVEL] \
-                 [--backend cycle|fast] [--macros N] [--calibrate] [--n N] [--workers W] \
-                 [--label L] [--seed S] [--skip K] [--no-golden] [--json]"
+                 [--backend cycle|fast] [--macros N] [--batch B] [--calibrate] [--n N] \
+                 [--workers W] [--label L] [--seed S] [--skip K] [--no-golden] [--json]"
             );
             Ok(())
         }
@@ -79,6 +84,33 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     }
     let mut be = backend::build(kind, program, DramConfig::default())?;
+    let batch = args.opt_usize("batch", 1)?.max(1);
+    if batch > 1 {
+        // Serve `batch` utterances (varying seeds, same label) through
+        // one run_batch call: the fast backend walks every layer's
+        // weight planes once for the whole batch.
+        let audios: Vec<Vec<f32>> = (0..batch)
+            .map(|i| dataset::synth_utterance(label, seed + i as u64, model.audio_len, 0.37))
+            .collect();
+        let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+        let t0 = std::time::Instant::now();
+        let rs = be.run_batch(&refs)?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "batched run: {batch} utterances in {:.2} ms host time ({:.2} ms/inference)",
+            1e3 * wall,
+            1e3 * wall / batch as f64
+        );
+        for (i, (r, a)) in rs.iter().zip(&audios).enumerate() {
+            let host = reference::infer(&model, a);
+            if r.logits != host {
+                bail!("batched element {i} disagrees with host reference");
+            }
+            println!("  [{i}] predicted {} (true {label})", r.predicted);
+        }
+        println!("host reference: all {batch} batched elements bit-exact \u{2713}");
+        return Ok(());
+    }
     let r = be.run(&audio)?;
     println!("predicted class {} (true {label}), logits {:?}", r.predicted, r.logits);
     println!("{}", r.phases.render());
@@ -215,6 +247,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let opts = ServeOptions {
         calibrate: args.flag("calibrate"),
         macros: args.opt_usize("macros", 1)?.max(1),
+        batch: args.opt_usize("batch", 1)?,
+        ..Default::default()
     };
     if opts.calibrate && kind == BackendKind::Cycle {
         eprintln!("note: --calibrate is a fast-backend option (cycle is already exact)");
@@ -242,6 +276,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if let Some(acc) = coord.accuracy() {
         println!("accuracy: {:.2}%", 100.0 * acc);
+    }
+    print!("{}", render_latency_percentiles(&coord.stats));
+    if opts.batch > 1 {
+        print!("{}", render_batch_histogram(&coord.stats));
     }
     if opts.macros > 1 {
         print!("{}", render_shard_utilization(&coord.stats));

@@ -69,11 +69,14 @@ impl BitMap {
 }
 
 /// A conv layer in the macro's native form: one sign bit-plane per output
-/// channel, `ceil(kernel*c_in/32)` words each, bit `r` set ⇔ weight
-/// `(r, co)` is +1. The planes are stored column-major (`co`-major,
-/// word-minor) — byte-for-byte the layout of the compiled image's DRAM
-/// sign stream (`KwsPlan::build_dram_weights`) and of one macro column in
-/// the weight port (`cim::weight_map`).
+/// channel, bit `r` set ⇔ weight `(r, co)` is +1. The planes are stored
+/// column-major (`co`-major, word-minor) in **u64 window words** —
+/// `ceil(kernel*c_in/64)` per plane — so the XNOR-popcount inner loop
+/// runs half the trips of the u32 form. The compiled image's DRAM sign
+/// stream (`KwsPlan::build_dram_weights`) stays u32 column-major: each
+/// u64 here is two consecutive stream words (little-endian halves), and
+/// [`Self::stream_word`] recovers the stream/weight-port granularity for
+/// macro loads (`cim::weight_map`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PackedLayer {
     pub c_in: usize,
@@ -81,11 +84,11 @@ pub struct PackedLayer {
     pub kernel: usize,
     pub pooled: bool,
     pub binarized: bool,
-    /// Words per plane: `ceil(kernel*c_in/32)`.
+    /// Words per plane: `ceil(kernel*c_in/64)`.
     pub plane_words: usize,
-    /// Sign planes, `c_out * plane_words` words; bits above `rows()` in a
-    /// plane's last word are zero.
-    pub planes: Vec<u32>,
+    /// Sign planes, `c_out * plane_words` u64 words; bits above `rows()`
+    /// in a plane's last word are zero.
+    pub planes: Vec<u64>,
     /// Per-output-channel SA thresholds (empty for the raw final layer).
     pub thresholds: Vec<i32>,
 }
@@ -94,13 +97,13 @@ impl PackedLayer {
     /// Pack a scalar layer's ±1 weights into sign bit-planes.
     pub fn from_spec(spec: &LayerSpec) -> Self {
         let rows = spec.rows();
-        let pw = rows.div_ceil(32);
-        let mut planes = vec![0u32; spec.c_out * pw];
+        let pw = rows.div_ceil(64);
+        let mut planes = vec![0u64; spec.c_out * pw];
         for co in 0..spec.c_out {
             let plane = &mut planes[co * pw..(co + 1) * pw];
             for r in 0..rows {
                 if spec.weight(r, co) > 0 {
-                    plane[r / 32] |= 1 << (r % 32);
+                    plane[r / 64] |= 1 << (r % 64);
                 }
             }
         }
@@ -124,7 +127,7 @@ impl PackedLayer {
         for co in 0..self.c_out {
             let plane = self.plane(co);
             for (r, w) in weights.iter_mut().skip(co).step_by(self.c_out).enumerate() {
-                if (plane[r / 32] >> (r % 32)) & 1 == 1 {
+                if (plane[r / 64] >> (r % 64)) & 1 == 1 {
                     *w = 1;
                 }
             }
@@ -171,8 +174,23 @@ impl PackedLayer {
 
     /// Output channel `co`'s sign plane.
     #[inline]
-    pub fn plane(&self, co: usize) -> &[u32] {
+    pub fn plane(&self, co: usize) -> &[u64] {
         &self.planes[co * self.plane_words..(co + 1) * self.plane_words]
+    }
+
+    /// Words per plane at the DRAM sign-stream / weight-port granularity
+    /// (`ceil(kernel*c_in/32)`, the layout the compiled image carries).
+    #[inline]
+    pub fn stream_words(&self) -> usize {
+        self.rows().div_ceil(32)
+    }
+
+    /// Stream word `wj` of channel `co`: the u32 the DRAM sign stream and
+    /// the macro's weight port hold at that offset (each u64 plane word
+    /// is two consecutive stream words, little-endian halves).
+    #[inline]
+    pub fn stream_word(&self, co: usize, wj: usize) -> u32 {
+        (self.planes[co * self.plane_words + wj / 2] >> (32 * (wj % 2))) as u32
     }
 }
 
@@ -198,11 +216,34 @@ fn or_shifted(dst: &mut [u32], bit_off: usize, src: &[u32]) {
     }
 }
 
-/// Gather the im2col window at position `t` into packed words: input row
-/// `t + j - pad` occupies bits `[j*c_in, (j+1)*c_in)`, matching the
+/// OR a u32 word vector (a `BitMap` row) into a u64 window buffer
+/// starting at bit `bit_off`. The widened twin of [`or_shifted`]: source
+/// bits beyond the row's meaningful length are zero (BitMap's padding
+/// guarantee), so only real feature bits land in the window.
+#[inline]
+fn or_shifted_wide(dst: &mut [u64], bit_off: usize, src: &[u32]) {
+    for (i, &s) in src.iter().enumerate() {
+        if s == 0 {
+            continue;
+        }
+        let off = bit_off + i * 32;
+        let w = off / 64;
+        let sh = (off % 64) as u32;
+        dst[w] |= (s as u64) << sh;
+        if sh > 32 {
+            let hi = (s as u64) >> (64 - sh);
+            if hi != 0 {
+                dst[w + 1] |= hi;
+            }
+        }
+    }
+}
+
+/// Gather the im2col window at position `t` into packed u64 words: input
+/// row `t + j - pad` occupies bits `[j*c_in, (j+1)*c_in)`, matching the
 /// wordline order `r = j*c_in + ci` of the scalar kernels and the macro.
 /// Padding rows (outside the map) contribute zeros.
-fn gather_window(x: &BitMap, kernel: usize, t: usize, out: &mut [u32]) {
+fn gather_window(x: &BitMap, kernel: usize, t: usize, out: &mut [u64]) {
     let pad = (kernel - 1) / 2;
     out.fill(0);
     for j in 0..kernel {
@@ -210,16 +251,16 @@ fn gather_window(x: &BitMap, kernel: usize, t: usize, out: &mut [u32]) {
         if tt < 0 || tt >= x.t as isize {
             continue;
         }
-        or_shifted(out, j * x.c, x.row_words(tt as usize));
+        or_shifted_wide(out, j * x.c, x.row_words(tt as usize));
     }
 }
 
 /// `conv_sums` in the macro's arithmetic: with binary ±1 weights every
 /// cell is active, so the MAC collapses to
 /// `sum[co] = 2*popcount(x & sign[co]) - popcount(x)`
-/// over the packed window words — one AND+popcount per 32 taps instead of
+/// over the packed window words — one AND+popcount per 64 taps instead of
 /// one scalar add per set input bit per channel.
-fn conv_sums_packed_into(x: &BitMap, w: &PackedLayer, t: usize, window: &mut [u32], sums: &mut [i32]) {
+fn conv_sums_packed_into(x: &BitMap, w: &PackedLayer, t: usize, window: &mut [u64], sums: &mut [i32]) {
     debug_assert_eq!(x.c, w.c_in, "feature map width must match the layer");
     gather_window(x, w.kernel, t, window);
     let act: u32 = window.iter().map(|v| v.count_ones()).sum();
@@ -235,7 +276,7 @@ fn conv_sums_packed_into(x: &BitMap, w: &PackedLayer, t: usize, window: &mut [u3
 
 /// Packed twin of [`conv_sums`]: bit-identical sums, popcount arithmetic.
 pub fn conv_sums_packed(x: &BitMap, w: &PackedLayer, t: usize) -> Vec<i32> {
-    let mut window = vec![0u32; w.plane_words];
+    let mut window = vec![0u64; w.plane_words];
     let mut sums = vec![0i32; w.c_out];
     conv_sums_packed_into(x, w, t, &mut window, &mut sums);
     sums
@@ -246,7 +287,7 @@ pub fn conv_layer_packed(x: &BitMap, layer: &PackedLayer) -> BitMap {
     assert!(layer.binarized);
     let t_out = if layer.pooled { x.t / 2 } else { x.t };
     let mut out = BitMap::zero(t_out, layer.c_out);
-    let mut window = vec![0u32; layer.plane_words];
+    let mut window = vec![0u64; layer.plane_words];
     let mut sums = vec![0i32; layer.c_out];
     for t in 0..x.t {
         let ot = if layer.pooled { t / 2 } else { t };
@@ -267,7 +308,7 @@ pub fn conv_layer_packed(x: &BitMap, layer: &PackedLayer) -> BitMap {
 pub fn final_layer_gap_packed(x: &BitMap, layer: &PackedLayer) -> Vec<f32> {
     assert!(!layer.binarized);
     let mut acc = vec![0i64; layer.c_out];
-    let mut window = vec![0u32; layer.plane_words];
+    let mut window = vec![0u64; layer.plane_words];
     let mut sums = vec![0i32; layer.c_out];
     for t in 0..x.t {
         conv_sums_packed_into(x, layer, t, &mut window, &mut sums);
@@ -276,6 +317,117 @@ pub fn final_layer_gap_packed(x: &BitMap, layer: &PackedLayer) -> Vec<f32> {
         }
     }
     acc.iter().map(|&s| s as f32 / x.t as f32).collect()
+}
+
+/// Every utterance's im2col windows for one layer, materialized once:
+/// window of utterance `u` at position `t` lives at
+/// `windows[(u*t_in + t)*pw..][..pw]`, with its activation popcount in
+/// `acts[u*t_in + t]`. This is what lets the batched kernels below walk
+/// each weight plane **once per batch**: the `co` loop is outermost, so a
+/// plane's words stay in registers across every (utterance, position)
+/// pair instead of being re-fetched `t_in` times per utterance.
+fn gather_windows_batch(xs: &[BitMap], layer: &PackedLayer) -> (Vec<u64>, Vec<i32>) {
+    let (t_in, pw) = (xs[0].t, layer.plane_words);
+    let mut windows = vec![0u64; xs.len() * t_in * pw];
+    let mut acts = vec![0i32; xs.len() * t_in];
+    for (u, x) in xs.iter().enumerate() {
+        assert_eq!((x.t, x.c), (t_in, layer.c_in), "batch maps must share geometry");
+        for t in 0..t_in {
+            let w = &mut windows[(u * t_in + t) * pw..][..pw];
+            gather_window(x, layer.kernel, t, w);
+            acts[u * t_in + t] = w.iter().map(|v| v.count_ones()).sum::<u32>() as i32;
+        }
+    }
+    (windows, acts)
+}
+
+/// Batched twin of [`conv_sums_packed`]: sums at position `t` for every
+/// utterance, each weight plane read once for the whole batch.
+pub fn conv_sums_packed_batch(xs: &[BitMap], w: &PackedLayer, t: usize) -> Vec<Vec<i32>> {
+    let pw = w.plane_words;
+    let mut windows = vec![0u64; xs.len() * pw];
+    let mut acts = vec![0i32; xs.len()];
+    for ((x, win), act) in xs.iter().zip(windows.chunks_mut(pw)).zip(acts.iter_mut()) {
+        gather_window(x, w.kernel, t, win);
+        *act = win.iter().map(|v| v.count_ones()).sum::<u32>() as i32;
+    }
+    let mut sums = vec![vec![0i32; w.c_out]; xs.len()];
+    for co in 0..w.c_out {
+        let plane = w.plane(co);
+        for (u, s) in sums.iter_mut().enumerate() {
+            let win = &windows[u * pw..(u + 1) * pw];
+            let mut pos = 0u32;
+            for (xv, pv) in win.iter().zip(plane) {
+                pos += (xv & pv).count_ones();
+            }
+            s[co] = (2 * pos) as i32 - acts[u];
+        }
+    }
+    sums
+}
+
+/// Batched twin of [`conv_layer_packed`]: one output map per input map,
+/// bit-identical to calling the single-utterance kernel per map. The
+/// weight walk is batch-amortized — planes outermost, utterances and
+/// positions inner — which is the whole point of serving batch-first on
+/// a weight-stationary macro.
+pub fn conv_layer_packed_batch(xs: &[BitMap], layer: &PackedLayer) -> Vec<BitMap> {
+    assert!(layer.binarized);
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let (t_in, pw) = (xs[0].t, layer.plane_words);
+    let t_out = if layer.pooled { t_in / 2 } else { t_in };
+    let (windows, acts) = gather_windows_batch(xs, layer);
+    let mut outs: Vec<BitMap> = xs.iter().map(|_| BitMap::zero(t_out, layer.c_out)).collect();
+    for (co, &thr) in layer.thresholds.iter().enumerate() {
+        let plane = layer.plane(co);
+        for (u, out) in outs.iter_mut().enumerate() {
+            for t in 0..t_in {
+                let ot = if layer.pooled { t / 2 } else { t };
+                if ot >= t_out {
+                    break; // odd tail dropped by pooling
+                }
+                let win = &windows[(u * t_in + t) * pw..][..pw];
+                let mut pos = 0u32;
+                for (xv, pv) in win.iter().zip(plane) {
+                    pos += (xv & pv).count_ones();
+                }
+                if (2 * pos) as i32 - acts[u * t_in + t] > thr {
+                    out.set(ot, co); // pooled max == OR of the pair
+                }
+            }
+        }
+    }
+    outs
+}
+
+/// Batched twin of [`final_layer_gap_packed`]: one logits vector per
+/// input map, planes walked once per batch.
+pub fn final_layer_gap_packed_batch(xs: &[BitMap], layer: &PackedLayer) -> Vec<Vec<f32>> {
+    assert!(!layer.binarized);
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let (t_in, pw) = (xs[0].t, layer.plane_words);
+    let (windows, acts) = gather_windows_batch(xs, layer);
+    let mut logits = vec![vec![0.0f32; layer.c_out]; xs.len()];
+    for co in 0..layer.c_out {
+        let plane = layer.plane(co);
+        for (u, l) in logits.iter_mut().enumerate() {
+            let mut acc = 0i64;
+            for t in 0..t_in {
+                let win = &windows[(u * t_in + t) * pw..][..pw];
+                let mut pos = 0u32;
+                for (xv, pv) in win.iter().zip(plane) {
+                    pos += (xv & pv).count_ones();
+                }
+                acc += ((2 * pos) as i32 - acts[u * t_in + t]) as i64;
+            }
+            l[co] = acc as f32 / t_in as f32;
+        }
+    }
+    logits
 }
 
 /// OR a shard's output feature map into the full-width map at channel
@@ -538,7 +690,7 @@ mod tests {
     fn packed_roundtrips_through_spec() {
         let layer = tiny_layer(5, 3, true, true);
         let packed = PackedLayer::from_spec(&layer);
-        assert_eq!(packed.plane_words, (3 * 5usize).div_ceil(32));
+        assert_eq!(packed.plane_words, (3 * 5usize).div_ceil(64));
         let back = packed.to_spec();
         assert_eq!(back.weights, layer.weights);
         assert_eq!(back.thresholds, layer.thresholds);
@@ -583,6 +735,66 @@ mod tests {
             final_layer_gap_packed(&mid_packed, &PackedLayer::from_spec(&last)),
             final_layer_gap(&mid_scalar, &last)
         );
+    }
+
+    #[test]
+    fn stream_words_recover_u32_layout() {
+        // 70-channel layer: rows = 210 -> 7 stream words, 4 u64 planes;
+        // the u32 view must be exactly the legacy column-major packing.
+        let layer = tiny_layer(70, 3, false, true);
+        let packed = PackedLayer::from_spec(&layer);
+        assert_eq!(packed.stream_words(), layer.rows().div_ceil(32));
+        for co in 0..layer.c_out {
+            for wj in 0..packed.stream_words() {
+                let mut want = 0u32;
+                for b in 0..32 {
+                    let r = wj * 32 + b;
+                    if r < layer.rows() && layer.weight(r, co) > 0 {
+                        want |= 1 << b;
+                    }
+                }
+                assert_eq!(packed.stream_word(co, wj), want, "co {co} wj {wj}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_kernels_match_single_utterance_twins() {
+        let conv = tiny_layer(70, 23, true, true); // word-unaligned widths
+        let last = tiny_layer(23, 12, false, false);
+        let packed_conv = PackedLayer::from_spec(&conv);
+        let packed_last = PackedLayer::from_spec(&last);
+        // A ragged little batch of distinct maps (odd t drops a pool tail).
+        let xs: Vec<BitMap> = (0..5)
+            .map(|u| {
+                let mut x = BitMap::zero(9, 70);
+                for t in 0..9 {
+                    for c in 0..70 {
+                        if (t * 11 + c * 5 + u * 3) % 7 < 3 {
+                            x.set(t, c);
+                        }
+                    }
+                }
+                x
+            })
+            .collect();
+        for t in 0..9 {
+            let batch = conv_sums_packed_batch(&xs, &packed_conv, t);
+            for (u, x) in xs.iter().enumerate() {
+                assert_eq!(batch[u], conv_sums_packed(x, &packed_conv, t), "u {u} t {t}");
+            }
+        }
+        let mids = conv_layer_packed_batch(&xs, &packed_conv);
+        for (u, x) in xs.iter().enumerate() {
+            assert_eq!(mids[u], conv_layer_packed(x, &packed_conv), "u {u}");
+        }
+        let logits = final_layer_gap_packed_batch(&mids, &packed_last);
+        for (u, mid) in mids.iter().enumerate() {
+            assert_eq!(logits[u], final_layer_gap_packed(mid, &packed_last), "u {u}");
+        }
+        // Empty batches are empty, not a panic.
+        assert!(conv_layer_packed_batch(&[], &packed_conv).is_empty());
+        assert!(final_layer_gap_packed_batch(&[], &packed_last).is_empty());
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! Batch-vs-sequential parity: `run_batch` must be bit-identical to N
+//! sequential `run` calls — per element, in order — on both backends,
+//! across optimization levels, shard counts 1..4, and ragged final
+//! batches (batch sizes that don't divide the request count). No
+//! artifacts required — runs on synthetic models.
+
+use cimrv::backend::{self, BackendKind, InferenceBackend};
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::{build_kws_program, build_kws_program_sharded};
+use cimrv::dataflow::shard::ShardPlan;
+use cimrv::fsim::FastSim;
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::{dataset, KwsModel};
+use cimrv::util::proptest::check;
+
+fn utterances(m: &KwsModel, n: usize, base_seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| dataset::synth_utterance(i % 12, base_seed + i as u64, m.audio_len, 0.37))
+        .collect()
+}
+
+/// Drive `audios` through `be` both ways — one `run` per utterance, then
+/// `run_batch` in chunks of `chunk` (the last chunk ragged when `chunk`
+/// doesn't divide the count) — and require bit-identical records.
+fn assert_batch_matches_sequential(
+    be: &mut dyn InferenceBackend,
+    audios: &[Vec<f32>],
+    chunk: usize,
+    ctx: &str,
+) {
+    let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+    let want: Vec<_> = refs.iter().map(|a| be.run(a).unwrap()).collect();
+    let mut got = Vec::new();
+    for c in refs.chunks(chunk) {
+        got.extend(be.run_batch(c).unwrap());
+    }
+    assert_eq!(got.len(), want.len(), "{ctx}: element count");
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.logits, w.logits, "{ctx}: element {i} logits");
+        assert_eq!(g.predicted, w.predicted, "{ctx}: element {i} argmax");
+        assert_eq!(g.cycles, w.cycles, "{ctx}: element {i} cycles");
+        assert_eq!(g.shard_fires, w.shard_fires, "{ctx}: element {i} shard fires");
+    }
+}
+
+#[test]
+fn fast_backend_batches_bit_identical_across_opts_shards_and_ragged_tails() {
+    let m = KwsModel::synthetic(31);
+    let audios = utterances(&m, 7, 100);
+    for (name, opt) in OptLevel::ladder() {
+        for macros in 1..=4usize {
+            let prog = build_kws_program_sharded(&m, opt, macros).unwrap();
+            let mut be =
+                backend::build(BackendKind::Fast, prog, DramConfig::default()).unwrap();
+            // 7 requests in chunks of 1 / 3 / 8: singleton batches, a
+            // ragged tail (3+3+1), and one oversized chunk (7 < 8).
+            for chunk in [1usize, 3, 8] {
+                assert_batch_matches_sequential(
+                    be.as_mut(),
+                    &audios,
+                    chunk,
+                    &format!("fast/{name}/macros {macros}/chunk {chunk}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_batches_bit_identical_on_explicit_uneven_shard_plans() {
+    // The functional simulator accepts channel-granular plans the cycle
+    // engine can't; batched execution must honor them identically —
+    // with and without the in-batch thread fan-out.
+    let m = KwsModel::synthetic(5);
+    let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+    let audios = utterances(&m, 5, 300);
+    let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+    for n in 2..=4usize {
+        let plan = ShardPlan::even(&prog.plan, n).unwrap();
+        for threads in [1usize, 4] {
+            let sim = FastSim::new(prog.clone(), DramConfig::default())
+                .unwrap()
+                .with_shard_plan(&plan, false)
+                .unwrap()
+                .with_batch_threads(threads);
+            let want: Vec<_> = refs.iter().map(|a| sim.infer(a)).collect();
+            let got = sim.infer_batch(&refs);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.logits, w.logits, "n {n} threads {threads} element {i}");
+                assert_eq!(g.shard_fires, w.shard_fires);
+            }
+        }
+    }
+}
+
+#[test]
+fn cycle_backend_batches_bit_identical_including_sharded() {
+    // The cycle engine loops internally (it is the timing oracle, not
+    // the throughput path) — parity must still hold, sharded included.
+    let m = KwsModel::synthetic(8);
+    let audios = utterances(&m, 3, 200);
+    for macros in [1usize, 2] {
+        let prog = build_kws_program_sharded(&m, OptLevel::FULL, macros).unwrap();
+        let mut be = backend::build(BackendKind::Cycle, prog, DramConfig::default()).unwrap();
+        assert_batch_matches_sequential(
+            be.as_mut(),
+            &audios,
+            2, // ragged: 2 + 1
+            &format!("cycle/macros {macros}"),
+        );
+    }
+}
+
+#[test]
+fn prop_fast_ragged_batches_match_sequential() {
+    // Property sweep over random batch sizes and chunkings on one
+    // decoded program: whatever the grouping, the elements are the same.
+    let m = KwsModel::synthetic(77);
+    let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+    let sim = FastSim::new(prog, DramConfig::default()).unwrap();
+    check("ragged batch grouping", 12, |rng| {
+        let n = rng.range(1, 10);
+        let audios = utterances(&m, n, rng.range(0, 1000) as u64);
+        let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+        let want: Vec<_> = refs.iter().map(|a| sim.infer(a)).collect();
+        let chunk = rng.range(1, n + 1);
+        let mut got = Vec::new();
+        for c in refs.chunks(chunk) {
+            got.extend(sim.infer_batch(c));
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.logits, w.logits, "n {n} chunk {chunk} element {i}");
+        }
+    });
+}
+
+#[test]
+fn empty_batch_is_empty_on_both_backends() {
+    let m = KwsModel::synthetic(2);
+    let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+    for kind in [BackendKind::Fast, BackendKind::Cycle] {
+        let mut be = backend::build(kind, prog.clone(), DramConfig::default()).unwrap();
+        assert!(be.run_batch(&[]).unwrap().is_empty(), "{kind}");
+    }
+}

@@ -7,8 +7,9 @@
 
 use cimrv::model::kws::LayerSpec;
 use cimrv::model::reference::{
-    conv_layer, conv_layer_packed, conv_sums, conv_sums_packed, final_layer_gap,
-    final_layer_gap_packed, BitMap, PackedLayer,
+    conv_layer, conv_layer_packed, conv_layer_packed_batch, conv_sums, conv_sums_packed,
+    conv_sums_packed_batch, final_layer_gap, final_layer_gap_packed, final_layer_gap_packed_batch,
+    BitMap, PackedLayer,
 };
 use cimrv::util::proptest::check;
 use cimrv::util::rng::Rng;
@@ -111,9 +112,11 @@ fn prop_pack_unpack_roundtrip() {
     check("pack/unpack roundtrip", 150, |rng| {
         let layer = random_layer(rng, rng.bool(0.5));
         let packed = PackedLayer::from_spec(&layer);
-        assert_eq!(packed.plane_words, layer.rows().div_ceil(32));
+        // u64 window words: half the u32 stream-word trip count.
+        assert_eq!(packed.plane_words, layer.rows().div_ceil(64));
+        assert_eq!(packed.stream_words(), layer.rows().div_ceil(32));
         // Plane padding bits above rows() stay clear (kernel invariant).
-        let tail = layer.rows() % 32;
+        let tail = layer.rows() % 64;
         if tail != 0 {
             for co in 0..layer.c_out {
                 assert_eq!(packed.plane(co)[packed.plane_words - 1] >> tail, 0, "co {co}");
@@ -122,6 +125,78 @@ fn prop_pack_unpack_roundtrip() {
         let back = packed.to_spec();
         assert_eq!(back.weights, layer.weights);
         assert_eq!(back.thresholds, layer.thresholds);
+    });
+}
+
+#[test]
+fn prop_stream_words_match_legacy_u32_packing() {
+    // The DRAM sign-stream layout is unchanged by the u64 widening: the
+    // u32 view of every plane must equal packing the weights 32 at a
+    // time (what the compiler emits and the macro's weight port holds).
+    check("u64 planes vs u32 stream", 120, |rng| {
+        let layer = random_layer(rng, rng.bool(0.5));
+        let packed = PackedLayer::from_spec(&layer);
+        let rows = layer.rows();
+        for co in 0..layer.c_out {
+            for wj in 0..packed.stream_words() {
+                let mut want = 0u32;
+                for b in 0..32 {
+                    let r = wj * 32 + b;
+                    if r < rows && layer.weight(r, co) > 0 {
+                        want |= 1 << b;
+                    }
+                }
+                assert_eq!(packed.stream_word(co, wj), want, "co {co} wj {wj}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batched_conv_layer_matches_per_utterance() {
+    check("batched conv layer", 60, |rng| {
+        let layer = random_layer(rng, true);
+        let t = rng.range(2, 16);
+        let n = rng.range(1, 7);
+        let xs: Vec<BitMap> = (0..n).map(|_| random_bits(rng, t, layer.c_in)).collect();
+        let packed = PackedLayer::from_spec(&layer);
+        let batch = conv_layer_packed_batch(&xs, &packed);
+        assert_eq!(batch.len(), n);
+        for (u, x) in xs.iter().enumerate() {
+            assert_eq!(
+                batch[u],
+                conv_layer_packed(x, &packed),
+                "k {} c_in {} c_out {} pooled {} t {t} u {u}/{n}",
+                layer.kernel,
+                layer.c_in,
+                layer.c_out,
+                layer.pooled
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_batched_sums_and_gap_match_per_utterance() {
+    check("batched sums + GAP", 60, |rng| {
+        let conv = random_layer(rng, true);
+        let last = random_layer(rng, false);
+        let t = rng.range(1, 12);
+        let n = rng.range(1, 6);
+        let packed_conv = PackedLayer::from_spec(&conv);
+        let xs: Vec<BitMap> = (0..n).map(|_| random_bits(rng, t, conv.c_in)).collect();
+        for pos in 0..t {
+            let batch = conv_sums_packed_batch(&xs, &packed_conv, pos);
+            for (u, x) in xs.iter().enumerate() {
+                assert_eq!(batch[u], conv_sums_packed(x, &packed_conv, pos), "pos {pos} u {u}");
+            }
+        }
+        let packed_last = PackedLayer::from_spec(&last);
+        let ys: Vec<BitMap> = (0..n).map(|_| random_bits(rng, t, last.c_in)).collect();
+        let batch = final_layer_gap_packed_batch(&ys, &packed_last);
+        for (u, y) in ys.iter().enumerate() {
+            assert_eq!(batch[u], final_layer_gap_packed(y, &packed_last), "u {u}");
+        }
     });
 }
 
