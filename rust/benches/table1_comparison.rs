@@ -13,9 +13,20 @@ use cimrv::energy::tops::peak_tops;
 use cimrv::energy::EnergyTable;
 use cimrv::mem::dram::DramConfig;
 use cimrv::model::reference;
+use cimrv::robustness::VariationParams;
 use cimrv::sim::Soc;
 
 fn main() {
+    // `-- --mismatch M` sweeps with a non-default residual differential
+    // mismatch (the knob `cimrv sweep --mismatch` exposes; both surfaces
+    // build the same `VariationParams`).
+    let argv: Vec<String> = std::env::args().collect();
+    let mismatch: f64 = argv
+        .iter()
+        .position(|a| a == "--mismatch")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(VariationModel::DEFAULT_MISMATCH);
     let model = common::model();
     let audio = common::audio(&model, 0, 7);
     let r = common::run_once(&model, OptLevel::FULL, &audio);
@@ -49,16 +60,18 @@ fn main() {
 
     // --- §II-B ablation: symmetric vs single-ended mapping under cell
     // variation / bitline NL.
-    println!("\n=== §II-B: symmetry weight mapping vs variation ===");
+    println!("\n=== §II-B: symmetry weight mapping vs variation (mismatch {mismatch}) ===");
     println!("{:<10}{:>22}{:>22}", "sigma", "symmetric acc %", "single-ended acc %");
     let n = 24.min(eval.len());
     for sigma in [0.0, 0.05, 0.1, 0.2] {
         let mut accs = [0.0f64; 2];
         for (k, symmetric) in [(0, true), (1, false)] {
+            let params =
+                VariationParams { sigma, nl_alpha: 0.3, symmetric, mismatch, seed: 7 };
             let prog = build_kws_program(&model, OptLevel::FULL).unwrap();
             let mut soc = Soc::new(prog, DramConfig::default())
                 .unwrap()
-                .with_variation(VariationModel::new(sigma, 0.3, symmetric, 7));
+                .with_variation(params.model());
             let mut h = 0;
             for i in 0..n {
                 let r = soc.infer(eval.utterance(i)).unwrap();

@@ -4,6 +4,7 @@ use anyhow::Result;
 
 use crate::compiler::Program;
 use crate::mem::dram::DramConfig;
+use crate::robustness::VariationParams;
 use crate::sim::{RunResult, Soc};
 
 use super::InferenceBackend;
@@ -12,11 +13,23 @@ use super::InferenceBackend;
 /// single-tenant; parallelism comes from running one backend per worker).
 pub struct CycleBackend {
     soc: Soc,
+    /// Per-request variation injection: fresh identically seeded models
+    /// re-injected into the macro bank before every inference, matching
+    /// the fast backend's one-fresh-stream-per-inference semantics so a
+    /// disturbed request classifies identically on either engine.
+    variation: Option<VariationParams>,
 }
 
 impl CycleBackend {
     pub fn new(program: Program, dram_cfg: DramConfig) -> Result<Self> {
-        Ok(CycleBackend { soc: Soc::new(program, dram_cfg)? })
+        Ok(CycleBackend { soc: Soc::new(program, dram_cfg)?, variation: None })
+    }
+
+    /// Serve disturbed inferences (`serve --variation` on the cycle
+    /// engine): see the field note for the reseeding contract.
+    pub fn with_variation(mut self, v: VariationParams) -> Self {
+        self.variation = Some(v);
+        self
     }
 
     /// Direct access for callers that need SoC-only features (variation
@@ -36,7 +49,16 @@ impl InferenceBackend for CycleBackend {
     /// engine is the timing oracle, not the throughput path), which also
     /// makes batched-vs-sequential parity trivially structural here.
     fn run_batch(&mut self, batch: &[&[f32]]) -> Result<Vec<RunResult>> {
-        batch.iter().map(|audio| self.soc.infer(audio)).collect()
+        let variation = self.variation;
+        batch
+            .iter()
+            .map(|audio| {
+                if let Some(v) = variation {
+                    self.soc.set_variation(Some(v.model()));
+                }
+                self.soc.infer(audio)
+            })
+            .collect()
     }
 
     fn program(&self) -> &Program {

@@ -42,6 +42,15 @@ impl FastBackend {
         FastBackend { sim: Arc::new(sim) }
     }
 
+    /// Serve disturbed inferences (`serve --variation`): every request
+    /// replays the macro bank's variation fire sequence with fresh
+    /// per-macro streams (`FastSim::with_variation`). Rebuilds the shared
+    /// handle, so configure *before* fanning out to workers.
+    pub fn with_variation(self, v: crate::robustness::VariationParams) -> Self {
+        let sim = (*self.sim).clone().with_variation(v);
+        FastBackend { sim: Arc::new(sim) }
+    }
+
     pub fn sim(&self) -> &FastSim {
         self.sim.as_ref()
     }

@@ -33,8 +33,37 @@ pub struct VariationModel {
 }
 
 impl VariationModel {
+    /// Default residual differential mismatch (override with
+    /// [`Self::with_mismatch`]).
+    pub const DEFAULT_MISMATCH: f64 = 0.05;
+
     pub fn new(sigma: f64, nl_alpha: f64, symmetric: bool, seed: u64) -> Self {
-        VariationModel { sigma, nl_alpha, symmetric, mismatch: 0.05, rng: Rng::new(seed) }
+        VariationModel {
+            sigma,
+            nl_alpha,
+            symmetric,
+            mismatch: Self::DEFAULT_MISMATCH,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Override the residual differential mismatch fraction (the noise
+    /// that survives symmetric mapping; `0.0` = a perfectly matched
+    /// differential pair, `1.0` = no suppression at all).
+    pub fn with_mismatch(mut self, mismatch: f64) -> Self {
+        self.mismatch = mismatch;
+        self
+    }
+
+    /// Advance the RNG exactly as one [`Self::disturb`] call on an active
+    /// column does, discarding the draw. The tensor-level replay
+    /// (`robustness::replay`) uses this for SA columns outside the active
+    /// layer's channel range: the boot sequence arms the whole mask
+    /// plane, so *every* column of *every* fire consumes one draw in the
+    /// cycle engine, whether or not its output is ever read.
+    #[inline]
+    pub fn burn(&mut self) {
+        let _ = self.rng.normal();
     }
 
     /// Disturb one SA's ideal integer MAC sum. `active` is the number of
@@ -106,5 +135,72 @@ mod tests {
         for s in 0..50 {
             assert_eq!(a.disturb(s, 256), b.disturb(s, 256));
         }
+    }
+
+    #[test]
+    fn disturb_stream_matches_manual_rng_replay() {
+        // The disturbance stream is EXACTLY one normal() per active-column
+        // disturb, applied as noise*sigma*sqrt(n)*scale (+ NL), rounded
+        // half-away-from-zero. Variation parity between the cycle engine
+        // and the tensor-level replay rests on this sequencing, so pin it
+        // against a manual replay off the same seed.
+        use crate::util::rng::Rng;
+        let (sigma, nl_alpha, seed) = (0.8, 0.25, 9u64);
+        let mut v = VariationModel::new(sigma, nl_alpha, false, seed);
+        let mut rng = Rng::new(seed);
+        for (s, active) in [(10i32, 96u32), (-40, 96), (3, 192), (100, 64), (0, 32)] {
+            let got = v.disturb(s, active);
+            let n = active as f64;
+            let want = (s as f64
+                + rng.normal() * sigma * n.sqrt()
+                - nl_alpha * (s as f64) * (s as f64).abs() / n)
+                .round() as i32;
+            assert_eq!(got, want, "sum {s} active {active}");
+        }
+        // active == 0 consumes NO draw: both streams stay aligned after.
+        assert_eq!(v.disturb(5, 0), 5);
+        let got = v.disturb(7, 100);
+        let want = (7.0 + rng.normal() * sigma * 100f64.sqrt() - nl_alpha * 7.0 * 7.0 / 100.0)
+            .round() as i32;
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn burn_advances_stream_exactly_like_disturb() {
+        // burn() must consume exactly one draw, like disturb on an active
+        // column — the replay's correctness for non-owned SA columns.
+        let mut a = VariationModel::new(1.0, 0.2, false, 77);
+        let mut b = VariationModel::new(1.0, 0.2, false, 77);
+        let _ = a.disturb(12, 128);
+        b.burn();
+        for s in [3, -9, 40] {
+            assert_eq!(a.disturb(s, 128), b.disturb(s, 128), "streams diverged at {s}");
+        }
+    }
+
+    #[test]
+    fn mismatch_parameter_scales_symmetric_noise() {
+        // mismatch = 0.0: a perfect differential pair is an identity even
+        // at huge sigma.
+        let mut perfect = VariationModel::new(50.0, 0.3, true, 3).with_mismatch(0.0);
+        for s in [-200, -1, 0, 17, 400] {
+            assert_eq!(perfect.disturb(s, 1024), s);
+        }
+        // Larger mismatch => proportionally larger residual spread.
+        let spread = |mismatch: f64| {
+            let mut v = VariationModel::new(1.0, 0.0, true, 21).with_mismatch(mismatch);
+            let mut acc = 0.0;
+            for _ in 0..2000 {
+                let d = v.disturb(0, 1024) as f64;
+                acc += d * d;
+            }
+            (acc / 2000.0).sqrt()
+        };
+        let small = spread(0.05);
+        let large = spread(0.5);
+        assert!(
+            large > 5.0 * small,
+            "10x mismatch must widen the residual spread ~10x: {small:.2} vs {large:.2}"
+        );
     }
 }

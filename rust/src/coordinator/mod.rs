@@ -11,4 +11,6 @@
 pub mod report;
 pub mod server;
 
-pub use server::{Coordinator, InferenceRequest, InferenceResponse, ServeOptions, ServiceStats};
+pub use server::{
+    Coordinator, InferenceRequest, InferenceResponse, LingerEstimator, ServeOptions, ServiceStats,
+};

@@ -116,6 +116,68 @@ pub fn render_batch_histogram(stats: &ServiceStats) -> String {
     s
 }
 
+/// Render a Monte-Carlo robustness sweep (`cimrv sweep`): one row per
+/// (sigma, nl, mapping) cell with seed-averaged accuracy, flip rate and
+/// logit drift, plus the throughput/provenance footer. The JSON twin is
+/// [`crate::robustness::SweepReport::to_json`] (`BENCH_robustness.json`).
+pub fn render_sweep(report: &crate::robustness::SweepReport) -> String {
+    let mut s = format!(
+        "=== robustness sweep: {} utterances, clean accuracy {:.1}% ===\n",
+        report.n_utterances,
+        100.0 * report.clean_accuracy
+    );
+    s.push_str(&format!(
+        "{:<8}{:<8}{:<14}{:>10}{:>11}{:>14}{:>14}\n",
+        "sigma", "nl", "mapping", "acc %", "flips %", "mean |dL|", "max |dL|"
+    ));
+    for (sigma, nl, symmetric, acc) in report.cells() {
+        // cells() carries the seed-averaged accuracy (the same number
+        // the mapping-claim gate and the JSON use); the re-filter below
+        // only averages the remaining per-point stats.
+        let pts: Vec<_> = report
+            .points
+            .iter()
+            .filter(|p| {
+                p.params.sigma == sigma
+                    && p.params.nl_alpha == nl
+                    && p.params.symmetric == symmetric
+            })
+            .collect();
+        let n = pts.len().max(1) as f64;
+        let flips = pts.iter().map(|p| p.flip_rate).sum::<f64>() / n;
+        let mean_d = pts.iter().map(|p| p.mean_abs_logit_delta).sum::<f64>() / n;
+        let max_d = pts.iter().map(|p| p.max_abs_logit_delta).fold(0.0, f64::max);
+        s.push_str(&format!(
+            "{:<8}{:<8}{:<14}{:>10.1}{:>11.1}{:>14.3}{:>14.3}\n",
+            sigma,
+            nl,
+            if symmetric { "symmetric" } else { "single-ended" },
+            100.0 * acc,
+            100.0 * flips,
+            mean_d,
+            max_d
+        ));
+    }
+    if let Some((sigma, sym, single)) = report.mapping_gap_at_max_sigma() {
+        s.push_str(&format!(
+            "mapping gap at sigma {sigma}: symmetric {:.1}% vs single-ended {:.1}%\n",
+            100.0 * sym,
+            100.0 * single
+        ));
+    }
+    s.push_str(&format!(
+        "{} disturbed inferences in {:.2}s ({:.0} inf/s host; chip {:.3} ms/inference \
+         @50 MHz; mismatch {}, {} threads)\n",
+        report.inferences,
+        report.elapsed_s,
+        report.inf_per_s,
+        1e3 * report.chip_cycles_per_inference as f64 / 50e6,
+        report.mismatch,
+        report.threads
+    ));
+    s
+}
+
 /// Ladder as JSON (machine-readable experiment record).
 pub fn ladder_json(points: &[LadderPoint]) -> Json {
     Json::Arr(
@@ -183,6 +245,45 @@ mod tests {
         assert!(h.contains("mean batch size: 3.67"), "{h}");
         // Empty histogram renders without dividing by zero.
         assert!(render_batch_histogram(&ServiceStats::default()).contains("0 formed"));
+    }
+
+    #[test]
+    fn sweep_report_renders_cells_and_gap() {
+        use crate::robustness::{SweepPoint, SweepReport, VariationParams};
+        let mk = |sigma: f64, symmetric: bool, seed: u64, acc: f64| SweepPoint {
+            params: VariationParams { sigma, nl_alpha: 0.3, symmetric, mismatch: 0.05, seed },
+            accuracy: acc,
+            flip_rate: 1.0 - acc,
+            mean_abs_logit_delta: 0.1,
+            max_abs_logit_delta: 0.5,
+        };
+        let report = SweepReport {
+            points: vec![
+                mk(0.0, true, 1, 1.0),
+                mk(0.6, true, 1, 0.9),
+                mk(0.6, true, 2, 1.0),
+                mk(0.6, false, 1, 0.1),
+                mk(0.6, false, 2, 0.2),
+            ],
+            clean_accuracy: 1.0,
+            n_utterances: 8,
+            inferences: 40,
+            elapsed_s: 0.5,
+            inf_per_s: 80.0,
+            chip_cycles_per_inference: 100_000,
+            mismatch: 0.05,
+            threads: 2,
+        };
+        let s = render_sweep(&report);
+        assert!(s.contains("symmetric"), "{s}");
+        assert!(s.contains("single-ended"), "{s}");
+        assert!(s.contains("mapping gap at sigma 0.6"), "{s}");
+        // Seed-averaged cells drive the §II-B claim check.
+        let (sigma, sym, single) = report.mapping_gap_at_max_sigma().unwrap();
+        assert_eq!(sigma, 0.6);
+        assert!((sym - 0.95).abs() < 1e-12);
+        assert!((single - 0.15).abs() < 1e-12);
+        report.check_mapping_claim().unwrap();
     }
 
     #[test]

@@ -3,12 +3,13 @@
 //!
 //! Since the batch-first refactor the coordinator is a **micro-batching
 //! scheduler**: each worker drains the shared request queue into a
-//! coalesced batch (up to [`ServeOptions::batch`] requests, waiting at
-//! most [`ServeOptions::linger_us`] for stragglers after the first one
-//! arrives) and serves it through one `run_batch` call — the fast
-//! backend walks every layer's weight planes once per batch, which is
-//! where the throughput comes from. `--batch 1` degenerates to the old
-//! request-at-a-time loop with zero linger.
+//! coalesced batch (up to [`ServeOptions::batch`] requests, waiting for
+//! stragglers after the first one arrives — a window sized adaptively
+//! from the observed inter-arrival rate by [`LingerEstimator`], or
+//! pinned by the [`ServeOptions::linger_us`] override) and serves it
+//! through one `run_batch` call — the fast backend walks every layer's
+//! weight planes once per batch, which is where the throughput comes
+//! from. `--batch 1` degenerates to the old request-at-a-time loop.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, TryRecvError};
@@ -18,12 +19,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::backend::{self, BackendKind, FastBackend, InferenceBackend};
+use crate::backend::{BackendKind, CycleBackend, FastBackend, InferenceBackend};
 use crate::baselines::OptLevel;
 use crate::compiler::build_kws_program_sharded;
 use crate::fsim::{Calibration, FastSim};
 use crate::mem::dram::DramConfig;
 use crate::model::KwsModel;
+use crate::robustness::VariationParams;
 use crate::sim::{RunResult, Soc};
 
 /// One utterance to classify.
@@ -156,16 +158,74 @@ pub struct ServeOptions {
     /// many queued requests into one `run_batch` call. 1 = classic
     /// request-at-a-time serving. Must be >= 1 (0 is rejected at start).
     pub batch: usize,
-    /// How long a worker lingers for follow-up requests after the first
-    /// one of a batch arrives (µs). Irrelevant when `batch == 1`. Small
-    /// by default: enough to coalesce a burst, not enough to be visible
-    /// next to a simulated inference.
-    pub linger_us: u64,
+    /// Fixed straggler window override (`--linger-us N`): how long a
+    /// worker lingers for follow-up requests after the first one of a
+    /// batch arrives (µs). `None` (the default) sizes the window
+    /// adaptively from the observed request inter-arrival rate instead —
+    /// see [`LingerEstimator`]. Irrelevant when `batch == 1`.
+    pub linger_us: Option<u64>,
+    /// Serve *disturbed* inferences (`serve --variation sigma=...`):
+    /// both backends replay fresh identically seeded per-macro noise
+    /// streams per request (fault-injection scenarios; see
+    /// `robustness::replay` for the semantics).
+    pub variation: Option<VariationParams>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { calibrate: false, macros: 1, batch: 1, linger_us: 500 }
+        ServeOptions { calibrate: false, macros: 1, batch: 1, linger_us: None, variation: None }
+    }
+}
+
+/// Sizes the micro-batch straggler window. With a fixed override it is
+/// the classic `--linger-us` constant; otherwise it tracks an EWMA of
+/// the gaps between consecutive requests' submit instants (as seen by
+/// this worker — a subsample under multi-worker fleets, which only
+/// biases the window *up*, toward more coalescing) and opens a window of
+/// twice the mean gap, clamped to
+/// `[ADAPTIVE_LINGER_MIN_US, ADAPTIVE_LINGER_MAX_US]`: a fast stream
+/// coalesces full batches, a trickle gives up quickly instead of taxing
+/// every request with a worst-case wait.
+#[derive(Debug, Clone)]
+pub struct LingerEstimator {
+    fixed: Option<Duration>,
+    ewma_us: Option<f64>,
+}
+
+/// Adaptive window floor: enough to catch a same-burst follow-up.
+pub const ADAPTIVE_LINGER_MIN_US: u64 = 50;
+/// Adaptive window ceiling: never worse than 5 ms of added latency.
+pub const ADAPTIVE_LINGER_MAX_US: u64 = 5_000;
+/// Window before the first gap has been observed (the old fixed default).
+pub const ADAPTIVE_LINGER_DEFAULT_US: u64 = 500;
+/// EWMA smoothing factor for the inter-arrival estimate.
+const LINGER_EWMA_ALPHA: f64 = 0.3;
+
+impl LingerEstimator {
+    pub fn new(fixed_us: Option<u64>) -> Self {
+        LingerEstimator { fixed: fixed_us.map(Duration::from_micros), ewma_us: None }
+    }
+
+    /// Feed one observed inter-arrival gap (µs between consecutive
+    /// requests' submit instants).
+    pub fn observe_gap_us(&mut self, gap_us: f64) {
+        let gap = gap_us.max(0.0);
+        self.ewma_us = Some(match self.ewma_us {
+            Some(e) => (1.0 - LINGER_EWMA_ALPHA) * e + LINGER_EWMA_ALPHA * gap,
+            None => gap,
+        });
+    }
+
+    /// The straggler window to use for the next batch.
+    pub fn window(&self) -> Duration {
+        if let Some(d) = self.fixed {
+            return d;
+        }
+        let us = match self.ewma_us {
+            Some(e) => (2.0 * e) as u64,
+            None => ADAPTIVE_LINGER_DEFAULT_US,
+        };
+        Duration::from_micros(us.clamp(ADAPTIVE_LINGER_MIN_US, ADAPTIVE_LINGER_MAX_US))
     }
 }
 
@@ -239,10 +299,14 @@ impl Coordinator {
                     // worker gets the in-batch thread fan-out instead.
                     sim = sim.with_batch_threads(1);
                 }
+                if let Some(v) = opts.variation {
+                    sim = sim.with_variation(v);
+                }
                 if opts.calibrate {
                     // One cycle-accurate run (any utterance: latency is
-                    // data-independent) snaps served latency/energy from
-                    // analytical to exact.
+                    // data-independent — variation disturbs values, never
+                    // timing, so the calibration SoC stays clean) snaps
+                    // served latency/energy from analytical to exact.
                     let mut soc = Soc::new(program.clone(), DramConfig::default())?;
                     let silence = vec![0.0f32; model.audio_len];
                     let measured = soc.infer(&silence)?;
@@ -256,14 +320,20 @@ impl Coordinator {
         for _ in 0..n_workers {
             let be: Box<dyn InferenceBackend> = match &fast_shared {
                 Some(sim) => Box::new(FastBackend::shared(Arc::clone(sim))),
-                None => backend::build(kind, program.clone(), DramConfig::default())?,
+                None => {
+                    let cb = CycleBackend::new(program.clone(), DramConfig::default())?;
+                    Box::new(match opts.variation {
+                        Some(v) => cb.with_variation(v),
+                        None => cb,
+                    })
+                }
             };
             backends.push(be);
         }
         let stats = Arc::new(ServiceStats::sized(opts.macros.max(1), opts.batch));
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let linger = Duration::from_micros(opts.linger_us);
+        let linger_fixed = opts.linger_us;
         let batch_cap = opts.batch;
         let mut workers = Vec::new();
         for mut be in backends {
@@ -271,6 +341,8 @@ impl Coordinator {
             let stats = Arc::clone(&stats);
             workers.push(thread::spawn(move || {
                 let bname = be.name();
+                let mut linger = LingerEstimator::new(linger_fixed);
+                let mut last_submit: Option<Instant> = None;
                 loop {
                     // Drain the queue into one coalesced micro-batch:
                     // block for the first request, then keep the channel
@@ -283,7 +355,7 @@ impl Coordinator {
                             Ok(job) => jobs.push(job),
                             Err(_) => break, // coordinator shut down
                         }
-                        let deadline = Instant::now() + linger;
+                        let deadline = Instant::now() + linger.window();
                         while jobs.len() < batch_cap {
                             match rx.try_recv() {
                                 Ok(job) => jobs.push(job),
@@ -300,6 +372,16 @@ impl Coordinator {
                                 }
                             }
                         }
+                    }
+                    // Feed the adaptive linger policy with the arrival
+                    // process (submit instants, not drain instants, so
+                    // the estimate is independent of worker scheduling).
+                    for job in &jobs {
+                        if let Some(prev) = last_submit {
+                            let gap = job.enqueued.saturating_duration_since(prev);
+                            linger.observe_gap_us(gap.as_secs_f64() * 1e6);
+                        }
+                        last_submit = Some(job.enqueued);
                     }
                     let audios: Vec<&[f32]> =
                         jobs.iter().map(|j| j.req.audio.as_slice()).collect();
@@ -660,7 +742,7 @@ mod tests {
             OptLevel::FULL,
             1,
             BackendKind::Fast,
-            ServeOptions { batch: 4, linger_us: 50_000, ..Default::default() },
+            ServeOptions { batch: 4, linger_us: Some(50_000), ..Default::default() },
         )
         .unwrap();
         let got = micro.serve_batch(reqs(9)).unwrap();
@@ -683,6 +765,142 @@ mod tests {
         assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
         micro.shutdown();
         assert!(micro.accuracy().is_some());
+    }
+
+    #[test]
+    fn linger_estimator_adapts_and_clamps() {
+        // Fixed override wins unconditionally.
+        let fixed = LingerEstimator::new(Some(1234));
+        assert_eq!(fixed.window(), Duration::from_micros(1234));
+        // Before any observation: the default window.
+        let mut e = LingerEstimator::new(None);
+        assert_eq!(e.window(), Duration::from_micros(ADAPTIVE_LINGER_DEFAULT_US));
+        // A steady 200 µs stream converges to a ~400 µs window (2x gap).
+        for _ in 0..50 {
+            e.observe_gap_us(200.0);
+        }
+        let w = e.window().as_micros() as u64;
+        assert!((395..=405).contains(&w), "window {w} µs for a 200 µs stream");
+        // A trickle clamps at the ceiling instead of growing unbounded...
+        for _ in 0..50 {
+            e.observe_gap_us(1_000_000.0);
+        }
+        assert_eq!(e.window(), Duration::from_micros(ADAPTIVE_LINGER_MAX_US));
+        // ...and a flood clamps at the floor.
+        for _ in 0..200 {
+            e.observe_gap_us(0.0);
+        }
+        assert_eq!(e.window(), Duration::from_micros(ADAPTIVE_LINGER_MIN_US));
+        // The fixed override ignores observations entirely.
+        let mut f = LingerEstimator::new(Some(777));
+        f.observe_gap_us(0.0);
+        assert_eq!(f.window(), Duration::from_micros(777));
+    }
+
+    #[test]
+    fn adaptive_linger_serving_matches_fixed_linger_bits() {
+        // The linger policy decides how batches coalesce, never what they
+        // compute: default (adaptive) serving must produce the same
+        // logits as a fixed-linger deployment, and still form real
+        // multi-request batches under a burst.
+        let m = fake_model();
+        let reqs = |n: u64| -> Vec<InferenceRequest> {
+            (0..n)
+                .map(|i| InferenceRequest {
+                    id: i,
+                    audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
+                    label: None,
+                })
+                .collect()
+        };
+        let mut fixed = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            1,
+            BackendKind::Fast,
+            ServeOptions { batch: 4, linger_us: Some(50_000), ..Default::default() },
+        )
+        .unwrap();
+        let want = fixed.serve_batch(reqs(8)).unwrap();
+        fixed.shutdown();
+
+        let mut adaptive = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            1,
+            BackendKind::Fast,
+            ServeOptions { batch: 4, ..Default::default() }, // linger_us: None
+        )
+        .unwrap();
+        let got = adaptive.serve_batch(reqs(8)).unwrap();
+        for (x, y) in want.iter().zip(&got) {
+            assert_eq!(x.logits, y.logits, "request {}", x.id);
+            assert_eq!(x.predicted, y.predicted);
+        }
+        assert_eq!(adaptive.stats.served.load(Ordering::Relaxed), 8);
+        let hist: Vec<u64> =
+            adaptive.stats.batch_sizes.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        assert!(
+            hist[1..].iter().sum::<u64>() > 0,
+            "adaptive linger formed no multi-request batch under a burst: {hist:?}"
+        );
+        adaptive.shutdown();
+    }
+
+    #[test]
+    fn variation_serving_is_disturbed_and_backend_agnostic() {
+        // serve --variation: both engines replay fresh identically
+        // seeded per-request noise streams, so a disturbed request
+        // classifies identically on the fast and cycle backends — and
+        // differently from clean serving.
+        let m = fake_model();
+        let variation = Some(VariationParams {
+            sigma: 0.5,
+            nl_alpha: 0.3,
+            symmetric: false,
+            ..Default::default()
+        });
+        let reqs = |n: u64| -> Vec<InferenceRequest> {
+            (0..n)
+                .map(|i| InferenceRequest {
+                    id: i,
+                    audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
+                    label: None,
+                })
+                .collect()
+        };
+        let mut clean = Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Fast).unwrap();
+        let base = clean.serve_batch(reqs(3)).unwrap();
+        clean.shutdown();
+
+        let mut fast = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            2,
+            BackendKind::Fast,
+            ServeOptions { variation, ..Default::default() },
+        )
+        .unwrap();
+        let f = fast.serve_batch(reqs(3)).unwrap();
+        fast.shutdown();
+        assert!(
+            f.iter().zip(&base).any(|(a, b)| a.logits != b.logits),
+            "sigma 0.5 single-ended serving must disturb logits"
+        );
+
+        let mut cyc = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            2,
+            BackendKind::Cycle,
+            ServeOptions { variation, ..Default::default() },
+        )
+        .unwrap();
+        let c = cyc.serve_batch(reqs(3)).unwrap();
+        cyc.shutdown();
+        for (x, y) in f.iter().zip(&c) {
+            assert_eq!(x.logits, y.logits, "disturbed request {} diverged across engines", x.id);
+        }
     }
 
     #[test]

@@ -265,6 +265,27 @@ impl DecodedProgram {
             .collect()
     }
 
+    /// Input row count (`t_in`) of every layer — the number of `cim_conv`
+    /// fires each owning macro performs for that layer — walked from the
+    /// program's input geometry through the pooling ladder. Feeds the
+    /// shard fire accounting below; the variation-aware replay
+    /// (`robustness::replay`) derives the same ladder from its evolving
+    /// feature map, and this is the reference for what it must match
+    /// (one noise draw per SA column per fire).
+    pub fn t_ins(&self) -> Vec<usize> {
+        let mut t = self.t;
+        self.layers
+            .iter()
+            .map(|l| {
+                let t_in = t;
+                if l.pooled {
+                    t /= 2;
+                }
+                t_in
+            })
+            .collect()
+    }
+
     /// Pre-slice the decoded layers for a [`ShardPlan`]: each macro gets
     /// its channel range of every layer's sign planes (a contiguous word
     /// copy). Built once per (program, plan); reused across inferences.
@@ -295,21 +316,14 @@ impl DecodedProgram {
         }
         // Fire accounting mirrors the cycle engine's interleave: a macro
         // fires once per row position of every layer it owns channels of.
-        let mut t = self.t;
-        let mut t_ins = Vec::with_capacity(self.layers.len());
-        for l in &self.layers {
-            t_ins.push(t as u64);
-            if l.pooled {
-                t /= 2;
-            }
-        }
+        let t_ins = self.t_ins();
         let fires_per_macro: Vec<u64> = (0..n)
             .map(|m| {
                 per_macro[m]
                     .iter()
                     .zip(&t_ins)
                     .filter(|(s, _)| s.is_some())
-                    .map(|(_, &t_in)| t_in)
+                    .map(|(_, &t_in)| t_in as u64)
                     .sum()
             })
             .collect();

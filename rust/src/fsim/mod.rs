@@ -33,6 +33,7 @@ use crate::compiler::Program;
 use crate::dataflow::shard::ShardPlan;
 use crate::energy::{EnergyReport, EnergyTable};
 use crate::mem::dram::DramConfig;
+use crate::robustness::VariationParams;
 use crate::sim::{PhaseBreakdown, RunResult};
 
 /// Exact timing/energy numbers captured from one cycle-level run of the
@@ -81,6 +82,10 @@ pub struct FastSim {
     /// thread (what the coordinator uses when its workers already
     /// parallelize across requests).
     batch_threads: Option<usize>,
+    /// Serve disturbed inferences: every `infer`/`infer_batch` replays
+    /// the cycle engine's per-fire variation at tensor level
+    /// (`robustness::replay`), fresh per-macro streams per inference.
+    variation: Option<VariationParams>,
 }
 
 impl FastSim {
@@ -104,6 +109,7 @@ impl FastSim {
             calibration: None,
             sharded,
             batch_threads: None,
+            variation: None,
         })
     }
 
@@ -147,6 +153,21 @@ impl FastSim {
         self
     }
 
+    /// Serve *disturbed* inferences: every request replays the macro
+    /// bank's `VariationModel` fire sequence at tensor level with fresh
+    /// per-macro streams seeded from `v.seed` (`serve --variation` /
+    /// fault-injection scenarios). Timing/energy accounting is untouched
+    /// — the compiled program's latency is data-independent and the
+    /// disturbance is analog, not temporal.
+    pub fn with_variation(mut self, v: VariationParams) -> Self {
+        self.variation = Some(v);
+        self
+    }
+
+    pub fn variation(&self) -> Option<&VariationParams> {
+        self.variation.as_ref()
+    }
+
     pub fn program(&self) -> &Program {
         &self.program
     }
@@ -168,12 +189,37 @@ impl FastSim {
     /// calibration when present). Note `&self`: the functional simulator
     /// is stateless across requests and safe to share behind an `Arc`.
     pub fn infer(&self, audio: &[f32]) -> RunResult {
+        if let Some(v) = &self.variation {
+            return self.infer_disturbed(audio, v);
+        }
         let out = match &self.sharded {
             Some(se) if se.parallel => self.decoded.infer_sharded_parallel(audio, &se.prog),
             Some(se) => self.decoded.infer_sharded(audio, &se.prog),
             None => self.decoded.infer(audio),
         };
         self.finish(out)
+    }
+
+    /// One *disturbed* inference with explicit parameters (overriding any
+    /// [`Self::with_variation`] default) — the Monte-Carlo sweep hot
+    /// path. Honors the active shard layout: a sharded program replays
+    /// one independent noise stream per macro, exactly like the SoC's
+    /// macro bank.
+    pub fn infer_disturbed(&self, audio: &[f32], params: &VariationParams) -> RunResult {
+        let sp = self.sharded.as_ref().map(|se| &se.prog);
+        self.finish(crate::robustness::infer_disturbed(&self.decoded, sp, params, audio))
+    }
+
+    /// A batch of disturbed inferences: per-utterance fresh streams (each
+    /// element is an independent Monte-Carlo trial), so batching can
+    /// never change a result — parity with sequential
+    /// [`Self::infer_disturbed`] is structural.
+    pub fn infer_batch_disturbed(
+        &self,
+        batch: &[&[f32]],
+        params: &VariationParams,
+    ) -> Vec<RunResult> {
+        batch.iter().map(|a| self.infer_disturbed(a, params)).collect()
     }
 
     /// A batch of inferences in one call: each layer's weight planes are
@@ -215,8 +261,18 @@ impl FastSim {
     }
 
     /// One contiguous chunk of a batch on the current thread, through the
-    /// batched (optionally sharded) kernels.
+    /// batched (optionally sharded) kernels — or the per-utterance
+    /// disturbed replay when a variation model is configured (each
+    /// element draws its own fresh noise streams, so there is no
+    /// cross-utterance weight-walk to amortize).
     fn infer_batch_chunk(&self, batch: &[&[f32]]) -> Vec<(Vec<f32>, usize)> {
+        if let Some(v) = &self.variation {
+            let sp = self.sharded.as_ref().map(|se| &se.prog);
+            return batch
+                .iter()
+                .map(|a| crate::robustness::infer_disturbed(&self.decoded, sp, v, a))
+                .collect();
+        }
         match &self.sharded {
             Some(se) => self.decoded.infer_sharded_batch(batch, &se.prog),
             None => self.decoded.infer_batch(batch),
@@ -331,6 +387,45 @@ mod tests {
         }
         let sim = FastSim::new(prog, DramConfig::default()).unwrap();
         assert!(sim.infer_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn variation_routing_and_batch_trial_independence() {
+        use crate::robustness::VariationParams;
+        let m = KwsModel::synthetic(4);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let sim = FastSim::new(prog.clone(), DramConfig::default()).unwrap();
+        let audios: Vec<Vec<f32>> = (0..3)
+            .map(|i| dataset::synth_utterance(i % 12, 70 + i as u64, m.audio_len, 0.3))
+            .collect();
+        let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+
+        // A no-op model routes through the replay but changes nothing.
+        let noop = VariationParams::default();
+        let clean = sim.infer(refs[0]);
+        let via_replay = sim.infer_disturbed(refs[0], &noop);
+        assert_eq!(via_replay.logits, clean.logits);
+        assert_eq!(via_replay.cycles, clean.cycles, "timing is untouched by variation");
+
+        // with_variation makes infer/infer_batch serve disturbed bits;
+        // every batch element is an independent trial (same seed => same
+        // disturbance per utterance, regardless of batch grouping).
+        let p = VariationParams { sigma: 0.5, nl_alpha: 0.3, symmetric: false, ..noop };
+        let vsim = FastSim::new(prog, DramConfig::default())
+            .unwrap()
+            .with_variation(p)
+            .with_batch_threads(2);
+        let seq: Vec<RunResult> = refs.iter().map(|a| vsim.infer(a)).collect();
+        assert_ne!(seq[0].logits, clean.logits, "sigma 0.5 single-ended must disturb");
+        let batched = vsim.infer_batch(&refs);
+        for (b, s) in batched.iter().zip(&seq) {
+            assert_eq!(b.logits, s.logits);
+            assert_eq!(b.predicted, s.predicted);
+        }
+        let explicit = vsim.infer_batch_disturbed(&refs, &p);
+        for (e, s) in explicit.iter().zip(&seq) {
+            assert_eq!(e.logits, s.logits);
+        }
     }
 
     #[test]

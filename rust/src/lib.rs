@@ -30,6 +30,10 @@
 //!   analytical latency/energy model — the serving-speed engine.
 //! * [`backend`] — the pluggable `InferenceBackend` seam over both
 //!   engines (`--backend {cycle,fast}` on the CLI).
+//! * [`robustness`] — variation-aware fast simulation (the cycle engine's
+//!   per-fire cell-variation/NL disturbance replayed bit-exactly at
+//!   tensor level) + the Monte-Carlo robustness sweep engine
+//!   (`cimrv sweep`, `serve --variation`, `BENCH_robustness.json`).
 //! * [`runtime`] — PJRT golden model: loads `artifacts/*.hlo.txt` (AOT-
 //!   lowered JAX/Pallas) and executes it for bit-exact cross-checking.
 //! * [`coordinator`] — the edge-inference request loop (threaded leader /
@@ -53,6 +57,7 @@ pub mod fsim;
 pub mod isa;
 pub mod mem;
 pub mod model;
+pub mod robustness;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -4,11 +4,21 @@
 //!   run        one inference (+ golden cross-check); --backend cycle|fast,
 //!              --batch B for a batched run through run_batch
 //!   ablation   the Fig. 6/7/9 + §III-A optimization ladder
-//!   table1     Table I comparison (+ measured TOPS/W and accuracy)
+//!              (--variation SPEC injects §II-B disturbance into the runs)
+//!   table1     Table I comparison (+ measured TOPS/W and accuracy;
+//!              --variation SPEC adds disturbed accuracy)
 //!   accuracy   synthetic-GSCD accuracy on the ISS vs the host reference
 //!   serve      threaded coordinator demo; --backend cycle|fast, --batch B
-//!              turns the workers into micro-batching schedulers
+//!              turns the workers into micro-batching schedulers,
+//!              --linger-us N overrides the adaptive straggler window,
+//!              --variation SPEC serves disturbed inferences
+//!   sweep      Monte-Carlo robustness sweep over (sigma x nl x mapping x
+//!              seed) through the variation-aware fast path; emits
+//!              BENCH_robustness.json (--quick, --check, grid flags)
 //!   disasm     decode a hex instruction word
+//!
+//! The shared --variation SPEC is comma-separated key=value:
+//!   sigma=0.1,nl=0.3,mapping=single,mismatch=0.05,seed=7
 //!
 //! Run from the repo root after `make artifacts && cargo build --release`.
 
@@ -19,30 +29,37 @@ use cimrv::baselines::{comparison, OptLevel};
 use cimrv::compiler::{build_kws_program, build_kws_program_sharded};
 use cimrv::coordinator::report::{
     ladder_json, render_batch_histogram, render_ladder, render_latency_percentiles,
-    render_shard_utilization, LadderPoint,
+    render_shard_utilization, render_sweep, LadderPoint,
 };
 use cimrv::coordinator::{Coordinator, InferenceRequest, ServeOptions};
+use cimrv::fsim::FastSim;
 use cimrv::mem::dram::DramConfig;
 use cimrv::model::{dataset, reference, KwsModel};
+use cimrv::robustness::{self, run_sweep, SweepConfig};
 use cimrv::runtime::GoldenModel;
 use cimrv::sim::Soc;
 use cimrv::util::cli::Args;
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["no-golden", "json", "verbose", "calibrate"])?;
+    let args = Args::parse(&["no-golden", "json", "verbose", "calibrate", "quick", "check"])?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("ablation") => cmd_ablation(&args),
         Some("table1") => cmd_table1(&args),
         Some("accuracy") => cmd_accuracy(&args),
         Some("serve") => cmd_serve(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("disasm") => cmd_disasm(&args),
         Some("trace") => cmd_trace(&args),
         _ => {
             eprintln!(
-                "usage: cimrv <run|ablation|table1|accuracy|serve|trace|disasm> [--opt LEVEL] \
-                 [--backend cycle|fast] [--macros N] [--batch B] [--calibrate] [--n N] \
-                 [--workers W] [--label L] [--seed S] [--skip K] [--no-golden] [--json]"
+                "usage: cimrv <run|ablation|table1|accuracy|serve|sweep|trace|disasm> \
+                 [--opt LEVEL] [--backend cycle|fast] [--macros N] [--batch B] [--calibrate] \
+                 [--linger-us U] [--variation SPEC] [--n N] [--workers W] [--label L] \
+                 [--seed S] [--skip K] [--no-golden] [--json]\n\
+                 sweep: [--quick] [--check] [--sigmas 0,0.1,..] [--nl 0.3] \
+                 [--mappings both|symmetric|single] [--mc-seeds K] [--mismatch M] \
+                 [--threads T] [--out FILE]"
             );
             Ok(())
         }
@@ -152,13 +169,35 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_ablation(args: &Args) -> Result<()> {
     let model = load_model()?;
     let seed = args.opt_usize("seed", 1)? as u64;
+    let variation = robustness::variation_from_args(args)?;
     let audio = dataset::synth_utterance(3, seed, model.audio_len, 0.37);
     let mut points = Vec::new();
+    let mut disturbed_logits: Vec<Vec<f32>> = Vec::new();
     for (name, opt) in OptLevel::ladder() {
         let program = build_kws_program(&model, opt)?;
         let mut soc = Soc::new(program, DramConfig::default())?;
+        if let Some(v) = &variation {
+            soc.set_variation(Some(v.model()));
+        }
         let r = soc.infer(&audio)?;
+        if variation.is_some() {
+            disturbed_logits.push(r.logits.clone());
+        }
         points.push(LadderPoint::from_run(name, opt, &r));
+    }
+    if let Some(v) = &variation {
+        // The optimizations change timing, never the fire sequence — so
+        // the injected disturbance is identical across the whole ladder.
+        // Diagnostic goes to stderr: `--json` stdout stays pure JSON.
+        let all_same = disturbed_logits.windows(2).all(|w| w[0] == w[1]);
+        eprintln!(
+            "variation injected ({}): disturbed logits {} across the ladder",
+            v.spec(),
+            if all_same { "bit-identical" } else { "DIVERGED (fire sequences differ!)" }
+        );
+        if !all_same {
+            bail!("opt levels disagreed under variation — fire sequences are not equivalent");
+        }
     }
     if args.flag("json") {
         println!("{}", ladder_json(&points));
@@ -193,6 +232,26 @@ fn cmd_table1(args: &Args) -> Result<()> {
     }
     let acc = 100.0 * hits as f64 / n as f64;
     println!("{}", comparison::render_table1(Some(r.energy.tops_per_w()), Some(acc)));
+    if let Some(v) = robustness::variation_from_args(args)? {
+        // Disturbed accuracy on the same utterances through the
+        // variation-aware fast path (bit-identical to a cycle run with
+        // the same seed — tests/variation_parity.rs).
+        let prog = build_kws_program(&model, OptLevel::FULL)?;
+        let sim = FastSim::new(prog, DramConfig::default())?;
+        let mut hits = 0usize;
+        for i in 0..n {
+            let label = i % 12;
+            let a = dataset::synth_utterance(label, 1000 + i as u64, model.audio_len, 0.37);
+            if sim.infer_disturbed(&a, &v).predicted == label {
+                hits += 1;
+            }
+        }
+        println!(
+            "accuracy under variation ({}): {:.2}% ({hits}/{n})",
+            v.spec(),
+            100.0 * hits as f64 / n as f64
+        );
+    }
     Ok(())
 }
 
@@ -244,11 +303,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.opt_usize("n", 24)?;
     let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
     let kind = BackendKind::parse(&args.opt_or("backend", "cycle"))?;
+    let linger_us = args
+        .opt("linger-us")
+        .map(|v| v.parse::<u64>().map_err(|_| anyhow::anyhow!("--linger-us expects µs, got {v:?}")))
+        .transpose()?;
     let opts = ServeOptions {
         calibrate: args.flag("calibrate"),
         macros: args.opt_usize("macros", 1)?.max(1),
         batch: args.opt_usize("batch", 1)?,
-        ..Default::default()
+        linger_us,
+        variation: robustness::variation_from_args(args)?,
     };
     if opts.calibrate && kind == BackendKind::Cycle {
         eprintln!("note: --calibrate is a fast-backend option (cycle is already exact)");
@@ -256,6 +320,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut coord = Coordinator::start_with_options(&model, opt, workers, kind, opts)?;
     if opts.calibrate && kind == BackendKind::Fast {
         println!("calibrated from one cycle-level run: served latency/energy are exact");
+    }
+    if let Some(v) = &opts.variation {
+        println!(
+            "serving DISTURBED inferences ({}): fresh per-macro noise streams per request",
+            v.spec()
+        );
+    }
+    match opts.linger_us {
+        Some(us) if opts.batch > 1 => println!("micro-batch linger: fixed {us} µs"),
+        None if opts.batch > 1 => {
+            println!("micro-batch linger: adaptive (sized from observed inter-arrival rate)")
+        }
+        _ => {}
     }
     let t0 = std::time::Instant::now();
     let reqs: Vec<_> = (0..n)
@@ -285,6 +362,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
         print!("{}", render_shard_utilization(&coord.stats));
     }
     coord.shutdown();
+    Ok(())
+}
+
+fn parse_f64_list(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|v| !v.is_empty())
+        .map(|v| v.parse::<f64>().map_err(|_| anyhow::anyhow!("bad number {v:?} in list")))
+        .collect()
+}
+
+/// Monte-Carlo robustness sweep (`cimrv sweep`): the (sigma × nl ×
+/// mapping × seed) grid through the variation-aware fast path over the
+/// checked-in artifact eval set; text report + BENCH_robustness.json.
+/// `--quick` = the CI smoke grid, `--check` = fail unless symmetric
+/// mapping beats single-ended at the largest swept sigma (§II-B).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let dir = cimrv::util::io::artifacts_dir()?;
+    let eval = dataset::Dataset::load_eval(&dir, model.audio_len, model.n_classes)?;
+    let n = args.opt_usize("n", eval.len())?.min(eval.len());
+    anyhow::ensure!(n > 0, "eval set is empty");
+
+    let mut cfg = if args.flag("quick") { SweepConfig::quick() } else { SweepConfig::full() };
+    if let Some(s) = args.opt("sigmas") {
+        cfg.sigmas = parse_f64_list(s)?;
+    }
+    if let Some(s) = args.opt("nl") {
+        cfg.nl_alphas = parse_f64_list(s)?;
+    }
+    if let Some(m) = args.opt("mappings") {
+        cfg.mappings = match m {
+            "both" => vec![true, false],
+            "symmetric" | "sym" => vec![true],
+            "single" | "single-ended" | "se" => vec![false],
+            _ => bail!("--mappings expects both|symmetric|single, got {m:?}"),
+        };
+    }
+    if let Some(k) = args.opt("mc-seeds") {
+        let k: u64 = k.parse().map_err(|_| anyhow::anyhow!("--mc-seeds expects a count"))?;
+        anyhow::ensure!(k > 0, "--mc-seeds must be >= 1");
+        cfg.seeds = (0..k).map(|s| 1000 + s).collect();
+    }
+    cfg.mismatch = args.opt_f64("mismatch", cfg.mismatch)?;
+    cfg.threads = args.opt_usize("threads", cfg.threads)?;
+
+    let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
+    let macros = args.opt_usize("macros", 1)?.max(1);
+    let program = build_kws_program_sharded(&model, opt, macros)?;
+    // The point fleet is the parallelism; keep each trial on its thread.
+    let sim = FastSim::new(program, DramConfig::default())?.with_batch_threads(1);
+
+    let utterances: Vec<&[f32]> = (0..n).map(|i| eval.utterance(i)).collect();
+    let labels: Vec<usize> = (0..n).map(|i| eval.labels[i] as usize).collect();
+    let report = run_sweep(&sim, &utterances, &labels, &cfg)?;
+
+    let out = args.opt_or("out", "BENCH_robustness.json");
+    std::fs::write(&out, format!("{}\n", report.to_json()))
+        .with_context(|| format!("writing {out}"))?;
+    if args.flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", render_sweep(&report));
+    }
+    println!("wrote {out}");
+    if args.flag("check") {
+        report.check_mapping_claim()?;
+        println!("check: symmetric mapping beats single-ended at max sigma \u{2713}");
+    }
     Ok(())
 }
 

@@ -260,7 +260,19 @@ fn gather_window(x: &BitMap, kernel: usize, t: usize, out: &mut [u64]) {
 /// `sum[co] = 2*popcount(x & sign[co]) - popcount(x)`
 /// over the packed window words — one AND+popcount per 64 taps instead of
 /// one scalar add per set input bit per channel.
-fn conv_sums_packed_into(x: &BitMap, w: &PackedLayer, t: usize, window: &mut [u64], sums: &mut [i32]) {
+///
+/// The buffer-reusing form (`window`: `plane_words` u64 scratch, `sums`:
+/// `c_out` outputs) — the position-at-a-time hot loop of both
+/// [`conv_layer_packed`] and the variation-aware replay
+/// (`robustness::replay`), which must walk sums fire by fire in the cycle
+/// engine's order rather than channel-major.
+pub fn conv_sums_packed_into(
+    x: &BitMap,
+    w: &PackedLayer,
+    t: usize,
+    window: &mut [u64],
+    sums: &mut [i32],
+) {
     debug_assert_eq!(x.c, w.c_in, "feature map width must match the layer");
     gather_window(x, w.kernel, t, window);
     let act: u32 = window.iter().map(|v| v.count_ones()).sum();

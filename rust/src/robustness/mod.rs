@@ -1,0 +1,39 @@
+//! Robustness analysis subsystem: variation-aware fast simulation and
+//! Monte-Carlo sweeps at serving speed.
+//!
+//! The paper's accuracy claims rest on symmetric weight mapping
+//! suppressing SRAM cell variation and bitline nonlinearity (§II-B).
+//! Until this subsystem, only the cycle engine could inject that
+//! disturbance ([`crate::cim::VariationModel`] inside `CimMacro::fire`) —
+//! ~10^6 simulated steps per inference, far too slow for the
+//! device-variation Monte-Carlo sweeps that are the standard deployability
+//! evidence for in-memory compute. Three layers fix that:
+//!
+//! * [`replay`] — the variation-aware functional simulator: replays the
+//!   macro bank's per-fire disturbance at tensor level, walking fires in
+//!   the same per-macro sequence and RNG draw order the SoC uses
+//!   (including sharded programs), so disturbed logits are bit-identical
+//!   to the cycle engine for the same seed (`tests/variation_parity.rs`).
+//! * [`sweep`] — the Monte-Carlo engine: fans a (sigma × nl_alpha ×
+//!   mapping × seed) grid across threads over a labeled utterance set,
+//!   producing per-point accuracy, logit-divergence stats and analytical
+//!   latency; `BENCH_robustness.json` is its serialized form.
+//! * the surface — the `cimrv sweep` subcommand (grid flags, `--quick`,
+//!   `--check`), `serve --variation sigma=...` for fault-injection
+//!   serving, and `--variation` on `table1`/`ablation`; all share one
+//!   spec parser ([`VariationParams::parse_spec`]).
+
+pub mod replay;
+pub mod sweep;
+
+pub use replay::{infer_disturbed, VariationParams};
+pub use sweep::{run_sweep, SweepConfig, SweepPoint, SweepReport};
+
+use anyhow::Result;
+
+/// Parse the shared `--variation <spec>` CLI option (`run`-side surface
+/// of the subsystem, used by `serve`, `table1` and `ablation`): `None`
+/// when the flag is absent.
+pub fn variation_from_args(args: &crate::util::cli::Args) -> Result<Option<VariationParams>> {
+    args.opt("variation").map(VariationParams::parse_spec).transpose()
+}

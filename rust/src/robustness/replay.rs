@@ -1,0 +1,353 @@
+//! Variation-aware tensor-level execution: the packed XNOR-popcount path
+//! with the cycle engine's per-fire `VariationModel` disturbance replayed
+//! exactly.
+//!
+//! ## The draw-order contract
+//!
+//! In the cycle engine ([`crate::cim::CimMacro::fire`]) every fire walks
+//! all `Mode::X.sense_amps()` (= 256) SA columns in ascending order and
+//! calls `VariationModel::disturb` on each column whose mask is armed —
+//! and the boot sequence arms the *entire* mask plane, so **every column
+//! of every fire consumes exactly one RNG draw**, including columns that
+//! hold stale weights from earlier layers and columns that are never
+//! drained. The disturbance on a column the program does read is applied
+//! to the same ideal integer MAC sum the packed kernels compute, with the
+//! same noise scale: `active = 32 * window_words = kernel * c_in` (mask
+//! fully armed over the layer's window).
+//!
+//! The replay therefore walks fires in program order — layers ascending,
+//! row positions ascending within a layer, `t_in` fires per layer per
+//! owning macro (pooled layers fire on dropped odd tails too) — and for
+//! each fire disturbs the owned channels' ideal sums (the shard's
+//! channels sit at SA columns `0..len`) then [`VariationModel::burn`]s
+//! the remaining `256 - len` draws. Under sharding each macro advances
+//! its own stream: `Soc::with_variation` clones one identically seeded
+//! model into every macro of the bank, and a macro only fires for layers
+//! it owns channels of. `tests/variation_parity.rs` proves bit-identical
+//! disturbed logits against the cycle engine across opt levels and shard
+//! counts; the structural argument for stale/undrained columns reducing
+//! to a draw burn is in the module text above (their sums never reach an
+//! output, and `disturb` consumes one draw regardless of the sum).
+//!
+//! Semantics: one inference = one fresh stream per macro from
+//! [`VariationParams::seed`]. That keeps the functional simulator
+//! stateless (`&self`, shareable behind `Arc`) and makes every
+//! Monte-Carlo trial reproducible from its config; the cycle backend
+//! mirrors it by re-injecting fresh models before each run.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::cim::{Mode, VariationModel};
+use crate::fsim::exec::{DecodedProgram, ShardedProgram};
+use crate::model::reference::{self, BitMap, PackedLayer};
+
+/// Variation/nonlinearity injection parameters — the plain-data config
+/// behind [`VariationModel`] (which additionally carries live RNG state).
+/// `Copy` so it can ride inside `ServeOptions` and sweep grids.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VariationParams {
+    /// Per-cell conductance sigma (units of one cell's contribution).
+    pub sigma: f64,
+    /// Bitline nonlinearity coefficient (single-ended mapping only).
+    pub nl_alpha: f64,
+    /// Symmetric (differential) weight mapping enabled?
+    pub symmetric: bool,
+    /// Residual differential mismatch when symmetric (0..1).
+    pub mismatch: f64,
+    /// Per-inference RNG seed (each macro of a bank clones the stream).
+    pub seed: u64,
+}
+
+impl Default for VariationParams {
+    fn default() -> Self {
+        VariationParams {
+            sigma: 0.0,
+            nl_alpha: 0.0,
+            symmetric: true,
+            mismatch: VariationModel::DEFAULT_MISMATCH,
+            seed: 7,
+        }
+    }
+}
+
+impl VariationParams {
+    /// Instantiate the stateful model this config describes (fresh
+    /// stream from `seed`).
+    pub fn model(&self) -> VariationModel {
+        VariationModel::new(self.sigma, self.nl_alpha, self.symmetric, self.seed)
+            .with_mismatch(self.mismatch)
+    }
+
+    /// True when the disturbance is an arithmetic identity (logits cannot
+    /// change; RNG draws may still occur in the cycle engine).
+    pub fn is_noop(&self) -> bool {
+        self.sigma == 0.0 && (self.symmetric || self.nl_alpha == 0.0)
+    }
+
+    /// Parse the CLI spec shared by `serve --variation`, `sweep`,
+    /// `table1` and `ablation`: comma-separated `key=value` pairs, e.g.
+    /// `sigma=0.1,nl=0.3,mapping=single,mismatch=0.05,seed=7`. Keys:
+    /// `sigma`, `nl` (alias `nl_alpha`), `mapping`
+    /// (`symmetric`|`single`), `mismatch`, `seed`; all optional, unknown
+    /// keys rejected.
+    pub fn parse_spec(spec: &str) -> Result<Self> {
+        let mut p = VariationParams::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("variation spec entry {part:?} is not key=value"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let f = || -> Result<f64> {
+                v.parse().map_err(|_| anyhow!("variation {k}={v:?}: expected a number"))
+            };
+            match k {
+                "sigma" => p.sigma = f()?,
+                "nl" | "nl_alpha" => p.nl_alpha = f()?,
+                "mismatch" => p.mismatch = f()?,
+                "seed" => {
+                    p.seed = v
+                        .parse()
+                        .map_err(|_| anyhow!("variation seed={v:?}: expected an integer"))?
+                }
+                "mapping" => {
+                    p.symmetric = match v {
+                        "symmetric" | "sym" | "differential" => true,
+                        "single" | "single-ended" | "se" => false,
+                        _ => bail!("variation mapping={v:?} (symmetric|single)"),
+                    }
+                }
+                _ => bail!(
+                    "unknown variation key {k:?} (sigma|nl|mapping|mismatch|seed)"
+                ),
+            }
+        }
+        ensure!(p.sigma >= 0.0, "variation sigma must be >= 0");
+        ensure!((0.0..=1.0).contains(&p.mismatch), "variation mismatch must be in [0, 1]");
+        Ok(p)
+    }
+
+    /// Render back to the canonical spec string (reports, JSON).
+    pub fn spec(&self) -> String {
+        format!(
+            "sigma={},nl={},mapping={},mismatch={},seed={}",
+            self.sigma,
+            self.nl_alpha,
+            if self.symmetric { "symmetric" } else { "single" },
+            self.mismatch,
+            self.seed
+        )
+    }
+}
+
+/// One macro's shard view of a layer: global channel offset + the packed
+/// sub-layer (the full layer at offset 0 when unsharded).
+type ShardView<'a> = Option<(usize, &'a PackedLayer)>;
+
+/// Disturbed inference through the packed kernels: audio -> (logits,
+/// argmax), bit-identical to `Soc::infer` with `with_variation` models
+/// freshly seeded from `params.seed`. `sp` carries the per-macro slices
+/// of a sharded program (`None` = the classic single-macro chip).
+pub fn infer_disturbed(
+    d: &DecodedProgram,
+    sp: Option<&ShardedProgram>,
+    params: &VariationParams,
+    audio: &[f32],
+) -> (Vec<f32>, usize) {
+    let x = d.preprocess(audio);
+    match sp {
+        Some(sp) => {
+            let per_macro: Vec<Vec<ShardView>> = sp
+                .per_macro
+                .iter()
+                .map(|shards| {
+                    shards.iter().map(|s| s.as_ref().map(|(off, pl)| (*off, pl))).collect()
+                })
+                .collect();
+            replay(d, &per_macro, params, x)
+        }
+        None => {
+            let per_macro: Vec<Vec<ShardView>> =
+                vec![d.layers.iter().map(|l| Some((0usize, l))).collect()];
+            replay(d, &per_macro, params, x)
+        }
+    }
+}
+
+/// The replay core. `per_macro[m][layer]` is macro `m`'s shard of each
+/// layer (`None` = idle for that layer, no fires, no draws).
+fn replay(
+    d: &DecodedProgram,
+    per_macro: &[Vec<ShardView>],
+    params: &VariationParams,
+    mut x: BitMap,
+) -> (Vec<f32>, usize) {
+    let sas = Mode::X.sense_amps();
+    let n_layers = d.layers.len();
+    // One identically seeded stream per macro (Soc::with_variation clones
+    // the injected model into every macro of the bank).
+    let mut vms: Vec<VariationModel> = (0..per_macro.len()).map(|_| params.model()).collect();
+
+    for li in 0..n_layers - 1 {
+        let full = &d.layers[li];
+        let t_in = x.t;
+        let t_out = if full.pooled { t_in / 2 } else { t_in };
+        let mut out = BitMap::zero(t_out, full.c_out);
+        for (vm, shards) in vms.iter_mut().zip(per_macro) {
+            let Some((off, shard)) = shards[li] else { continue };
+            // Mask fully armed over the window: every column's noise
+            // scale is the layer's full wordline count.
+            let active = shard.rows() as u32;
+            let burns = sas.saturating_sub(shard.c_out);
+            let mut window = vec![0u64; shard.plane_words];
+            let mut sums = vec![0i32; shard.c_out];
+            for t in 0..t_in {
+                reference::conv_sums_packed_into(&x, shard, t, &mut window, &mut sums);
+                let ot = if full.pooled { t / 2 } else { t };
+                for (c, &s) in sums.iter().enumerate() {
+                    // The draw happens for every fire — including the
+                    // dropped odd pooling tail, which the macro still
+                    // fires without draining.
+                    let ds = vm.disturb(s, active);
+                    if ot < t_out && ds > shard.thresholds[c] {
+                        out.set(ot, off + c); // pooled max == OR of the pair
+                    }
+                }
+                for _ in 0..burns {
+                    vm.burn();
+                }
+            }
+        }
+        x = out;
+    }
+
+    // Final raw layer: disturbed sums accumulate through the GAP.
+    let last = &d.layers[n_layers - 1];
+    let t_in = x.t;
+    let mut logits = vec![0.0f32; last.c_out];
+    for (vm, shards) in vms.iter_mut().zip(per_macro) {
+        let Some((off, shard)) = shards[n_layers - 1] else { continue };
+        let active = shard.rows() as u32;
+        let burns = sas.saturating_sub(shard.c_out);
+        let mut window = vec![0u64; shard.plane_words];
+        let mut sums = vec![0i32; shard.c_out];
+        let mut acc = vec![0i64; shard.c_out];
+        for t in 0..t_in {
+            reference::conv_sums_packed_into(&x, shard, t, &mut window, &mut sums);
+            for (a, &s) in acc.iter_mut().zip(sums.iter()) {
+                *a += vm.disturb(s, active) as i64;
+            }
+            for _ in 0..burns {
+                vm.burn();
+            }
+        }
+        for (c, &a) in acc.iter().enumerate() {
+            logits[off + c] = a as f32 / t_in as f32;
+        }
+    }
+    let predicted = reference::argmax(&logits);
+    (logits, predicted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::OptLevel;
+    use crate::compiler::build_kws_program_sharded;
+    use crate::dataflow::shard::ShardPlan;
+    use crate::model::{dataset, KwsModel};
+
+    fn decoded(n_macros: usize) -> (DecodedProgram, Option<ShardedProgram>, Vec<f32>) {
+        let m = KwsModel::synthetic(3);
+        let prog = build_kws_program_sharded(&m, OptLevel::FULL, n_macros).unwrap();
+        let d = DecodedProgram::decode(&prog).unwrap();
+        let sp = (n_macros > 1).then(|| d.shard(&prog.shards).unwrap());
+        let audio = dataset::synth_utterance(2, 5, m.audio_len, 0.3);
+        (d, sp, audio)
+    }
+
+    #[test]
+    fn noop_params_reproduce_undisturbed_inference() {
+        for n in [1usize, 2, 3] {
+            let (d, sp, audio) = decoded(n);
+            let want = match &sp {
+                Some(sp) => d.infer_sharded(&audio, sp),
+                None => d.infer(&audio),
+            };
+            for p in [
+                VariationParams::default(),
+                VariationParams { sigma: 0.0, nl_alpha: 0.9, symmetric: true, ..Default::default() },
+                VariationParams { mismatch: 0.0, sigma: 0.0, ..Default::default() },
+            ] {
+                assert!(p.is_noop());
+                let got = infer_disturbed(&d, sp.as_ref(), &p, &audio);
+                assert_eq!(got, want, "macros {n} params {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_seed_sensitive() {
+        let (d, _, audio) = decoded(1);
+        let p = VariationParams { sigma: 0.6, nl_alpha: 0.3, symmetric: false, ..Default::default() };
+        let a = infer_disturbed(&d, None, &p, &audio);
+        let b = infer_disturbed(&d, None, &p, &audio);
+        assert_eq!(a, b, "same seed must replay the same disturbance");
+        let other = VariationParams { seed: p.seed + 1, ..p };
+        let c = infer_disturbed(&d, None, &other, &audio);
+        assert_ne!(a.0, c.0, "different seeds must disturb differently");
+    }
+
+    #[test]
+    fn symmetric_mapping_stays_closer_to_clean() {
+        let (d, _, audio) = decoded(1);
+        let (clean, _) = d.infer(&audio);
+        let drift = |symmetric: bool| -> f32 {
+            let p = VariationParams { sigma: 0.4, nl_alpha: 0.3, symmetric, ..Default::default() };
+            let (logits, _) = infer_disturbed(&d, None, &p, &audio);
+            logits.iter().zip(&clean).map(|(a, b)| (a - b).abs()).sum()
+        };
+        assert!(
+            drift(true) < drift(false),
+            "symmetric mapping must suppress the disturbance: {} vs {}",
+            drift(true),
+            drift(false)
+        );
+    }
+
+    #[test]
+    fn explicit_even_plans_replay_without_panicking() {
+        // The cycle engine is limited to word-aligned plans; the replay
+        // accepts any channel-granular slicing (its own semantics there).
+        let m = KwsModel::synthetic(9);
+        let prog = crate::compiler::build_kws_program(&m, OptLevel::FULL).unwrap();
+        let d = DecodedProgram::decode(&prog).unwrap();
+        let audio = dataset::synth_utterance(1, 9, m.audio_len, 0.3);
+        let p = VariationParams { sigma: 0.2, ..Default::default() };
+        for n in 1..=3 {
+            let plan = ShardPlan::even(&prog.plan, n).unwrap();
+            let sp = d.shard(&plan).unwrap();
+            let (logits, _) = infer_disturbed(&d, Some(&sp), &p, &audio);
+            assert_eq!(logits.len(), m.n_classes);
+        }
+    }
+
+    #[test]
+    fn spec_parse_roundtrip_and_errors() {
+        let p = VariationParams::parse_spec("sigma=0.1,nl=0.3,mapping=single,mismatch=0.02,seed=9")
+            .unwrap();
+        assert_eq!(p.sigma, 0.1);
+        assert_eq!(p.nl_alpha, 0.3);
+        assert!(!p.symmetric);
+        assert_eq!(p.mismatch, 0.02);
+        assert_eq!(p.seed, 9);
+        assert_eq!(VariationParams::parse_spec(&p.spec()).unwrap(), p);
+        // Defaults fill unspecified keys; empty spec is the default.
+        let q = VariationParams::parse_spec("sigma=0.5").unwrap();
+        assert!(q.symmetric);
+        assert_eq!(q.mismatch, VariationModel::DEFAULT_MISMATCH);
+        assert_eq!(VariationParams::parse_spec("").unwrap(), VariationParams::default());
+        for bad in ["sigma", "sigma=x", "mapping=quantum", "bogus=1", "sigma=-1", "mismatch=2"] {
+            assert!(VariationParams::parse_spec(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+}

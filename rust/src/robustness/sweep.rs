@@ -1,0 +1,452 @@
+//! Monte-Carlo robustness sweep: fan a (sigma × nl_alpha × mapping ×
+//! seed) grid across threads over a labeled utterance set, through the
+//! variation-aware fast path.
+//!
+//! Each grid point is one reproducible trial: fresh per-macro noise
+//! streams from the point's seed, every utterance served through
+//! [`FastSim::infer_batch_disturbed`] (the same `run_batch` kernels the
+//! coordinator serves with, batch threads pinned to 1 — the point fleet
+//! is the parallelism). Per point the sweep records accuracy, how often
+//! the argmax flipped vs the clean run, and logit-divergence statistics;
+//! the analytical chip latency rides along so a report stands on its own.
+//! [`SweepReport::to_json`] is the `BENCH_robustness.json` payload
+//! (emitted through `util::json`, like every other machine-readable
+//! artifact in the tree).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::fsim::FastSim;
+use crate::util::json::Json;
+
+use super::replay::VariationParams;
+
+/// The sweep grid + execution knobs.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Cell-variation sigmas to sweep.
+    pub sigmas: Vec<f64>,
+    /// Bitline NL coefficients to sweep.
+    pub nl_alphas: Vec<f64>,
+    /// Weight mappings to sweep (`true` = symmetric, `false` =
+    /// single-ended).
+    pub mappings: Vec<bool>,
+    /// Monte-Carlo seeds per (sigma, nl, mapping) cell.
+    pub seeds: Vec<u64>,
+    /// Residual differential mismatch for the symmetric mapping.
+    pub mismatch: f64,
+    /// Worker threads for the grid fan-out (0 = one per core).
+    pub threads: usize,
+}
+
+impl SweepConfig {
+    /// The standard grid: the §II-B sigma ladder up to the single-ended
+    /// collapse point, both mappings, 4 seeds per cell.
+    pub fn full() -> Self {
+        SweepConfig {
+            sigmas: vec![0.0, 0.05, 0.1, 0.2, 0.4, 0.6],
+            nl_alphas: vec![0.3],
+            mappings: vec![true, false],
+            seeds: (0..4).map(|s| 1000 + s).collect(),
+            mismatch: crate::cim::VariationModel::DEFAULT_MISMATCH,
+            threads: 0,
+        }
+    }
+
+    /// The CI smoke grid: clean + the collapse sigma, both mappings, 2
+    /// seeds — small enough to run on every push, decisive enough for
+    /// [`SweepReport::check_mapping_claim`].
+    pub fn quick() -> Self {
+        SweepConfig {
+            sigmas: vec![0.0, 0.6],
+            seeds: vec![1000, 1001],
+            ..Self::full()
+        }
+    }
+
+    /// All grid points, seeds innermost (so adjacent points share a
+    /// config cell and per-cell aggregation is a contiguous scan).
+    pub fn grid(&self) -> Vec<VariationParams> {
+        let mut out = Vec::new();
+        for &sigma in &self.sigmas {
+            for &nl_alpha in &self.nl_alphas {
+                for &symmetric in &self.mappings {
+                    for &seed in &self.seeds {
+                        out.push(VariationParams {
+                            sigma,
+                            nl_alpha,
+                            symmetric,
+                            mismatch: self.mismatch,
+                            seed,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One grid point's measurements.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub params: VariationParams,
+    /// Top-1 accuracy over the utterance set under this disturbance.
+    pub accuracy: f64,
+    /// Fraction of utterances whose argmax flipped vs the clean run.
+    pub flip_rate: f64,
+    /// Mean |disturbed − clean| over every logit of every utterance.
+    pub mean_abs_logit_delta: f64,
+    /// Worst-case |disturbed − clean| logit deviation.
+    pub max_abs_logit_delta: f64,
+}
+
+/// The whole sweep's results + provenance.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub points: Vec<SweepPoint>,
+    /// Accuracy of the undisturbed fast path on the same set.
+    pub clean_accuracy: f64,
+    pub n_utterances: usize,
+    /// Disturbed inferences executed (grid × utterances).
+    pub inferences: usize,
+    pub elapsed_s: f64,
+    /// Host throughput of the disturbed fast path over the whole grid.
+    pub inf_per_s: f64,
+    /// Analytical chip latency per inference (data-independent).
+    pub chip_cycles_per_inference: u64,
+    pub mismatch: f64,
+    pub threads: usize,
+}
+
+impl SweepReport {
+    /// Mean accuracy across seeds of every (sigma, nl, mapping) cell, in
+    /// grid order: `(sigma, nl_alpha, symmetric, mean accuracy)`.
+    pub fn cells(&self) -> Vec<(f64, f64, bool, f64)> {
+        let mut keys: Vec<(f64, f64, bool)> = Vec::new();
+        let mut sums: Vec<f64> = Vec::new();
+        let mut counts: Vec<usize> = Vec::new();
+        for p in &self.points {
+            let key = (p.params.sigma, p.params.nl_alpha, p.params.symmetric);
+            match keys.iter().position(|k| *k == key) {
+                Some(i) => {
+                    sums[i] += p.accuracy;
+                    counts[i] += 1;
+                }
+                None => {
+                    keys.push(key);
+                    sums.push(p.accuracy);
+                    counts.push(1);
+                }
+            }
+        }
+        keys.iter()
+            .zip(&sums)
+            .zip(&counts)
+            .map(|((k, sum), count)| (k.0, k.1, k.2, sum / *count as f64))
+            .collect()
+    }
+
+    /// The paper's qualitative §II-B claim at this sweep's largest sigma:
+    /// `(sigma, symmetric mean accuracy, single-ended mean accuracy)`.
+    /// `None` unless both mappings were swept at a sigma > 0.
+    pub fn mapping_gap_at_max_sigma(&self) -> Option<(f64, f64, f64)> {
+        let cells = self.cells();
+        let sigma = cells
+            .iter()
+            .filter(|c| c.0 > 0.0)
+            .map(|c| c.0)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if !sigma.is_finite() {
+            return None;
+        }
+        let acc = |symmetric: bool| {
+            let picked: Vec<f64> = cells
+                .iter()
+                .filter(|c| c.0 == sigma && c.2 == symmetric)
+                .map(|c| c.3)
+                .collect();
+            if picked.is_empty() {
+                None
+            } else {
+                Some(picked.iter().sum::<f64>() / picked.len() as f64)
+            }
+        };
+        Some((sigma, acc(true)?, acc(false)?))
+    }
+
+    /// Assert the §II-B claim: symmetric mapping holds accuracy where
+    /// single-ended collapses as sigma grows (strictly better at the
+    /// largest swept sigma). The CI `sweep --quick --check` gate.
+    pub fn check_mapping_claim(&self) -> Result<()> {
+        let (sigma, sym, single) = self.mapping_gap_at_max_sigma().ok_or_else(|| {
+            anyhow::anyhow!(
+                "mapping claim needs both mappings swept at a sigma > 0 (grid too small)"
+            )
+        })?;
+        ensure!(
+            sym > single,
+            "symmetric mapping must beat single-ended at sigma {sigma}: \
+             {:.1}% vs {:.1}%",
+            100.0 * sym,
+            100.0 * single
+        );
+        Ok(())
+    }
+
+    /// `BENCH_robustness.json` payload.
+    pub fn to_json(&self) -> Json {
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("sigma", Json::num(p.params.sigma)),
+                    ("nl_alpha", Json::num(p.params.nl_alpha)),
+                    ("mapping", Json::str(if p.params.symmetric { "symmetric" } else { "single" })),
+                    ("seed", Json::num(p.params.seed as f64)),
+                    ("accuracy", Json::num(p.accuracy)),
+                    ("flip_rate", Json::num(p.flip_rate)),
+                    ("mean_abs_logit_delta", Json::num(p.mean_abs_logit_delta)),
+                    ("max_abs_logit_delta", Json::num(p.max_abs_logit_delta)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("clean_accuracy", Json::num(self.clean_accuracy)),
+            ("n_utterances", Json::num(self.n_utterances as f64)),
+            ("inferences", Json::num(self.inferences as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("inf_per_s", Json::num(self.inf_per_s)),
+            (
+                "chip_cycles_per_inference",
+                Json::num(self.chip_cycles_per_inference as f64),
+            ),
+            ("mismatch", Json::num(self.mismatch)),
+            ("threads", Json::num(self.threads as f64)),
+            ("points", Json::Arr(points)),
+        ];
+        if let Some((sigma, sym, single)) = self.mapping_gap_at_max_sigma() {
+            fields.push((
+                "mapping_claim",
+                Json::obj(vec![
+                    ("sigma", Json::num(sigma)),
+                    ("symmetric_accuracy", Json::num(sym)),
+                    ("single_ended_accuracy", Json::num(single)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Run the sweep: every grid point over every utterance, points fanned
+/// out across threads (the simulator is `&self`-stateless, so workers
+/// share it without cloning). `labels[i]` is utterance `i`'s class.
+pub fn run_sweep(
+    sim: &FastSim,
+    utterances: &[&[f32]],
+    labels: &[usize],
+    cfg: &SweepConfig,
+) -> Result<SweepReport> {
+    ensure!(!utterances.is_empty(), "sweep needs at least one utterance");
+    ensure!(utterances.len() == labels.len(), "one label per utterance");
+    // The same ranges VariationParams::parse_spec enforces — grid flags
+    // (`--sigmas`, `--mismatch`) must not sneak in values the shared
+    // spec parser would reject.
+    ensure!(cfg.sigmas.iter().all(|&s| s >= 0.0), "sweep sigmas must be >= 0");
+    ensure!(
+        (0.0..=1.0).contains(&cfg.mismatch),
+        "sweep mismatch must be in [0, 1] (got {})",
+        cfg.mismatch
+    );
+    let grid = cfg.grid();
+    ensure!(!grid.is_empty(), "sweep grid is empty (check the sigma/nl/mapping/seed lists)");
+    ensure!(
+        sim.variation().is_none(),
+        "run_sweep needs an undisturbed simulator (the grid provides the variation)"
+    );
+
+    // Clean baseline once, through the same batched kernels.
+    let clean = sim.infer_batch(utterances);
+    let mut clean_hits = 0usize;
+    for (r, &l) in clean.iter().zip(labels) {
+        if r.predicted == l {
+            clean_hits += 1;
+        }
+    }
+    let chip_cycles = clean.first().map(|r| r.cycles).unwrap_or(0);
+
+    let workers = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    } else {
+        cfg.threads
+    }
+    .clamp(1, grid.len());
+
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, SweepPoint)>> = Mutex::new(Vec::with_capacity(grid.len()));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(params) = grid.get(i).copied() else { break };
+                let rs = sim.infer_batch_disturbed(utterances, &params);
+                let mut hits = 0usize;
+                let mut flips = 0usize;
+                let mut sum_delta = 0.0f64;
+                let mut max_delta = 0.0f64;
+                let mut n_logits = 0usize;
+                for ((r, c), &label) in rs.iter().zip(&clean).zip(labels) {
+                    if r.predicted == label {
+                        hits += 1;
+                    }
+                    if r.predicted != c.predicted {
+                        flips += 1;
+                    }
+                    for (a, b) in r.logits.iter().zip(&c.logits) {
+                        let d = (a - b).abs() as f64;
+                        sum_delta += d;
+                        max_delta = max_delta.max(d);
+                        n_logits += 1;
+                    }
+                }
+                let n = utterances.len() as f64;
+                let point = SweepPoint {
+                    params,
+                    accuracy: hits as f64 / n,
+                    flip_rate: flips as f64 / n,
+                    mean_abs_logit_delta: sum_delta / n_logits.max(1) as f64,
+                    max_abs_logit_delta: max_delta,
+                };
+                results.lock().unwrap().push((i, point));
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut indexed = results.into_inner().unwrap();
+    indexed.sort_by_key(|(i, _)| *i);
+    let points: Vec<SweepPoint> = indexed.into_iter().map(|(_, p)| p).collect();
+    let inferences = grid.len() * utterances.len();
+    Ok(SweepReport {
+        points,
+        clean_accuracy: clean_hits as f64 / utterances.len() as f64,
+        n_utterances: utterances.len(),
+        inferences,
+        elapsed_s: elapsed,
+        inf_per_s: inferences as f64 / elapsed.max(1e-9),
+        chip_cycles_per_inference: chip_cycles,
+        mismatch: cfg.mismatch,
+        threads: workers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::OptLevel;
+    use crate::compiler::build_kws_program;
+    use crate::mem::dram::DramConfig;
+    use crate::model::{dataset, KwsModel};
+
+    fn setup() -> (FastSim, Vec<Vec<f32>>, Vec<usize>) {
+        let m = KwsModel::synthetic(3);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let sim = FastSim::new(prog, DramConfig::default()).unwrap().with_batch_threads(1);
+        let labels: Vec<usize> = (0..4).map(|i| i % 12).collect();
+        let audios: Vec<Vec<f32>> = labels
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| dataset::synth_utterance(l, 50 + i as u64, m.audio_len, 0.3))
+            .collect();
+        (sim, audios, labels)
+    }
+
+    #[test]
+    fn sweep_runs_grid_in_order_and_aggregates() {
+        let (sim, audios, labels) = setup();
+        let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+        let cfg = SweepConfig {
+            sigmas: vec![0.0, 0.3],
+            nl_alphas: vec![0.3],
+            mappings: vec![true, false],
+            seeds: vec![1, 2],
+            mismatch: 0.05,
+            threads: 2,
+        };
+        let report = run_sweep(&sim, &refs, &labels, &cfg).unwrap();
+        assert_eq!(report.points.len(), 8);
+        assert_eq!(report.inferences, 8 * 4);
+        assert_eq!(report.n_utterances, 4);
+        // Points come back in grid order despite the thread fan-out.
+        let grid = cfg.grid();
+        for (p, g) in report.points.iter().zip(&grid) {
+            assert_eq!(&p.params, g);
+        }
+        // sigma = 0 symmetric points are exactly the clean run.
+        for p in report.points.iter().filter(|p| p.params.is_noop()) {
+            assert_eq!(p.accuracy, report.clean_accuracy);
+            assert_eq!(p.flip_rate, 0.0);
+            assert_eq!(p.mean_abs_logit_delta, 0.0);
+            assert_eq!(p.max_abs_logit_delta, 0.0);
+        }
+        // Cells average across the two seeds: 4 cells from 8 points.
+        assert_eq!(report.cells().len(), 4);
+        assert!(report.chip_cycles_per_inference > 0);
+        assert!(report.inf_per_s > 0.0);
+        // JSON payload parses back and carries the grid.
+        let j = report.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("points").unwrap().as_arr().unwrap().len(), 8);
+        assert!(parsed.get("mapping_claim").is_ok());
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_runs_and_thread_counts() {
+        let (sim, audios, labels) = setup();
+        let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+        let mut cfg = SweepConfig {
+            sigmas: vec![0.4],
+            nl_alphas: vec![0.3],
+            mappings: vec![false],
+            seeds: vec![1, 2, 3],
+            mismatch: 0.05,
+            threads: 1,
+        };
+        let a = run_sweep(&sim, &refs, &labels, &cfg).unwrap();
+        cfg.threads = 3;
+        let b = run_sweep(&sim, &refs, &labels, &cfg).unwrap();
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.params, y.params);
+            assert_eq!(x.accuracy, y.accuracy);
+            assert_eq!(x.mean_abs_logit_delta, y.mean_abs_logit_delta);
+        }
+    }
+
+    #[test]
+    fn mapping_claim_requires_a_decisive_grid() {
+        let (sim, audios, labels) = setup();
+        let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+        // Only sigma = 0: no claim derivable.
+        let cfg = SweepConfig {
+            sigmas: vec![0.0],
+            nl_alphas: vec![0.3],
+            mappings: vec![true, false],
+            seeds: vec![1],
+            mismatch: 0.05,
+            threads: 1,
+        };
+        let report = run_sweep(&sim, &refs, &labels, &cfg).unwrap();
+        assert!(report.mapping_gap_at_max_sigma().is_none());
+        assert!(report.check_mapping_claim().is_err());
+        // Input validation.
+        assert!(run_sweep(&sim, &[], &[], &cfg).is_err());
+        let empty = SweepConfig { sigmas: vec![], ..cfg };
+        assert!(run_sweep(&sim, &refs, &labels, &empty).is_err());
+    }
+}

@@ -77,10 +77,21 @@ impl Soc {
 
     /// Inject a variation model into the macro(s) (robustness experiments).
     pub fn with_variation(mut self, v: crate::cim::VariationModel) -> Self {
-        for m in &mut self.bus.cims {
-            m.variation = Some(v.clone());
-        }
+        self.set_variation(Some(v));
         self
+    }
+
+    /// (Re)inject or clear the macros' variation models in place. Every
+    /// macro of the bank receives its own clone, i.e. an identically
+    /// seeded but independently advancing noise stream — the convention
+    /// the variation-aware functional simulator replays
+    /// (`robustness::replay`). `Soc::run` never resets the streams, so a
+    /// caller that wants per-inference reproducibility re-injects before
+    /// each run (what `backend::CycleBackend::with_variation` does).
+    pub fn set_variation(&mut self, v: Option<crate::cim::VariationModel>) {
+        for m in &mut self.bus.cims {
+            m.variation = v.clone();
+        }
     }
 
     /// Per-macro fire/shift/load statistics of the last run.

@@ -135,6 +135,45 @@ fn prop_fast_ragged_batches_match_sequential() {
 }
 
 #[test]
+fn disturbed_batches_bit_identical_to_sequential_disturbed_runs() {
+    // Variation-aware serving composes with the batch seam: every batch
+    // element is an independent Monte-Carlo trial (fresh per-macro noise
+    // streams per inference), so grouping and thread fan-out can never
+    // change a disturbed result.
+    use cimrv::robustness::VariationParams;
+    let m = KwsModel::synthetic(31);
+    let audios = utterances(&m, 5, 400);
+    let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+    let params =
+        VariationParams { sigma: 0.4, nl_alpha: 0.3, symmetric: false, ..Default::default() };
+    for macros in [1usize, 2] {
+        for threads in [1usize, 3] {
+            let prog = build_kws_program_sharded(&m, OptLevel::FULL, macros).unwrap();
+            let sim = FastSim::new(prog, DramConfig::default())
+                .unwrap()
+                .with_variation(params)
+                .with_batch_threads(threads);
+            let want: Vec<_> = refs.iter().map(|a| sim.infer(a)).collect();
+            for chunk in [1usize, 2, 8] {
+                let mut got = Vec::new();
+                for c in refs.chunks(chunk) {
+                    got.extend(sim.infer_batch(c));
+                }
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.logits, w.logits,
+                        "macros {macros} threads {threads} chunk {chunk} element {i}"
+                    );
+                    assert_eq!(g.predicted, w.predicted);
+                }
+            }
+            // Same request, same seed => same disturbance (replayable).
+            assert_eq!(sim.infer(refs[0]).logits, want[0].logits);
+        }
+    }
+}
+
+#[test]
 fn empty_batch_is_empty_on_both_backends() {
     let m = KwsModel::synthetic(2);
     let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
