@@ -1,0 +1,139 @@
+//! Telemetry overhead on the packed serving path: the unified telemetry
+//! subsystem promises that *disabled* telemetry is free and *enabled*
+//! telemetry is cheap. This bench drives the same batched fast-path
+//! inference three ways —
+//!
+//! * **baseline**: `FastSim::infer_batch` called directly (no telemetry
+//!   code on the path at all);
+//! * **disabled**: `FastBackend::run_batch` with telemetry off (the
+//!   global-off fast path: one relaxed load, then the baseline call);
+//! * **enabled**: `FastBackend::run_batch` with telemetry on (registry
+//!   get-or-create + histogram/counter updates per batch);
+//!
+//! — interleaved per rep with min-of-reps timing, and asserts the
+//! disabled overhead is <= 1% and the enabled overhead is <= 5% of the
+//! baseline. Results land in `BENCH_observability.json`.
+//!
+//! `CIMRV_BENCH_QUICK=1` shrinks reps/iters for the CI smoke run; the
+//! asserts still run.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use cimrv::backend::{FastBackend, InferenceBackend};
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::build_kws_program;
+use cimrv::fsim::FastSim;
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::{dataset, KwsModel};
+use cimrv::telemetry;
+use cimrv::util::json::Json;
+
+const BATCH: usize = 8;
+
+fn main() {
+    let quick = std::env::var("CIMRV_BENCH_QUICK").is_ok_and(|v| v != "0" && !v.is_empty());
+    let (model, model_kind) = match KwsModel::load_default() {
+        Ok(m) => (m, "trained"),
+        Err(_) => {
+            println!("(artifacts not found: benchmarking the synthetic model)");
+            (KwsModel::synthetic(1), "synthetic")
+        }
+    };
+    let prog = build_kws_program(&model, OptLevel::FULL).expect("codegen");
+    // One batch thread: the comparison is about per-call overhead, so
+    // keep the measured quantity free of thread-pool scheduling jitter.
+    let sim = std::sync::Arc::new(
+        FastSim::new(prog, DramConfig::default()).expect("fsim").with_batch_threads(1),
+    );
+    let mut be = FastBackend::shared(std::sync::Arc::clone(&sim));
+
+    let audios: Vec<Vec<f32>> = (0..BATCH)
+        .map(|i| dataset::synth_utterance(i % 12, 900 + i as u64, model.audio_len, 0.37))
+        .collect();
+    let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+
+    let (reps, iters) = if quick { (4, 3) } else { (8, 6) };
+
+    // Warm both paths (page in weights, settle the allocator).
+    telemetry::set_enabled(false);
+    black_box(sim.infer_batch(&refs));
+    black_box(be.run_batch(&refs).expect("warmup"));
+
+    // Interleave the three modes inside every rep so clock drift and
+    // cache state hit all of them equally; min-of-reps drops the noise.
+    let mut best = [f64::INFINITY; 3]; // baseline, disabled, enabled
+    for _ in 0..reps {
+        telemetry::set_enabled(false);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(sim.infer_batch(&refs));
+        }
+        best[0] = best[0].min(t0.elapsed().as_secs_f64() / iters as f64);
+
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(be.run_batch(&refs).expect("disabled run"));
+        }
+        best[1] = best[1].min(t0.elapsed().as_secs_f64() / iters as f64);
+
+        telemetry::set_enabled(true);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(be.run_batch(&refs).expect("enabled run"));
+        }
+        best[2] = best[2].min(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    telemetry::set_enabled(false);
+    let [base, disabled, enabled] = best;
+
+    // Overhead relative to the direct call, clamped at 0 (a faster-than-
+    // baseline measurement is noise, not negative cost).
+    let pct = |t: f64| (100.0 * (t / base - 1.0)).max(0.0);
+    let (disabled_pct, enabled_pct) = (pct(disabled), pct(enabled));
+    println!(
+        "batch {BATCH} fast-path: baseline {:8.3} ms | run_batch off {:8.3} ms (+{:.2}%) | \
+         run_batch on {:8.3} ms (+{:.2}%)",
+        1e3 * base,
+        1e3 * disabled,
+        disabled_pct,
+        1e3 * enabled,
+        enabled_pct
+    );
+
+    // The enabled runs must actually have recorded — a silently disabled
+    // path would pass the overhead gate without measuring anything.
+    let batches = telemetry::global().counter("backend.fast.batches").get();
+    assert!(
+        batches >= (reps * iters) as u64,
+        "enabled runs recorded {batches} batches, expected >= {}",
+        reps * iters
+    );
+
+    let doc = Json::obj(vec![
+        ("model", Json::str(model_kind)),
+        ("quick", Json::Bool(quick)),
+        ("batch", Json::num(BATCH as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("iters_per_rep", Json::num(iters as f64)),
+        ("baseline_ms_per_batch", Json::num(1e3 * base)),
+        ("disabled_ms_per_batch", Json::num(1e3 * disabled)),
+        ("enabled_ms_per_batch", Json::num(1e3 * enabled)),
+        ("disabled_overhead_pct", Json::num(disabled_pct)),
+        ("enabled_overhead_pct", Json::num(enabled_pct)),
+        ("enabled_batches_recorded", Json::num(batches as f64)),
+    ]);
+    std::fs::write("BENCH_observability.json", format!("{doc}\n"))
+        .expect("writing BENCH_observability.json");
+    println!("wrote BENCH_observability.json");
+
+    assert!(
+        disabled_pct <= 1.0,
+        "disabled telemetry must cost <= 1% on the packed serving path (got {disabled_pct:.2}%)"
+    );
+    assert!(
+        enabled_pct <= 5.0,
+        "enabled telemetry must cost <= 5% on the packed serving path (got {enabled_pct:.2}%)"
+    );
+    println!("telemetry overhead: disabled <= 1%, enabled <= 5% \u{2713}");
+}

@@ -6,6 +6,7 @@ use crate::compiler::Program;
 use crate::mem::dram::DramConfig;
 use crate::robustness::VariationParams;
 use crate::sim::{RunResult, Soc};
+use crate::telemetry::{self, Histogram};
 
 use super::InferenceBackend;
 
@@ -50,7 +51,10 @@ impl InferenceBackend for CycleBackend {
     /// makes batched-vs-sequential parity trivially structural here.
     fn run_batch(&mut self, batch: &[&[f32]]) -> Result<Vec<RunResult>> {
         let variation = self.variation;
-        batch
+        // Same global-off fast path as the fast backend: disabled
+        // telemetry costs one relaxed load before the serial loop.
+        let t0 = telemetry::enabled().then(std::time::Instant::now);
+        let runs: Result<Vec<RunResult>> = batch
             .iter()
             .map(|audio| {
                 if let Some(v) = variation {
@@ -58,7 +62,16 @@ impl InferenceBackend for CycleBackend {
                 }
                 self.soc.infer(audio)
             })
-            .collect()
+            .collect();
+        if let (Some(t0), Ok(runs)) = (t0, &runs) {
+            let telem = telemetry::global();
+            telem
+                .histogram("backend.cycle.execute_us", Histogram::us_bounds())
+                .observe(t0.elapsed().as_micros() as u64);
+            telem.counter("backend.cycle.batches").inc();
+            telem.counter("backend.cycle.inferences").add(runs.len() as u64);
+        }
+        runs
     }
 
     fn program(&self) -> &Program {

@@ -8,6 +8,28 @@ use crate::coordinator::ServiceStats;
 use crate::sim::RunResult;
 use crate::util::json::Json;
 
+/// Nearest-rank percentiles over `samples` (µs, unsorted; a copy is
+/// sorted internally). Returns one value per requested `p`, or `None`
+/// for an empty sample set — callers render "n/a" instead of panicking.
+/// Out-of-range or non-finite `p` clamps into `[0, 1]` (NaN maps to 0),
+/// and a single-sample set answers every percentile with that sample.
+pub fn percentiles_us(samples: &[u64], ps: &[f64]) -> Option<Vec<u64>> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    Some(
+        ps.iter()
+            .map(|&p| {
+                let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 1.0) };
+                let rank = ((p * v.len() as f64).ceil() as usize).clamp(1, v.len());
+                v[rank - 1]
+            })
+            .collect(),
+    )
+}
+
 /// One ladder rung's measurement.
 #[derive(Debug, Clone)]
 pub struct LadderPoint {
@@ -87,6 +109,30 @@ pub fn render_latency_percentiles(stats: &ServiceStats) -> String {
         ),
         None => "host latency: no requests served yet\n".to_string(),
     }
+}
+
+/// Render the request-lifecycle breakdown aggregated from the recorded
+/// telemetry spans: mean queue+linger / execute / end-to-end time per
+/// request. Renders "n/a" when no spans were recorded (telemetry off or
+/// nothing served yet).
+pub fn render_span_breakdown(stats: &ServiceStats) -> String {
+    let spans = stats.spans.snapshot();
+    if spans.is_empty() {
+        return "request spans: n/a (telemetry off or nothing served)\n".to_string();
+    }
+    let n = spans.len() as f64;
+    let mean_ms = |us: u64| us as f64 / n / 1e3;
+    let queue: u64 = spans.iter().map(|s| s.queue_us()).sum();
+    let exec: u64 = spans.iter().map(|s| s.execute_us()).sum();
+    let total: u64 = spans.iter().map(|s| s.total_us()).sum();
+    format!(
+        "request spans: {} recorded | mean queue+linger {:.2} ms | mean execute {:.2} ms | \
+         mean total {:.2} ms\n",
+        spans.len(),
+        mean_ms(queue),
+        mean_ms(exec),
+        mean_ms(total),
+    )
 }
 
 /// Render the micro-batch size histogram: how many worker batches formed
@@ -208,6 +254,31 @@ mod tests {
             accelerated_cycles: accel,
             preprocess_cycles: total - accel,
         }
+    }
+
+    #[test]
+    fn percentiles_survive_empty_and_single_sample_inputs() {
+        // Empty: None, not a panic or a nonsense zero.
+        assert!(percentiles_us(&[], &[0.5, 0.99]).is_none());
+        // Single sample answers every percentile with that sample.
+        assert_eq!(percentiles_us(&[42], &[0.0, 0.5, 0.99, 1.0]).unwrap(), vec![42; 4]);
+        // Nearest-rank over a known set.
+        let v = [1000u64, 2000, 3000, 40_000];
+        assert_eq!(percentiles_us(&v, &[0.50, 0.95, 0.99]).unwrap(), vec![2000, 40_000, 40_000]);
+        // Unsorted input sorts internally.
+        let u = [40_000u64, 1000, 3000, 2000];
+        assert_eq!(percentiles_us(&u, &[0.50]).unwrap(), vec![2000]);
+        // Out-of-range and non-finite p clamp instead of indexing wild.
+        assert_eq!(
+            percentiles_us(&v, &[-1.0, 2.0, f64::NAN, f64::INFINITY]).unwrap(),
+            vec![1000, 40_000, 1000, 40_000]
+        );
+    }
+
+    #[test]
+    fn span_breakdown_renders_na_without_spans() {
+        let stats = ServiceStats::default();
+        assert!(render_span_breakdown(&stats).contains("n/a"));
     }
 
     #[test]

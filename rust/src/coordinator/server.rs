@@ -27,6 +27,7 @@ use crate::mem::dram::DramConfig;
 use crate::model::KwsModel;
 use crate::robustness::VariationParams;
 use crate::sim::{RunResult, Soc};
+use crate::telemetry::{self, Histogram, RequestSpan, SpanLog};
 
 /// One utterance to classify.
 #[derive(Debug, Clone)]
@@ -91,6 +92,13 @@ pub struct ServiceStats {
     /// queue wait + linger + simulation). Source of the p50/p95/p99 in
     /// the serve report.
     host_us: Mutex<Vec<u64>>,
+    /// Request-lifecycle spans (recorded only while telemetry is
+    /// enabled; the Perfetto `--trace-out` source).
+    pub spans: SpanLog,
+    /// First served run's `(markers, cycles)` — the engine timeline the
+    /// trace exporter renders (latency is data-independent, so one
+    /// sample describes every request). Captured only under telemetry.
+    engine: Mutex<Option<(Vec<(u32, u64)>, u64)>>,
 }
 
 impl ServiceStats {
@@ -128,16 +136,35 @@ impl ServiceStats {
     /// percentiles over the exact sample set — the coordinator serves
     /// bounded demo/bench runs, so keeping every sample is fine.
     pub fn host_latency_percentiles(&self) -> Option<[f64; 3]> {
-        let mut v = self.host_us.lock().unwrap().clone();
-        if v.is_empty() {
-            return None;
+        let v = self.host_us.lock().unwrap().clone();
+        Self::percentiles_s(&v)
+    }
+
+    /// The same `[p50, p95, p99]` derived from the recorded request
+    /// spans instead of the host-latency samples. `None` until spans
+    /// exist (telemetry off, or nothing served). The two agree exactly:
+    /// a span's `respond_us - enqueue_us` *is* the host-latency sample.
+    pub fn span_latency_percentiles(&self) -> Option<[f64; 3]> {
+        Self::percentiles_s(&self.spans.total_us_samples())
+    }
+
+    fn percentiles_s(us: &[u64]) -> Option<[f64; 3]> {
+        let p = super::report::percentiles_us(us, &[0.50, 0.95, 0.99])?;
+        Some([p[0] as f64 / 1e6, p[1] as f64 / 1e6, p[2] as f64 / 1e6])
+    }
+
+    /// Keep the first served run's marker stream + cycle count for the
+    /// trace exporter.
+    pub fn record_engine_sample(&self, r: &RunResult) {
+        let mut e = self.engine.lock().unwrap();
+        if e.is_none() {
+            *e = Some((r.markers.clone(), r.cycles));
         }
-        v.sort_unstable();
-        let pick = |p: f64| -> f64 {
-            let rank = ((p * v.len() as f64).ceil() as usize).clamp(1, v.len());
-            v[rank - 1] as f64 / 1e6
-        };
-        Some([pick(0.50), pick(0.95), pick(0.99)])
+    }
+
+    /// The captured engine timeline, if any run was sampled.
+    pub fn engine_sample(&self) -> Option<(Vec<(u32, u64)>, u64)> {
+        self.engine.lock().unwrap().clone()
     }
 }
 
@@ -336,11 +363,20 @@ impl Coordinator {
         let linger_fixed = opts.linger_us;
         let batch_cap = opts.batch;
         let mut workers = Vec::new();
-        for mut be in backends {
+        for (wi, mut be) in backends.into_iter().enumerate() {
             let rx = Arc::clone(&rx);
             let stats = Arc::clone(&stats);
             workers.push(thread::spawn(move || {
                 let bname = be.name();
+                // Registry handles resolved once per worker; recording
+                // through them is lock-free (and a no-op when telemetry
+                // is disabled).
+                let telem = telemetry::global();
+                let m_requests = telem.counter("serve.requests");
+                let m_batches = telem.counter("serve.batches");
+                let m_host = telem.histogram("serve.host_latency_us", Histogram::us_bounds());
+                let m_exec = telem.histogram("serve.execute_us", Histogram::us_bounds());
+                let g_linger = telem.gauge("serve.linger_window_us");
                 let mut linger = LingerEstimator::new(linger_fixed);
                 let mut last_submit: Option<Instant> = None;
                 loop {
@@ -349,13 +385,17 @@ impl Coordinator {
                     // (and the drain lock) until the cap is hit, the
                     // linger window closes, or the queue goes quiet.
                     let mut jobs: Vec<Job> = Vec::with_capacity(batch_cap);
+                    let assembly_start;
                     {
                         let rx = rx.lock().unwrap();
                         match rx.recv() {
                             Ok(job) => jobs.push(job),
                             Err(_) => break, // coordinator shut down
                         }
-                        let deadline = Instant::now() + linger.window();
+                        // The assembly window opens when the first job
+                        // lands on this worker.
+                        assembly_start = Instant::now();
+                        let deadline = assembly_start + linger.window();
                         while jobs.len() < batch_cap {
                             match rx.try_recv() {
                                 Ok(job) => jobs.push(job),
@@ -383,11 +423,23 @@ impl Coordinator {
                         }
                         last_submit = Some(job.enqueued);
                     }
+                    let assembled = Instant::now();
+                    g_linger.set(linger.window().as_secs_f64() * 1e6);
                     let audios: Vec<&[f32]> =
                         jobs.iter().map(|j| j.req.audio.as_slice()).collect();
                     stats.record_batch(jobs.len());
-                    match be.run_batch(&audios) {
+                    m_batches.inc();
+                    let exec_start = Instant::now();
+                    let result = be.run_batch(&audios);
+                    let exec_end = Instant::now();
+                    m_exec.observe(exec_end.duration_since(exec_start).as_micros() as u64);
+                    match result {
                         Ok(runs) if runs.len() == jobs.len() => {
+                            if telemetry::enabled() {
+                                if let Some(r) = runs.first() {
+                                    stats.record_engine_sample(r);
+                                }
+                            }
                             for (job, r) in jobs.iter().zip(&runs) {
                                 let host = job.enqueued.elapsed().as_secs_f64();
                                 let resp = InferenceResponse::from_run(
@@ -400,6 +452,28 @@ impl Coordinator {
                                 stats.served.fetch_add(1, Ordering::Relaxed);
                                 stats.chip_cycles.fetch_add(r.cycles, Ordering::Relaxed);
                                 stats.record_host_latency(host);
+                                m_requests.inc();
+                                m_host.observe((host * 1e6) as u64);
+                                if telemetry::enabled() {
+                                    let enqueue_us = stats.spans.us_since_epoch(job.enqueued);
+                                    stats.spans.record(RequestSpan {
+                                        req_id: job.req.id,
+                                        worker: wi,
+                                        batch_size: jobs.len(),
+                                        enqueue_us,
+                                        assembly_start_us: stats
+                                            .spans
+                                            .us_since_epoch(assembly_start),
+                                        assembled_us: stats.spans.us_since_epoch(assembled),
+                                        exec_start_us: stats.spans.us_since_epoch(exec_start),
+                                        exec_end_us: stats.spans.us_since_epoch(exec_end),
+                                        // Defined as enqueue + the host
+                                        // sample so span totals agree
+                                        // exactly with the percentiles.
+                                        respond_us: enqueue_us + (host * 1e6) as u64,
+                                        shard_fires: r.shard_fires.clone(),
+                                    });
+                                }
                                 for (shard, fires) in
                                     stats.shard_fires.iter().zip(&r.shard_fires)
                                 {
@@ -914,6 +988,59 @@ mod tests {
         // Degenerate blocks don't panic.
         ServiceStats::default().record_batch(3);
         assert!(ServiceStats::default().host_latency_percentiles().is_none());
+    }
+
+    #[test]
+    fn spans_record_when_telemetry_enabled_and_match_host_samples() {
+        crate::telemetry::with_telemetry(|| {
+            let m = fake_model();
+            let mut coord =
+                Coordinator::start_with(&m, OptLevel::FULL, 2, BackendKind::Fast).unwrap();
+            let reqs: Vec<_> = (0..5)
+                .map(|i| InferenceRequest {
+                    id: i,
+                    audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
+                    label: None,
+                })
+                .collect();
+            let _ = coord.serve_batch(reqs).unwrap();
+            coord.shutdown();
+            let spans = coord.stats.spans.snapshot();
+            assert_eq!(spans.len(), 5);
+            for s in &spans {
+                assert!(s.assembled_us >= s.assembly_start_us, "{s:?}");
+                assert!(s.exec_end_us >= s.exec_start_us, "{s:?}");
+                assert!(s.respond_us >= s.enqueue_us, "{s:?}");
+                assert!(!s.shard_fires.is_empty());
+                assert!(s.batch_size >= 1);
+            }
+            // Span-derived percentiles agree *exactly* with the host
+            // samples (same numbers, not re-measured).
+            assert_eq!(
+                coord.stats.span_latency_percentiles().unwrap(),
+                coord.stats.host_latency_percentiles().unwrap()
+            );
+            // The engine timeline was sampled for the trace exporter.
+            let (markers, cycles) = coord.stats.engine_sample().unwrap();
+            assert!(!markers.is_empty());
+            assert!(cycles > 0);
+
+            // Telemetry off (still inside the guard, so no parallel
+            // test can re-enable it): serving records no spans.
+            crate::telemetry::set_enabled(false);
+            let mut coord =
+                Coordinator::start_with(&m, OptLevel::FULL, 1, BackendKind::Fast).unwrap();
+            let req = InferenceRequest {
+                id: 0,
+                audio: crate::model::dataset::synth_utterance(0, 1, 16000, 0.3),
+                label: None,
+            };
+            let _ = coord.serve_batch(vec![req]).unwrap();
+            coord.shutdown();
+            assert!(coord.stats.spans.is_empty());
+            assert!(coord.stats.engine_sample().is_none());
+            assert!(coord.stats.span_latency_percentiles().is_none());
+        });
     }
 
     #[test]

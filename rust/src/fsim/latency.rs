@@ -43,6 +43,10 @@ pub struct Estimate {
     pub instret: u64,
     pub phases: PhaseBreakdown,
     pub counts: ActivityCounts,
+    /// The walked `(id, end_cycle)` marker stream the phases were
+    /// attributed from — same shape as the cycle engine's MMIO stream,
+    /// so the telemetry exporter renders both engines identically.
+    pub markers: Vec<(u32, u64)>,
 }
 
 /// Instruction count of `Asm::li` for a value (lui+addi or single addi) —
@@ -654,6 +658,7 @@ fn walk(program: &Program, dram_cfg: &DramConfig, overlap: bool) -> Estimate {
         instret: counts.instret,
         phases: PhaseBreakdown::from_markers(&w.markers, cycles),
         counts,
+        markers: w.markers,
     }
 }
 

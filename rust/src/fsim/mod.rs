@@ -44,6 +44,9 @@ pub struct Calibration {
     pub instret: u64,
     pub phases: PhaseBreakdown,
     pub energy: EnergyReport,
+    /// The cycle run's MMIO phase-marker stream (exact engine timeline
+    /// for the telemetry trace exporter).
+    pub markers: Vec<(u32, u64)>,
 }
 
 impl Calibration {
@@ -53,6 +56,7 @@ impl Calibration {
             instret: r.instret,
             phases: r.phases,
             energy: r.energy.clone(),
+            markers: r.markers.clone(),
         }
     }
 }
@@ -281,13 +285,14 @@ impl FastSim {
 
     /// Wrap raw (logits, argmax) in the full accounting record.
     fn finish(&self, (logits, predicted): (Vec<f32>, usize)) -> RunResult {
-        let (cycles, instret, phases, energy) = match &self.calibration {
-            Some(c) => (c.cycles, c.instret, c.phases, c.energy.clone()),
+        let (cycles, instret, phases, energy, markers) = match &self.calibration {
+            Some(c) => (c.cycles, c.instret, c.phases, c.energy.clone(), c.markers.clone()),
             None => (
                 self.estimate.cycles,
                 self.estimate.instret,
                 self.estimate.phases,
                 EnergyReport::from_counts(&self.energy_table, &self.estimate.counts),
+                self.estimate.markers.clone(),
             ),
         };
         RunResult {
@@ -300,6 +305,7 @@ impl FastSim {
             seconds_at_50mhz: cycles as f64 / 50e6,
             console: String::new(),
             shard_fires: self.shard_fires(),
+            markers,
         }
     }
 }
@@ -440,12 +446,15 @@ mod tests {
             instret: 99,
             phases: PhaseBreakdown::default(),
             energy: EnergyReport::default(),
+            markers: vec![(1, 100)],
         };
         let sim = sim.with_calibration(cal);
         assert!(sim.is_calibrated());
         let r = sim.infer(&audio);
         assert_eq!(r.cycles, 123_456);
         assert_eq!(r.instret, 99);
+        // The calibrated marker stream rides along for trace export.
+        assert_eq!(r.markers, vec![(1, 100)]);
         // Logits are untouched by calibration.
         assert_eq!(r.logits, base.logits);
     }

@@ -40,6 +40,10 @@
 //!   worker): batches requests, runs simulator + golden model, reports.
 //! * [`baselines`] — analytical models of the Table I comparators and the
 //!   no-fusion ablations.
+//! * [`telemetry`] — unified observability: lock-cheap metrics registry
+//!   (Prometheus/JSON exposition), request-lifecycle spans through the
+//!   serving path, and a Chrome trace-event (Perfetto) exporter covering
+//!   both engines (`--metrics-out` / `--trace-out`).
 //!
 //! The image is offline with a minimal vendored crate set, so [`util`]
 //! carries small in-tree replacements (JSON, RNG, CLI, property-testing,
@@ -60,6 +64,7 @@ pub mod model;
 pub mod robustness;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result type (anyhow is in the vendored set).

@@ -17,6 +17,11 @@
 //!              BENCH_robustness.json (--quick, --check, grid flags)
 //!   disasm     decode a hex instruction word
 //!
+//! Observability (run/serve/sweep/trace): --trace-out FILE writes a
+//! Perfetto/chrome://tracing trace (instruction JSONL on `trace`),
+//! --metrics-out FILE dumps the telemetry registry (Prometheus text for
+//! .prom/.txt, JSON otherwise); either flag turns telemetry on.
+//!
 //! The shared --variation SPEC is comma-separated key=value:
 //!   sigma=0.1,nl=0.3,mapping=single,mismatch=0.05,seed=7
 //!
@@ -29,7 +34,7 @@ use cimrv::baselines::{comparison, OptLevel};
 use cimrv::compiler::{build_kws_program, build_kws_program_sharded};
 use cimrv::coordinator::report::{
     ladder_json, render_batch_histogram, render_ladder, render_latency_percentiles,
-    render_shard_utilization, render_sweep, LadderPoint,
+    render_shard_utilization, render_span_breakdown, render_sweep, LadderPoint,
 };
 use cimrv::coordinator::{Coordinator, InferenceRequest, ServeOptions};
 use cimrv::fsim::FastSim;
@@ -38,6 +43,7 @@ use cimrv::model::{dataset, reference, KwsModel};
 use cimrv::robustness::{self, run_sweep, SweepConfig};
 use cimrv::runtime::GoldenModel;
 use cimrv::sim::Soc;
+use cimrv::telemetry::{self, perfetto, TraceBuilder};
 use cimrv::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -56,10 +62,14 @@ fn main() -> Result<()> {
                 "usage: cimrv <run|ablation|table1|accuracy|serve|sweep|trace|disasm> \
                  [--opt LEVEL] [--backend cycle|fast] [--macros N] [--batch B] [--calibrate] \
                  [--linger-us U] [--variation SPEC] [--n N] [--workers W] [--label L] \
-                 [--seed S] [--skip K] [--no-golden] [--json]\n\
+                 [--seed S] [--skip K] [--no-golden] [--json] \
+                 [--trace-out FILE] [--metrics-out FILE]\n\
                  sweep: [--quick] [--check] [--sigmas 0,0.1,..] [--nl 0.3] \
                  [--mappings both|symmetric|single] [--mc-seeds K] [--mismatch M] \
-                 [--threads T] [--out FILE]"
+                 [--threads T] [--out FILE]\n\
+                 observability: --trace-out writes a Perfetto/chrome://tracing JSON \
+                 (run/serve; JSONL on trace), --metrics-out dumps the metrics \
+                 registry (.prom/.txt = Prometheus text, else JSON)"
             );
             Ok(())
         }
@@ -70,8 +80,43 @@ fn load_model() -> Result<KwsModel> {
     KwsModel::load_default().context("loading artifacts (run `make artifacts` first)")
 }
 
+/// Shared `--trace-out FILE` / `--metrics-out FILE` handling: asking for
+/// either output implicitly turns telemetry on (with a fresh registry,
+/// so the dump covers exactly this invocation).
+fn telemetry_outputs(args: &Args) -> (Option<String>, Option<String>) {
+    let trace_out = args.opt("trace-out").map(str::to_string);
+    let metrics_out = args.opt("metrics-out").map(str::to_string);
+    if trace_out.is_some() || metrics_out.is_some() {
+        telemetry::set_enabled(true);
+        telemetry::global().reset();
+    }
+    (trace_out, metrics_out)
+}
+
+/// Dump the global registry: Prometheus text exposition for `.prom` /
+/// `.txt` paths, the JSON form otherwise.
+fn write_metrics(path: &str) -> Result<()> {
+    let text = if path.ends_with(".prom") || path.ends_with(".txt") {
+        telemetry::global().render_prometheus()
+    } else {
+        format!("{}\n", telemetry::global().to_json())
+    };
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn write_trace(path: &str, tb: TraceBuilder) -> Result<()> {
+    let n = tb.len();
+    std::fs::write(path, format!("{}\n", tb.build()))
+        .with_context(|| format!("writing {path}"))?;
+    println!("wrote {path} ({n} events — open in ui.perfetto.dev or chrome://tracing)");
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let model = load_model()?;
+    let (trace_out, metrics_out) = telemetry_outputs(args);
     let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
     let kind = BackendKind::parse(&args.opt_or("backend", "cycle"))?;
     let macros = args.opt_usize("macros", 1)?.max(1);
@@ -126,9 +171,25 @@ fn cmd_run(args: &Args) -> Result<()> {
             println!("  [{i}] predicted {} (true {label})", r.predicted);
         }
         println!("host reference: all {batch} batched elements bit-exact \u{2713}");
+        if let (Some(path), Some(r)) = (&trace_out, rs.first()) {
+            let mut tb = TraceBuilder::new();
+            perfetto::engine_tracks(&mut tb, be.program(), &r.markers, r.cycles);
+            write_trace(path, tb)?;
+        }
+        if let Some(path) = &metrics_out {
+            write_metrics(path)?;
+        }
         return Ok(());
     }
     let r = be.run(&audio)?;
+    if let Some(path) = &trace_out {
+        let mut tb = TraceBuilder::new();
+        perfetto::engine_tracks(&mut tb, be.program(), &r.markers, r.cycles);
+        write_trace(path, tb)?;
+    }
+    if let Some(path) = &metrics_out {
+        write_metrics(path)?;
+    }
     println!("predicted class {} (true {label}), logits {:?}", r.predicted, r.logits);
     println!("{}", r.phases.render());
     println!("{}", r.energy.breakdown());
@@ -299,14 +360,15 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = load_model()?;
+    let (trace_out, metrics_out) = telemetry_outputs(args);
     let workers = args.opt_usize("workers", 4)?;
     let n = args.opt_usize("n", 24)?;
     let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
     let kind = BackendKind::parse(&args.opt_or("backend", "cycle"))?;
-    let linger_us = args
-        .opt("linger-us")
-        .map(|v| v.parse::<u64>().map_err(|_| anyhow::anyhow!("--linger-us expects µs, got {v:?}")))
-        .transpose()?;
+    let linger_us = match args.opt("linger-us") {
+        Some(_) => Some(args.opt_u64("linger-us", 0)?),
+        None => None,
+    };
     let opts = ServeOptions {
         calibrate: args.flag("calibrate"),
         macros: args.opt_usize("macros", 1)?.max(1),
@@ -361,6 +423,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if opts.macros > 1 {
         print!("{}", render_shard_utilization(&coord.stats));
     }
+    if telemetry::enabled() {
+        print!("{}", render_span_breakdown(&coord.stats));
+    }
+    if let Some(path) = &trace_out {
+        let mut tb = TraceBuilder::new();
+        perfetto::serving_tracks(&mut tb, &coord.stats.spans.snapshot(), 256);
+        // The engine timeline from one representative run, on the same
+        // trace's time axis (its own process track).
+        if let Some((markers, cycles)) = coord.stats.engine_sample() {
+            let program = build_kws_program_sharded(&model, opt, opts.macros)?;
+            perfetto::engine_tracks(&mut tb, &program, &markers, cycles);
+        }
+        write_trace(path, tb)?;
+    }
+    if let Some(path) = &metrics_out {
+        write_metrics(path)?;
+    }
     coord.shutdown();
     Ok(())
 }
@@ -380,6 +459,7 @@ fn parse_f64_list(s: &str) -> Result<Vec<f64>> {
 /// mapping beats single-ended at the largest swept sigma (§II-B).
 fn cmd_sweep(args: &Args) -> Result<()> {
     let model = load_model()?;
+    let (_, metrics_out) = telemetry_outputs(args);
     let dir = cimrv::util::io::artifacts_dir()?;
     let eval = dataset::Dataset::load_eval(&dir, model.audio_len, model.n_classes)?;
     let n = args.opt_usize("n", eval.len())?.min(eval.len());
@@ -416,7 +496,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let utterances: Vec<&[f32]> = (0..n).map(|i| eval.utterance(i)).collect();
     let labels: Vec<usize> = (0..n).map(|i| eval.labels[i] as usize).collect();
+    let t0 = std::time::Instant::now();
     let report = run_sweep(&sim, &utterances, &labels, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let n_points = cfg.sigmas.len() * cfg.nl_alphas.len() * cfg.mappings.len() * cfg.seeds.len();
+    eprintln!(
+        "sweep wall-clock: {wall:.2}s ({:.1} grid points/s over {n_points} points)",
+        n_points as f64 / wall.max(1e-9)
+    );
 
     let out = args.opt_or("out", "BENCH_robustness.json");
     std::fs::write(&out, format!("{}\n", report.to_json()))
@@ -430,6 +517,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.flag("check") {
         report.check_mapping_claim()?;
         println!("check: symmetric mapping beats single-ended at max sigma \u{2713}");
+    }
+    if let Some(path) = &metrics_out {
+        write_metrics(path)?;
     }
     Ok(())
 }
@@ -449,8 +539,15 @@ fn cmd_trace(args: &Args) -> Result<()> {
         bytes.extend_from_slice(&(*v as i16).to_le_bytes());
     }
     prog.dram.push((cimrv::dataflow::plan::DRAM_AUDIO, bytes));
-    for e in cimrv::sim::trace::trace_program(&prog, skip, n)? {
-        println!("{}", e.render());
+    let entries = cimrv::sim::trace::trace_program(&prog, skip, n)?;
+    if let Some(path) = args.opt("trace-out") {
+        std::fs::write(path, cimrv::sim::trace::render_jsonl(&entries))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path} ({} instructions, JSON lines)", entries.len());
+    } else {
+        for e in &entries {
+            println!("{}", e.render());
+        }
     }
     Ok(())
 }

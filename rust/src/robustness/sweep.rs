@@ -20,6 +20,7 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::fsim::FastSim;
+use crate::telemetry::{self, Histogram};
 use crate::util::json::Json;
 
 use super::replay::VariationParams;
@@ -295,7 +296,15 @@ pub fn run_sweep(
             s.spawn(|| loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 let Some(params) = grid.get(i).copied() else { break };
+                let tp0 = telemetry::enabled().then(Instant::now);
                 let rs = sim.infer_batch_disturbed(utterances, &params);
+                if let Some(tp0) = tp0 {
+                    let telem = telemetry::global();
+                    telem
+                        .histogram("sweep.point_us", Histogram::us_bounds())
+                        .observe(tp0.elapsed().as_micros() as u64);
+                    telem.counter("sweep.points").inc();
+                }
                 let mut hits = 0usize;
                 let mut flips = 0usize;
                 let mut sum_delta = 0.0f64;
@@ -328,6 +337,11 @@ pub fn run_sweep(
         }
     });
     let elapsed = t0.elapsed().as_secs_f64();
+    if telemetry::enabled() {
+        let telem = telemetry::global();
+        telem.gauge("sweep.points_per_s").set(grid.len() as f64 / elapsed.max(1e-9));
+        telem.counter("sweep.inferences").add((grid.len() * utterances.len()) as u64);
+    }
 
     let mut indexed = results.into_inner().unwrap();
     indexed.sort_by_key(|(i, _)| *i);
@@ -426,6 +440,31 @@ mod tests {
             assert_eq!(x.accuracy, y.accuracy);
             assert_eq!(x.mean_abs_logit_delta, y.mean_abs_logit_delta);
         }
+    }
+
+    #[test]
+    fn sweep_reports_per_point_telemetry_when_enabled() {
+        crate::telemetry::with_telemetry(|| {
+            let (sim, audios, labels) = setup();
+            let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+            let cfg = SweepConfig {
+                sigmas: vec![0.0, 0.3],
+                nl_alphas: vec![0.3],
+                mappings: vec![false],
+                seeds: vec![1],
+                mismatch: 0.05,
+                threads: 2,
+            };
+            let telem = crate::telemetry::global();
+            let before = telem.counter("sweep.points").get();
+            run_sweep(&sim, &refs, &labels, &cfg).unwrap();
+            // `>=`: the registry is process-global, and unguarded tests
+            // running concurrently also record while telemetry is on.
+            assert!(telem.counter("sweep.points").get() >= before + 2);
+            assert!(telem.histogram("sweep.point_us", Histogram::us_bounds()).count() >= 2);
+            assert!(telem.gauge("sweep.points_per_s").get() > 0.0);
+            assert!(telem.counter("sweep.inferences").get() >= 2 * 4);
+        });
     }
 
     #[test]

@@ -33,6 +33,11 @@ pub struct RunResult {
     /// for unsharded programs). Feeds the per-shard utilization counters
     /// in `coordinator::ServiceStats`.
     pub shard_fires: Vec<u64>,
+    /// The raw MMIO phase-marker stream `(id, end_cycle)` this run's
+    /// `phases` were attributed from — kept on the result so the
+    /// telemetry Perfetto exporter can render the engine timeline
+    /// without re-running.
+    pub markers: Vec<(u32, u64)>,
 }
 
 /// The SoC instance (reusable across inferences: weights stay staged).
@@ -190,6 +195,7 @@ impl Soc {
             seconds_at_50mhz: cpu.stats.cycles as f64 / 50e6,
             console: self.bus.console.clone(),
             shard_fires: self.bus.cims.iter().map(|m| m.stats.fires).collect(),
+            markers: self.bus.phases.clone(),
         })
     }
 

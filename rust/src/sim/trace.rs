@@ -9,6 +9,7 @@ use crate::cpu::{Cpu, StepOutcome};
 use crate::isa::{decode, disasm};
 use crate::mem::bus::Bus;
 use crate::mem::dram::DramConfig;
+use crate::util::json::Json;
 
 /// One traced instruction.
 #[derive(Debug, Clone)]
@@ -27,6 +28,31 @@ impl TraceEntry {
             None => format!("[{:>8}] {:#010x}  {}", self.cycle, self.pc, self.text),
         }
     }
+
+    /// Machine-readable form of one entry (one object per instruction).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("cycle", Json::num(self.cycle as f64)),
+            ("pc", Json::num(self.pc as f64)),
+            ("text", Json::str(self.text.as_str())),
+        ];
+        if let Some((reg, val)) = &self.wrote {
+            fields.push(("wrote_reg", Json::str(reg.as_str())));
+            fields.push(("wrote_val", Json::num(*val as f64)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Render a trace as JSON Lines: one compact object per instruction, so
+/// the stream greps/streams cleanly (`cimrv trace --trace-out file.jsonl`).
+pub fn render_jsonl(entries: &[TraceEntry]) -> String {
+    let mut out = String::new();
+    for e in entries {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    out
 }
 
 /// Run a program from reset, collecting up to `max` trace entries
@@ -144,6 +170,28 @@ mod tests {
         for e in &t {
             let s = e.render();
             assert!(s.contains("0x"));
+        }
+    }
+
+    #[test]
+    fn trace_jsonl_round_trips() {
+        let prog = build_kws_program(&tiny_model(), OptLevel::FULL).unwrap();
+        let t = trace_program(&prog, 0, 4).unwrap();
+        let jsonl = render_jsonl(&t);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for (line, e) in lines.iter().zip(&t) {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("cycle").unwrap().as_f64().unwrap() as u64, e.cycle);
+            assert_eq!(j.get("pc").unwrap().as_f64().unwrap() as u32, e.pc);
+            assert_eq!(j.get("text").unwrap().as_str().unwrap(), e.text);
+            match &e.wrote {
+                Some((reg, val)) => {
+                    assert_eq!(j.get("wrote_reg").unwrap().as_str().unwrap(), reg);
+                    assert_eq!(j.get("wrote_val").unwrap().as_f64().unwrap() as u32, *val);
+                }
+                None => assert!(j.get("wrote_reg").is_err()),
+            }
         }
     }
 }

@@ -1,0 +1,408 @@
+//! Chrome trace-event (Perfetto) exporter.
+//!
+//! Emits the JSON object format (`{"traceEvents": [...]}`) that
+//! Perfetto's UI and chrome://tracing both load. Two producers feed it:
+//!
+//! * **Serving tracks** from the coordinator's [`RequestSpan`]s — one
+//!   thread track per worker (assemble / execute / respond slices, with
+//!   per-macro sub-slices apportioned from `shard_fires`), plus one
+//!   track per request showing its queued → execute → respond life.
+//! * **Engine tracks** from a `RunResult`'s MMIO phase markers — the
+//!   same `(id, cycle)` stream `PhaseBreakdown` attributes, rendered as
+//!   a phase track plus one track per CIM macro showing which layer
+//!   spans it loads weights for and fires in. Cycles convert to wall
+//!   microseconds at the paper's 50 MHz clock, so chip and host tracks
+//!   share a time axis.
+//!
+//! Every event — including the `"M"` metadata naming events — carries
+//! `ph`/`ts`/`pid`/`tid`, which the schema smoke test relies on.
+
+use crate::compiler::Program;
+use crate::util::json::Json;
+
+use super::spans::RequestSpan;
+
+/// The paper's system clock: cycles → µs divisor.
+pub const CLOCK_MHZ: f64 = 50.0;
+
+/// Trace process ids (one per logical timeline).
+pub const PID_SERVE: u64 = 1;
+pub const PID_REQUESTS: u64 = 2;
+pub const PID_ENGINE: u64 = 3;
+
+/// Builds a Chrome trace-event JSON document.
+#[derive(Debug, Default)]
+pub struct TraceBuilder {
+    events: Vec<Json>,
+}
+
+impl TraceBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn meta(&mut self, what: &str, pid: u64, tid: u64, name: &str) {
+        self.events.push(Json::obj(vec![
+            ("name", Json::str(what)),
+            ("ph", Json::str("M")),
+            ("ts", Json::num(0.0)),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+    }
+
+    /// Name a process track.
+    pub fn process_name(&mut self, pid: u64, name: &str) {
+        self.meta("process_name", pid, 0, name);
+    }
+
+    /// Name a thread track within a process.
+    pub fn thread_name(&mut self, pid: u64, tid: u64, name: &str) {
+        self.meta("thread_name", pid, tid, name);
+    }
+
+    /// Add a complete (`ph:"X"`) slice. Timestamps/durations in µs.
+    pub fn complete(
+        &mut self,
+        pid: u64,
+        tid: u64,
+        name: &str,
+        cat: &str,
+        ts_us: f64,
+        dur_us: f64,
+        args: Vec<(&str, Json)>,
+    ) {
+        self.events.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str(cat)),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(ts_us)),
+            ("dur", Json::num(dur_us.max(0.0))),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The finished trace document.
+    pub fn build(self) -> Json {
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(self.events)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+}
+
+/// Human label for a phase-marker id (the `PhaseBreakdown` scheme:
+/// 1 = boot, 2 = preprocess, 10..=29 weights per layer, 30..=49 conv
+/// per layer, anything else tail work).
+fn marker_label(id: u32) -> String {
+    match id {
+        1 => "boot".to_string(),
+        2 => "preprocess".to_string(),
+        10..=29 => format!("weights L{}", id - 10),
+        30..=49 => format!("conv L{}", id - 30),
+        other => format!("marker {other}"),
+    }
+}
+
+/// Render an engine run's phase/fire schedule: a phase track plus one
+/// track per macro. `markers` is the `(id, end_cycle)` stream a
+/// `RunResult` carries; each marker closes the span since its
+/// predecessor, exactly like `PhaseBreakdown::from_markers`.
+pub fn engine_tracks(
+    tb: &mut TraceBuilder,
+    program: &Program,
+    markers: &[(u32, u64)],
+    total_cycles: u64,
+) {
+    let us = |cycles: u64| cycles as f64 / CLOCK_MHZ;
+    let n_macros = program.shards.n_macros;
+    tb.process_name(PID_ENGINE, "cim engine (cycles @ 50 MHz)");
+    tb.thread_name(PID_ENGINE, 0, "phases");
+    for m in 0..n_macros {
+        tb.thread_name(PID_ENGINE, 1 + m as u64, &format!("macro {m}"));
+    }
+
+    let mut prev = 0u64;
+    for &(id, at) in markers {
+        let (ts, dur) = (us(prev), us(at.saturating_sub(prev)));
+        tb.complete(
+            PID_ENGINE,
+            0,
+            &marker_label(id),
+            "phase",
+            ts,
+            dur,
+            vec![("cycles", Json::num(at.saturating_sub(prev) as f64))],
+        );
+        // Per-macro sub-tracks: weight loads and fire windows land on
+        // the macros that own channels of the marker's layer.
+        let layer = match id {
+            10..=29 => Some((id - 10) as usize, "load"),
+            30..=49 => Some((id - 30) as usize, "fire"),
+            _ => None,
+        };
+        if let Some((l, kind)) = layer {
+            if let Some(ls) = program.shards.layers.iter().find(|ls| ls.index == l) {
+                let fires =
+                    program.plan.layers.get(l).map(|lp| lp.t_in).unwrap_or(0);
+                for (m, c0, c1) in ls.non_empty() {
+                    let mut args = vec![
+                        ("channels", Json::num((c1 - c0) as f64)),
+                        ("range", Json::str(format!("c{c0}..c{c1}"))),
+                    ];
+                    if kind == "fire" {
+                        args.push(("fires", Json::num(fires as f64)));
+                    }
+                    tb.complete(
+                        PID_ENGINE,
+                        1 + m as u64,
+                        &format!("L{l} {kind}"),
+                        kind,
+                        ts,
+                        dur,
+                        args,
+                    );
+                }
+            }
+        }
+        prev = at;
+    }
+    if total_cycles > prev {
+        tb.complete(
+            PID_ENGINE,
+            0,
+            "tail",
+            "phase",
+            us(prev),
+            us(total_cycles - prev),
+            vec![("cycles", Json::num((total_cycles - prev) as f64))],
+        );
+    }
+}
+
+/// Render the coordinator's batching timeline: one thread track per
+/// worker (assemble/execute/respond per batch, with per-macro execute
+/// sub-slices apportioned from `shard_fires`) and one track per request
+/// (capped at `max_request_tracks` to bound trace size).
+pub fn serving_tracks(tb: &mut TraceBuilder, spans: &[RequestSpan], max_request_tracks: usize) {
+    if spans.is_empty() {
+        return;
+    }
+    tb.process_name(PID_SERVE, "cimrv-serve workers");
+    tb.process_name(PID_REQUESTS, "requests");
+    let mut workers: Vec<usize> = spans.iter().map(|s| s.worker).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    for &w in &workers {
+        tb.thread_name(PID_SERVE, w as u64, &format!("worker {w}"));
+    }
+
+    // One batch = every span sharing (worker, exec_start). Spans arrive
+    // sorted by req_id; batches keep first-seen order.
+    let mut batches: Vec<(usize, u64, Vec<&RequestSpan>)> = Vec::new();
+    for s in spans {
+        match batches.iter_mut().find(|(w, x, _)| *w == s.worker && *x == s.exec_start_us) {
+            Some((_, _, members)) => members.push(s),
+            None => batches.push((s.worker, s.exec_start_us, vec![s])),
+        }
+    }
+
+    for (w, _, members) in &batches {
+        let lead = members[0];
+        let n = members.len();
+        let tid = *w as u64;
+        let batch_args = |extra: Vec<(&'static str, Json)>| {
+            let mut v = vec![("batch_size", Json::num(n as f64))];
+            v.extend(extra);
+            v
+        };
+        tb.complete(
+            PID_SERVE,
+            tid,
+            &format!("assemble[{n}]"),
+            "assemble",
+            lead.assembly_start_us as f64,
+            lead.assembled_us.saturating_sub(lead.assembly_start_us) as f64,
+            batch_args(vec![]),
+        );
+        let exec_dur = lead.execute_us();
+        tb.complete(
+            PID_SERVE,
+            tid,
+            &format!("execute[{n}]"),
+            "execute",
+            lead.exec_start_us as f64,
+            exec_dur as f64,
+            batch_args(vec![("req_ids", Json::Arr(
+                members.iter().map(|s| Json::num(s.req_id as f64)).collect(),
+            ))]),
+        );
+        // Apportion the execute slice across macros by fire share —
+        // host time isn't measured per macro, but the fire counts say
+        // where the chip's work went.
+        let fires = &lead.shard_fires;
+        let total_fires: u64 = fires.iter().sum();
+        if total_fires > 0 && fires.len() > 1 {
+            let mut at = lead.exec_start_us as f64;
+            for (m, &f) in fires.iter().enumerate() {
+                if f == 0 {
+                    continue;
+                }
+                let dur = exec_dur as f64 * f as f64 / total_fires as f64;
+                tb.complete(
+                    PID_SERVE,
+                    tid,
+                    &format!("shard {m}"),
+                    "shard",
+                    at,
+                    dur,
+                    vec![("fires", Json::num(f as f64))],
+                );
+                at += dur;
+            }
+        }
+        let respond_end = members.iter().map(|s| s.respond_us).max().unwrap_or(lead.exec_end_us);
+        tb.complete(
+            PID_SERVE,
+            tid,
+            &format!("respond[{n}]"),
+            "respond",
+            lead.exec_end_us as f64,
+            respond_end.saturating_sub(lead.exec_end_us) as f64,
+            batch_args(vec![]),
+        );
+    }
+
+    // Per-request lifecycle tracks.
+    for s in spans.iter().take(max_request_tracks) {
+        let tid = s.req_id;
+        tb.thread_name(PID_REQUESTS, tid, &format!("req {}", s.req_id));
+        tb.complete(
+            PID_REQUESTS,
+            tid,
+            "queued",
+            "queue",
+            s.enqueue_us as f64,
+            s.queue_us() as f64,
+            vec![("worker", Json::num(s.worker as f64))],
+        );
+        tb.complete(
+            PID_REQUESTS,
+            tid,
+            "execute",
+            "execute",
+            s.exec_start_us as f64,
+            s.execute_us() as f64,
+            vec![("batch_size", Json::num(s.batch_size as f64))],
+        );
+        tb.complete(
+            PID_REQUESTS,
+            tid,
+            "respond",
+            "respond",
+            s.exec_end_us as f64,
+            s.respond_us.saturating_sub(s.exec_end_us) as f64,
+            vec![],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::OptLevel;
+    use crate::compiler::build_kws_program_sharded;
+    use crate::model::KwsModel;
+
+    fn assert_event_schema(doc: &Json) -> usize {
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        for e in events {
+            for key in ["ph", "ts", "pid", "tid"] {
+                assert!(e.get(key).is_ok(), "event missing {key}: {e}");
+            }
+        }
+        events.len()
+    }
+
+    #[test]
+    fn engine_tracks_cover_phases_and_macros() {
+        let m = KwsModel::synthetic(3);
+        let prog = build_kws_program_sharded(&m, OptLevel::FULL, 2).unwrap();
+        // boot @100, preprocess @400, L0 weights @600, L0 conv @900.
+        let markers = vec![(1, 100), (2, 400), (10, 600), (30, 900)];
+        let mut tb = TraceBuilder::new();
+        engine_tracks(&mut tb, &prog, &markers, 1000);
+        let doc = tb.build();
+        let n = assert_event_schema(&doc);
+        assert!(n > 0);
+        let text = doc.to_string();
+        assert!(text.contains("conv L0"));
+        assert!(text.contains("macro 0"));
+        assert!(text.contains("macro 1"));
+        assert!(text.contains("\"tail\""));
+        // 100 cycles of boot = 2µs at 50 MHz.
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let boot = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str().map(str::to_string)).ok().as_deref() == Some("boot"))
+            .unwrap();
+        assert_eq!(boot.get("dur").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn serving_tracks_group_batches_per_worker() {
+        let span = |req_id: u64, worker: usize, exec_start_us: u64| RequestSpan {
+            req_id,
+            worker,
+            batch_size: 2,
+            enqueue_us: 5 + req_id,
+            assembly_start_us: 10,
+            assembled_us: 20,
+            exec_start_us,
+            exec_end_us: exec_start_us + 100,
+            respond_us: exec_start_us + 110,
+            shard_fires: vec![30, 10],
+        };
+        let spans = vec![span(0, 0, 30), span(1, 0, 30), span(2, 1, 40)];
+        let mut tb = TraceBuilder::new();
+        serving_tracks(&mut tb, &spans, 256);
+        let doc = tb.build();
+        assert_event_schema(&doc);
+        let text = doc.to_string();
+        // Worker 0's batch of two, worker 1's singleton.
+        assert!(text.contains("execute[2]"));
+        assert!(text.contains("execute[1]"));
+        assert!(text.contains("worker 1"));
+        // Shard sub-slices apportioned 75/25 from fires [30, 10].
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let shard0 = events
+            .iter()
+            .filter(|e| {
+                e.get("name").and_then(|n| n.as_str().map(str::to_string)).ok().as_deref()
+                    == Some("shard 0")
+            })
+            .count();
+        assert_eq!(shard0, 2);
+        assert!(text.contains("req 2"));
+    }
+
+    #[test]
+    fn empty_inputs_build_empty_but_valid_docs() {
+        let mut tb = TraceBuilder::new();
+        serving_tracks(&mut tb, &[], 256);
+        assert!(tb.is_empty());
+        let doc = tb.build();
+        assert_eq!(doc.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    }
+}

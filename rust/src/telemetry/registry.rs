@@ -1,0 +1,398 @@
+//! Lock-cheap metrics registry: counters, gauges, fixed-bucket
+//! histograms behind atomics.
+//!
+//! The design point is the *disabled* cost: every metric operation
+//! starts with one relaxed load of a process-global flag and returns
+//! immediately when telemetry is off, so the kernel hot loops (fsim
+//! popcount batches, the coordinator drain loop) pay ~one predicted
+//! branch. When enabled, updates are single `Relaxed` atomic RMWs on
+//! per-metric cache lines — no locks on the record path. The only lock
+//! in the subsystem guards metric *registration* (get-or-create by
+//! name), which callers do once and cache the `Arc` handle.
+//!
+//! Exposition is pull-style: [`Registry::render_prometheus`] emits the
+//! text format, [`Registry::to_json`] the same data through
+//! [`util::json`](crate::util::json) for `--metrics-out` dumps and the
+//! bench artifacts.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Process-global enable flag (the "global-off fast path").
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is telemetry recording enabled?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn telemetry recording on or off process-wide. Handles stay
+/// valid either way; disabled metrics simply stop moving.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if !enabled() {
+            return;
+        }
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A last-write-wins gauge (f64 stored as bits).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    fn reset(&self) {
+        self.bits.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A fixed-bucket histogram over `u64` samples (we only histogram
+/// microsecond durations and small integer sizes, so integer samples
+/// keep the sum atomic and exact).
+///
+/// `bounds` are inclusive upper bounds of the finite buckets; one
+/// implicit +Inf bucket catches the rest, Prometheus-style.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    counts: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(mut bounds: Vec<u64>) -> Self {
+        bounds.sort_unstable();
+        bounds.dedup();
+        let counts = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, counts, sum: AtomicU64::new(0), count: AtomicU64::new(0) }
+    }
+
+    /// Default bucket ladder for microsecond durations: 1µs .. ~16s,
+    /// powers of four.
+    pub fn us_bounds() -> Vec<u64> {
+        (0..13).map(|i| 4u64.pow(i)).collect()
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Mean sample, or `None` when nothing was observed (no divide by
+    /// zero, no NaN in reports).
+    pub fn mean(&self) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            None
+        } else {
+            Some(self.sum() as f64 / n as f64)
+        }
+    }
+
+    /// Cumulative bucket counts as `(upper_bound, count)`, the +Inf
+    /// bucket last with `None` as its bound.
+    pub fn cumulative(&self) -> Vec<(Option<u64>, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.counts.len());
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            out.push((self.bounds.get(i).copied(), acc));
+        }
+        out
+    }
+
+    fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.sum.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+/// One registered metric.
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A named collection of metrics. Registration (get-or-create) takes
+/// the registry lock; recording through the returned handles does not.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create the counter `name`. Panics if `name` is already
+    /// registered as a different metric kind (a wiring bug, not input).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            other => panic!("metric {name:?} already registered as {other:?}"),
+        }
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => Arc::clone(g),
+            other => panic!("metric {name:?} already registered as {other:?}"),
+        }
+    }
+
+    /// Get or create the histogram `name` with the given finite bucket
+    /// bounds (ignored when the histogram already exists).
+    pub fn histogram(&self, name: &str, bounds: Vec<u64>) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds))))
+        {
+            Metric::Histogram(h) => Arc::clone(h),
+            other => panic!("metric {name:?} already registered as {other:?}"),
+        }
+    }
+
+    /// Zero every registered metric (benches/tests; handles stay live).
+    pub fn reset(&self) {
+        for metric in self.metrics.lock().unwrap().values() {
+            match metric {
+                Metric::Counter(c) => c.reset(),
+                Metric::Gauge(g) => g.reset(),
+                Metric::Histogram(h) => h.reset(),
+            }
+        }
+    }
+
+    /// Prometheus text exposition. Metric names sanitize `.` to `_`
+    /// (the registry namespaces with dots, e.g. `serve.requests`).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, metric) in self.metrics.lock().unwrap().iter() {
+            let n = name.replace(['.', '-'], "_");
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
+                }
+                Metric::Histogram(h) => {
+                    out.push_str(&format!("# TYPE {n} histogram\n"));
+                    for (bound, cum) in h.cumulative() {
+                        let le = match bound {
+                            Some(b) => b.to_string(),
+                            None => "+Inf".to_string(),
+                        };
+                        out.push_str(&format!("{n}_bucket{{le=\"{le}\"}} {cum}\n"));
+                    }
+                    out.push_str(&format!("{n}_sum {}\n{n}_count {}\n", h.sum(), h.count()));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot for `--metrics-out` and bench artifacts.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (name, metric) in self.metrics.lock().unwrap().iter() {
+            let v = match metric {
+                Metric::Counter(c) => Json::obj(vec![
+                    ("type", Json::str("counter")),
+                    ("value", Json::num(c.get() as f64)),
+                ]),
+                Metric::Gauge(g) => Json::obj(vec![
+                    ("type", Json::str("gauge")),
+                    ("value", Json::num(g.get())),
+                ]),
+                Metric::Histogram(h) => {
+                    let buckets = h
+                        .cumulative()
+                        .into_iter()
+                        .map(|(bound, cum)| {
+                            Json::obj(vec![
+                                (
+                                    "le",
+                                    match bound {
+                                        Some(b) => Json::num(b as f64),
+                                        None => Json::str("+Inf"),
+                                    },
+                                ),
+                                ("count", Json::num(cum as f64)),
+                            ])
+                        })
+                        .collect();
+                    Json::obj(vec![
+                        ("type", Json::str("histogram")),
+                        ("sum", Json::num(h.sum() as f64)),
+                        ("count", Json::num(h.count() as f64)),
+                        ("mean", h.mean().map(Json::num).unwrap_or(Json::Null)),
+                        ("buckets", Json::Arr(buckets)),
+                    ])
+                }
+            };
+            obj.insert(name.clone(), v);
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// The process-wide registry every subsystem records into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::with_telemetry;
+
+    #[test]
+    fn disabled_metrics_do_not_move() {
+        // Inside the guard so no parallel test re-enables mid-check.
+        with_telemetry(|| {
+            set_enabled(false);
+            let r = Registry::new();
+            let c = r.counter("t.count");
+            let g = r.gauge("t.gauge");
+            let h = r.histogram("t.hist", vec![10, 100]);
+            c.inc();
+            g.set(3.5);
+            h.observe(7);
+            assert_eq!(c.get(), 0);
+            assert_eq!(g.get(), 0.0);
+            assert_eq!(h.count(), 0);
+            assert!(h.mean().is_none());
+        });
+    }
+
+    #[test]
+    fn records_and_renders_when_enabled() {
+        with_telemetry(|| {
+            let r = Registry::new();
+            let c = r.counter("t.count");
+            let g = r.gauge("t.gauge");
+            let h = r.histogram("t.hist", vec![10, 100]);
+            c.add(3);
+            g.set(2.5);
+            for v in [1, 10, 11, 1000] {
+                h.observe(v);
+            }
+            assert_eq!(c.get(), 3);
+            assert_eq!(g.get(), 2.5);
+            assert_eq!(h.count(), 4);
+            assert_eq!(h.sum(), 1022);
+            // Buckets are cumulative: le=10 catches 1 and 10, le=100
+            // adds 11, +Inf adds 1000.
+            assert_eq!(h.cumulative(), vec![(Some(10), 2), (Some(100), 3), (None, 4)]);
+
+            let prom = r.render_prometheus();
+            assert!(prom.contains("# TYPE t_count counter"));
+            assert!(prom.contains("t_hist_bucket{le=\"+Inf\"} 4"));
+            assert!(prom.contains("t_hist_sum 1022"));
+
+            let j = r.to_json();
+            assert_eq!(j.path(&["t.count", "value"]).unwrap().as_usize().unwrap(), 3);
+            assert_eq!(j.path(&["t.hist", "count"]).unwrap().as_usize().unwrap(), 4);
+            // The snapshot round-trips through the parser.
+            assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        });
+    }
+
+    #[test]
+    fn get_or_create_returns_the_same_metric() {
+        with_telemetry(|| {
+            let r = Registry::new();
+            r.counter("same").add(1);
+            r.counter("same").add(2);
+            assert_eq!(r.counter("same").get(), 3);
+            r.reset();
+            assert_eq!(r.counter("same").get(), 0);
+        });
+    }
+
+    #[test]
+    fn empty_histogram_renders_without_panicking() {
+        let r = Registry::new();
+        let _ = r.histogram("h.empty", Histogram::us_bounds());
+        let prom = r.render_prometheus();
+        assert!(prom.contains("h_empty_count 0"));
+        let j = r.to_json();
+        assert_eq!(j.path(&["h.empty", "mean"]).unwrap(), &Json::Null);
+    }
+}

@@ -1,0 +1,178 @@
+//! Request-lifecycle spans for the serving path.
+//!
+//! One [`RequestSpan`] per served request, timestamped in microseconds
+//! from the owning [`SpanLog`]'s epoch (the coordinator's start). The
+//! lifecycle mirrors the worker loop exactly:
+//!
+//! ```text
+//! enqueue ──▶ assembly_start ──▶ assembled ──▶ exec_start ──▶ exec_end ──▶ respond
+//!  (queued)   (worker drains)   (linger closed)   (backend run_batch)     (reply sent)
+//! ```
+//!
+//! Recording is gated on [`telemetry::enabled`](crate::telemetry::enabled)
+//! inside [`SpanLog::record`], so an untelemetered serve pays one
+//! relaxed load per request. The Perfetto exporter renders these spans
+//! into worker/request tracks; `ServiceStats` aggregates them into
+//! span-derived latency percentiles that agree exactly with its own
+//! host-latency samples (`respond_us - enqueue_us` is *defined* as the
+//! measured host latency, not a second clock read).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One request's lifecycle, in µs offsets from the [`SpanLog`] epoch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestSpan {
+    /// Submission order (the coordinator's request counter).
+    pub req_id: u64,
+    /// Worker that served the batch this request rode in.
+    pub worker: usize,
+    /// Size of that batch.
+    pub batch_size: usize,
+    /// Request entered the queue.
+    pub enqueue_us: u64,
+    /// The worker began draining the batch (first job received).
+    pub assembly_start_us: u64,
+    /// Batch fully assembled — the linger window closed.
+    pub assembled_us: u64,
+    /// Backend `run_batch` began.
+    pub exec_start_us: u64,
+    /// Backend `run_batch` returned.
+    pub exec_end_us: u64,
+    /// Reply handed back: `enqueue_us` + the measured host latency.
+    pub respond_us: u64,
+    /// Per-macro fire counts from this request's `RunResult`.
+    pub shard_fires: Vec<u64>,
+}
+
+impl RequestSpan {
+    /// Queue + linger time: enqueue until the batch was assembled.
+    pub fn queue_us(&self) -> u64 {
+        self.assembled_us.saturating_sub(self.enqueue_us)
+    }
+
+    /// Backend execution time (shared by the whole batch).
+    pub fn execute_us(&self) -> u64 {
+        self.exec_end_us.saturating_sub(self.exec_start_us)
+    }
+
+    /// End-to-end host latency.
+    pub fn total_us(&self) -> u64 {
+        self.respond_us.saturating_sub(self.enqueue_us)
+    }
+}
+
+/// Span sink owned by `ServiceStats`: an epoch plus the recorded spans.
+#[derive(Debug)]
+pub struct SpanLog {
+    epoch: Instant,
+    spans: Mutex<Vec<RequestSpan>>,
+}
+
+impl Default for SpanLog {
+    fn default() -> Self {
+        SpanLog { epoch: Instant::now(), spans: Mutex::new(Vec::new()) }
+    }
+}
+
+impl SpanLog {
+    /// Microseconds from the epoch to `t` (0 for pre-epoch instants,
+    /// which cannot arise in the serving path — jobs enqueue after the
+    /// coordinator starts).
+    pub fn us_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Microseconds from the epoch to now.
+    pub fn now_us(&self) -> u64 {
+        self.us_since_epoch(Instant::now())
+    }
+
+    /// Record a span (no-op while telemetry is disabled).
+    pub fn record(&self, span: RequestSpan) {
+        if !crate::telemetry::enabled() {
+            return;
+        }
+        self.spans.lock().unwrap().push(span);
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy of the recorded spans, in request-id order.
+    pub fn snapshot(&self) -> Vec<RequestSpan> {
+        let mut v = self.spans.lock().unwrap().clone();
+        v.sort_by_key(|s| s.req_id);
+        v
+    }
+
+    /// End-to-end latency samples (µs), one per recorded span.
+    pub fn total_us_samples(&self) -> Vec<u64> {
+        self.spans.lock().unwrap().iter().map(|s| s.total_us()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::with_telemetry;
+
+    fn span(req_id: u64) -> RequestSpan {
+        RequestSpan {
+            req_id,
+            worker: 0,
+            batch_size: 2,
+            enqueue_us: 10,
+            assembly_start_us: 15,
+            assembled_us: 30,
+            exec_start_us: 31,
+            exec_end_us: 131,
+            respond_us: 140,
+            shard_fires: vec![5, 5],
+        }
+    }
+
+    #[test]
+    fn derived_durations() {
+        let s = span(0);
+        assert_eq!(s.queue_us(), 20);
+        assert_eq!(s.execute_us(), 100);
+        assert_eq!(s.total_us(), 130);
+    }
+
+    #[test]
+    fn record_is_gated_and_snapshot_sorts() {
+        let log = SpanLog::default();
+        with_telemetry(|| {
+            // The guard serializes access to the global flag, so the
+            // disabled-path check runs inside it too.
+            crate::telemetry::set_enabled(false);
+            log.record(span(0));
+            assert!(log.is_empty());
+            crate::telemetry::set_enabled(true);
+            log.record(span(2));
+            log.record(span(1));
+            let snap = log.snapshot();
+            assert_eq!(snap.len(), 2);
+            assert_eq!(snap[0].req_id, 1);
+            assert_eq!(log.total_us_samples(), vec![130, 130]);
+        });
+    }
+
+    #[test]
+    fn epoch_offsets_are_monotone() {
+        let log = SpanLog::default();
+        let a = log.now_us();
+        let b = log.now_us();
+        assert!(b >= a);
+        // Pre-epoch instants clamp to 0 rather than panicking.
+        if let Some(past) = Instant::now().checked_sub(std::time::Duration::from_secs(60)) {
+            assert_eq!(log.us_since_epoch(past), 0);
+        }
+    }
+}

@@ -68,6 +68,15 @@ impl Args {
         }
     }
 
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
     pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.opt(key) {
             None => Ok(default),
@@ -118,5 +127,14 @@ mod tests {
         assert_eq!(a.opt_f64("f", 0.0).unwrap(), 2.5);
         assert_eq!(a.opt_f64("g", 1.5).unwrap(), 1.5);
         assert!(a.opt_usize("f", 0).is_err());
+    }
+
+    #[test]
+    fn u64_accessor() {
+        let a = Args::parse_from(&s(&["x", "--linger-us", "2500"]), &[]).unwrap();
+        assert_eq!(a.opt_u64("linger-us", 0).unwrap(), 2500);
+        assert_eq!(a.opt_u64("absent", 7).unwrap(), 7);
+        let b = Args::parse_from(&s(&["x", "--linger-us", "nope"]), &[]).unwrap();
+        assert!(b.opt_u64("linger-us", 0).is_err());
     }
 }

@@ -1,0 +1,159 @@
+//! Telemetry integration suite: registry behavior under real thread
+//! contention, the Perfetto export schema, and the span-vs-ServiceStats
+//! consistency contract — everything driven through the public API the
+//! CLI uses (`cimrv serve --trace-out/--metrics-out`). No artifacts
+//! required — runs on synthetic models.
+
+use std::sync::Mutex;
+
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::build_kws_program_sharded;
+use cimrv::coordinator::{Coordinator, InferenceRequest};
+use cimrv::model::{dataset, KwsModel};
+use cimrv::telemetry::{self, perfetto, Histogram, Registry, TraceBuilder};
+use cimrv::util::json::Json;
+
+/// The enable flag is process-global; tests that flip it run serialized
+/// (the library's internal tests use the same pattern via
+/// `telemetry::with_telemetry`, which is `cfg(test)`-private to the lib).
+fn with_telemetry<T>(f: impl FnOnce() -> T) -> T {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    let was = telemetry::enabled();
+    telemetry::set_enabled(true);
+    let out = f();
+    telemetry::set_enabled(was);
+    out
+}
+
+#[test]
+fn registry_totals_are_exact_under_thread_contention() {
+    with_telemetry(|| {
+        let reg = Registry::new();
+        const THREADS: usize = 8;
+        const PER_THREAD: u64 = 10_000;
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let reg = &reg;
+                s.spawn(move || {
+                    let c = reg.counter("contended.count");
+                    let h = reg.histogram("contended.us", Histogram::us_bounds());
+                    let g = reg.gauge("contended.gauge");
+                    for i in 0..PER_THREAD {
+                        c.inc();
+                        h.observe(i % 1000);
+                        g.set(t as f64);
+                    }
+                });
+            }
+        });
+        let total = THREADS as u64 * PER_THREAD;
+        assert_eq!(reg.counter("contended.count").get(), total);
+        let h = reg.histogram("contended.us", Histogram::us_bounds());
+        assert_eq!(h.count(), total);
+        // Sum is exact too: each thread contributes sum(0..1000) * 10.
+        let per_thread_sum: u64 = (0..PER_THREAD).map(|i| i % 1000).sum();
+        assert_eq!(h.sum(), THREADS as u64 * per_thread_sum);
+        // The +Inf cumulative bucket accounts for every observation.
+        assert_eq!(h.cumulative().last().unwrap().1, total);
+        // The gauge holds one of the racing writes, not garbage.
+        let g = reg.gauge("contended.gauge").get();
+        assert!((0.0..THREADS as f64).contains(&g));
+        // Both expositions stay parseable under the load.
+        assert!(reg.render_prometheus().contains("contended_count"));
+        assert!(Json::parse(&reg.to_json().to_string()).is_ok());
+    });
+}
+
+/// Every event in an exported trace document — metadata and slices —
+/// must carry `ph`/`ts`/`pid`/`tid`, or Perfetto refuses the load.
+fn assert_trace_schema(doc: &Json) -> usize {
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    for e in events {
+        for key in ["ph", "ts", "pid", "tid"] {
+            assert!(e.get(key).is_ok(), "trace event missing {key:?}: {e}");
+        }
+        let ph = e.get("ph").unwrap().as_str().unwrap().to_string();
+        assert!(ph == "X" || ph == "M", "unexpected phase {ph:?}");
+        if ph == "X" {
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+    events.len()
+}
+
+#[test]
+fn perfetto_export_from_a_real_serve_passes_the_schema_smoke() {
+    with_telemetry(|| {
+        let m = KwsModel::synthetic(5);
+        let macros = 2;
+        let mut coord = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            2,
+            cimrv::backend::BackendKind::Fast,
+            cimrv::coordinator::ServeOptions { macros, ..Default::default() },
+        )
+        .unwrap();
+        let reqs: Vec<_> = (0..6)
+            .map(|i| InferenceRequest {
+                id: i,
+                audio: dataset::synth_utterance(i as usize % 12, i, m.audio_len, 0.3),
+                label: None,
+            })
+            .collect();
+        let _ = coord.serve_batch(reqs).unwrap();
+        coord.shutdown();
+
+        // Exactly the export `cmd_serve --trace-out` performs.
+        let mut tb = TraceBuilder::new();
+        perfetto::serving_tracks(&mut tb, &coord.stats.spans.snapshot(), 256);
+        let (markers, cycles) = coord.stats.engine_sample().expect("engine sample");
+        let program = build_kws_program_sharded(&m, OptLevel::FULL, macros).unwrap();
+        perfetto::engine_tracks(&mut tb, &program, &markers, cycles);
+        let doc = tb.build();
+
+        let n = assert_trace_schema(&doc);
+        assert!(n > 0, "trace must carry events");
+        // Round-trips through the JSON parser (what CI's validator does).
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), n);
+        // Both timelines present: worker batching and per-macro engine.
+        let text = doc.to_string();
+        assert!(text.contains("worker 0"), "missing worker track");
+        assert!(text.contains("macro 0"), "missing engine macro track");
+        assert!(text.contains("macro 1"), "missing second macro track");
+        assert!(text.contains("execute["), "missing batch execute slices");
+    });
+}
+
+#[test]
+fn span_percentiles_match_service_stats_exactly() {
+    with_telemetry(|| {
+        let m = KwsModel::synthetic(7);
+        let mut coord = Coordinator::start_with(
+            &m,
+            OptLevel::FULL,
+            3,
+            cimrv::backend::BackendKind::Fast,
+        )
+        .unwrap();
+        let reqs: Vec<_> = (0..12)
+            .map(|i| InferenceRequest {
+                id: i,
+                audio: dataset::synth_utterance(i as usize % 12, 70 + i, m.audio_len, 0.3),
+                label: None,
+            })
+            .collect();
+        let _ = coord.serve_batch(reqs).unwrap();
+        coord.shutdown();
+
+        assert_eq!(coord.stats.spans.len(), 12);
+        // The contract: a span's end-to-end time IS the host-latency
+        // sample, so the derived percentiles agree exactly — p50 and p99
+        // alike, no tolerance.
+        let from_spans = coord.stats.span_latency_percentiles().unwrap();
+        let from_stats = coord.stats.host_latency_percentiles().unwrap();
+        assert_eq!(from_spans, from_stats);
+    });
+}
