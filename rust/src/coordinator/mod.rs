@@ -7,10 +7,22 @@
 //! every response carries latency/energy accounting and a cross-check
 //! verdict. (The offline image has no tokio; std threads + channels play
 //! its role — see DESIGN.md §2.)
+//!
+//! Since the fault-tolerance rework the serving path is supervised:
+//! admission is bounded (typed [`crate::resilience::SubmitError`]
+//! sheds), requests carry optional deadlines, workers run under
+//! `catch_unwind` with retry/backoff, and a supervisor respawns dead or
+//! breaker-tripped workers (the latter degraded onto a reduced shard
+//! plan). See `crate::resilience` for the building blocks.
 
 pub mod report;
 pub mod server;
 
 pub use server::{
     Coordinator, InferenceRequest, InferenceResponse, LingerEstimator, ServeOptions, ServiceStats,
+    BREAKER_THRESHOLD, DEFAULT_MAX_ATTEMPTS, DEFAULT_QUEUE_CAP,
 };
+
+// The serving-path error surface lives in `resilience`; re-exported here
+// because `submit`/`serve_batch` signatures carry these types.
+pub use crate::resilience::{ServeError, SubmitError};

@@ -173,20 +173,21 @@ pub fn render_sweep(report: &crate::robustness::SweepReport) -> String {
         100.0 * report.clean_accuracy
     );
     s.push_str(&format!(
-        "{:<8}{:<8}{:<14}{:>10}{:>11}{:>14}{:>14}\n",
-        "sigma", "nl", "mapping", "acc %", "flips %", "mean |dL|", "max |dL|"
+        "{:<8}{:<8}{:<14}{:>10}{:>18}{:>11}{:>14}{:>14}\n",
+        "sigma", "nl", "mapping", "acc %", "95% CI", "flips %", "mean |dL|", "max |dL|"
     ));
-    for (sigma, nl, symmetric, acc) in report.cells() {
-        // cells() carries the seed-averaged accuracy (the same number
-        // the mapping-claim gate and the JSON use); the re-filter below
-        // only averages the remaining per-point stats.
+    for c in report.cell_summaries() {
+        // cell_summaries() carries the seed-averaged accuracy and its
+        // bootstrap CI (the same numbers the mapping-claim gate and the
+        // JSON use); the re-filter below only averages the remaining
+        // per-point stats.
         let pts: Vec<_> = report
             .points
             .iter()
             .filter(|p| {
-                p.params.sigma == sigma
-                    && p.params.nl_alpha == nl
-                    && p.params.symmetric == symmetric
+                p.params.sigma == c.sigma
+                    && p.params.nl_alpha == c.nl_alpha
+                    && p.params.symmetric == c.symmetric
             })
             .collect();
         let n = pts.len().max(1) as f64;
@@ -194,11 +195,12 @@ pub fn render_sweep(report: &crate::robustness::SweepReport) -> String {
         let mean_d = pts.iter().map(|p| p.mean_abs_logit_delta).sum::<f64>() / n;
         let max_d = pts.iter().map(|p| p.max_abs_logit_delta).fold(0.0, f64::max);
         s.push_str(&format!(
-            "{:<8}{:<8}{:<14}{:>10.1}{:>11.1}{:>14.3}{:>14.3}\n",
-            sigma,
-            nl,
-            if symmetric { "symmetric" } else { "single-ended" },
-            100.0 * acc,
+            "{:<8}{:<8}{:<14}{:>10.1}{:>18}{:>11.1}{:>14.3}{:>14.3}\n",
+            c.sigma,
+            c.nl_alpha,
+            if c.symmetric { "symmetric" } else { "single-ended" },
+            100.0 * c.mean_accuracy,
+            format!("[{:.1}, {:.1}]", 100.0 * c.ci95_lo, 100.0 * c.ci95_hi),
             100.0 * flips,
             mean_d,
             max_d
@@ -222,6 +224,14 @@ pub fn render_sweep(report: &crate::robustness::SweepReport) -> String {
         report.threads
     ));
     s
+}
+
+/// Render a chaos soak (`cimrv soak`): one row per cell with
+/// availability, shed/retry/respawn counts and p99-under-fault. The JSON
+/// twin is [`crate::resilience::SoakReport::to_json`]
+/// (`BENCH_resilience.json`).
+pub fn render_resilience(report: &crate::resilience::SoakReport) -> String {
+    report.render()
 }
 
 /// Ladder as JSON (machine-readable experiment record).

@@ -10,24 +10,75 @@
 //! through one `run_batch` call — the fast backend walks every layer's
 //! weight planes once per batch, which is where the throughput comes
 //! from. `--batch 1` degenerates to the old request-at-a-time loop.
+//!
+//! The fault-tolerance rework layered the resilience subsystem on top:
+//!
+//! * **Admission control** — the queue is a bounded
+//!   [`BoundedQueue`]; a full queue sheds with
+//!   [`SubmitError::Overloaded`] instead of growing without limit, and
+//!   requests may carry a [`InferenceRequest::deadline`] that is checked
+//!   at dequeue *and* after execution so expired work is dropped, not
+//!   computed.
+//! * **Supervision** — each worker runs batches under `catch_unwind`;
+//!   a panic requeues the in-flight jobs at the head of the queue and a
+//!   supervisor thread respawns the dead worker against the shared
+//!   `Arc<FastSim>`. Transient backend errors retry with capped
+//!   exponential backoff + deterministic jitter before failing typed.
+//! * **Graceful degradation** — a per-worker [`CircuitBreaker`] trips
+//!   after [`BREAKER_THRESHOLD`] consecutive faults; the tripped worker
+//!   is respawned *degraded*, re-planned over one fewer macro via
+//!   [`ShardPlan::even`], shedding shard capacity instead of
+//!   availability.
+//! * **Chaos** — [`ServeOptions::chaos`] wraps every worker's backend in
+//!   a seeded [`ChaosBackend`] so each of these paths is reproducible in
+//!   tests and soaks (`cimrv soak`).
+//!
+//! Every accepted request resolves to either an `InferenceResponse` or a
+//! typed [`ServeError`] — never a hang, never a dropped reply channel.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, TryRecvError};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::backend::{BackendKind, CycleBackend, FastBackend, InferenceBackend};
 use crate::baselines::OptLevel;
-use crate::compiler::build_kws_program_sharded;
+use crate::compiler::{build_kws_program_sharded, Program};
+use crate::dataflow::shard::ShardPlan;
 use crate::fsim::{Calibration, FastSim};
 use crate::mem::dram::DramConfig;
 use crate::model::KwsModel;
+use crate::resilience::{
+    BoundedQueue, ChaosBackend, CircuitBreaker, FaultPlan, PushError, ServeError, SubmitError,
+};
 use crate::robustness::VariationParams;
 use crate::sim::{RunResult, Soc};
-use crate::telemetry::{self, Histogram, RequestSpan, SpanLog};
+use crate::telemetry::{self, Histogram, RequestSpan, SpanLog, SpanOutcome};
+use crate::util::lock_or_recover;
+use crate::util::rng::Rng;
+
+/// Consecutive faults (transient errors or panics) that trip a worker's
+/// circuit breaker and force a degraded respawn.
+pub const BREAKER_THRESHOLD: u32 = 5;
+/// Default bounded-queue capacity (`--queue-cap`).
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
+/// Default per-request attempt budget (first try + retries/requeues).
+pub const DEFAULT_MAX_ATTEMPTS: u32 = 6;
+/// First retry backoff; doubles per attempt up to [`RETRY_MAX_US`].
+const RETRY_BASE_US: u64 = 200;
+/// Backoff ceiling.
+const RETRY_MAX_US: u64 = 20_000;
+/// Supervisor poll cadence for dead-worker detection.
+const SUPERVISOR_TICK: Duration = Duration::from_millis(1);
+/// Respawn delay after a plain worker panic.
+const PANIC_RESPAWN_COOLDOWN: Duration = Duration::from_millis(5);
+/// Respawn delay after a breaker trip (the fault streak suggests the
+/// worker's environment needs a beat before the degraded retry).
+const BREAKER_COOLDOWN: Duration = Duration::from_millis(25);
 
 /// One utterance to classify.
 #[derive(Debug, Clone)]
@@ -36,6 +87,11 @@ pub struct InferenceRequest {
     pub audio: Vec<f32>,
     /// Golden label, if known (accuracy accounting).
     pub label: Option<i32>,
+    /// Absolute response deadline. Checked when a worker dequeues the
+    /// request and again after execution: expired work is answered with
+    /// [`ServeError::DeadlineExceeded`] instead of being computed (or
+    /// returned stale). `None` = no deadline.
+    pub deadline: Option<Instant>,
 }
 
 /// The service's answer.
@@ -79,6 +135,22 @@ pub struct ServiceStats {
     pub correct: AtomicU64,
     pub labeled: AtomicU64,
     pub chip_cycles: AtomicU64,
+    /// Requests refused at admission because the queue was full.
+    pub shed_overload: AtomicU64,
+    /// Requests answered `DeadlineExceeded` (at dequeue or post-exec).
+    pub shed_deadline: AtomicU64,
+    /// Batch retry attempts after transient backend errors.
+    pub retries: AtomicU64,
+    /// Jobs pushed back to the queue head by a crashed/tripped worker.
+    pub requeues: AtomicU64,
+    /// Requests that exhausted their attempt budget (typed failure).
+    pub failed: AtomicU64,
+    /// Worker batches that ended in a panic (caught, never fatal).
+    pub worker_panics: AtomicU64,
+    /// Workers respawned by the supervisor.
+    pub respawns: AtomicU64,
+    /// Circuit-breaker trips (each forces a degraded respawn).
+    pub breaker_trips: AtomicU64,
     /// Per-shard macro fire counts accumulated across every served
     /// request (one entry per macro; empty only for a default-constructed
     /// stats block). Idle shards stay at zero — the utilization signal
@@ -128,7 +200,7 @@ impl ServiceStats {
 
     /// Record one request's host latency (seconds, submit -> response).
     pub fn record_host_latency(&self, seconds: f64) {
-        self.host_us.lock().unwrap().push((seconds * 1e6) as u64);
+        lock_or_recover(&self.host_us).push((seconds * 1e6) as u64);
     }
 
     /// `[p50, p95, p99]` host latency in seconds over every request
@@ -136,14 +208,16 @@ impl ServiceStats {
     /// percentiles over the exact sample set — the coordinator serves
     /// bounded demo/bench runs, so keeping every sample is fine.
     pub fn host_latency_percentiles(&self) -> Option<[f64; 3]> {
-        let v = self.host_us.lock().unwrap().clone();
+        let v = lock_or_recover(&self.host_us).clone();
         Self::percentiles_s(&v)
     }
 
     /// The same `[p50, p95, p99]` derived from the recorded request
     /// spans instead of the host-latency samples. `None` until spans
     /// exist (telemetry off, or nothing served). The two agree exactly:
-    /// a span's `respond_us - enqueue_us` *is* the host-latency sample.
+    /// a *served* span's `respond_us - enqueue_us` *is* the host-latency
+    /// sample, and `SpanLog::total_us_samples` excludes shed/failed
+    /// lifecycles from the population.
     pub fn span_latency_percentiles(&self) -> Option<[f64; 3]> {
         Self::percentiles_s(&self.spans.total_us_samples())
     }
@@ -156,7 +230,7 @@ impl ServiceStats {
     /// Keep the first served run's marker stream + cycle count for the
     /// trace exporter.
     pub fn record_engine_sample(&self, r: &RunResult) {
-        let mut e = self.engine.lock().unwrap();
+        let mut e = lock_or_recover(&self.engine);
         if e.is_none() {
             *e = Some((r.markers.clone(), r.cycles));
         }
@@ -164,7 +238,7 @@ impl ServiceStats {
 
     /// The captured engine timeline, if any run was sampled.
     pub fn engine_sample(&self) -> Option<(Vec<(u32, u64)>, u64)> {
-        self.engine.lock().unwrap().clone()
+        lock_or_recover(&self.engine).clone()
     }
 }
 
@@ -196,11 +270,32 @@ pub struct ServeOptions {
     /// streams per request (fault-injection scenarios; see
     /// `robustness::replay` for the semantics).
     pub variation: Option<VariationParams>,
+    /// Bounded request-queue capacity (`--queue-cap N`): submits beyond
+    /// this depth shed with [`SubmitError::Overloaded`]. Must be >= 1.
+    pub queue_cap: usize,
+    /// Deterministic fault injection (`--chaos spec`): every worker's
+    /// backend is wrapped in a [`ChaosBackend`] seeded per (worker,
+    /// incarnation) from the plan.
+    pub chaos: Option<FaultPlan>,
+    /// Per-request attempt budget: first execution plus retries (after
+    /// transient errors) and requeues (after worker panics / breaker
+    /// trips). Exhausting it fails the request with a typed
+    /// [`ServeError`]. Must be >= 1.
+    pub max_attempts: u32,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { calibrate: false, macros: 1, batch: 1, linger_us: None, variation: None }
+        ServeOptions {
+            calibrate: false,
+            macros: 1,
+            batch: 1,
+            linger_us: None,
+            variation: None,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            chaos: None,
+            max_attempts: DEFAULT_MAX_ATTEMPTS,
+        }
     }
 }
 
@@ -257,21 +352,524 @@ impl LingerEstimator {
 }
 
 /// One queued unit of work: the request, its enqueue instant (host
-/// latency is measured from here), and where the answer goes.
+/// latency is measured from here, including across requeues), how many
+/// execution attempts it has consumed, and where the answer goes.
 struct Job {
     req: InferenceRequest,
     enqueued: Instant,
-    reply: mpsc::Sender<Result<InferenceResponse>>,
+    attempts: u32,
+    reply: mpsc::Sender<Result<InferenceResponse, ServeError>>,
 }
 
-/// The leader: owns worker threads, each with its own SoC (the chip is
-/// single-tenant; a fleet of workers models a fleet of edge devices).
+/// Why a worker thread returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WorkerExit {
+    /// Queue closed and drained — normal shutdown.
+    Shutdown,
+    /// A batch panicked (jobs requeued); supervisor should respawn.
+    Panicked,
+    /// The circuit breaker tripped; respawn *degraded*.
+    BreakerOpen,
+}
+
+/// Everything a worker thread needs besides its backend.
+#[derive(Clone)]
+struct WorkerContext {
+    queue: Arc<BoundedQueue<Job>>,
+    stats: Arc<ServiceStats>,
+    batch_cap: usize,
+    linger_fixed: Option<u64>,
+    max_attempts: u32,
+}
+
+/// Builds (and rebuilds) worker backends: the initial fleet at start,
+/// respawns after panics, and degraded respawns after breaker trips.
+struct BackendFactory {
+    program: Program,
+    /// The one shared fast simulator (fast deployments); `None` = cycle.
+    fast_shared: Option<Arc<FastSim>>,
+    variation: Option<VariationParams>,
+    chaos: Option<FaultPlan>,
+    macros: usize,
+    multi_worker: bool,
+}
+
+impl BackendFactory {
+    fn build(
+        &self,
+        worker: usize,
+        incarnation: u64,
+        degraded: bool,
+    ) -> Result<Box<dyn InferenceBackend>> {
+        let inner: Box<dyn InferenceBackend> = if let Some(sim) = &self.fast_shared {
+            if degraded && self.macros > 1 {
+                // Graceful degradation: re-plan this worker's execution
+                // over one fewer macro (logits are bit-identical for any
+                // split — the shard parity contract — so only throughput
+                // degrades). Snap calibration is deliberately dropped:
+                // the survivor plan has different timing, so the
+                // analytical estimate applies until recalibration.
+                let survivors = ShardPlan::even(&self.program.plan, self.macros - 1)?;
+                let mut fresh = FastSim::new(self.program.clone(), DramConfig::default())?
+                    .with_shard_plan(&survivors, false)?;
+                if self.multi_worker {
+                    fresh = fresh.with_batch_threads(1);
+                }
+                if let Some(v) = self.variation {
+                    fresh = fresh.with_variation(v);
+                }
+                Box::new(FastBackend::shared(Arc::new(fresh)))
+            } else {
+                Box::new(FastBackend::shared(Arc::clone(sim)))
+            }
+        } else {
+            // The cycle engine is the timing oracle, not the throughput
+            // path: degraded respawns rebuild it at full capacity.
+            let cb = CycleBackend::new(self.program.clone(), DramConfig::default())?;
+            Box::new(match self.variation {
+                Some(v) => cb.with_variation(v),
+                None => cb,
+            })
+        };
+        Ok(match self.chaos {
+            Some(plan) if !plan.is_noop() => Box::new(ChaosBackend::with_seed(
+                inner,
+                plan,
+                plan.worker_seed(worker, incarnation),
+            )),
+            _ => inner,
+        })
+    }
+}
+
+/// One worker's seat in the fleet, owned by the supervisor.
+struct WorkerSlot {
+    handle: Option<thread::JoinHandle<WorkerExit>>,
+    incarnation: u64,
+    needs_respawn: bool,
+    not_before: Option<Instant>,
+    degraded: bool,
+}
+
+/// The leader: owns the bounded queue, the worker fleet, and the
+/// supervisor that keeps the fleet alive.
 pub struct Coordinator {
-    /// `None` once shut down: `submit` then returns an error instead of
-    /// panicking on the closed channel.
-    tx: Option<mpsc::Sender<Job>>,
+    queue: Arc<BoundedQueue<Job>>,
     pub stats: Arc<ServiceStats>,
-    workers: Vec<thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    slots: Arc<Mutex<Vec<WorkerSlot>>>,
+    supervisor: Option<thread::JoinHandle<()>>,
+}
+
+/// Record a terminal non-served lifecycle (shed/deadline/failed) so the
+/// trace still shows what happened to the request.
+fn record_terminal_span(
+    stats: &ServiceStats,
+    worker: usize,
+    batch_size: usize,
+    job: &Job,
+    outcome: SpanOutcome,
+    assembly_start: Instant,
+    assembled: Instant,
+    exec_start: Instant,
+    exec_end: Instant,
+) {
+    if !telemetry::enabled() {
+        return;
+    }
+    let enqueue_us = stats.spans.us_since_epoch(job.enqueued);
+    let host_us = job.enqueued.elapsed().as_micros() as u64;
+    stats.spans.record(RequestSpan {
+        req_id: job.req.id,
+        worker,
+        batch_size,
+        enqueue_us,
+        assembly_start_us: stats.spans.us_since_epoch(assembly_start),
+        assembled_us: stats.spans.us_since_epoch(assembled),
+        exec_start_us: stats.spans.us_since_epoch(exec_start),
+        exec_end_us: stats.spans.us_since_epoch(exec_end),
+        respond_us: enqueue_us + host_us,
+        shard_fires: Vec::new(),
+        outcome,
+    });
+}
+
+/// The worker loop: assemble a micro-batch, execute it under
+/// `catch_unwind` with retry + breaker accounting, respond per job.
+fn run_worker(
+    wi: usize,
+    incarnation: u64,
+    mut be: Box<dyn InferenceBackend>,
+    ctx: WorkerContext,
+) -> WorkerExit {
+    let bname = be.name();
+    // Registry handles resolved once per worker; recording through them
+    // is lock-free (and a no-op when telemetry is disabled).
+    let telem = telemetry::global();
+    let m_requests = telem.counter("serve.requests");
+    let m_batches = telem.counter("serve.batches");
+    let m_retries = telem.counter("serve.retries");
+    let m_shed_deadline = telem.counter("serve.shed.deadline");
+    let m_host = telem.histogram("serve.host_latency_us", Histogram::us_bounds());
+    let m_exec = telem.histogram("serve.execute_us", Histogram::us_bounds());
+    let g_linger = telem.gauge("serve.linger_window_us");
+    let g_depth = telem.gauge("serve.queue_depth");
+    let mut linger = LingerEstimator::new(ctx.linger_fixed);
+    let mut last_submit: Option<Instant> = None;
+    let mut breaker = CircuitBreaker::new(BREAKER_THRESHOLD);
+    // Deterministic backoff jitter, decorrelated across incarnations.
+    let mut backoff_rng = Rng::new(0xB0FF ^ ((wi as u64) << 32) ^ incarnation);
+    loop {
+        // Drain the queue into one coalesced micro-batch: block for the
+        // first request, then keep popping until the cap is hit, the
+        // linger window closes, or the queue goes quiet.
+        let Some(first) = ctx.queue.pop_wait() else {
+            return WorkerExit::Shutdown; // closed and drained
+        };
+        let mut jobs: Vec<Job> = Vec::with_capacity(ctx.batch_cap);
+        jobs.push(first);
+        // The assembly window opens when the first job lands here.
+        let assembly_start = Instant::now();
+        let window_closes = assembly_start + linger.window();
+        while jobs.len() < ctx.batch_cap {
+            let now = Instant::now();
+            if now >= window_closes {
+                break;
+            }
+            match ctx.queue.pop_timeout(window_closes - now) {
+                Some(job) => jobs.push(job),
+                None => break,
+            }
+        }
+        g_depth.set(ctx.queue.len() as f64);
+        // Feed the adaptive linger policy with the arrival process
+        // (submit instants, not drain instants, so the estimate is
+        // independent of worker scheduling).
+        for job in &jobs {
+            if let Some(prev) = last_submit {
+                let gap = job.enqueued.saturating_duration_since(prev);
+                linger.observe_gap_us(gap.as_secs_f64() * 1e6);
+            }
+            last_submit = Some(job.enqueued);
+        }
+        let assembled = Instant::now();
+        g_linger.set(linger.window().as_secs_f64() * 1e6);
+        // Dequeue-time deadline check: expired work is dropped here, not
+        // computed — the whole point of carrying a deadline.
+        let mut live: Vec<Job> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            match job.req.deadline {
+                Some(dl) if assembled >= dl => {
+                    ctx.stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                    m_shed_deadline.inc();
+                    record_terminal_span(
+                        &ctx.stats,
+                        wi,
+                        0,
+                        &job,
+                        SpanOutcome::Deadline,
+                        assembly_start,
+                        assembled,
+                        assembled,
+                        assembled,
+                    );
+                    let waited_us = job.enqueued.elapsed().as_micros() as u64;
+                    let _ = job.reply.send(Err(ServeError::DeadlineExceeded { waited_us }));
+                }
+                _ => live.push(job),
+            }
+        }
+        let mut jobs = live;
+        if jobs.is_empty() {
+            continue;
+        }
+        ctx.stats.record_batch(jobs.len());
+        m_batches.inc();
+        // Execute with retry: transient errors back off and try again
+        // (dropping jobs whose attempt budget is exhausted); a panic
+        // requeues the batch and kills this worker; enough consecutive
+        // faults trip the breaker either way.
+        let mut batch_attempts: u32 = 0;
+        let finished = loop {
+            let exec_start = Instant::now();
+            let result = {
+                let audios: Vec<&[f32]> = jobs.iter().map(|j| j.req.audio.as_slice()).collect();
+                catch_unwind(AssertUnwindSafe(|| be.run_batch(&audios)))
+            };
+            let exec_end = Instant::now();
+            m_exec.observe(exec_end.duration_since(exec_start).as_micros() as u64);
+            match result {
+                Err(_panic) => {
+                    ctx.stats.worker_panics.fetch_add(1, Ordering::Relaxed);
+                    let tripped = breaker.record_fault();
+                    let spent = batch_attempts + 1;
+                    for mut job in jobs {
+                        job.attempts += spent;
+                        if job.attempts >= ctx.max_attempts {
+                            ctx.stats.failed.fetch_add(1, Ordering::Relaxed);
+                            record_terminal_span(
+                                &ctx.stats,
+                                wi,
+                                1,
+                                &job,
+                                SpanOutcome::Failed,
+                                assembly_start,
+                                assembled,
+                                exec_start,
+                                exec_end,
+                            );
+                            let attempts = job.attempts;
+                            let _ = job.reply.send(Err(ServeError::WorkerPanic { attempts }));
+                        } else {
+                            ctx.stats.requeues.fetch_add(1, Ordering::Relaxed);
+                            if let Err(PushError::Closed(job) | PushError::Full(job)) =
+                                ctx.queue.push_front(job)
+                            {
+                                let _ = job.reply.send(Err(ServeError::Shutdown));
+                            }
+                        }
+                    }
+                    return if tripped { WorkerExit::BreakerOpen } else { WorkerExit::Panicked };
+                }
+                Ok(Ok(runs)) if runs.len() == jobs.len() => {
+                    breaker.record_success();
+                    break Some((runs, exec_start, exec_end));
+                }
+                Ok(Ok(runs)) => {
+                    // Contract violation, not a transient: fail typed.
+                    let got = runs.len();
+                    let want = jobs.len();
+                    for job in jobs {
+                        ctx.stats.failed.fetch_add(1, Ordering::Relaxed);
+                        record_terminal_span(
+                            &ctx.stats,
+                            wi,
+                            want,
+                            &job,
+                            SpanOutcome::Failed,
+                            assembly_start,
+                            assembled,
+                            exec_start,
+                            exec_end,
+                        );
+                        let _ = job.reply.send(Err(ServeError::Backend {
+                            attempts: job.attempts + batch_attempts + 1,
+                            message: format!(
+                                "backend returned {got} results for a batch of {want}"
+                            ),
+                        }));
+                    }
+                    break None;
+                }
+                Ok(Err(e)) => {
+                    batch_attempts += 1;
+                    let tripped = breaker.record_fault();
+                    if tripped {
+                        // Hand the batch back and exit for a degraded
+                        // respawn; jobs keep their attempt accounting.
+                        for mut job in jobs {
+                            job.attempts += batch_attempts;
+                            if job.attempts >= ctx.max_attempts {
+                                ctx.stats.failed.fetch_add(1, Ordering::Relaxed);
+                                record_terminal_span(
+                                    &ctx.stats,
+                                    wi,
+                                    1,
+                                    &job,
+                                    SpanOutcome::Failed,
+                                    assembly_start,
+                                    assembled,
+                                    exec_start,
+                                    exec_end,
+                                );
+                                let attempts = job.attempts;
+                                let _ = job.reply.send(Err(ServeError::Backend {
+                                    attempts,
+                                    message: format!("{e:#}"),
+                                }));
+                            } else {
+                                ctx.stats.requeues.fetch_add(1, Ordering::Relaxed);
+                                if let Err(PushError::Closed(job) | PushError::Full(job)) =
+                                    ctx.queue.push_front(job)
+                                {
+                                    let _ = job.reply.send(Err(ServeError::Shutdown));
+                                }
+                            }
+                        }
+                        return WorkerExit::BreakerOpen;
+                    }
+                    // Fail jobs whose budget is spent; retry the rest.
+                    let mut keep = Vec::with_capacity(jobs.len());
+                    for job in jobs {
+                        if job.attempts + batch_attempts >= ctx.max_attempts {
+                            ctx.stats.failed.fetch_add(1, Ordering::Relaxed);
+                            record_terminal_span(
+                                &ctx.stats,
+                                wi,
+                                1,
+                                &job,
+                                SpanOutcome::Failed,
+                                assembly_start,
+                                assembled,
+                                exec_start,
+                                exec_end,
+                            );
+                            let _ = job.reply.send(Err(ServeError::Backend {
+                                attempts: job.attempts + batch_attempts,
+                                message: format!("{e:#}"),
+                            }));
+                        } else {
+                            keep.push(job);
+                        }
+                    }
+                    jobs = keep;
+                    if jobs.is_empty() {
+                        break None;
+                    }
+                    ctx.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    m_retries.inc();
+                    // Capped exponential backoff with deterministic
+                    // jitter (up to +50%) before the next attempt.
+                    let exp = batch_attempts.saturating_sub(1).min(6);
+                    let base = (RETRY_BASE_US << exp).min(RETRY_MAX_US);
+                    let jitter = backoff_rng.below(base / 2 + 1);
+                    thread::sleep(Duration::from_micros(base + jitter));
+                }
+            }
+        };
+        let Some((runs, exec_start, exec_end)) = finished else {
+            continue;
+        };
+        if telemetry::enabled() {
+            if let Some(r) = runs.first() {
+                ctx.stats.record_engine_sample(r);
+            }
+        }
+        let batch_size = jobs.len();
+        for (job, r) in jobs.iter().zip(&runs) {
+            // Post-exec deadline check: the result exists but arrived
+            // too late to matter — answer typed, don't pretend.
+            if let Some(dl) = job.req.deadline {
+                if exec_end >= dl {
+                    ctx.stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                    m_shed_deadline.inc();
+                    record_terminal_span(
+                        &ctx.stats,
+                        wi,
+                        batch_size,
+                        job,
+                        SpanOutcome::Deadline,
+                        assembly_start,
+                        assembled,
+                        exec_start,
+                        exec_end,
+                    );
+                    let waited_us = job.enqueued.elapsed().as_micros() as u64;
+                    let _ = job.reply.send(Err(ServeError::DeadlineExceeded { waited_us }));
+                    continue;
+                }
+            }
+            let host = job.enqueued.elapsed().as_secs_f64();
+            let resp = InferenceResponse::from_run(job.req.id, r, job.req.label, host, bname);
+            ctx.stats.served.fetch_add(1, Ordering::Relaxed);
+            ctx.stats.chip_cycles.fetch_add(r.cycles, Ordering::Relaxed);
+            ctx.stats.record_host_latency(host);
+            m_requests.inc();
+            m_host.observe((host * 1e6) as u64);
+            if telemetry::enabled() {
+                let enqueue_us = ctx.stats.spans.us_since_epoch(job.enqueued);
+                ctx.stats.spans.record(RequestSpan {
+                    req_id: job.req.id,
+                    worker: wi,
+                    batch_size,
+                    enqueue_us,
+                    assembly_start_us: ctx.stats.spans.us_since_epoch(assembly_start),
+                    assembled_us: ctx.stats.spans.us_since_epoch(assembled),
+                    exec_start_us: ctx.stats.spans.us_since_epoch(exec_start),
+                    exec_end_us: ctx.stats.spans.us_since_epoch(exec_end),
+                    // Defined as enqueue + the host sample so span totals
+                    // agree exactly with the percentiles.
+                    respond_us: enqueue_us + (host * 1e6) as u64,
+                    shard_fires: r.shard_fires.clone(),
+                    outcome: if job.attempts + batch_attempts > 0 {
+                        SpanOutcome::Retried
+                    } else {
+                        SpanOutcome::Ok
+                    },
+                });
+            }
+            for (shard, fires) in ctx.stats.shard_fires.iter().zip(&r.shard_fires) {
+                shard.fetch_add(*fires, Ordering::Relaxed);
+            }
+            if let Some(c) = resp.correct {
+                ctx.stats.labeled.fetch_add(1, Ordering::Relaxed);
+                if c {
+                    ctx.stats.correct.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            let _ = job.reply.send(Ok(resp));
+        }
+    }
+}
+
+/// The supervisor loop: joins finished workers, classifies their exit,
+/// and respawns them (degraded after a breaker trip) until shutdown.
+fn supervise(
+    slots: Arc<Mutex<Vec<WorkerSlot>>>,
+    factory: Arc<BackendFactory>,
+    ctx: WorkerContext,
+    shutdown: Arc<AtomicBool>,
+) {
+    while !shutdown.load(Ordering::SeqCst) {
+        {
+            let mut slots = lock_or_recover(&slots);
+            for (wi, slot) in slots.iter_mut().enumerate() {
+                if slot.handle.as_ref().is_some_and(|h| h.is_finished()) {
+                    let exit = slot
+                        .handle
+                        .take()
+                        .and_then(|h| h.join().ok())
+                        // A worker thread dying outside catch_unwind is a
+                        // bug, but the supervisor treats it as a panic
+                        // and respawns anyway.
+                        .unwrap_or(WorkerExit::Panicked);
+                    match exit {
+                        WorkerExit::Shutdown => {}
+                        WorkerExit::Panicked => {
+                            slot.needs_respawn = true;
+                            slot.not_before = Some(Instant::now() + PANIC_RESPAWN_COOLDOWN);
+                        }
+                        WorkerExit::BreakerOpen => {
+                            ctx.stats.breaker_trips.fetch_add(1, Ordering::Relaxed);
+                            slot.needs_respawn = true;
+                            slot.degraded = true;
+                            slot.not_before = Some(Instant::now() + BREAKER_COOLDOWN);
+                        }
+                    }
+                }
+                let cooled = slot.not_before.map_or(true, |t| Instant::now() >= t);
+                if slot.needs_respawn && cooled && !shutdown.load(Ordering::SeqCst) {
+                    slot.incarnation += 1;
+                    match factory.build(wi, slot.incarnation, slot.degraded) {
+                        Ok(be) => {
+                            let wctx = ctx.clone();
+                            let incarnation = slot.incarnation;
+                            slot.handle = Some(thread::spawn(move || {
+                                run_worker(wi, incarnation, be, wctx)
+                            }));
+                            slot.needs_respawn = false;
+                            slot.not_before = None;
+                            ctx.stats.respawns.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // Construction failed (transient resource issue):
+                        // leave needs_respawn set and retry next tick.
+                        Err(_) => {}
+                    }
+                }
+            }
+        }
+        thread::sleep(SUPERVISOR_TICK);
+    }
 }
 
 impl Coordinator {
@@ -293,8 +891,9 @@ impl Coordinator {
     }
 
     /// `start_with` plus [`ServeOptions`] (`--calibrate`, `--macros`,
-    /// `--batch` on the CLI). Rejects degenerate deployments up front:
-    /// zero workers or a zero micro-batch cap could never serve a
+    /// `--batch`, `--queue-cap`, `--chaos` on the CLI). Rejects
+    /// degenerate deployments up front: zero workers, a zero micro-batch
+    /// cap, a zero queue, or a zero attempt budget could never serve a
     /// request, so they are errors here rather than a silent hang.
     pub fn start_with_options(
         model: &KwsModel,
@@ -309,14 +908,20 @@ impl Coordinator {
         if opts.batch == 0 {
             bail!("micro-batch cap must be >= 1 (got --batch 0; use 1 to disable batching)");
         }
+        if opts.queue_cap == 0 {
+            bail!("queue capacity must be >= 1 (got --queue-cap 0)");
+        }
+        if opts.max_attempts == 0 {
+            bail!("attempt budget must be >= 1 (got --max-attempts 0)");
+        }
         let program = build_kws_program_sharded(model, opt, opts.macros.max(1))?;
-        // Build every worker's backend up front so construction errors
+        // Build the shared fast simulator up front so construction errors
         // surface here with their real cause (not as a silent worker
         // exit). The functional simulator is stateless across requests
         // (`FastSim::infer` is `&self`): decode the image and run the
         // analytical walk once, then share the one instance across every
         // worker behind an `Arc`. The cycle SoC is stateful, so each
-        // cycle worker gets its own instance.
+        // cycle worker gets its own instance from the factory.
         let fast_shared: Option<Arc<FastSim>> = match kind {
             BackendKind::Fast => {
                 let mut sim = FastSim::new(program.clone(), DramConfig::default())?;
@@ -343,189 +948,102 @@ impl Coordinator {
             }
             BackendKind::Cycle => None,
         };
-        let mut backends: Vec<Box<dyn InferenceBackend>> = Vec::new();
-        for _ in 0..n_workers {
-            let be: Box<dyn InferenceBackend> = match &fast_shared {
-                Some(sim) => Box::new(FastBackend::shared(Arc::clone(sim))),
-                None => {
-                    let cb = CycleBackend::new(program.clone(), DramConfig::default())?;
-                    Box::new(match opts.variation {
-                        Some(v) => cb.with_variation(v),
-                        None => cb,
-                    })
-                }
-            };
-            backends.push(be);
+        let factory = Arc::new(BackendFactory {
+            program,
+            fast_shared,
+            variation: opts.variation,
+            chaos: opts.chaos,
+            macros: opts.macros.max(1),
+            multi_worker: n_workers > 1,
+        });
+        // Build every worker's initial backend before spawning anything
+        // so a bad configuration fails the whole start.
+        let mut backends = Vec::with_capacity(n_workers);
+        for wi in 0..n_workers {
+            backends.push(factory.build(wi, 0, false)?);
         }
         let stats = Arc::new(ServiceStats::sized(opts.macros.max(1), opts.batch));
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let linger_fixed = opts.linger_us;
-        let batch_cap = opts.batch;
-        let mut workers = Vec::new();
-        for (wi, mut be) in backends.into_iter().enumerate() {
-            let rx = Arc::clone(&rx);
-            let stats = Arc::clone(&stats);
-            workers.push(thread::spawn(move || {
-                let bname = be.name();
-                // Registry handles resolved once per worker; recording
-                // through them is lock-free (and a no-op when telemetry
-                // is disabled).
-                let telem = telemetry::global();
-                let m_requests = telem.counter("serve.requests");
-                let m_batches = telem.counter("serve.batches");
-                let m_host = telem.histogram("serve.host_latency_us", Histogram::us_bounds());
-                let m_exec = telem.histogram("serve.execute_us", Histogram::us_bounds());
-                let g_linger = telem.gauge("serve.linger_window_us");
-                let mut linger = LingerEstimator::new(linger_fixed);
-                let mut last_submit: Option<Instant> = None;
-                loop {
-                    // Drain the queue into one coalesced micro-batch:
-                    // block for the first request, then keep the channel
-                    // (and the drain lock) until the cap is hit, the
-                    // linger window closes, or the queue goes quiet.
-                    let mut jobs: Vec<Job> = Vec::with_capacity(batch_cap);
-                    let assembly_start;
-                    {
-                        let rx = rx.lock().unwrap();
-                        match rx.recv() {
-                            Ok(job) => jobs.push(job),
-                            Err(_) => break, // coordinator shut down
-                        }
-                        // The assembly window opens when the first job
-                        // lands on this worker.
-                        assembly_start = Instant::now();
-                        let deadline = assembly_start + linger.window();
-                        while jobs.len() < batch_cap {
-                            match rx.try_recv() {
-                                Ok(job) => jobs.push(job),
-                                Err(TryRecvError::Disconnected) => break,
-                                Err(TryRecvError::Empty) => {
-                                    let now = Instant::now();
-                                    if now >= deadline {
-                                        break;
-                                    }
-                                    match rx.recv_timeout(deadline - now) {
-                                        Ok(job) => jobs.push(job),
-                                        Err(_) => break,
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    // Feed the adaptive linger policy with the arrival
-                    // process (submit instants, not drain instants, so
-                    // the estimate is independent of worker scheduling).
-                    for job in &jobs {
-                        if let Some(prev) = last_submit {
-                            let gap = job.enqueued.saturating_duration_since(prev);
-                            linger.observe_gap_us(gap.as_secs_f64() * 1e6);
-                        }
-                        last_submit = Some(job.enqueued);
-                    }
-                    let assembled = Instant::now();
-                    g_linger.set(linger.window().as_secs_f64() * 1e6);
-                    let audios: Vec<&[f32]> =
-                        jobs.iter().map(|j| j.req.audio.as_slice()).collect();
-                    stats.record_batch(jobs.len());
-                    m_batches.inc();
-                    let exec_start = Instant::now();
-                    let result = be.run_batch(&audios);
-                    let exec_end = Instant::now();
-                    m_exec.observe(exec_end.duration_since(exec_start).as_micros() as u64);
-                    match result {
-                        Ok(runs) if runs.len() == jobs.len() => {
-                            if telemetry::enabled() {
-                                if let Some(r) = runs.first() {
-                                    stats.record_engine_sample(r);
-                                }
-                            }
-                            for (job, r) in jobs.iter().zip(&runs) {
-                                let host = job.enqueued.elapsed().as_secs_f64();
-                                let resp = InferenceResponse::from_run(
-                                    job.req.id,
-                                    r,
-                                    job.req.label,
-                                    host,
-                                    bname,
-                                );
-                                stats.served.fetch_add(1, Ordering::Relaxed);
-                                stats.chip_cycles.fetch_add(r.cycles, Ordering::Relaxed);
-                                stats.record_host_latency(host);
-                                m_requests.inc();
-                                m_host.observe((host * 1e6) as u64);
-                                if telemetry::enabled() {
-                                    let enqueue_us = stats.spans.us_since_epoch(job.enqueued);
-                                    stats.spans.record(RequestSpan {
-                                        req_id: job.req.id,
-                                        worker: wi,
-                                        batch_size: jobs.len(),
-                                        enqueue_us,
-                                        assembly_start_us: stats
-                                            .spans
-                                            .us_since_epoch(assembly_start),
-                                        assembled_us: stats.spans.us_since_epoch(assembled),
-                                        exec_start_us: stats.spans.us_since_epoch(exec_start),
-                                        exec_end_us: stats.spans.us_since_epoch(exec_end),
-                                        // Defined as enqueue + the host
-                                        // sample so span totals agree
-                                        // exactly with the percentiles.
-                                        respond_us: enqueue_us + (host * 1e6) as u64,
-                                        shard_fires: r.shard_fires.clone(),
-                                    });
-                                }
-                                for (shard, fires) in
-                                    stats.shard_fires.iter().zip(&r.shard_fires)
-                                {
-                                    shard.fetch_add(*fires, Ordering::Relaxed);
-                                }
-                                if let Some(c) = resp.correct {
-                                    stats.labeled.fetch_add(1, Ordering::Relaxed);
-                                    if c {
-                                        stats.correct.fetch_add(1, Ordering::Relaxed);
-                                    }
-                                }
-                                let _ = job.reply.send(Ok(resp));
-                            }
-                        }
-                        Ok(runs) => {
-                            for job in &jobs {
-                                let _ = job.reply.send(Err(anyhow!(
-                                    "backend returned {} results for a batch of {}",
-                                    runs.len(),
-                                    jobs.len()
-                                )));
-                            }
-                        }
-                        Err(e) => {
-                            for job in &jobs {
-                                let _ = job.reply.send(Err(anyhow!(
-                                    "batched inference failed: {e}"
-                                )));
-                            }
-                        }
-                    }
+        let queue = Arc::new(BoundedQueue::new(opts.queue_cap));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let ctx = WorkerContext {
+            queue: Arc::clone(&queue),
+            stats: Arc::clone(&stats),
+            batch_cap: opts.batch,
+            linger_fixed: opts.linger_us,
+            max_attempts: opts.max_attempts,
+        };
+        let slots: Vec<WorkerSlot> = backends
+            .into_iter()
+            .enumerate()
+            .map(|(wi, be)| {
+                let ctx = ctx.clone();
+                WorkerSlot {
+                    handle: Some(thread::spawn(move || run_worker(wi, 0, be, ctx))),
+                    incarnation: 0,
+                    needs_respawn: false,
+                    not_before: None,
+                    degraded: false,
                 }
-            }));
-        }
-        Ok(Coordinator { tx: Some(tx), stats, workers })
+            })
+            .collect();
+        let slots = Arc::new(Mutex::new(slots));
+        let supervisor = {
+            let slots = Arc::clone(&slots);
+            let shutdown = Arc::clone(&shutdown);
+            let ctx = ctx.clone();
+            Some(thread::spawn(move || supervise(slots, factory, ctx, shutdown)))
+        };
+        Ok(Coordinator { queue, stats, shutdown, slots, supervisor })
     }
 
-    /// Submit one request; returns a receiver for the response, or an
-    /// error if the coordinator has shut down (no panic).
+    /// Submit one request; returns a receiver for the (typed) response.
+    /// Admission can refuse: [`SubmitError::Overloaded`] when the
+    /// bounded queue is full (the request is shed immediately, never
+    /// queued), [`SubmitError::Shutdown`] after shutdown.
     pub fn submit(
         &self,
         req: InferenceRequest,
-    ) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
-        let id = req.id;
-        let tx = self
-            .tx
-            .as_ref()
-            .ok_or_else(|| anyhow!("coordinator is shut down (request {id} rejected)"))?;
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse, ServeError>>, SubmitError> {
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Err(SubmitError::Shutdown);
+        }
         let (rtx, rrx) = mpsc::channel();
-        tx.send(Job { req, enqueued: Instant::now(), reply: rtx })
-            .map_err(|_| anyhow!("coordinator workers are gone (request {id} rejected)"))?;
-        Ok(rrx)
+        let now = Instant::now();
+        let job = Job { req, enqueued: now, attempts: 0, reply: rtx };
+        match self.queue.push(job) {
+            Ok(()) => {
+                if telemetry::enabled() {
+                    telemetry::global().gauge("serve.queue_depth").set(self.queue.len() as f64);
+                }
+                Ok(rrx)
+            }
+            Err(PushError::Full(job)) => {
+                self.stats.shed_overload.fetch_add(1, Ordering::Relaxed);
+                if telemetry::enabled() {
+                    telemetry::global().counter("serve.shed.overload").inc();
+                    let t = self.stats.spans.us_since_epoch(now);
+                    self.stats.spans.record(RequestSpan {
+                        req_id: job.req.id,
+                        // Shed before any worker saw it.
+                        worker: usize::MAX,
+                        batch_size: 0,
+                        enqueue_us: t,
+                        assembly_start_us: t,
+                        assembled_us: t,
+                        exec_start_us: t,
+                        exec_end_us: t,
+                        respond_us: t,
+                        shard_fires: Vec::new(),
+                        outcome: SpanOutcome::Shed,
+                    });
+                }
+                Err(SubmitError::Overloaded {
+                    depth: self.queue.len(),
+                    cap: self.queue.capacity(),
+                })
+            }
+            Err(PushError::Closed(_)) => Err(SubmitError::Shutdown),
+        }
     }
 
     /// Serve a whole batch, preserving order. An empty batch returns
@@ -535,12 +1053,14 @@ impl Coordinator {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
-        let rxs: Vec<_> = reqs
+        let rxs = reqs
             .into_iter()
             .map(|r| self.submit(r))
-            .collect::<Result<Vec<_>>>()?;
+            .collect::<Result<Vec<_>, SubmitError>>()?;
         rxs.into_iter()
-            .map(|rx| rx.recv().context("worker dropped")?)
+            .map(|rx| -> Result<InferenceResponse> {
+                Ok(rx.recv().context("worker dropped")??)
+            })
             .collect()
     }
 
@@ -550,12 +1070,45 @@ impl Coordinator {
         (l > 0).then(|| self.stats.correct.load(Ordering::Relaxed) as f64 / l as f64)
     }
 
-    /// Shut down: drop the queue and join workers. Subsequent `submit`
-    /// calls return an error.
+    /// Current bounded-queue depth (admitted, not yet dequeued).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// How many workers are currently running degraded (reduced shard
+    /// capacity after a breaker trip).
+    pub fn degraded_workers(&self) -> usize {
+        lock_or_recover(&self.slots).iter().filter(|s| s.degraded).count()
+    }
+
+    /// Shut down: stop admissions, fail everything still queued with an
+    /// explicit [`ServeError::Shutdown`] (no caller is left holding a
+    /// dead channel), then join the supervisor and workers. Admitted
+    /// work a worker already holds still completes. Subsequent `submit`
+    /// calls return [`SubmitError::Shutdown`].
     pub fn shutdown(&mut self) {
-        self.tx = None;
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.close();
+        // Typed drain: every job still queued gets an explicit shutdown
+        // answer instead of a bare RecvError. (Jobs a worker pops in the
+        // close/drain race are served normally — also fine.)
+        for job in self.queue.drain() {
+            let _ = job.reply.send(Err(ServeError::Shutdown));
+        }
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
+        let handles: Vec<_> = {
+            let mut slots = lock_or_recover(&self.slots);
+            slots.iter_mut().filter_map(|s| s.handle.take()).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        // Belt and braces: a worker that died right at the end may have
+        // requeued jobs after the first drain.
+        for job in self.queue.drain() {
+            let _ = job.reply.send(Err(ServeError::Shutdown));
         }
     }
 }
@@ -610,6 +1163,7 @@ mod tests {
                 id: i,
                 audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
                 label: None,
+                deadline: None,
             })
             .collect();
         let resps = coord.serve_batch(reqs).unwrap();
@@ -630,7 +1184,7 @@ mod tests {
         let mut coord = Coordinator::start(&m, OptLevel::FULL, 4).unwrap();
         let audio = crate::model::dataset::synth_utterance(5, 1, 16000, 0.3);
         let reqs: Vec<_> = (0..8)
-            .map(|i| InferenceRequest { id: i, audio: audio.clone(), label: None })
+            .map(|i| InferenceRequest { id: i, audio: audio.clone(), label: None, deadline: None })
             .collect();
         let resps = coord.serve_batch(reqs).unwrap();
         for r in &resps[1..] {
@@ -656,6 +1210,7 @@ mod tests {
                         0.3,
                     ),
                     label: None,
+                    deadline: None,
                 })
                 .collect()
         };
@@ -682,11 +1237,13 @@ mod tests {
             id,
             audio: crate::model::dataset::synth_utterance(1, 2, 16000, 0.3),
             label: None,
+            deadline: None,
         };
         let rx = coord.submit(req(0)).unwrap();
         assert!(rx.recv().unwrap().is_ok());
         coord.shutdown();
         let err = coord.submit(req(1)).unwrap_err();
+        assert_eq!(err, SubmitError::Shutdown);
         assert!(err.to_string().contains("shut down"), "{err}");
         assert!(coord.serve_batch(vec![req(2)]).is_err());
     }
@@ -698,7 +1255,7 @@ mod tests {
         let m = fake_model();
         let audio = crate::model::dataset::synth_utterance(4, 11, 16000, 0.3);
         let req = || {
-            vec![InferenceRequest { id: 0, audio: audio.clone(), label: None }]
+            vec![InferenceRequest { id: 0, audio: audio.clone(), label: None, deadline: None }]
         };
         let mut cyc = Coordinator::start_with(&m, OptLevel::FULL, 1, BackendKind::Cycle).unwrap();
         let want = cyc.serve_batch(req()).unwrap();
@@ -739,6 +1296,7 @@ mod tests {
                     id: i,
                     audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
                     label: None,
+                    deadline: None,
                 })
                 .collect()
         };
@@ -791,6 +1349,24 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("--batch 0"), "{err}");
+        let err = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            2,
+            BackendKind::Fast,
+            ServeOptions { queue_cap: 0, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("--queue-cap 0"), "{err}");
+        let err = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            2,
+            BackendKind::Fast,
+            ServeOptions { max_attempts: 0, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("--max-attempts 0"), "{err}");
     }
 
     #[test]
@@ -802,6 +1378,7 @@ mod tests {
                     id: i,
                     audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
                     label: Some((i % 12) as i32),
+                    deadline: None,
                 })
                 .collect()
         };
@@ -884,6 +1461,7 @@ mod tests {
                     id: i,
                     audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
                     label: None,
+                    deadline: None,
                 })
                 .collect()
         };
@@ -940,6 +1518,7 @@ mod tests {
                     id: i,
                     audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
                     label: None,
+                    deadline: None,
                 })
                 .collect()
         };
@@ -1001,6 +1580,7 @@ mod tests {
                     id: i,
                     audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
                     label: None,
+                    deadline: None,
                 })
                 .collect();
             let _ = coord.serve_batch(reqs).unwrap();
@@ -1013,6 +1593,7 @@ mod tests {
                 assert!(s.respond_us >= s.enqueue_us, "{s:?}");
                 assert!(!s.shard_fires.is_empty());
                 assert!(s.batch_size >= 1);
+                assert_eq!(s.outcome, SpanOutcome::Ok, "clean serving: {s:?}");
             }
             // Span-derived percentiles agree *exactly* with the host
             // samples (same numbers, not re-measured).
@@ -1034,6 +1615,7 @@ mod tests {
                 id: 0,
                 audio: crate::model::dataset::synth_utterance(0, 1, 16000, 0.3),
                 label: None,
+                deadline: None,
             };
             let _ = coord.serve_batch(vec![req]).unwrap();
             coord.shutdown();
@@ -1052,11 +1634,52 @@ mod tests {
                 id: i,
                 audio: crate::model::dataset::synth_utterance(0, i, 16000, 0.3),
                 label: Some(0),
+                deadline: None,
             })
             .collect();
         let _ = coord.serve_batch(reqs).unwrap();
         assert_eq!(coord.stats.labeled.load(Ordering::Relaxed), 4);
         assert!(coord.accuracy().is_some());
         coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending_requests_with_typed_error() {
+        // Regression (satellite): shutdown used to drop queued requests'
+        // reply channels, leaving callers with a bare RecvError. Now the
+        // drain answers each with ServeError::Shutdown. A stalled worker
+        // (100% stall chaos, long stall) pins the queue so requests are
+        // still pending when shutdown runs.
+        let m = fake_model();
+        let chaos = FaultPlan { stall: 1.0, stall_ms: 300, ..Default::default() };
+        let mut coord = Coordinator::start_with_options(
+            &m,
+            OptLevel::FULL,
+            1,
+            BackendKind::Fast,
+            ServeOptions { chaos: Some(chaos), linger_us: Some(0), ..Default::default() },
+        )
+        .unwrap();
+        let req = |id| InferenceRequest {
+            id,
+            audio: crate::model::dataset::synth_utterance(1, 2, 16000, 0.3),
+            label: None,
+            deadline: None,
+        };
+        // First request occupies the (stalled) worker; the rest queue up.
+        let rx0 = coord.submit(req(0)).unwrap();
+        thread::sleep(Duration::from_millis(30));
+        let pending: Vec<_> = (1..4).map(|i| coord.submit(req(i)).unwrap()).collect();
+        coord.shutdown();
+        // The in-flight request finishes (admitted work completes)...
+        assert!(rx0.recv().unwrap().is_ok(), "in-flight request must still be served");
+        // ...and every queued request gets a typed Shutdown, not a hang
+        // or a dead channel.
+        for rx in pending {
+            match rx.recv().expect("reply channel must not be dropped") {
+                Err(ServeError::Shutdown) => {}
+                other => panic!("expected ServeError::Shutdown, got {other:?}"),
+            }
+        }
     }
 }

@@ -61,6 +61,7 @@ pub mod fsim;
 pub mod isa;
 pub mod mem;
 pub mod model;
+pub mod resilience;
 pub mod robustness;
 pub mod runtime;
 pub mod sim;

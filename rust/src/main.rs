@@ -11,11 +11,22 @@
 //!   serve      threaded coordinator demo; --backend cycle|fast, --batch B
 //!              turns the workers into micro-batching schedulers,
 //!              --linger-us N overrides the adaptive straggler window,
-//!              --variation SPEC serves disturbed inferences
+//!              --variation SPEC serves disturbed inferences,
+//!              --chaos SPEC injects deterministic faults, --queue-cap N
+//!              bounds admission, --deadline-ms D stamps per-request
+//!              deadlines, --max-attempts K caps retries
 //!   sweep      Monte-Carlo robustness sweep over (sigma x nl x mapping x
 //!              seed) through the variation-aware fast path; emits
-//!              BENCH_robustness.json (--quick, --check, grid flags)
+//!              BENCH_robustness.json with bootstrap CIs (--quick,
+//!              --check, grid flags, --seeds K)
+//!   soak       chaos soak across the standard fault grid (panics,
+//!              transients, stalls, deadlines, overload); emits
+//!              BENCH_resilience.json (--quick, --check)
 //!   disasm     decode a hex instruction word
+//!
+//! The --chaos SPEC is comma-separated key=value (all faults seeded +
+//! reproducible): latency=P,latency_ms=N,stall=P,stall_ms=N,transient=P,
+//! panic=P,corrupt=P,corrupt_sigma=S,seed=N
 //!
 //! Observability (run/serve/sweep/trace): --trace-out FILE writes a
 //! Perfetto/chrome://tracing trace (instruction JSONL on `trace`),
@@ -34,9 +45,14 @@ use cimrv::baselines::{comparison, OptLevel};
 use cimrv::compiler::{build_kws_program, build_kws_program_sharded};
 use cimrv::coordinator::report::{
     ladder_json, render_batch_histogram, render_ladder, render_latency_percentiles,
-    render_shard_utilization, render_span_breakdown, render_sweep, LadderPoint,
+    render_resilience, render_shard_utilization, render_span_breakdown, render_sweep,
+    LadderPoint,
 };
-use cimrv::coordinator::{Coordinator, InferenceRequest, ServeOptions};
+use cimrv::coordinator::{
+    Coordinator, InferenceRequest, ServeError, ServeOptions, DEFAULT_MAX_ATTEMPTS,
+    DEFAULT_QUEUE_CAP,
+};
+use cimrv::resilience::{run_soak, FaultPlan, SoakConfig};
 use cimrv::fsim::FastSim;
 use cimrv::mem::dram::DramConfig;
 use cimrv::model::{dataset, reference, KwsModel};
@@ -55,18 +71,23 @@ fn main() -> Result<()> {
         Some("accuracy") => cmd_accuracy(&args),
         Some("serve") => cmd_serve(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("soak") => cmd_soak(&args),
         Some("disasm") => cmd_disasm(&args),
         Some("trace") => cmd_trace(&args),
         _ => {
             eprintln!(
-                "usage: cimrv <run|ablation|table1|accuracy|serve|sweep|trace|disasm> \
+                "usage: cimrv <run|ablation|table1|accuracy|serve|sweep|soak|trace|disasm> \
                  [--opt LEVEL] [--backend cycle|fast] [--macros N] [--batch B] [--calibrate] \
                  [--linger-us U] [--variation SPEC] [--n N] [--workers W] [--label L] \
                  [--seed S] [--skip K] [--no-golden] [--json] \
                  [--trace-out FILE] [--metrics-out FILE]\n\
+                 serve resilience: [--chaos SPEC] [--queue-cap N] [--deadline-ms D] \
+                 [--max-attempts K]\n\
                  sweep: [--quick] [--check] [--sigmas 0,0.1,..] [--nl 0.3] \
-                 [--mappings both|symmetric|single] [--mc-seeds K] [--mismatch M] \
+                 [--mappings both|symmetric|single] [--seeds K] [--mismatch M] \
                  [--threads T] [--out FILE]\n\
+                 soak: [--quick] [--check] [--n N] [--workers W] [--out FILE] \
+                 (default BENCH_resilience.json)\n\
                  observability: --trace-out writes a Perfetto/chrome://tracing JSON \
                  (run/serve; JSONL on trace), --metrics-out dumps the metrics \
                  registry (.prom/.txt = Prometheus text, else JSON)"
@@ -369,12 +390,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(_) => Some(args.opt_u64("linger-us", 0)?),
         None => None,
     };
+    let deadline_ms = match args.opt("deadline-ms") {
+        Some(_) => Some(args.opt_u64("deadline-ms", 0)?),
+        None => None,
+    };
     let opts = ServeOptions {
         calibrate: args.flag("calibrate"),
         macros: args.opt_usize("macros", 1)?.max(1),
         batch: args.opt_usize("batch", 1)?,
         linger_us,
         variation: robustness::variation_from_args(args)?,
+        queue_cap: args.opt_usize("queue-cap", DEFAULT_QUEUE_CAP)?,
+        chaos: args.opt("chaos").map(FaultPlan::parse_spec).transpose()?,
+        max_attempts: args.opt_u64("max-attempts", u64::from(DEFAULT_MAX_ATTEMPTS))? as u32,
     };
     if opts.calibrate && kind == BackendKind::Cycle {
         eprintln!("note: --calibrate is a fast-backend option (cycle is already exact)");
@@ -387,6 +415,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "serving DISTURBED inferences ({}): fresh per-macro noise streams per request",
             v.spec()
+        );
+    }
+    if let Some(plan) = &opts.chaos {
+        println!(
+            "serving under CHAOS ({}): faults are deterministic per (worker, incarnation)",
+            plan.spec()
         );
     }
     match opts.linger_us {
@@ -402,17 +436,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
             id: i as u64,
             audio: dataset::synth_utterance(i % 12, 400 + i as u64, model.audio_len, 0.37),
             label: Some((i % 12) as i32),
+            deadline: deadline_ms.map(|ms| t0 + std::time::Duration::from_millis(ms)),
         })
         .collect();
-    let resps = coord.serve_batch(reqs)?;
+    // Under chaos or deadlines a typed per-request failure is expected
+    // service behaviour, not a demo-aborting error: collect outcomes and
+    // report the degradation instead of bailing on the first one.
+    let fault_tolerant = opts.chaos.is_some() || deadline_ms.is_some();
+    let resps = if fault_tolerant {
+        let rxs: Vec<_> = reqs.into_iter().map(|r| coord.submit(r)).collect();
+        let mut oks = Vec::new();
+        let (mut shed, mut expired, mut failed) = (0usize, 0usize, 0usize);
+        for rx in rxs {
+            match rx {
+                Err(_) => shed += 1,
+                Ok(rx) => match rx.recv() {
+                    Ok(Ok(resp)) => oks.push(resp),
+                    Ok(Err(ServeError::DeadlineExceeded { .. })) => expired += 1,
+                    Ok(Err(_)) | Err(_) => failed += 1,
+                },
+            }
+        }
+        if shed + expired + failed > 0 {
+            println!(
+                "degraded service: {shed} shed at admission, {expired} missed deadline, \
+                 {failed} failed"
+            );
+        }
+        oks
+    } else {
+        coord.serve_batch(reqs)?
+    };
     let wall = t0.elapsed().as_secs_f64();
+    let served = resps.len();
     let chip: u64 = resps.iter().map(|r| r.chip_cycles).sum();
     println!(
-        "served {n} requests on {workers} {kind}-backend workers in {wall:.2}s host time \
-         ({:.1} req/s host, {:.1} req/s chip-time)",
-        n as f64 / wall,
-        n as f64 / (chip as f64 / 50e6)
+        "served {served}/{n} requests on {workers} {kind}-backend workers in {wall:.2}s host \
+         time ({:.1} req/s host, {:.1} req/s chip-time)",
+        served as f64 / wall,
+        served as f64 / (chip as f64 / 50e6).max(f64::MIN_POSITIVE)
     );
+    if fault_tolerant {
+        use std::sync::atomic::Ordering::Relaxed;
+        let s = &coord.stats;
+        println!(
+            "resilience: retries {} requeues {} worker panics {} respawns {} breaker trips {}",
+            s.retries.load(Relaxed),
+            s.requeues.load(Relaxed),
+            s.worker_panics.load(Relaxed),
+            s.respawns.load(Relaxed),
+            s.breaker_trips.load(Relaxed)
+        );
+    }
     if let Some(acc) = coord.accuracy() {
         println!("accuracy: {:.2}%", 100.0 * acc);
     }
@@ -480,9 +555,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             _ => bail!("--mappings expects both|symmetric|single, got {m:?}"),
         };
     }
-    if let Some(k) = args.opt("mc-seeds") {
-        let k: u64 = k.parse().map_err(|_| anyhow::anyhow!("--mc-seeds expects a count"))?;
-        anyhow::ensure!(k > 0, "--mc-seeds must be >= 1");
+    // `--seeds` is the documented spelling; `--mc-seeds` stays as an alias.
+    if let Some(k) = args.opt("seeds").or_else(|| args.opt("mc-seeds")) {
+        let k: u64 = k.parse().map_err(|_| anyhow::anyhow!("--seeds expects a count"))?;
+        anyhow::ensure!(k > 0, "--seeds must be >= 1");
         cfg.seeds = (0..k).map(|s| 1000 + s).collect();
     }
     cfg.mismatch = args.opt_f64("mismatch", cfg.mismatch)?;
@@ -517,6 +593,49 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.flag("check") {
         report.check_mapping_claim()?;
         println!("check: symmetric mapping beats single-ended at max sigma \u{2713}");
+    }
+    if let Some(path) = &metrics_out {
+        write_metrics(path)?;
+    }
+    Ok(())
+}
+
+/// Chaos soak (`cimrv soak`): drive the serving stack through the
+/// standard fault grid — clean baseline, transient errors, worker
+/// panics, latency spikes under deadlines, stalls that force deadline
+/// sheds, and a tiny queue that forces admission sheds — and emit
+/// BENCH_resilience.json. `--quick` = the CI smoke grid, `--check` =
+/// fail unless the availability contract holds (no hung requests,
+/// 100% availability wherever the cell promises it, and the expected
+/// respawn/shed evidence per cell).
+fn cmd_soak(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let (_, metrics_out) = telemetry_outputs(args);
+    let mut cfg = if args.flag("quick") { SoakConfig::quick() } else { SoakConfig::standard() };
+    cfg.n = args.opt_usize("n", cfg.n)?;
+    anyhow::ensure!(cfg.n > 0, "--n must be >= 1");
+    cfg.workers = args.opt_usize("workers", cfg.workers)?;
+    cfg.batch = args.opt_usize("batch", cfg.batch)?;
+    cfg.macros = args.opt_usize("macros", cfg.macros)?.max(1);
+    cfg.seed = args.opt_u64("seed", cfg.seed)?;
+
+    let t0 = std::time::Instant::now();
+    let report = run_soak(&model, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    eprintln!("soak wall-clock: {wall:.2}s ({} cells)", report.cells.len());
+
+    let out = args.opt_or("out", "BENCH_resilience.json");
+    std::fs::write(&out, format!("{}\n", report.to_json()))
+        .with_context(|| format!("writing {out}"))?;
+    if args.flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", render_resilience(&report));
+    }
+    println!("wrote {out}");
+    if args.flag("check") {
+        report.check()?;
+        println!("check: availability contract holds under chaos \u{2713}");
     }
     if let Some(path) = &metrics_out {
         write_metrics(path)?;

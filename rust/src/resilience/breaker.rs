@@ -1,0 +1,77 @@
+//! Per-worker circuit breaker: repeated faults trip the worker out of
+//! full-capacity service so it can be respawned degraded.
+//!
+//! The breaker counts *consecutive* faults (transient errors or panics);
+//! any successful batch resets the streak. When the streak reaches the
+//! threshold the breaker "trips": the worker exits, its in-flight jobs
+//! are requeued, and the supervisor respawns it after a cooldown with a
+//! reduced shard plan — shedding that worker's shard capacity instead of
+//! its availability.
+
+/// Consecutive-fault circuit breaker (one per worker incarnation).
+#[derive(Debug, Clone)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    consecutive: u32,
+    trips: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32) -> Self {
+        assert!(threshold > 0, "breaker threshold must be positive");
+        CircuitBreaker { threshold, consecutive: 0, trips: 0 }
+    }
+
+    /// A batch completed cleanly: the fault streak ends.
+    pub fn record_success(&mut self) {
+        self.consecutive = 0;
+    }
+
+    /// A batch faulted. Returns `true` when this fault trips the
+    /// breaker (streak reached the threshold); the streak resets so a
+    /// respawned incarnation starts clean.
+    pub fn record_fault(&mut self) -> bool {
+        self.consecutive += 1;
+        if self.consecutive >= self.threshold {
+            self.consecutive = 0;
+            self.trips += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn consecutive(&self) -> u32 {
+        self.consecutive
+    }
+
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_on_consecutive_faults_only() {
+        let mut b = CircuitBreaker::new(3);
+        assert!(!b.record_fault());
+        assert!(!b.record_fault());
+        b.record_success(); // streak broken
+        assert!(!b.record_fault());
+        assert!(!b.record_fault());
+        assert!(b.record_fault(), "third consecutive fault trips");
+        assert_eq!(b.trips(), 1);
+        assert_eq!(b.consecutive(), 0, "streak resets after trip");
+    }
+
+    #[test]
+    fn threshold_one_trips_immediately() {
+        let mut b = CircuitBreaker::new(1);
+        assert!(b.record_fault());
+        assert!(b.record_fault());
+        assert_eq!(b.trips(), 2);
+    }
+}

@@ -1,0 +1,188 @@
+//! `ChaosBackend` — deterministic fault injection behind the standard
+//! backend seam.
+//!
+//! Wraps any [`InferenceBackend`] and, before/after each `run_batch`,
+//! consults a [`FaultPlan`] schedule drawn from a seeded RNG: latency
+//! spikes and stalls sleep, transients return `Err`, panics kill the
+//! worker thread mid-batch, and corruption perturbs the produced logits
+//! through the same `VariationModel` math the robustness subsystem uses.
+//! Because the wrapper sits *behind* the coordinator, every resilience
+//! mechanism (retry, supervision, breakers, deadlines) is exercised by
+//! exactly the code paths production faults would take.
+//!
+//! Injected panics carry a `"chaos: ..."` string payload; a
+//! once-installed panic hook suppresses their default stderr backtrace
+//! noise (cargo's capture is per-test-thread, and these fire on spawned
+//! worker threads) while forwarding all other panics untouched.
+
+use std::sync::Once;
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::InferenceBackend;
+use crate::cim::variation::VariationModel;
+use crate::compiler::Program;
+use crate::sim::RunResult;
+use crate::util::rng::Rng;
+
+use super::fault::{FaultPlan, FiredFaults};
+
+/// Fixed-point scale for routing fractional logits through the integer
+/// `VariationModel::disturb` path (logits are result-sums / final_t, so
+/// they carry sub-integer precision worth preserving).
+const LOGIT_FIX: f64 = 256.0;
+
+/// Per-fault-class injection counters (determinism tests + soak report).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub calls: u64,
+    pub latency: u64,
+    pub stall: u64,
+    pub transient: u64,
+    pub panic: u64,
+    pub corrupt: u64,
+}
+
+static QUIET_CHAOS_PANICS: Once = Once::new();
+
+/// Payload prefix identifying an injected panic.
+pub const CHAOS_PANIC_PREFIX: &str = "chaos:";
+
+/// Is this panic payload one of ours? (Payloads from `panic!` with a
+/// format string are `String`; literal-only panics are `&str`.)
+pub fn is_chaos_payload(payload: &(dyn std::any::Any + Send)) -> bool {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        return s.starts_with(CHAOS_PANIC_PREFIX);
+    }
+    if let Some(s) = payload.downcast_ref::<String>() {
+        return s.starts_with(CHAOS_PANIC_PREFIX);
+    }
+    false
+}
+
+fn install_quiet_panic_hook() {
+    QUIET_CHAOS_PANICS.call_once(|| {
+        let previous = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !is_chaos_payload(info.payload()) {
+                previous(info);
+            }
+        }));
+    });
+}
+
+/// Fault-injecting wrapper around a real backend.
+pub struct ChaosBackend {
+    inner: Box<dyn InferenceBackend>,
+    plan: FaultPlan,
+    rng: Rng,
+    counts: FaultCounts,
+    /// One `FiredFaults::bits()` entry per `run_batch` call, in order —
+    /// the fault *schedule*, pinned by the determinism tests.
+    fault_log: Vec<u8>,
+}
+
+impl ChaosBackend {
+    /// Wrap `inner` with the plan's base seed (single-backend use).
+    pub fn new(inner: Box<dyn InferenceBackend>, plan: FaultPlan) -> Self {
+        Self::with_seed(inner, plan, plan.seed)
+    }
+
+    /// Wrap `inner` with an explicit stream seed (the coordinator passes
+    /// `plan.worker_seed(worker, incarnation)` so each worker
+    /// incarnation gets its own deterministic schedule).
+    pub fn with_seed(inner: Box<dyn InferenceBackend>, plan: FaultPlan, seed: u64) -> Self {
+        install_quiet_panic_hook();
+        ChaosBackend { inner, plan, rng: Rng::new(seed), counts: FaultCounts::default(), fault_log: Vec::new() }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn counts(&self) -> FaultCounts {
+        self.counts
+    }
+
+    pub fn fault_log(&self) -> &[u8] {
+        &self.fault_log
+    }
+
+    /// Disturb one result's logits through the variation machinery and
+    /// recompute its argmax. Deterministic: the corruption seed comes
+    /// off the schedule RNG, so it is part of the fault stream.
+    fn corrupt_result(&mut self, r: &mut RunResult) {
+        let mut vm = VariationModel::new(self.plan.corrupt_sigma, 0.0, false, self.rng.next_u64());
+        for logit in &mut r.logits {
+            let fixed = (*logit as f64 * LOGIT_FIX).round() as i32;
+            let disturbed = vm.disturb(fixed, LOGIT_FIX as u32);
+            *logit = disturbed as f32 / LOGIT_FIX as f32;
+        }
+        r.predicted = crate::model::reference::argmax(&r.logits);
+    }
+
+    fn draw(&mut self) -> FiredFaults {
+        let fired = self.plan.draw(&mut self.rng);
+        self.counts.calls += 1;
+        self.counts.latency += fired.latency as u64;
+        self.counts.stall += fired.stall as u64;
+        self.counts.transient += fired.transient as u64;
+        self.counts.panic += fired.panic as u64;
+        self.counts.corrupt += fired.corrupt as u64;
+        self.fault_log.push(fired.bits());
+        fired
+    }
+}
+
+impl InferenceBackend for ChaosBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn run_batch(&mut self, batch: &[&[f32]]) -> Result<Vec<RunResult>> {
+        let fired = self.draw();
+        let call = self.counts.calls;
+        if fired.latency {
+            std::thread::sleep(std::time::Duration::from_millis(self.plan.latency_ms));
+        }
+        if fired.stall {
+            std::thread::sleep(std::time::Duration::from_millis(self.plan.stall_ms));
+        }
+        if fired.panic {
+            // String payload, prefix-matched by the quiet hook and by
+            // the worker's catch_unwind classification.
+            panic!("{CHAOS_PANIC_PREFIX} injected worker panic (call {call})");
+        }
+        if fired.transient {
+            return Err(anyhow!("{CHAOS_PANIC_PREFIX} injected transient fault (call {call})"));
+        }
+        let mut out = self.inner.run_batch(batch)?;
+        if fired.corrupt {
+            for r in &mut out {
+                self.corrupt_result(r);
+            }
+        }
+        Ok(out)
+    }
+
+    fn program(&self) -> &Program {
+        self.inner.program()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_panic_payloads_are_recognized() {
+        install_quiet_panic_hook();
+        let err = std::panic::catch_unwind(|| {
+            panic!("{CHAOS_PANIC_PREFIX} injected worker panic (call 3)");
+        })
+        .unwrap_err();
+        assert!(is_chaos_payload(&*err), "formatted String payload matches prefix");
+        let other = std::panic::catch_unwind(|| panic!("{}", "unrelated")).unwrap_err();
+        assert!(!is_chaos_payload(&*other));
+    }
+}

@@ -1,0 +1,258 @@
+//! Deterministic fault plans for chaos injection.
+//!
+//! A [`FaultPlan`] is the `--chaos SPEC` payload: per-`run_batch`-call
+//! probabilities for each fault class plus the magnitudes (spike/stall
+//! durations, corruption sigma) and one seed. The schedule is drawn by
+//! [`FaultPlan::draw`] with a **fixed number of RNG consumptions per
+//! call** (one uniform per fault class, always, in a fixed order), so the
+//! same plan produces the same fault sequence regardless of which faults
+//! actually fire — the property the chaos determinism tests pin.
+//!
+//! The spec grammar mirrors `VariationParams::parse_spec` (comma-
+//! separated `key=value`):
+//!
+//! ```text
+//! seed=42,transient=0.2,panic=0.1,stall=0.05,stall_ms=30,
+//! latency=0.1,latency_ms=5,corrupt=0.05,corrupt_sigma=0.4
+//! ```
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::util::rng::Rng;
+
+/// Which fault classes fire on one `run_batch` call, in injection order.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FiredFaults {
+    /// Added latency spike (sleep, then execute normally).
+    pub latency: bool,
+    /// Long worker stall (sleep; models a wedged device/driver).
+    pub stall: bool,
+    /// Transient `Err` return (retryable).
+    pub transient: bool,
+    /// Full worker panic (thread dies; supervisor must respawn).
+    pub panic: bool,
+    /// Logit corruption through the `VariationModel` machinery.
+    pub corrupt: bool,
+}
+
+impl FiredFaults {
+    pub fn any(&self) -> bool {
+        self.latency || self.stall || self.transient || self.panic || self.corrupt
+    }
+
+    /// Compact bitmask (latency=1, stall=2, transient=4, panic=8,
+    /// corrupt=16) — the chaos backend's fault log entry.
+    pub fn bits(&self) -> u8 {
+        (self.latency as u8)
+            | (self.stall as u8) << 1
+            | (self.transient as u8) << 2
+            | (self.panic as u8) << 3
+            | (self.corrupt as u8) << 4
+    }
+}
+
+/// A reproducible fault-injection plan (`--chaos SPEC`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Base RNG seed; each worker incarnation derives its own stream
+    /// via [`FaultPlan::worker_seed`].
+    pub seed: u64,
+    /// P(added latency spike) per `run_batch` call.
+    pub latency: f64,
+    /// Latency spike duration (ms).
+    pub latency_ms: u64,
+    /// P(long stall) per call.
+    pub stall: f64,
+    /// Stall duration (ms).
+    pub stall_ms: u64,
+    /// P(transient `Err`) per call — retryable with backoff.
+    pub transient: f64,
+    /// P(worker panic) per call — the thread dies mid-batch.
+    pub panic: f64,
+    /// P(logit corruption) per call.
+    pub corrupt: f64,
+    /// Conductance sigma for the corruption's `VariationModel`.
+    pub corrupt_sigma: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 42,
+            latency: 0.0,
+            latency_ms: 5,
+            stall: 0.0,
+            stall_ms: 30,
+            transient: 0.0,
+            panic: 0.0,
+            corrupt: 0.0,
+            corrupt_sigma: 0.4,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the CLI spec: comma-separated `key=value` pairs (see module
+    /// docs for the grammar). Unknown keys and out-of-range
+    /// probabilities are errors, like the variation spec parser.
+    pub fn parse_spec(spec: &str) -> Result<Self> {
+        let mut p = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("chaos spec entry {part:?} is not key=value"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let f = || -> Result<f64> {
+                v.parse().map_err(|_| anyhow!("chaos {k}={v:?}: expected a number"))
+            };
+            let u = || -> Result<u64> {
+                v.parse().map_err(|_| anyhow!("chaos {k}={v:?}: expected an integer"))
+            };
+            match k {
+                "seed" => p.seed = u()?,
+                "latency" => p.latency = f()?,
+                "latency_ms" | "latency-ms" => p.latency_ms = u()?,
+                "stall" => p.stall = f()?,
+                "stall_ms" | "stall-ms" => p.stall_ms = u()?,
+                "transient" => p.transient = f()?,
+                "panic" => p.panic = f()?,
+                "corrupt" => p.corrupt = f()?,
+                "corrupt_sigma" | "corrupt-sigma" => p.corrupt_sigma = f()?,
+                _ => bail!(
+                    "unknown chaos key {k:?} (seed|latency|latency_ms|stall|stall_ms|\
+                     transient|panic|corrupt|corrupt_sigma)"
+                ),
+            }
+        }
+        for (name, prob) in [
+            ("latency", p.latency),
+            ("stall", p.stall),
+            ("transient", p.transient),
+            ("panic", p.panic),
+            ("corrupt", p.corrupt),
+        ] {
+            ensure!(
+                (0.0..=1.0).contains(&prob),
+                "chaos {name} probability must be in [0, 1] (got {prob})"
+            );
+        }
+        ensure!(p.corrupt_sigma >= 0.0, "chaos corrupt_sigma must be >= 0");
+        Ok(p)
+    }
+
+    /// Render back to the canonical spec string (reports, JSON).
+    pub fn spec(&self) -> String {
+        format!(
+            "seed={},latency={},latency_ms={},stall={},stall_ms={},transient={},panic={},\
+             corrupt={},corrupt_sigma={}",
+            self.seed,
+            self.latency,
+            self.latency_ms,
+            self.stall,
+            self.stall_ms,
+            self.transient,
+            self.panic,
+            self.corrupt,
+            self.corrupt_sigma
+        )
+    }
+
+    /// True when no fault can ever fire (every probability is zero).
+    pub fn is_noop(&self) -> bool {
+        self.latency == 0.0
+            && self.stall == 0.0
+            && self.transient == 0.0
+            && self.panic == 0.0
+            && self.corrupt == 0.0
+    }
+
+    /// The RNG seed for one worker incarnation's fault stream: distinct
+    /// per (worker, incarnation) so a respawned worker does not replay
+    /// its predecessor's schedule, yet fully determined by the plan.
+    pub fn worker_seed(&self, worker: usize, incarnation: u64) -> u64 {
+        self.seed
+            ^ (worker as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (incarnation + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+    }
+
+    /// Draw one call's fault set. Always consumes exactly five uniforms
+    /// (one per class, fixed order: latency, stall, transient, panic,
+    /// corrupt) so the schedule depends only on the seed, never on which
+    /// earlier faults happened to fire.
+    pub fn draw(&self, rng: &mut Rng) -> FiredFaults {
+        let latency = rng.f64() < self.latency;
+        let stall = rng.f64() < self.stall;
+        let transient = rng.f64() < self.transient;
+        let panic = rng.f64() < self.panic;
+        let corrupt = rng.f64() < self.corrupt;
+        FiredFaults { latency, stall, transient, panic, corrupt }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_defaults() {
+        let p = FaultPlan::parse_spec("seed=7,transient=0.25,panic=0.1,stall_ms=50").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.transient, 0.25);
+        assert_eq!(p.panic, 0.1);
+        assert_eq!(p.stall_ms, 50);
+        assert_eq!(p.latency, 0.0);
+        let q = FaultPlan::parse_spec(&p.spec()).unwrap();
+        assert_eq!(p, q);
+        // Empty spec = the noop default plan.
+        assert!(FaultPlan::parse_spec("").unwrap().is_noop());
+        assert!(!p.is_noop());
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(FaultPlan::parse_spec("transient").is_err());
+        assert!(FaultPlan::parse_spec("bogus=1").is_err());
+        assert!(FaultPlan::parse_spec("panic=1.5").is_err());
+        assert!(FaultPlan::parse_spec("panic=-0.1").is_err());
+        assert!(FaultPlan::parse_spec("corrupt_sigma=-1").is_err());
+        assert!(FaultPlan::parse_spec("seed=x").is_err());
+    }
+
+    #[test]
+    fn draw_is_deterministic_and_consumes_fixed_draws() {
+        let plan = FaultPlan { transient: 0.5, panic: 0.2, ..Default::default() };
+        let seq = |seed: u64| -> Vec<u8> {
+            let mut rng = Rng::new(seed);
+            (0..64).map(|_| plan.draw(&mut rng).bits()).collect()
+        };
+        assert_eq!(seq(1), seq(1), "same seed, same schedule");
+        assert_ne!(seq(1), seq(2), "different seed, different schedule");
+        // A plan with different probabilities but the same seed consumes
+        // the same number of draws: the post-schedule RNG state matches.
+        let plan_b = FaultPlan { latency: 0.9, corrupt: 0.9, ..Default::default() };
+        let mut ra = Rng::new(9);
+        let mut rb = Rng::new(9);
+        for _ in 0..16 {
+            plan.draw(&mut ra);
+            plan_b.draw(&mut rb);
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64(), "fixed draw count per call");
+    }
+
+    #[test]
+    fn worker_seeds_are_distinct_and_stable() {
+        let p = FaultPlan::default();
+        assert_eq!(p.worker_seed(0, 0), p.worker_seed(0, 0));
+        assert_ne!(p.worker_seed(0, 0), p.worker_seed(1, 0));
+        assert_ne!(p.worker_seed(0, 0), p.worker_seed(0, 1));
+    }
+
+    #[test]
+    fn fired_bits_encode_all_classes() {
+        let all = FiredFaults { latency: true, stall: true, transient: true, panic: true, corrupt: true };
+        assert_eq!(all.bits(), 0b1_1111);
+        assert!(all.any());
+        assert!(!FiredFaults::default().any());
+        assert_eq!(FiredFaults::default().bits(), 0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Fault tolerance for the serving tier: chaos injection, admission
+//! control, worker supervision, and graceful degradation.
+//!
+//! CIM edge deployments fail in layers — device-level conductance drift,
+//! wedged driver calls, crashed worker threads, plain overload — and the
+//! coordinator must degrade throughput, never availability. This module
+//! supplies the pieces the reworked [`crate::coordinator::Coordinator`]
+//! composes:
+//!
+//! * [`fault::FaultPlan`] / [`chaos::ChaosBackend`] — deterministic,
+//!   seeded fault injection behind the standard [`crate::backend::
+//!   InferenceBackend`] seam (`--chaos` on the CLI), so every failure
+//!   mode is reproducible in tests and soaks.
+//! * [`queue::BoundedQueue`] — bounded admission with explicit
+//!   [`SubmitError::Overloaded`] load-shedding and head-of-line requeue
+//!   for crash recovery.
+//! * [`breaker::CircuitBreaker`] — consecutive-fault trip wire behind
+//!   shard-shedding degraded respawns.
+//! * [`soak`] — the `cimrv soak` chaos-soak harness emitting
+//!   `BENCH_resilience.json`.
+//!
+//! The typed error surface lives here: [`SubmitError`] for admission
+//! (submit-side) failures and [`ServeError`] for per-request serving
+//! failures. Both implement `std::error::Error`, so `?` lifts them into
+//! `anyhow::Error` at the CLI boundary while tests can still match on
+//! the concrete variants.
+
+pub mod breaker;
+pub mod chaos;
+pub mod fault;
+pub mod queue;
+pub mod soak;
+
+pub use breaker::CircuitBreaker;
+pub use chaos::{ChaosBackend, FaultCounts};
+pub use fault::{FaultPlan, FiredFaults};
+pub use queue::{BoundedQueue, PushError};
+pub use soak::{run_soak, SoakCell, SoakConfig, SoakReport};
+
+use std::fmt;
+
+/// Why a request was refused at the door (admission control).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is full — shed now, retry later.
+    Overloaded { depth: usize, cap: usize },
+    /// The coordinator has shut down.
+    Shutdown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Overloaded { depth, cap } => {
+                write!(f, "overloaded: request queue full ({depth}/{cap}); request shed")
+            }
+            // Wording kept compatible with callers matching on "shut down".
+            SubmitError::Shutdown => write!(f, "coordinator is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why an *accepted* request failed; every admitted request resolves to
+/// either an `InferenceResponse` or one of these — never a hang or a
+/// dropped channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's deadline expired before (or while) executing.
+    DeadlineExceeded { waited_us: u64 },
+    /// The backend kept failing after all retry attempts.
+    Backend { attempts: u32, message: String },
+    /// The worker thread panicked and the retry budget ran out.
+    WorkerPanic { attempts: u32 },
+    /// The coordinator shut down with this request still queued.
+    Shutdown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded { waited_us } => {
+                write!(f, "deadline exceeded after {waited_us} us; request dropped unexecuted")
+            }
+            ServeError::Backend { attempts, message } => {
+                write!(f, "backend failed after {attempts} attempt(s): {message}")
+            }
+            ServeError::WorkerPanic { attempts } => {
+                write!(f, "worker panicked; request abandoned after {attempts} attempt(s)")
+            }
+            ServeError::Shutdown => write!(f, "coordinator shut down with request still pending"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_display_and_convert_to_anyhow() {
+        let s = SubmitError::Overloaded { depth: 8, cap: 8 };
+        assert!(s.to_string().contains("overloaded"));
+        assert!(SubmitError::Shutdown.to_string().contains("shut down"));
+        let e: anyhow::Error = ServeError::WorkerPanic { attempts: 3 }.into();
+        assert!(e.to_string().contains("panicked"));
+        let e: anyhow::Error = SubmitError::Shutdown.into();
+        assert!(e.to_string().contains("shut down"));
+    }
+}

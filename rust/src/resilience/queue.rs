@@ -1,0 +1,239 @@
+//! Bounded MPMC request queue with explicit overload rejection.
+//!
+//! The coordinator used an unbounded `mpsc` channel: a burst of submits
+//! grew the queue without limit and every request eventually ran, long
+//! after its caller stopped caring. [`BoundedQueue`] is the admission-
+//! control replacement — `push` fails fast with [`PushError::Full`]
+//! instead of queueing (the caller turns that into
+//! `SubmitError::Overloaded`), workers block on `pop_wait`/`pop_timeout`
+//! like they did on the channel, and `push_front` lets the supervisor
+//! path requeue in-flight jobs from a crashed worker at the head of the
+//! line (capacity-exempt: those jobs were already admitted once).
+//!
+//! All locking is poison-proof: a worker that panics while holding the
+//! queue mutex must not wedge submits or shutdown.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Why a push was refused; the value is handed back to the caller.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue is at capacity — shed the request.
+    Full(T),
+    /// Queue is closed (shutdown) — no more work is accepted.
+    Closed(T),
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded FIFO shared by submitters and worker threads.
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    cond: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "queue capacity must be positive");
+        BoundedQueue {
+            inner: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            cond: Condvar::new(),
+            cap,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueState<T>> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Admit one item at the tail, or refuse without blocking.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.lock();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    /// Requeue an already-admitted item at the head (crash recovery:
+    /// the job must run before newer arrivals). Capacity-exempt — the
+    /// item held a slot when it was first admitted, and failing it here
+    /// would turn a worker crash into a lost response.
+    pub fn push_front(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.lock();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        st.items.push_front(item);
+        drop(st);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available or the queue is closed *and*
+    /// drained. Pending items are still handed out after close so a
+    /// graceful shutdown can finish admitted work.
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap_or_else(|poisoned| poisoned.into_inner());
+        }
+    }
+
+    /// Like `pop_wait` but gives up after `timeout` (micro-batch linger
+    /// assembly). `None` means either timeout or closed-and-empty.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero()) else {
+                return None;
+            };
+            let (guard, _timed_out) = self
+                .cond
+                .wait_timeout(st, left)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            st = guard;
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.lock().items.pop_front()
+    }
+
+    /// Stop admitting work and wake every blocked worker. Items already
+    /// queued stay poppable (or can be swept with [`BoundedQueue::drain`]).
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Remove and return everything still queued (shutdown path: each
+    /// drained job gets an explicit typed failure instead of a dropped
+    /// channel).
+    pub fn drain(&self) -> Vec<T> {
+        self.lock().items.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_fifo_and_capacity() {
+        let q = BoundedQueue::new(2);
+        assert!(q.push(1).is_ok());
+        assert!(q.push(2).is_ok());
+        match q.push(3) {
+            Err(PushError::Full(v)) => assert_eq!(v, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.push(3).is_ok(), "slot freed after pop");
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn push_front_is_capacity_exempt_and_pops_first() {
+        let q = BoundedQueue::new(1);
+        assert!(q.push(10).is_ok());
+        assert!(q.push_front(9).is_ok(), "requeue must not be shed");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(9));
+        assert_eq!(q.try_pop(), Some(10));
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains_pending() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        match q.push(3) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 3),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert!(matches!(q.push_front(0), Err(PushError::Closed(0))));
+        // Admitted work is still poppable after close...
+        assert_eq!(q.pop_wait(), Some(1));
+        // ...and drain sweeps the rest.
+        assert_eq!(q.drain(), vec![2]);
+        assert_eq!(q.pop_wait(), None, "closed + empty = worker exit");
+    }
+
+    #[test]
+    fn pop_timeout_returns_none_on_empty() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(5), "actually waited");
+    }
+
+    #[test]
+    fn pop_wait_blocks_until_push_across_threads() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_wait());
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(7u32).unwrap();
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn close_wakes_blocked_workers() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_wait());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+}

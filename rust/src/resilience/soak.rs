@@ -1,0 +1,544 @@
+//! Chaos soak harness (`cimrv soak`): drive the coordinator through a
+//! grid of fault plans and prove the availability story end to end.
+//!
+//! Each [`SoakCell`] is one serving scenario — a fault plan, an optional
+//! per-request deadline, a queue capacity, and an open-loop arrival rate
+//! — soaked for [`SoakConfig::n`] requests against a fresh fast-backend
+//! coordinator. Every submitted request is tracked to a *typed* end:
+//! served, shed at admission, deadline-expired, failed, or shut down.
+//! A request with no answer inside the collection timeout counts as
+//! **hung**, and [`SoakReport::check`] treats any hang as a failure —
+//! the availability contract is "every accepted request gets a typed
+//! response", and the soak is the executable proof.
+//!
+//! [`SoakReport::to_json`] is the `BENCH_resilience.json` payload
+//! (availability, shed rate, retry/respawn counts, p99-under-fault per
+//! cell); `soak --quick --check` is the CI smoke gate.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::backend::BackendKind;
+use crate::baselines::OptLevel;
+use crate::coordinator::{Coordinator, InferenceRequest, ServeOptions};
+use crate::model::{dataset, KwsModel};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::fault::FaultPlan;
+use super::{ServeError, SubmitError};
+
+/// One soak scenario: a named fault plan plus serving-shape knobs.
+#[derive(Debug, Clone)]
+pub struct SoakCell {
+    pub name: String,
+    /// Fault plan for every worker backend (`None` = clean serving).
+    pub chaos: Option<FaultPlan>,
+    /// Per-request deadline, if the scenario serves deadline traffic.
+    pub deadline_ms: Option<u64>,
+    /// Bounded-queue capacity for this cell.
+    pub queue_cap: usize,
+    /// Open-loop arrival rate (requests/s); `0.0` = submit back-to-back
+    /// (the overload pattern).
+    pub rate: f64,
+    /// `check()`: every accepted request must be *served* (not just
+    /// answered) — the cell's faults are all retryable/absorbable.
+    pub expect_full_availability: bool,
+    /// `check()`: the supervisor must have respawned a worker.
+    pub expect_respawn: bool,
+    /// `check()`: admission control must have shed at least once.
+    pub expect_overload_shed: bool,
+    /// `check()`: at least one request must have expired its deadline.
+    pub expect_deadline_shed: bool,
+}
+
+impl SoakCell {
+    fn new(name: &str, chaos: Option<FaultPlan>) -> Self {
+        SoakCell {
+            name: name.to_string(),
+            chaos,
+            deadline_ms: None,
+            queue_cap: 1024,
+            rate: 2000.0,
+            expect_full_availability: true,
+            expect_respawn: false,
+            expect_overload_shed: false,
+            expect_deadline_shed: false,
+        }
+    }
+}
+
+/// The soak grid + execution knobs.
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    pub cells: Vec<SoakCell>,
+    /// Requests per cell.
+    pub n: usize,
+    pub workers: usize,
+    /// Micro-batch cap for every cell's coordinator.
+    pub batch: usize,
+    pub macros: usize,
+    /// Per-request attempt budget. The standard cells' fault rates are
+    /// chosen so exhausting 12 attempts is a ~1e-6 event — availability
+    /// checks stay deterministic in practice.
+    pub max_attempts: u32,
+    /// Base seed for the arrival process (fault schedules seed from each
+    /// cell's own `FaultPlan::seed`).
+    pub seed: u64,
+    /// Per-request collection timeout; anything slower counts as hung.
+    pub answer_timeout: Duration,
+}
+
+impl SoakConfig {
+    /// The standard grid: clean baseline, retryable transients, worker
+    /// panics (supervised respawn), latency spikes under a generous
+    /// deadline, stalls under a tight deadline (typed sheds by design),
+    /// and a tiny queue hammered back-to-back (admission sheds).
+    pub fn standard() -> Self {
+        let cells = vec![
+            SoakCell::new("baseline", None),
+            SoakCell::new(
+                "transient",
+                Some(FaultPlan { transient: 0.2, ..Default::default() }),
+            ),
+            SoakCell {
+                expect_respawn: true,
+                ..SoakCell::new(
+                    "panic",
+                    Some(FaultPlan { panic: 0.3, ..Default::default() }),
+                )
+            },
+            SoakCell {
+                deadline_ms: Some(250),
+                ..SoakCell::new(
+                    "latency_deadline",
+                    Some(FaultPlan { latency: 0.5, latency_ms: 5, ..Default::default() }),
+                )
+            },
+            SoakCell {
+                deadline_ms: Some(15),
+                expect_full_availability: false,
+                expect_deadline_shed: true,
+                ..SoakCell::new(
+                    "stall_shed",
+                    Some(FaultPlan { stall: 0.5, stall_ms: 30, ..Default::default() }),
+                )
+            },
+            SoakCell {
+                queue_cap: 4,
+                rate: 0.0,
+                expect_full_availability: false,
+                expect_overload_shed: true,
+                ..SoakCell::new(
+                    "overload",
+                    Some(FaultPlan { stall: 1.0, stall_ms: 10, ..Default::default() }),
+                )
+            },
+        ];
+        SoakConfig {
+            cells,
+            n: 96,
+            workers: 2,
+            batch: 4,
+            macros: 1,
+            max_attempts: 12,
+            seed: 7,
+            answer_timeout: Duration::from_secs(30),
+        }
+    }
+
+    /// The CI smoke grid: the same cells, fewer requests per cell.
+    pub fn quick() -> Self {
+        SoakConfig { n: 40, ..Self::standard() }
+    }
+}
+
+/// One cell's measured outcome.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub name: String,
+    /// Canonical `--chaos` spec string ("none" for the clean cell).
+    pub spec: String,
+    pub submitted: u64,
+    /// Requests past admission (submitted minus overload sheds).
+    pub accepted: u64,
+    /// Submits refused with `SubmitError::Overloaded`.
+    pub shed_overload: u64,
+    /// Accepted requests served with a real response.
+    pub ok: u64,
+    /// Accepted requests answered `ServeError::DeadlineExceeded`.
+    pub deadline_expired: u64,
+    /// Accepted requests answered `Backend`/`WorkerPanic` (budget spent).
+    pub failed: u64,
+    /// Accepted requests answered `ServeError::Shutdown`.
+    pub shutdown: u64,
+    /// Accepted requests with NO answer inside the timeout — the one
+    /// number that must always be zero.
+    pub hung: u64,
+    /// Batch retries after transient faults (coordinator counter).
+    pub retries: u64,
+    /// Jobs requeued by crashed/tripped workers.
+    pub requeues: u64,
+    pub worker_panics: u64,
+    pub respawns: u64,
+    pub breaker_trips: u64,
+    /// `[p50, p95, p99]` host latency under fault, seconds (served
+    /// requests only); `None` when nothing was served.
+    pub latency_s: Option<[f64; 3]>,
+    pub elapsed_s: f64,
+}
+
+impl CellResult {
+    /// Served fraction of accepted requests (1.0 for an empty cell).
+    pub fn availability(&self) -> f64 {
+        if self.accepted == 0 {
+            return 1.0;
+        }
+        self.ok as f64 / self.accepted as f64
+    }
+
+    /// Typed-answer fraction of accepted requests — hung requests are
+    /// the only thing that lowers this.
+    pub fn answered(&self) -> f64 {
+        if self.accepted == 0 {
+            return 1.0;
+        }
+        (self.accepted - self.hung) as f64 / self.accepted as f64
+    }
+
+    /// Fraction of submitted requests shed at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 0.0;
+        }
+        self.shed_overload as f64 / self.submitted as f64
+    }
+}
+
+/// The whole soak's results.
+#[derive(Debug, Clone)]
+pub struct SoakReport {
+    pub cells: Vec<(SoakCell, CellResult)>,
+    pub elapsed_s: f64,
+}
+
+impl SoakReport {
+    /// Assert the availability contract across every cell (the
+    /// `soak --check` gate): no hangs anywhere, full availability where
+    /// the cell's faults are retryable, at least one respawn/shed where
+    /// the scenario is built to force one.
+    pub fn check(&self) -> Result<()> {
+        for (spec, r) in &self.cells {
+            ensure!(
+                r.hung == 0,
+                "cell {}: {} request(s) got no typed answer (hung)",
+                r.name,
+                r.hung
+            );
+            if spec.expect_full_availability {
+                ensure!(
+                    r.ok == r.accepted,
+                    "cell {}: availability {:.4} < 1.0 ({} of {} accepted served; \
+                     {} deadline, {} failed, {} shutdown)",
+                    r.name,
+                    r.availability(),
+                    r.ok,
+                    r.accepted,
+                    r.deadline_expired,
+                    r.failed,
+                    r.shutdown
+                );
+            }
+            if spec.expect_respawn {
+                ensure!(
+                    r.respawns >= 1,
+                    "cell {}: expected a supervised respawn, saw none ({} panics)",
+                    r.name,
+                    r.worker_panics
+                );
+            }
+            if spec.expect_overload_shed {
+                ensure!(
+                    r.shed_overload >= 1,
+                    "cell {}: expected admission sheds, saw none (queue cap {})",
+                    r.name,
+                    spec.queue_cap
+                );
+            }
+            if spec.expect_deadline_shed {
+                ensure!(
+                    r.deadline_expired >= 1,
+                    "cell {}: expected deadline expiries, saw none",
+                    r.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// `BENCH_resilience.json` payload.
+    pub fn to_json(&self) -> Json {
+        let cells = self
+            .cells
+            .iter()
+            .map(|(spec, r)| {
+                let mut fields = vec![
+                    ("name", Json::str(&r.name)),
+                    ("chaos", Json::str(&r.spec)),
+                    (
+                        "deadline_ms",
+                        spec.deadline_ms.map_or(Json::Null, |d| Json::num(d as f64)),
+                    ),
+                    ("queue_cap", Json::num(spec.queue_cap as f64)),
+                    ("submitted", Json::num(r.submitted as f64)),
+                    ("accepted", Json::num(r.accepted as f64)),
+                    ("availability", Json::num(r.availability())),
+                    ("answered", Json::num(r.answered())),
+                    ("shed_rate", Json::num(r.shed_rate())),
+                    ("ok", Json::num(r.ok as f64)),
+                    ("shed_overload", Json::num(r.shed_overload as f64)),
+                    ("deadline_expired", Json::num(r.deadline_expired as f64)),
+                    ("failed", Json::num(r.failed as f64)),
+                    ("shutdown", Json::num(r.shutdown as f64)),
+                    ("hung", Json::num(r.hung as f64)),
+                    ("retries", Json::num(r.retries as f64)),
+                    ("requeues", Json::num(r.requeues as f64)),
+                    ("worker_panics", Json::num(r.worker_panics as f64)),
+                    ("respawns", Json::num(r.respawns as f64)),
+                    ("breaker_trips", Json::num(r.breaker_trips as f64)),
+                    ("elapsed_s", Json::num(r.elapsed_s)),
+                ];
+                if let Some([p50, p95, p99]) = r.latency_s {
+                    fields.push(("p50_ms", Json::num(1e3 * p50)));
+                    fields.push(("p95_ms", Json::num(1e3 * p95)));
+                    fields.push(("p99_ms", Json::num(1e3 * p99)));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("cells", Json::Arr(cells)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+        ])
+    }
+
+    /// Human-readable soak table.
+    pub fn render(&self) -> String {
+        let mut s = String::from("=== chaos soak ===\n");
+        s.push_str(&format!(
+            "{:<18}{:>7}{:>7}{:>8}{:>8}{:>8}{:>8}{:>8}{:>9}{:>10}\n",
+            "cell", "subm", "acc", "avail%", "shed", "ddl", "retry", "panic", "respawn", "p99 ms"
+        ));
+        for (_, r) in &self.cells {
+            let p99 = r
+                .latency_s
+                .map(|p| format!("{:.2}", 1e3 * p[2]))
+                .unwrap_or_else(|| "n/a".to_string());
+            s.push_str(&format!(
+                "{:<18}{:>7}{:>7}{:>8.1}{:>8}{:>8}{:>8}{:>8}{:>9}{:>10}\n",
+                r.name,
+                r.submitted,
+                r.accepted,
+                100.0 * r.availability(),
+                r.shed_overload,
+                r.deadline_expired,
+                r.retries,
+                r.worker_panics,
+                r.respawns,
+                p99
+            ));
+        }
+        s.push_str(&format!("soak wall time: {:.2}s\n", self.elapsed_s));
+        s
+    }
+}
+
+/// Run the soak: one coordinator per cell, `cfg.n` open-loop submits
+/// with seeded exponential inter-arrival gaps, every receiver collected
+/// to a typed end (or counted hung).
+pub fn run_soak(model: &KwsModel, cfg: &SoakConfig) -> Result<SoakReport> {
+    ensure!(!cfg.cells.is_empty(), "soak needs at least one cell");
+    ensure!(cfg.n > 0, "soak needs at least one request per cell");
+    // One utterance set shared by every cell (the faults are the
+    // variable under test, not the audio).
+    let audios: Vec<Vec<f32>> = (0..cfg.n)
+        .map(|i| dataset::synth_utterance(i % 12, cfg.seed ^ i as u64, model.audio_len, 0.3))
+        .collect();
+    let t0 = Instant::now();
+    let mut cells = Vec::with_capacity(cfg.cells.len());
+    for (ci, cell) in cfg.cells.iter().enumerate() {
+        let opts = ServeOptions {
+            macros: cfg.macros,
+            batch: cfg.batch,
+            // Small fixed linger: real coalescing without taxing the
+            // deadline cells' budgets.
+            linger_us: Some(200),
+            queue_cap: cell.queue_cap,
+            chaos: cell.chaos,
+            max_attempts: cfg.max_attempts,
+            ..Default::default()
+        };
+        let mut coord =
+            Coordinator::start_with_options(model, OptLevel::FULL, cfg.workers, BackendKind::Fast, opts)?;
+        let mut arrivals = Rng::new(cfg.seed.wrapping_add(0x50AC).wrapping_mul(ci as u64 + 1));
+        let tc = Instant::now();
+        let mut r = CellResult {
+            name: cell.name.clone(),
+            spec: cell.chaos.map_or_else(|| "none".to_string(), |p| p.spec()),
+            submitted: 0,
+            accepted: 0,
+            shed_overload: 0,
+            ok: 0,
+            deadline_expired: 0,
+            failed: 0,
+            shutdown: 0,
+            hung: 0,
+            retries: 0,
+            requeues: 0,
+            worker_panics: 0,
+            respawns: 0,
+            breaker_trips: 0,
+            latency_s: None,
+            elapsed_s: 0.0,
+        };
+        let mut rxs = Vec::with_capacity(cfg.n);
+        for (i, audio) in audios.iter().enumerate() {
+            if cell.rate > 0.0 {
+                // Exponential inter-arrival gaps -> a Poisson process.
+                let u = arrivals.f64();
+                let gap_s = -(1.0 - u).ln() / cell.rate;
+                std::thread::sleep(Duration::from_secs_f64(gap_s.min(0.05)));
+            }
+            let req = InferenceRequest {
+                id: i as u64,
+                audio: audio.clone(),
+                label: Some((i % 12) as i32),
+                deadline: cell.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
+            };
+            r.submitted += 1;
+            match coord.submit(req) {
+                Ok(rx) => {
+                    r.accepted += 1;
+                    rxs.push(rx);
+                }
+                Err(SubmitError::Overloaded { .. }) => r.shed_overload += 1,
+                Err(SubmitError::Shutdown) => r.shutdown += 1,
+            }
+        }
+        for rx in rxs {
+            match rx.recv_timeout(cfg.answer_timeout) {
+                Ok(Ok(_resp)) => r.ok += 1,
+                Ok(Err(ServeError::DeadlineExceeded { .. })) => r.deadline_expired += 1,
+                Ok(Err(ServeError::Shutdown)) => r.shutdown += 1,
+                Ok(Err(_)) => r.failed += 1,
+                // Timeout or a dropped channel: the availability
+                // contract is broken either way.
+                Err(_) => r.hung += 1,
+            }
+        }
+        use std::sync::atomic::Ordering;
+        r.retries = coord.stats.retries.load(Ordering::Relaxed);
+        r.requeues = coord.stats.requeues.load(Ordering::Relaxed);
+        r.worker_panics = coord.stats.worker_panics.load(Ordering::Relaxed);
+        r.respawns = coord.stats.respawns.load(Ordering::Relaxed);
+        r.breaker_trips = coord.stats.breaker_trips.load(Ordering::Relaxed);
+        r.latency_s = coord.stats.host_latency_percentiles();
+        r.elapsed_s = tc.elapsed().as_secs_f64();
+        coord.shutdown();
+        cells.push((cell.clone(), r));
+    }
+    Ok(SoakReport { cells, elapsed_s: t0.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(name: &str) -> CellResult {
+        CellResult {
+            name: name.to_string(),
+            spec: "none".to_string(),
+            submitted: 10,
+            accepted: 10,
+            shed_overload: 0,
+            ok: 10,
+            deadline_expired: 0,
+            failed: 0,
+            shutdown: 0,
+            hung: 0,
+            retries: 0,
+            requeues: 0,
+            worker_panics: 0,
+            respawns: 0,
+            breaker_trips: 0,
+            latency_s: Some([0.001, 0.002, 0.003]),
+            elapsed_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn standard_grid_covers_every_fault_story() {
+        let cfg = SoakConfig::standard();
+        let names: Vec<&str> = cfg.cells.iter().map(|c| c.name.as_str()).collect();
+        for want in
+            ["baseline", "transient", "panic", "latency_deadline", "stall_shed", "overload"]
+        {
+            assert!(names.contains(&want), "missing cell {want}");
+        }
+        assert!(cfg.cells.iter().any(|c| c.expect_respawn));
+        assert!(cfg.cells.iter().any(|c| c.expect_overload_shed));
+        assert!(cfg.cells.iter().any(|c| c.expect_deadline_shed));
+        // quick() shrinks the load, never the scenario coverage.
+        assert_eq!(SoakConfig::quick().cells.len(), cfg.cells.len());
+        assert!(SoakConfig::quick().n < cfg.n);
+    }
+
+    #[test]
+    fn report_check_enforces_the_availability_contract() {
+        let spec = SoakCell::new("clean", None);
+        let ok = SoakReport { cells: vec![(spec.clone(), result("clean"))], elapsed_s: 0.1 };
+        ok.check().unwrap();
+        // A hung request fails the check no matter the cell.
+        let mut hung = result("clean");
+        hung.hung = 1;
+        let bad = SoakReport { cells: vec![(spec.clone(), hung)], elapsed_s: 0.1 };
+        assert!(bad.check().unwrap_err().to_string().contains("hung"));
+        // Lost availability fails where the cell demands 100%.
+        let mut lossy = result("clean");
+        lossy.ok = 9;
+        lossy.failed = 1;
+        let bad = SoakReport { cells: vec![(spec.clone(), lossy.clone())], elapsed_s: 0.1 };
+        assert!(bad.check().unwrap_err().to_string().contains("availability"));
+        // ...but is fine where the scenario sheds by design.
+        let tolerant = SoakCell { expect_full_availability: false, ..spec };
+        let mut shed = lossy;
+        shed.failed = 0;
+        shed.deadline_expired = 1;
+        SoakReport { cells: vec![(tolerant, shed)], elapsed_s: 0.1 }.check().unwrap();
+    }
+
+    #[test]
+    fn report_ratios_and_json_roundtrip() {
+        let mut r = result("overload");
+        r.submitted = 12;
+        r.accepted = 8;
+        r.shed_overload = 4;
+        r.ok = 8;
+        assert!((r.availability() - 1.0).abs() < 1e-12);
+        assert!((r.shed_rate() - 4.0 / 12.0).abs() < 1e-12);
+        assert!((r.answered() - 1.0).abs() < 1e-12);
+        let spec = SoakCell { queue_cap: 4, ..SoakCell::new("overload", None) };
+        let report = SoakReport { cells: vec![(spec, r)], elapsed_s: 0.2 };
+        let parsed = Json::parse(&report.to_json().to_string()).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.get("shed_overload").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(c.get("availability").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(c.get("queue_cap").unwrap().as_f64().unwrap(), 4.0);
+        let text = report.render();
+        assert!(text.contains("overload"), "{text}");
+        assert!(text.contains("100.0"), "{text}");
+    }
+}

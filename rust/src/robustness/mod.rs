@@ -27,7 +27,7 @@ pub mod replay;
 pub mod sweep;
 
 pub use replay::{infer_disturbed, VariationParams};
-pub use sweep::{run_sweep, SweepConfig, SweepPoint, SweepReport};
+pub use sweep::{run_sweep, CellSummary, SweepConfig, SweepPoint, SweepReport};
 
 use anyhow::Result;
 

@@ -22,8 +22,27 @@ use anyhow::{ensure, Result};
 use crate::fsim::FastSim;
 use crate::telemetry::{self, Histogram};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 use super::replay::VariationParams;
+
+/// Bootstrap resamples per cell for the seed-level confidence interval.
+const BOOTSTRAP_RESAMPLES: usize = 1000;
+
+/// One (sigma, nl, mapping) cell's seed-aggregated accuracy with a
+/// bootstrap 95% confidence interval over its Monte-Carlo seeds.
+#[derive(Debug, Clone)]
+pub struct CellSummary {
+    pub sigma: f64,
+    pub nl_alpha: f64,
+    pub symmetric: bool,
+    pub mean_accuracy: f64,
+    /// 2.5th percentile of the bootstrap distribution of the mean.
+    pub ci95_lo: f64,
+    /// 97.5th percentile of the bootstrap distribution of the mean.
+    pub ci95_hi: f64,
+    pub n_seeds: usize,
+}
 
 /// The sweep grid + execution knobs.
 #[derive(Debug, Clone)]
@@ -151,6 +170,64 @@ impl SweepReport {
             .collect()
     }
 
+    /// Per-cell seed statistics with bootstrap 95% confidence intervals,
+    /// in grid order. Resampling is deterministic (cell-indexed seeds),
+    /// so reports and JSON artifacts are reproducible run to run. A
+    /// single-seed cell has no resampling spread: its interval collapses
+    /// to the point estimate.
+    pub fn cell_summaries(&self) -> Vec<CellSummary> {
+        let mut keys: Vec<(f64, f64, bool)> = Vec::new();
+        let mut samples: Vec<Vec<f64>> = Vec::new();
+        for p in &self.points {
+            let key = (p.params.sigma, p.params.nl_alpha, p.params.symmetric);
+            match keys.iter().position(|k| *k == key) {
+                Some(i) => samples[i].push(p.accuracy),
+                None => {
+                    keys.push(key);
+                    samples.push(vec![p.accuracy]);
+                }
+            }
+        }
+        keys.iter()
+            .zip(&samples)
+            .enumerate()
+            .map(|(ci, (k, xs))| {
+                let n = xs.len();
+                let mean = xs.iter().sum::<f64>() / n as f64;
+                let (lo, hi) = if n < 2 {
+                    (mean, mean)
+                } else {
+                    let mut rng = Rng::new(
+                        0xB007_5742u64 ^ (ci as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let mut means: Vec<f64> = (0..BOOTSTRAP_RESAMPLES)
+                        .map(|_| {
+                            (0..n).map(|_| xs[rng.below(n as u64) as usize]).sum::<f64>()
+                                / n as f64
+                        })
+                        .collect();
+                    means.sort_by(|a, b| a.total_cmp(b));
+                    // Nearest-rank percentiles of the bootstrap means.
+                    let at = |p: f64| {
+                        let rank =
+                            ((p * means.len() as f64).ceil() as usize).clamp(1, means.len());
+                        means[rank - 1]
+                    };
+                    (at(0.025), at(0.975))
+                };
+                CellSummary {
+                    sigma: k.0,
+                    nl_alpha: k.1,
+                    symmetric: k.2,
+                    mean_accuracy: mean,
+                    ci95_lo: lo,
+                    ci95_hi: hi,
+                    n_seeds: n,
+                }
+            })
+            .collect()
+    }
+
     /// The paper's qualitative §II-B claim at this sweep's largest sigma:
     /// `(sigma, symmetric mean accuracy, single-ended mean accuracy)`.
     /// `None` unless both mappings were swept at a sigma > 0.
@@ -229,6 +306,28 @@ impl SweepReport {
             ("mismatch", Json::num(self.mismatch)),
             ("threads", Json::num(self.threads as f64)),
             ("points", Json::Arr(points)),
+            (
+                "cells",
+                Json::Arr(
+                    self.cell_summaries()
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("sigma", Json::num(c.sigma)),
+                                ("nl_alpha", Json::num(c.nl_alpha)),
+                                (
+                                    "mapping",
+                                    Json::str(if c.symmetric { "symmetric" } else { "single" }),
+                                ),
+                                ("mean_accuracy", Json::num(c.mean_accuracy)),
+                                ("ci95_lo", Json::num(c.ci95_lo)),
+                                ("ci95_hi", Json::num(c.ci95_hi)),
+                                ("n_seeds", Json::num(c.n_seeds as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ];
         if let Some((sigma, sym, single)) = self.mapping_gap_at_max_sigma() {
             fields.push((
@@ -418,6 +517,51 @@ mod tests {
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("points").unwrap().as_arr().unwrap().len(), 8);
         assert!(parsed.get("mapping_claim").is_ok());
+        // Cell summaries ride along with their confidence intervals.
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 4);
+        for c in cells {
+            let lo = c.get("ci95_lo").unwrap().as_f64().unwrap();
+            let hi = c.get("ci95_hi").unwrap().as_f64().unwrap();
+            assert!(lo <= hi);
+        }
+    }
+
+    #[test]
+    fn bootstrap_cis_bracket_seed_spread_and_are_deterministic() {
+        let (sim, audios, labels) = setup();
+        let refs: Vec<&[f32]> = audios.iter().map(|a| a.as_slice()).collect();
+        let cfg = SweepConfig {
+            sigmas: vec![0.4],
+            nl_alphas: vec![0.3],
+            mappings: vec![false],
+            seeds: (0..6).map(|s| 100 + s).collect(),
+            mismatch: 0.05,
+            threads: 2,
+        };
+        let report = run_sweep(&sim, &refs, &labels, &cfg).unwrap();
+        let cells = report.cell_summaries();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.n_seeds, 6);
+        // The interval is ordered, bounded by the observed seed spread,
+        // and agrees with cells() on the point estimate.
+        let accs: Vec<f64> = report.points.iter().map(|p| p.accuracy).collect();
+        let min = accs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = accs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(c.ci95_lo <= c.ci95_hi);
+        assert!(c.ci95_lo >= min - 1e-12 && c.ci95_hi <= max + 1e-12);
+        assert!((c.mean_accuracy - report.cells()[0].3).abs() < 1e-12);
+        // Deterministic: resampling is seeded per cell index.
+        let again = report.cell_summaries();
+        assert_eq!(c.ci95_lo, again[0].ci95_lo);
+        assert_eq!(c.ci95_hi, again[0].ci95_hi);
+        // A single-seed cell collapses to the point estimate.
+        let single = SweepConfig { seeds: vec![100], ..cfg };
+        let r1 = run_sweep(&sim, &refs, &labels, &single).unwrap();
+        let c1 = &r1.cell_summaries()[0];
+        assert_eq!(c1.ci95_lo, c1.mean_accuracy);
+        assert_eq!(c1.ci95_hi, c1.mean_accuracy);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod spans;
 
 pub use perfetto::TraceBuilder;
 pub use registry::{enabled, global, set_enabled, Counter, Gauge, Histogram, Registry};
-pub use spans::{RequestSpan, SpanLog};
+pub use spans::{RequestSpan, SpanLog, SpanOutcome};
 
 /// Serialize unit tests that flip the process-global enable flag, so
 /// parallel test threads don't observe each other's state.

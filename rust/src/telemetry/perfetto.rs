@@ -21,6 +21,8 @@ use crate::compiler::Program;
 use crate::util::json::Json;
 
 use super::spans::RequestSpan;
+#[cfg(test)]
+use super::spans::SpanOutcome;
 
 /// The paper's system clock: cycles → µs divisor.
 pub const CLOCK_MHZ: f64 = 50.0;
@@ -201,7 +203,11 @@ pub fn serving_tracks(tb: &mut TraceBuilder, spans: &[RequestSpan], max_request_
     }
     tb.process_name(PID_SERVE, "cimrv-serve workers");
     tb.process_name(PID_REQUESTS, "requests");
-    let mut workers: Vec<usize> = spans.iter().map(|s| s.worker).collect();
+    // Spans shed at admission carry `worker == usize::MAX` (no worker
+    // ever saw them): they get a request-track slice below but must not
+    // fabricate a worker thread or join a batch.
+    let mut workers: Vec<usize> =
+        spans.iter().map(|s| s.worker).filter(|&w| w != usize::MAX).collect();
     workers.sort_unstable();
     workers.dedup();
     for &w in &workers {
@@ -212,6 +218,9 @@ pub fn serving_tracks(tb: &mut TraceBuilder, spans: &[RequestSpan], max_request_
     // sorted by req_id; batches keep first-seen order.
     let mut batches: Vec<(usize, u64, Vec<&RequestSpan>)> = Vec::new();
     for s in spans {
+        if s.worker == usize::MAX {
+            continue;
+        }
         match batches.iter_mut().find(|(w, x, _)| *w == s.worker && *x == s.exec_start_us) {
             Some((_, _, members)) => members.push(s),
             None => batches.push((s.worker, s.exec_start_us, vec![s])),
@@ -288,6 +297,20 @@ pub fn serving_tracks(tb: &mut TraceBuilder, spans: &[RequestSpan], max_request_
     for s in spans.iter().take(max_request_tracks) {
         let tid = s.req_id;
         tb.thread_name(PID_REQUESTS, tid, &format!("req {}", s.req_id));
+        if s.worker == usize::MAX {
+            // Rejected at admission: one instantaneous "shed" slice is
+            // the whole lifecycle.
+            tb.complete(
+                PID_REQUESTS,
+                tid,
+                "shed",
+                "shed",
+                s.enqueue_us as f64,
+                0.0,
+                vec![("outcome", Json::str(s.outcome.as_str()))],
+            );
+            continue;
+        }
         tb.complete(
             PID_REQUESTS,
             tid,
@@ -313,7 +336,7 @@ pub fn serving_tracks(tb: &mut TraceBuilder, spans: &[RequestSpan], max_request_
             "respond",
             s.exec_end_us as f64,
             s.respond_us.saturating_sub(s.exec_end_us) as f64,
-            vec![],
+            vec![("outcome", Json::str(s.outcome.as_str()))],
         );
     }
 }
@@ -373,6 +396,7 @@ mod tests {
             exec_end_us: exec_start_us + 100,
             respond_us: exec_start_us + 110,
             shard_fires: vec![30, 10],
+            outcome: SpanOutcome::Ok,
         };
         let spans = vec![span(0, 0, 30), span(1, 0, 30), span(2, 1, 40)];
         let mut tb = TraceBuilder::new();
@@ -395,6 +419,57 @@ mod tests {
             .count();
         assert_eq!(shard0, 2);
         assert!(text.contains("req 2"));
+        // Respond slices carry the lifecycle outcome.
+        assert!(text.contains("\"outcome\""));
+    }
+
+    #[test]
+    fn shed_spans_stay_off_worker_tracks() {
+        let served = RequestSpan {
+            req_id: 0,
+            worker: 0,
+            batch_size: 1,
+            enqueue_us: 5,
+            assembly_start_us: 10,
+            assembled_us: 20,
+            exec_start_us: 30,
+            exec_end_us: 130,
+            respond_us: 140,
+            shard_fires: vec![10],
+            outcome: SpanOutcome::Ok,
+        };
+        let shed = RequestSpan {
+            req_id: 1,
+            worker: usize::MAX,
+            batch_size: 0,
+            enqueue_us: 50,
+            assembly_start_us: 50,
+            assembled_us: 50,
+            exec_start_us: 50,
+            exec_end_us: 50,
+            respond_us: 50,
+            shard_fires: vec![],
+            outcome: SpanOutcome::Shed,
+        };
+        let mut tb = TraceBuilder::new();
+        serving_tracks(&mut tb, &[served, shed], 256);
+        let doc = tb.build();
+        assert_event_schema(&doc);
+        let text = doc.to_string();
+        // The shed request appears on its own track...
+        assert!(text.contains("\"shed\""), "{text}");
+        assert!(text.contains("req 1"), "{text}");
+        // ...but no phantom worker thread or batch was fabricated.
+        assert!(!text.contains(&format!("worker {}", usize::MAX)), "{text}");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let executes = events
+            .iter()
+            .filter(|e| {
+                e.get("name").and_then(|n| n.as_str().map(str::to_string)).ok().as_deref()
+                    == Some("execute[1]")
+            })
+            .count();
+        assert_eq!(executes, 1, "only the served span forms a batch");
     }
 
     #[test]

@@ -20,6 +20,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::util::json::Json;
+use crate::util::lock_or_recover;
 
 /// Process-global enable flag (the "global-off fast path").
 static ENABLED: AtomicBool = AtomicBool::new(false);
@@ -191,7 +192,7 @@ impl Registry {
     /// Get or create the counter `name`. Panics if `name` is already
     /// registered as a different metric kind (a wiring bug, not input).
     pub fn counter(&self, name: &str) -> Arc<Counter> {
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = lock_or_recover(&self.metrics);
         match m
             .entry(name.to_string())
             .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
@@ -203,7 +204,7 @@ impl Registry {
 
     /// Get or create the gauge `name`.
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = lock_or_recover(&self.metrics);
         match m
             .entry(name.to_string())
             .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
@@ -216,7 +217,7 @@ impl Registry {
     /// Get or create the histogram `name` with the given finite bucket
     /// bounds (ignored when the histogram already exists).
     pub fn histogram(&self, name: &str, bounds: Vec<u64>) -> Arc<Histogram> {
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = lock_or_recover(&self.metrics);
         match m
             .entry(name.to_string())
             .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds))))
@@ -228,7 +229,7 @@ impl Registry {
 
     /// Zero every registered metric (benches/tests; handles stay live).
     pub fn reset(&self) {
-        for metric in self.metrics.lock().unwrap().values() {
+        for metric in lock_or_recover(&self.metrics).values() {
             match metric {
                 Metric::Counter(c) => c.reset(),
                 Metric::Gauge(g) => g.reset(),
@@ -241,7 +242,7 @@ impl Registry {
     /// (the registry namespaces with dots, e.g. `serve.requests`).
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
-        for (name, metric) in self.metrics.lock().unwrap().iter() {
+        for (name, metric) in lock_or_recover(&self.metrics).iter() {
             let n = name.replace(['.', '-'], "_");
             match metric {
                 Metric::Counter(c) => {
@@ -269,7 +270,7 @@ impl Registry {
     /// JSON snapshot for `--metrics-out` and bench artifacts.
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
-        for (name, metric) in self.metrics.lock().unwrap().iter() {
+        for (name, metric) in lock_or_recover(&self.metrics).iter() {
             let v = match metric {
                 Metric::Counter(c) => Json::obj(vec![
                     ("type", Json::str("counter")),

@@ -20,6 +20,44 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::util::lock_or_recover;
+
+/// How a request's lifecycle ended — the fault story's per-request verdict.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Served cleanly on the first attempt.
+    #[default]
+    Ok,
+    /// Served, but only after one or more retries/requeues.
+    Retried,
+    /// Rejected at admission (queue full) — never executed.
+    Shed,
+    /// Deadline expired before a result could be returned.
+    Deadline,
+    /// Exhausted its retry budget; failed back to the caller typed.
+    Failed,
+}
+
+impl SpanOutcome {
+    /// Stable lowercase label (Perfetto args, reports).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanOutcome::Ok => "ok",
+            SpanOutcome::Retried => "retried",
+            SpanOutcome::Shed => "shed",
+            SpanOutcome::Deadline => "deadline",
+            SpanOutcome::Failed => "failed",
+        }
+    }
+
+    /// Did the caller get a real `InferenceResponse`? Served spans are
+    /// the ones whose `total_us` is a host-latency sample; shed/failed
+    /// lifecycles are part of the trace but not the latency population.
+    pub fn served(&self) -> bool {
+        matches!(self, SpanOutcome::Ok | SpanOutcome::Retried)
+    }
+}
+
 /// One request's lifecycle, in µs offsets from the [`SpanLog`] epoch.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RequestSpan {
@@ -41,8 +79,11 @@ pub struct RequestSpan {
     pub exec_end_us: u64,
     /// Reply handed back: `enqueue_us` + the measured host latency.
     pub respond_us: u64,
-    /// Per-macro fire counts from this request's `RunResult`.
+    /// Per-macro fire counts from this request's `RunResult` (empty for
+    /// lifecycles that never executed: shed / deadline-dropped).
     pub shard_fires: Vec<u64>,
+    /// How the lifecycle ended (`ok|retried|shed|deadline|failed`).
+    pub outcome: SpanOutcome,
 }
 
 impl RequestSpan {
@@ -93,11 +134,11 @@ impl SpanLog {
         if !crate::telemetry::enabled() {
             return;
         }
-        self.spans.lock().unwrap().push(span);
+        lock_or_recover(&self.spans).push(span);
     }
 
     pub fn len(&self) -> usize {
-        self.spans.lock().unwrap().len()
+        lock_or_recover(&self.spans).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -106,14 +147,21 @@ impl SpanLog {
 
     /// Copy of the recorded spans, in request-id order.
     pub fn snapshot(&self) -> Vec<RequestSpan> {
-        let mut v = self.spans.lock().unwrap().clone();
+        let mut v = lock_or_recover(&self.spans).clone();
         v.sort_by_key(|s| s.req_id);
         v
     }
 
-    /// End-to-end latency samples (µs), one per recorded span.
+    /// End-to-end latency samples (µs), one per *served* span. Shed,
+    /// deadline-dropped, and failed lifecycles are excluded so these
+    /// samples stay exactly the host-latency population (`ServiceStats`
+    /// asserts span-derived percentiles == host percentiles).
     pub fn total_us_samples(&self) -> Vec<u64> {
-        self.spans.lock().unwrap().iter().map(|s| s.total_us()).collect()
+        lock_or_recover(&self.spans)
+            .iter()
+            .filter(|s| s.outcome.served())
+            .map(|s| s.total_us())
+            .collect()
     }
 }
 
@@ -134,6 +182,7 @@ mod tests {
             exec_end_us: 131,
             respond_us: 140,
             shard_fires: vec![5, 5],
+            outcome: SpanOutcome::Ok,
         }
     }
 
@@ -162,6 +211,33 @@ mod tests {
             assert_eq!(snap[0].req_id, 1);
             assert_eq!(log.total_us_samples(), vec![130, 130]);
         });
+    }
+
+    #[test]
+    fn latency_samples_exclude_unserved_outcomes() {
+        let log = SpanLog::default();
+        with_telemetry(|| {
+            log.record(span(0));
+            log.record(RequestSpan { outcome: SpanOutcome::Retried, ..span(1) });
+            log.record(RequestSpan { outcome: SpanOutcome::Shed, ..span(2) });
+            log.record(RequestSpan { outcome: SpanOutcome::Deadline, ..span(3) });
+            log.record(RequestSpan { outcome: SpanOutcome::Failed, ..span(4) });
+            // All five lifecycles are in the trace...
+            assert_eq!(log.snapshot().len(), 5);
+            // ...but only the served ones are latency samples.
+            assert_eq!(log.total_us_samples(), vec![130, 130]);
+        });
+        for (o, s) in [
+            (SpanOutcome::Ok, "ok"),
+            (SpanOutcome::Retried, "retried"),
+            (SpanOutcome::Shed, "shed"),
+            (SpanOutcome::Deadline, "deadline"),
+            (SpanOutcome::Failed, "failed"),
+        ] {
+            assert_eq!(o.as_str(), s);
+        }
+        assert!(SpanOutcome::Retried.served());
+        assert!(!SpanOutcome::Deadline.served());
     }
 
     #[test]

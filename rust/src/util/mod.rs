@@ -1,8 +1,39 @@
 //! Small in-tree replacements for crates missing from the offline image
 //! (serde_json, clap, rand, proptest) plus binary-artifact I/O helpers.
 
+use std::sync::{Mutex, MutexGuard};
+
 pub mod cli;
 pub mod io;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+
+/// Lock a mutex, recovering from poisoning instead of propagating the
+/// panic. The serving path guards plain data (stat vectors, queues)
+/// behind its mutexes — no invariant spans a critical section — so a
+/// worker that panicked while holding one leaves the data intact and
+/// the right response is to keep serving, not to wedge `serve_batch`,
+/// `shutdown`, and every stats reporter behind a `PoisonError`.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_or_recover_survives_poisoning() {
+        let m = Mutex::new(vec![1u64]);
+        // Poison it: panic while holding the guard.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison");
+        }));
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        // Recovery: the data is still there and still writable.
+        lock_or_recover(&m).push(2);
+        assert_eq!(*lock_or_recover(&m), vec![1, 2]);
+    }
+}

@@ -138,6 +138,7 @@ fn coordinator_end_to_end_on_trained_model() {
             id: i as u64,
             audio: dataset::synth_utterance(i % 12, 50 + i as u64, m.audio_len, 0.37),
             label: Some((i % 12) as i32),
+            deadline: None,
         })
         .collect();
     let resps = coord.serve_batch(reqs).unwrap();

@@ -100,6 +100,7 @@ fn perfetto_export_from_a_real_serve_passes_the_schema_smoke() {
                 id: i,
                 audio: dataset::synth_utterance(i as usize % 12, i, m.audio_len, 0.3),
                 label: None,
+                deadline: None,
             })
             .collect();
         let _ = coord.serve_batch(reqs).unwrap();
@@ -143,6 +144,7 @@ fn span_percentiles_match_service_stats_exactly() {
                 id: i,
                 audio: dataset::synth_utterance(i as usize % 12, 70 + i, m.audio_len, 0.3),
                 label: None,
+                deadline: None,
             })
             .collect();
         let _ = coord.serve_batch(reqs).unwrap();
