@@ -48,9 +48,9 @@ fn main() -> anyhow::Result<()> {
     println!("served {n} utterances on 4 workers in {wall:.2}s host time");
     println!(
         "chip:  {:.3} ms/inference @50 MHz, {:.2} uJ/inference, {:.1} inf/s chip-rate",
-        1e3 * (cycles as f64 / n as f64) / 50e6,
+        1e3 * cimrv::clock::cycles_to_seconds(cycles) / n as f64,
         uj / n as f64,
-        n as f64 / (cycles as f64 / 50e6)
+        n as f64 / cimrv::clock::cycles_to_seconds(cycles)
     );
     println!("accuracy: {}/{} ({:.1}%)", correct, n, 100.0 * correct as f64 / n as f64);
     println!(

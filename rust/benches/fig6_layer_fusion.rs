@@ -21,19 +21,22 @@ fn main() {
 
     println!("=== Fig. 6: CIM layer fusion ===");
     println!("{:<24}{:>16}{:>16}{:>18}", "config", "conv cycles", "accel cycles", "DRAM bytes");
+    // Real byte counts from the activity accounting — not dram_pj divided
+    // by an assumed pJ/byte, which silently skewed this column whenever
+    // the energy table changed.
     println!(
-        "{:<24}{:>16}{:>16}{:>18.0}",
+        "{:<24}{:>16}{:>16}{:>18}",
         "no fusion (DRAM FM)",
         base.phases.conv,
         base.phases.accelerated(),
-        base.energy.dram_pj / 400.0
+        base.energy.dram_bytes
     );
     println!(
-        "{:<24}{:>16}{:>16}{:>18.0}",
+        "{:<24}{:>16}{:>16}{:>18}",
         "layer fusion (on-chip)",
         fused.phases.conv,
         fused.phases.accelerated(),
-        fused.energy.dram_pj / 400.0
+        fused.energy.dram_bytes
     );
     let conv_red = 100.0 * (1.0 - fused.phases.conv as f64 / base.phases.conv as f64);
     let accel_red =

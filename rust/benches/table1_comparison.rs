@@ -52,7 +52,7 @@ fn main() {
         peak_tops(Mode::X),
         {
             let t = EnergyTable::default();
-            peak_tops(Mode::X) / (t.peak_cycle_pj() * 1e-12 * 50e6)
+            peak_tops(Mode::X) / (t.peak_cycle_pj() * 1e-12 * cimrv::clock::CLOCK_HZ)
         }
     );
     println!("macro utilization this run: {:.2}%", 100.0 * r.energy.macs as f64

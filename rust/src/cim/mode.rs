@@ -117,7 +117,7 @@ mod tests {
     #[test]
     fn tops_at_50mhz_matches_table1() {
         // X-mode, 2 ops per MAC, 50 MHz -> 26.21 TOPS (Table I).
-        let tops = Mode::X.macs_per_fire() as f64 * 2.0 * 50e6 / 1e12;
+        let tops = Mode::X.macs_per_fire() as f64 * 2.0 * crate::clock::CLOCK_HZ / 1e12;
         assert!((tops - 26.2144).abs() < 1e-3, "{tops}");
     }
 

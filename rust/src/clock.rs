@@ -1,0 +1,40 @@
+//! The paper's 50 MHz system clock — the single source of truth.
+//!
+//! Every consumer (TOPS accounting, average-power, Perfetto cycle→µs
+//! conversion, the CLI throughput summary, `seconds_at_50mhz`) derives
+//! from [`CLOCK_HZ`]; nothing else in the tree may carry its own `50e6`
+//! or `50.0` literal, so traces, TOPS and peak-power numbers can never
+//! disagree about what a cycle is worth.
+
+/// Core clock of the paper's implementation (TSMC 28 nm @ 0.9 V).
+pub const CLOCK_HZ: f64 = 50e6;
+
+/// The same clock in MHz — the cycles → microseconds divisor.
+pub const CLOCK_MHZ: f64 = CLOCK_HZ / 1e6;
+
+/// Wall-clock seconds a cycle count corresponds to at the system clock.
+#[inline]
+pub fn cycles_to_seconds(cycles: u64) -> f64 {
+    cycles as f64 / CLOCK_HZ
+}
+
+/// Wall-clock microseconds a cycle count corresponds to (trace axes).
+#[inline]
+pub fn cycles_to_us(cycles: u64) -> f64 {
+    cycles as f64 / CLOCK_MHZ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_forms_agree() {
+        assert_eq!(CLOCK_HZ, 50e6);
+        assert_eq!(CLOCK_MHZ, 50.0);
+        assert_eq!(cycles_to_seconds(50_000_000), 1.0);
+        assert_eq!(cycles_to_us(50), 1.0);
+        // µs and s forms describe the same clock.
+        assert_eq!(cycles_to_us(12_345), cycles_to_seconds(12_345) * 1e6);
+    }
+}

@@ -219,7 +219,7 @@ pub fn render_sweep(report: &crate::robustness::SweepReport) -> String {
         report.inferences,
         report.elapsed_s,
         report.inf_per_s,
-        1e3 * report.chip_cycles_per_inference as f64 / 50e6,
+        1e3 * crate::clock::cycles_to_seconds(report.chip_cycles_per_inference),
         report.mismatch,
         report.threads
     ));

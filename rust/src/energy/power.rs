@@ -48,6 +48,11 @@ pub struct EnergyReport {
     /// Cycles and MACs the energy was spent over.
     pub cycles: u64,
     pub macs: u64,
+    /// DRAM bytes actually moved (carried from [`ActivityCounts`], not
+    /// derivable from `dram_pj` without assuming the table's per-byte
+    /// cost — reporting code must use this, never divide the energy
+    /// back).
+    pub dram_bytes: u64,
 }
 
 impl EnergyReport {
@@ -104,6 +109,7 @@ impl EnergyReport {
             total_pj,
             cycles: c.cycles,
             macs: c.macs,
+            dram_bytes: c.dram_bytes,
         }
     }
 
@@ -187,5 +193,9 @@ mod tests {
         let r = EnergyReport::from_run(&table, &cpu, &bus);
         let parts = r.core_pj + r.macro_pj + r.fm_sram_pj + r.wt_sram_pj + r.dmem_pj + r.dram_pj + r.udma_pj;
         assert!((parts - r.total_pj).abs() < 1e-9);
+        // Byte counts ride through untouched: the report must never need
+        // dram_pj / dram_byte to recover them.
+        assert_eq!(r.dram_bytes, 100);
+        assert_eq!(r.dram_pj, table.dram_byte * 100.0);
     }
 }

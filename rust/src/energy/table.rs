@@ -87,8 +87,9 @@ mod tests {
     #[test]
     fn calibration_hits_table1_energy_efficiency() {
         let t = EnergyTable::default();
-        let peak_w = t.peak_cycle_pj() * 1e-12 * 50e6;
-        let tops = 1024.0 * 256.0 * 2.0 * 50e6 / 1e12;
+        let clk = crate::clock::CLOCK_HZ;
+        let peak_w = t.peak_cycle_pj() * 1e-12 * clk;
+        let tops = 1024.0 * 256.0 * 2.0 * clk / 1e12;
         let tops_per_w = tops / peak_w;
         assert!(
             (tops_per_w - 3707.84).abs() < 1.0,

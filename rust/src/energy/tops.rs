@@ -2,8 +2,9 @@
 
 use crate::cim::Mode;
 
-/// Core clock of the paper's implementation.
-pub const CLOCK_HZ: f64 = 50e6;
+/// Core clock of the paper's implementation (re-exported from the
+/// single source of truth, [`crate::clock`]).
+pub use crate::clock::CLOCK_HZ;
 
 /// Ops per MAC (multiply + accumulate).
 pub const OPS_PER_MAC: f64 = 2.0;

@@ -22,15 +22,18 @@
 //! streaming were wrong, fsim would disagree with the host reference, so
 //! the decode path doubles as a check on the program image itself.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Barrier, Mutex, RwLock};
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::compiler::Program;
 use crate::dataflow::plan;
 use crate::dataflow::shard::ShardPlan;
+use crate::model::kernel::{self, LaneLayer};
 use crate::model::kws::LayerSpec;
 use crate::model::reference::{self, BitMap, PackedLayer};
+use crate::util::{lock_or_recover, read_or_recover, write_or_recover};
 
 /// A program image decoded back to tensor-level form.
 #[derive(Debug, Clone)]
@@ -39,6 +42,11 @@ pub struct DecodedProgram {
     /// streams (the stream layout and the plane layout coincide; pairs of
     /// u32 stream words fold into the u64 window words the kernels use).
     pub layers: Vec<PackedLayer>,
+    /// The same planes transposed into the lane-blocked engine form
+    /// (`model::kernel::LaneLayer`) — what [`Self::infer`] and the
+    /// batched/sharded paths actually run on. `layers` stays the
+    /// oracle/replay representation.
+    pub lanes: Vec<LaneLayer>,
     /// Folded-BN feature thresholds (DMEM table, one i32 per channel).
     pub thr: Vec<i32>,
     /// Per-word flip masks applied to each packed feature word.
@@ -58,12 +66,26 @@ pub struct DecodedProgram {
 pub struct ShardedProgram {
     /// Macro count (shard plan's `n_macros`).
     pub n: usize,
-    /// `per_macro[m][layer] = Some((channel offset, shard))`.
+    /// `per_macro[m][layer] = Some((channel offset, shard))` in the
+    /// packed-plane form — the representation the variation-aware replay
+    /// (`robustness::replay`) walks fire by fire; keep its shape stable.
     pub per_macro: Vec<Vec<Option<(usize, PackedLayer)>>>,
+    /// The same shards transposed for the lane engine (what the sharded
+    /// inference paths execute).
+    pub lane_per_macro: Vec<Vec<Option<(usize, LaneLayer)>>>,
     /// Fires each macro performs per inference (one per row position of
     /// every layer it owns channels of) — the per-shard utilization
     /// surfaced by `ServiceStats` and the coordinator report.
     pub fires_per_macro: Vec<u64>,
+}
+
+/// Best-effort message out of a caught panic payload (shard-thread death
+/// reporting; `&str` and `String` cover `panic!` and `assert!`).
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
 }
 
 fn le_u32(bytes: &[u8], word: usize) -> u32 {
@@ -159,8 +181,10 @@ impl DecodedProgram {
         );
         ensure!(!layers.last().unwrap().binarized, "final layer must be raw (GAP path)");
 
+        let lanes = layers.iter().map(LaneLayer::from_packed).collect();
         Ok(DecodedProgram {
             layers,
+            lanes,
             thr,
             flip,
             t,
@@ -225,9 +249,24 @@ impl DecodedProgram {
         bits
     }
 
-    /// Full inference: audio -> (logits, argmax), through the packed
-    /// XNOR-popcount kernels over the decoded bit-planes.
+    /// Full inference: audio -> (logits, argmax), through the
+    /// lane-blocked incremental-window XNOR-popcount engine
+    /// (`model::kernel`) over the decoded bit-planes.
     pub fn infer(&self, audio: &[f32]) -> (Vec<f32>, usize) {
+        let mut x = self.preprocess(audio);
+        for lane in &self.lanes[..self.lanes.len() - 1] {
+            x = kernel::conv_layer_lanes(&x, lane);
+        }
+        let logits = kernel::final_layer_gap_lanes(&x, self.lanes.last().unwrap());
+        let predicted = reference::argmax(&logits);
+        (logits, predicted)
+    }
+
+    /// The PR 2 packed path (channel-at-a-time plane walk, windows
+    /// re-gathered per position): the lane engine's differential oracle
+    /// and its benchmark baseline (`benches/backend_throughput.rs` asserts
+    /// the engine's speedup over this). Bit-identical to [`Self::infer`].
+    pub fn infer_packed_ref(&self, audio: &[f32]) -> (Vec<f32>, usize) {
         let mut x = self.preprocess(audio);
         for packed in &self.layers[..self.layers.len() - 1] {
             x = reference::conv_layer_packed(&x, packed);
@@ -243,9 +282,9 @@ impl DecodedProgram {
         batch.iter().map(|a| self.preprocess(a)).collect()
     }
 
-    /// Batched inference: every layer's weight planes are walked **once
+    /// Batched inference: every layer's lane blocks are walked **once
     /// per batch** (inner loops over utterances — see
-    /// `reference::conv_layer_packed_batch`), instead of once per
+    /// `kernel::conv_layer_lanes_batch`), instead of once per
     /// utterance. Bit-identical to [`Self::infer`] per element for any
     /// batch size (property-tested in `tests/batch_parity.rs`).
     pub fn infer_batch(&self, batch: &[&[f32]]) -> Vec<(Vec<f32>, usize)> {
@@ -253,10 +292,10 @@ impl DecodedProgram {
             return Vec::new();
         }
         let mut xs = self.preprocess_batch(batch);
-        for packed in &self.layers[..self.layers.len() - 1] {
-            xs = reference::conv_layer_packed_batch(&xs, packed);
+        for lane in &self.lanes[..self.lanes.len() - 1] {
+            xs = kernel::conv_layer_lanes_batch(&xs, lane);
         }
-        reference::final_layer_gap_packed_batch(&xs, self.layers.last().unwrap())
+        kernel::final_layer_gap_lanes_batch(&xs, self.lanes.last().unwrap())
             .into_iter()
             .map(|logits| {
                 let predicted = reference::argmax(&logits);
@@ -314,6 +353,17 @@ impl DecodedProgram {
                 shards.push((b > a).then(|| (a, l.slice_channels(a, b))));
             }
         }
+        // Lane-blocked twins of every shard (what the inference paths
+        // execute; `per_macro` keeps the replay-stable packed form).
+        let lane_per_macro: Vec<Vec<Option<(usize, LaneLayer)>>> = per_macro
+            .iter()
+            .map(|shards| {
+                shards
+                    .iter()
+                    .map(|s| s.as_ref().map(|(off, p)| (*off, LaneLayer::from_packed(p))))
+                    .collect()
+            })
+            .collect();
         // Fire accounting mirrors the cycle engine's interleave: a macro
         // fires once per row position of every layer it owns channels of.
         let t_ins = self.t_ins();
@@ -327,7 +377,7 @@ impl DecodedProgram {
                     .sum()
             })
             .collect();
-        Ok(ShardedProgram { n, per_macro, fires_per_macro })
+        Ok(ShardedProgram { n, per_macro, lane_per_macro, fires_per_macro })
     }
 
     /// Sharded inference: every layer computed as per-macro channel
@@ -340,18 +390,18 @@ impl DecodedProgram {
             let full = &self.layers[li];
             let t_out = if full.pooled { x.t / 2 } else { x.t };
             let mut out = BitMap::zero(t_out, full.c_out);
-            for shards in &sp.per_macro {
+            for shards in &sp.lane_per_macro {
                 if let Some((off, shard)) = &shards[li] {
-                    let part = reference::conv_layer_packed(&x, shard);
+                    let part = kernel::conv_layer_lanes(&x, shard);
                     reference::merge_shard(&mut out, *off, &part);
                 }
             }
             x = out;
         }
         let mut logits = vec![0.0f32; self.n_classes];
-        for shards in &sp.per_macro {
+        for shards in &sp.lane_per_macro {
             if let Some((off, shard)) = &shards[n_layers - 1] {
-                let part = reference::final_layer_gap_packed(&x, shard);
+                let part = kernel::final_layer_gap_lanes(&x, shard);
                 logits[*off..*off + part.len()].copy_from_slice(&part);
             }
         }
@@ -379,9 +429,9 @@ impl DecodedProgram {
             let t_out = if full.pooled { xs[0].t / 2 } else { xs[0].t };
             let mut outs: Vec<BitMap> =
                 xs.iter().map(|_| BitMap::zero(t_out, full.c_out)).collect();
-            for shards in &sp.per_macro {
+            for shards in &sp.lane_per_macro {
                 if let Some((off, shard)) = &shards[li] {
-                    let parts = reference::conv_layer_packed_batch(&xs, shard);
+                    let parts = kernel::conv_layer_lanes_batch(&xs, shard);
                     for (out, part) in outs.iter_mut().zip(&parts) {
                         reference::merge_shard(out, *off, part);
                     }
@@ -390,9 +440,9 @@ impl DecodedProgram {
             xs = outs;
         }
         let mut logits = vec![vec![0.0f32; self.n_classes]; xs.len()];
-        for shards in &sp.per_macro {
+        for shards in &sp.lane_per_macro {
             if let Some((off, shard)) = &shards[n_layers - 1] {
-                let parts = reference::final_layer_gap_packed_batch(&xs, shard);
+                let parts = kernel::final_layer_gap_lanes_batch(&xs, shard);
                 for (l, part) in logits.iter_mut().zip(&parts) {
                     l[*off..*off + part.len()].copy_from_slice(part);
                 }
@@ -411,10 +461,36 @@ impl DecodedProgram {
     /// compute their shard of each layer concurrently and rendezvous on a
     /// barrier while one of them concatenates the channel ranges. Same
     /// bits, wall-clock scales with the widest layer's split.
-    pub fn infer_sharded_parallel(&self, audio: &[f32], sp: &ShardedProgram) -> (Vec<f32>, usize) {
+    ///
+    /// Panic-safe: a shard thread that panics mid-layer does not poison
+    /// the caller — every compute step runs under `catch_unwind`, a
+    /// failed thread keeps attending the remaining barrier rendezvous
+    /// (abandoning them would deadlock the survivors — the real hazard,
+    /// worse than poisoning), and the dead shard surfaces as a typed
+    /// `Err` naming the macro and layer. Locks are recovered, never
+    /// `unwrap`ed (`util::{lock,read,write}_or_recover`), upholding the
+    /// serving stack's poison-recovery contract.
+    pub fn infer_sharded_parallel(
+        &self,
+        audio: &[f32],
+        sp: &ShardedProgram,
+    ) -> Result<(Vec<f32>, usize)> {
+        self.sharded_parallel_impl(audio, sp, None)
+    }
+
+    /// The implementation behind [`Self::infer_sharded_parallel`], with a
+    /// test-only fault hook: `fault(m, li)` runs at the top of macro `m`'s
+    /// layer-`li` compute step and may panic to simulate a dying shard
+    /// thread (the poison-regression tests below drive it).
+    fn sharded_parallel_impl(
+        &self,
+        audio: &[f32],
+        sp: &ShardedProgram,
+        fault: Option<&(dyn Fn(usize, usize) + Sync)>,
+    ) -> Result<(Vec<f32>, usize)> {
         let n = sp.n;
         if n <= 1 {
-            return self.infer_sharded(audio, sp);
+            return Ok(self.infer_sharded(audio, sp));
         }
         let n_layers = self.layers.len();
         let conv_meta: Vec<(bool, usize)> =
@@ -424,51 +500,97 @@ impl DecodedProgram {
         let partials: Vec<Mutex<Option<(usize, BitMap)>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
         let logit_parts: Mutex<Vec<(usize, Vec<f32>)>> = Mutex::new(Vec::new());
+        let dead: Mutex<Vec<String>> = Mutex::new(Vec::new());
 
         std::thread::scope(|s| {
-            for (m, macro_shards) in sp.per_macro.iter().enumerate() {
+            for (m, macro_shards) in sp.lane_per_macro.iter().enumerate() {
                 let barrier = &barrier;
                 let current = &current;
                 let partials = &partials;
                 let logit_parts = &logit_parts;
+                let dead = &dead;
                 let conv_meta = &conv_meta;
                 s.spawn(move || {
+                    let mut failed = false;
                     for (li, &(pooled, c_out)) in conv_meta.iter().enumerate() {
-                        {
-                            let x = current.read().unwrap();
-                            let part = macro_shards[li]
-                                .as_ref()
-                                .map(|(off, shard)| (*off, reference::conv_layer_packed(&x, shard)));
-                            *partials[m].lock().unwrap() = part;
+                        if !failed {
+                            let step = catch_unwind(AssertUnwindSafe(|| {
+                                if let Some(f) = fault {
+                                    f(m, li);
+                                }
+                                let x = read_or_recover(current);
+                                let part = macro_shards[li]
+                                    .as_ref()
+                                    .map(|(off, shard)| (*off, kernel::conv_layer_lanes(&x, shard)));
+                                *lock_or_recover(&partials[m]) = part;
+                            }));
+                            if let Err(p) = step {
+                                failed = true;
+                                lock_or_recover(dead)
+                                    .push(format!("macro {m} layer {li}: {}", panic_msg(&p)));
+                                *lock_or_recover(&partials[m]) = None;
+                            }
                         }
                         if barrier.wait().is_leader() {
-                            let mut cur = current.write().unwrap();
-                            let t_out = if pooled { cur.t / 2 } else { cur.t };
-                            let mut out = BitMap::zero(t_out, c_out);
-                            for p in partials.iter() {
-                                if let Some((off, bm)) = p.lock().unwrap().take() {
-                                    reference::merge_shard(&mut out, off, &bm);
+                            // The merge leader is just whichever thread the
+                            // barrier elected — it may itself have failed,
+                            // so the merge is guarded the same way.
+                            let merge = catch_unwind(AssertUnwindSafe(|| {
+                                let mut cur = write_or_recover(current);
+                                let t_out = if pooled { cur.t / 2 } else { cur.t };
+                                let mut out = BitMap::zero(t_out, c_out);
+                                for p in partials.iter() {
+                                    if let Some((off, bm)) = lock_or_recover(p).take() {
+                                        reference::merge_shard(&mut out, off, &bm);
+                                    }
                                 }
+                                *cur = out;
+                            }));
+                            if let Err(p) = merge {
+                                failed = true;
+                                lock_or_recover(dead)
+                                    .push(format!("merge after layer {li}: {}", panic_msg(&p)));
                             }
-                            *cur = out;
                         }
                         barrier.wait(); // merged map visible to everyone
                     }
+                    // Past the last barrier: no one waits on this thread
+                    // any more, so a failed shard can simply stop.
+                    if failed {
+                        return;
+                    }
                     if let Some((off, shard)) = &macro_shards[n_layers - 1] {
-                        let x = current.read().unwrap();
-                        let part = reference::final_layer_gap_packed(&x, shard);
-                        logit_parts.lock().unwrap().push((*off, part));
+                        let step = catch_unwind(AssertUnwindSafe(|| {
+                            if let Some(f) = fault {
+                                f(m, n_layers - 1);
+                            }
+                            let x = read_or_recover(current);
+                            kernel::final_layer_gap_lanes(&x, shard)
+                        }));
+                        match step {
+                            Ok(part) => lock_or_recover(logit_parts).push((*off, part)),
+                            Err(p) => lock_or_recover(dead)
+                                .push(format!("macro {m} final layer: {}", panic_msg(&p))),
+                        }
                     }
                 });
             }
         });
 
+        let dead = dead.into_inner().unwrap_or_else(|p| p.into_inner());
+        if !dead.is_empty() {
+            bail!(
+                "sharded-parallel inference lost {} shard thread(s): {}",
+                dead.len(),
+                dead.join("; ")
+            );
+        }
         let mut logits = vec![0.0f32; self.n_classes];
-        for (off, part) in logit_parts.into_inner().unwrap() {
+        for (off, part) in logit_parts.into_inner().unwrap_or_else(|p| p.into_inner()) {
             logits[off..off + part.len()].copy_from_slice(&part);
         }
         let predicted = reference::argmax(&logits);
-        (logits, predicted)
+        Ok((logits, predicted))
     }
 
     /// Unpack every layer to the scalar tap-major/channel-minor form
@@ -577,7 +699,7 @@ mod tests {
             let (seq, sq) = d.infer_sharded(&audio, &sp);
             assert_eq!(seq, want, "sequential n={n}");
             assert_eq!(sq, wp);
-            let (par, pp) = d.infer_sharded_parallel(&audio, &sp);
+            let (par, pp) = d.infer_sharded_parallel(&audio, &sp).unwrap();
             assert_eq!(par, want, "parallel n={n}");
             assert_eq!(pp, wp);
             // Idle macros fire nothing; owners fire once per position.
@@ -593,6 +715,44 @@ mod tests {
                     .sum::<u64>()
             );
         }
+    }
+
+    #[test]
+    fn panicking_shard_thread_yields_error_not_poisoned_caller() {
+        // Regression (PR 8): a shard thread dying mid-inference used to
+        // poison the shared RwLock/Mutexes and unwind through
+        // `thread::scope`, taking the caller down. Now it must surface as
+        // a typed Err — no panic, no hang — and the same DecodedProgram
+        // must keep serving afterwards.
+        let m = KwsModel::synthetic(13);
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let d = DecodedProgram::decode(&prog).unwrap();
+        let audio = dataset::synth_utterance(6, 3, m.audio_len, 0.37);
+        let plan = ShardPlan::even(&prog.plan, 3).unwrap();
+        let sp = d.shard(&plan).unwrap();
+        let n_layers = d.layers.len();
+
+        // A panic at every interesting point in the protocol: first
+        // conv layer, a middle layer, and the unbarriered final GAP step.
+        for (fm, fl) in [(1usize, 0usize), (2, 1), (0, n_layers - 1)] {
+            let fault = move |m: usize, li: usize| {
+                if m == fm && li == fl {
+                    panic!("chaos: shard {fm} dies at layer {fl}");
+                }
+            };
+            let err = d
+                .sharded_parallel_impl(&audio, &sp, Some(&fault))
+                .expect_err("a dead shard must surface as Err");
+            let msg = format!("{err}");
+            assert!(msg.contains("shard thread"), "untyped error: {msg}");
+        }
+
+        // The caller (and the shared shard state) survived: a clean run
+        // on the same structures still answers bit-identically.
+        let (want, wp) = d.infer_sharded(&audio, &sp);
+        let (got, gp) = d.infer_sharded_parallel(&audio, &sp).unwrap();
+        assert_eq!(got, want, "post-fault inference must be clean");
+        assert_eq!(gp, wp);
     }
 
     #[test]

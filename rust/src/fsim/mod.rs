@@ -197,7 +197,15 @@ impl FastSim {
             return self.infer_disturbed(audio, v);
         }
         let out = match &self.sharded {
-            Some(se) if se.parallel => self.decoded.infer_sharded_parallel(audio, &se.prog),
+            // Availability over parallelism: if a shard thread died
+            // (typed Err from the panic-safe protocol), degrade to the
+            // bit-identical sequential walk instead of failing the
+            // request — the PR 7 contract is that faults shed load or
+            // degrade, never wedge or poison.
+            Some(se) if se.parallel => self
+                .decoded
+                .infer_sharded_parallel(audio, &se.prog)
+                .unwrap_or_else(|_| self.decoded.infer_sharded(audio, &se.prog)),
             Some(se) => self.decoded.infer_sharded(audio, &se.prog),
             None => self.decoded.infer(audio),
         };
@@ -256,9 +264,17 @@ impl FastSim {
             std::thread::scope(|s| {
                 let handles: Vec<_> = batch
                     .chunks(chunk)
-                    .map(|c| s.spawn(move || self.infer_batch_chunk(c)))
+                    .map(|c| (c, s.spawn(move || self.infer_batch_chunk(c))))
                     .collect();
-                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+                // Joining a panicked scoped thread consumes the panic
+                // (the scope would otherwise re-raise it at exit and take
+                // the whole batch down); recompute that chunk here on the
+                // caller's thread — a transient fault costs latency, a
+                // deterministic one reproduces where it's debuggable.
+                handles
+                    .into_iter()
+                    .flat_map(|(c, h)| h.join().unwrap_or_else(|_| self.infer_batch_chunk(c)))
+                    .collect()
             })
         };
         outs.into_iter().map(|out| self.finish(out)).collect()
@@ -302,7 +318,7 @@ impl FastSim {
             instret,
             phases,
             energy,
-            seconds_at_50mhz: cycles as f64 / 50e6,
+            seconds_at_50mhz: crate::clock::cycles_to_seconds(cycles),
             console: String::new(),
             shard_fires: self.shard_fires(),
             markers,

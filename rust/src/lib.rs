@@ -52,6 +52,7 @@
 pub mod backend;
 pub mod baselines;
 pub mod cim;
+pub mod clock;
 pub mod compiler;
 pub mod coordinator;
 pub mod cpu;

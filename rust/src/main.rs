@@ -474,7 +474,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "served {served}/{n} requests on {workers} {kind}-backend workers in {wall:.2}s host \
          time ({:.1} req/s host, {:.1} req/s chip-time)",
         served as f64 / wall,
-        served as f64 / (chip as f64 / 50e6).max(f64::MIN_POSITIVE)
+        served as f64 / cimrv::clock::cycles_to_seconds(chip).max(f64::MIN_POSITIVE)
     );
     if fault_tolerant {
         use std::sync::atomic::Ordering::Relaxed;

@@ -1,0 +1,560 @@
+//! The lane-blocked XNOR-popcount kernel engine — the fast path's fast
+//! path.
+//!
+//! [`super::reference`]'s packed kernels walk one output channel's u64
+//! window words at a time and re-gather every im2col window from scratch
+//! (`gather_window`: k `OR`-shifts per position). This module rewrites
+//! the hot loops around two ideas:
+//!
+//! * **Incremental windows** — stride-1 windows share k−1 of k columns.
+//!   Window `t+1` is window `t` shifted down by `c_in` bits with the one
+//!   incoming row OR-patched at bit offset `(k−1)·c_in`
+//!   ([`build_windows_into`]): one shift + one row-OR per position
+//!   instead of a k-row re-gather, and every window is materialized once
+//!   per (map, layer) no matter how many channels read it.
+//! * **Lane blocking** — output channels are transposed into blocks of
+//!   [`LANES`] interleaved planes (word `j` of all 8 channels adjacent in
+//!   memory, [`LaneLayer`]), so the inner loop ANDs one window word
+//!   against 8 plane words and accumulates 8 popcounts. That loop is
+//!   branch-free, unit-stride and independent across lanes — exactly the
+//!   shape LLVM auto-vectorizes to u64x4 `vpand` + popcount sequences.
+//!
+//! With the `simd` cargo feature the same inner loop is additionally
+//! compiled under `#[target_feature(enable = "popcnt")]` and
+//! `#[target_feature(enable = "avx2,popcnt")]` on x86-64 and dispatched
+//! by runtime CPU detection ([`engine_kind`] reports which tier is
+//! live): `count_ones()` lowers to the hardware `popcnt`/`vpshufb`
+//! nibble-LUT forms instead of the portable SWAR sequence. The default
+//! build is unaffected — the scalar-walk kernels in
+//! [`super::reference`] remain the differential oracle either way
+//! (`tests/packed_parity.rs` fuzzes both configurations), and sums are
+//! bit-identical across all tiers: AND/popcount arithmetic has no
+//! floating point, so vectorization cannot change a single bit.
+
+use super::reference::{gather_window, or_shifted_wide, BitMap, PackedLayer};
+
+/// Output channels per lane block: one u64x4 AVX2 register pair's worth,
+/// and a full unroll for the portable SWAR path.
+pub const LANES: usize = 8;
+
+/// A [`PackedLayer`] transposed for lane-parallel popcounting: channels
+/// grouped in blocks of [`LANES`], plane words interleaved lane-minor —
+/// `words[(b * plane_words + j) * LANES + l]` is window word `j` of
+/// output channel `b*LANES + l`. Channels past `c_out` in the last block
+/// are zero planes (their sums are computed and discarded; zero planes
+/// cannot set bits or corrupt neighbours).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneLayer {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kernel: usize,
+    pub pooled: bool,
+    pub binarized: bool,
+    /// Words per plane, same as the source layer: `ceil(kernel*c_in/64)`.
+    pub plane_words: usize,
+    /// Lane blocks: `ceil(c_out / LANES)`.
+    pub blocks: usize,
+    /// `blocks * plane_words * LANES` interleaved plane words.
+    pub words: Vec<u64>,
+    pub thresholds: Vec<i32>,
+}
+
+impl LaneLayer {
+    /// Transpose a packed layer into lane-blocked form (done once at
+    /// decode/shard time; the planes themselves are bit-identical).
+    pub fn from_packed(p: &PackedLayer) -> Self {
+        let pw = p.plane_words;
+        let blocks = p.c_out.div_ceil(LANES);
+        let mut words = vec![0u64; blocks * pw * LANES];
+        for co in 0..p.c_out {
+            let (b, l) = (co / LANES, co % LANES);
+            for (j, &w) in p.plane(co).iter().enumerate() {
+                words[(b * pw + j) * LANES + l] = w;
+            }
+        }
+        LaneLayer {
+            c_in: p.c_in,
+            c_out: p.c_out,
+            kernel: p.kernel,
+            pooled: p.pooled,
+            binarized: p.binarized,
+            plane_words: pw,
+            blocks,
+            words,
+            thresholds: p.thresholds.clone(),
+        }
+    }
+
+    /// Block `b`'s interleaved words (`plane_words * LANES` of them).
+    #[inline]
+    pub fn block(&self, b: usize) -> &[u64] {
+        let n = self.plane_words * LANES;
+        &self.words[b * n..(b + 1) * n]
+    }
+
+    /// Live lanes of block `b` (< [`LANES`] only in the last block).
+    #[inline]
+    fn live(&self, b: usize) -> usize {
+        LANES.min(self.c_out - b * LANES)
+    }
+}
+
+/// Shift `src`'s bit vector down by `sh_bits` into `dst` (bit `p+sh_bits`
+/// of `src` becomes bit `p` of `dst`; high bits fill with zero). Both
+/// slices are `plane_words` long. This is the incremental-window step:
+/// shifting a window by `c_in` retires the oldest row and leaves the top
+/// `c_in` bits clear for the incoming one.
+#[inline]
+fn shift_down_into(dst: &mut [u64], src: &[u64], sh_bits: usize) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = src.len();
+    let wsh = sh_bits / 64;
+    let sh = (sh_bits % 64) as u32;
+    for (i, d) in dst.iter_mut().enumerate() {
+        let j = i + wsh;
+        let lo = if j < n { src[j] >> sh } else { 0 };
+        // `sh == 0` would make the carry shift `<< 64` (UB), and there is
+        // no carry to take in that case.
+        let hi = if sh > 0 && j + 1 < n { src[j + 1] << (64 - sh) } else { 0 };
+        *d = lo | hi;
+    }
+}
+
+/// Materialize every im2col window of `x` for a kernel-`k` layer into
+/// `windows` (`x.t * pw` u64 words, window `t` at `windows[t*pw..][..pw]`)
+/// with per-window activation popcounts in `acts`. Window 0 is gathered
+/// from scratch; each subsequent one is its predecessor shifted down by
+/// `c_in` bits with the single incoming row (`t + k-1 - pad`, when in
+/// range) OR-patched at bit offset `(k-1)*c_in` — the shift leaves those
+/// top bits zero, and rows beyond the map contribute the zero padding the
+/// scalar kernels model by skipping. Bit-identical to calling
+/// `gather_window` at every position (property-tested).
+pub(crate) fn build_windows_into(
+    x: &BitMap,
+    kernel: usize,
+    pw: usize,
+    windows: &mut [u64],
+    acts: &mut [i32],
+) {
+    if x.t == 0 {
+        return;
+    }
+    debug_assert_eq!(windows.len(), x.t * pw);
+    debug_assert_eq!(acts.len(), x.t);
+    let pad = (kernel - 1) / 2;
+    gather_window(x, kernel, 0, &mut windows[..pw]);
+    acts[0] = windows[..pw].iter().map(|v| v.count_ones()).sum::<u32>() as i32;
+    for t in 1..x.t {
+        let (done, rest) = windows.split_at_mut(t * pw);
+        let prev = &done[(t - 1) * pw..];
+        let cur = &mut rest[..pw];
+        shift_down_into(cur, prev, x.c);
+        let incoming = t + kernel - 1 - pad;
+        if incoming < x.t {
+            or_shifted_wide(cur, (kernel - 1) * x.c, x.row_words(incoming));
+        }
+        acts[t] = cur.iter().map(|v| v.count_ones()).sum::<u32>() as i32;
+    }
+}
+
+/// [`build_windows_into`] over a whole batch: utterance `u`'s windows at
+/// `windows[u * t_in * pw..]`, acts likewise. All maps must share
+/// geometry (same assert as the reference batch kernels).
+fn build_windows_batch(xs: &[BitMap], kernel: usize, pw: usize) -> (Vec<u64>, Vec<i32>) {
+    let t_in = xs[0].t;
+    let mut windows = vec![0u64; xs.len() * t_in * pw];
+    let mut acts = vec![0i32; xs.len() * t_in];
+    for (u, x) in xs.iter().enumerate() {
+        assert_eq!((x.t, x.c), (t_in, xs[0].c), "batch maps must share geometry");
+        build_windows_into(
+            x,
+            kernel,
+            pw,
+            &mut windows[u * t_in * pw..(u + 1) * t_in * pw],
+            &mut acts[u * t_in..(u + 1) * t_in],
+        );
+    }
+    (windows, acts)
+}
+
+/// The engine's one arithmetic primitive: for every window in `windows`
+/// (`pw` words each, activation popcounts in `acts`), the XNOR-popcount
+/// sums of one lane block — `sums[w*LANES + l] = 2*pop(win_w & plane_l)
+/// - acts[w]`. Generic body, `#[inline(always)]` so the `target_feature`
+/// wrappers below specialize it with their ISA extensions enabled.
+#[inline(always)]
+fn block_sums_impl(block: &[u64], pw: usize, windows: &[u64], acts: &[i32], sums: &mut [i32]) {
+    debug_assert_eq!(block.len(), pw * LANES);
+    debug_assert_eq!(windows.len(), acts.len() * pw);
+    debug_assert_eq!(sums.len(), acts.len() * LANES);
+    for (w, (win, &act)) in windows.chunks_exact(pw).zip(acts).enumerate() {
+        let mut acc = [0u32; LANES];
+        for (j, &xv) in win.iter().enumerate() {
+            let row = &block[j * LANES..j * LANES + LANES];
+            for (a, &pv) in acc.iter_mut().zip(row) {
+                *a += (xv & pv).count_ones();
+            }
+        }
+        let out = &mut sums[w * LANES..w * LANES + LANES];
+        for (o, &a) in out.iter_mut().zip(&acc) {
+            *o = (2 * a) as i32 - act;
+        }
+    }
+}
+
+fn block_sums_portable(block: &[u64], pw: usize, windows: &[u64], acts: &[i32], sums: &mut [i32]) {
+    block_sums_impl(block, pw, windows, acts, sums)
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use super::block_sums_impl;
+
+    /// # Safety
+    /// The caller must have verified `avx2` and `popcnt` support via
+    /// runtime detection (the dispatcher does).
+    #[target_feature(enable = "avx2,popcnt")]
+    pub unsafe fn block_sums_avx2(
+        block: &[u64],
+        pw: usize,
+        windows: &[u64],
+        acts: &[i32],
+        sums: &mut [i32],
+    ) {
+        block_sums_impl(block, pw, windows, acts, sums)
+    }
+
+    /// # Safety
+    /// The caller must have verified `popcnt` support via runtime
+    /// detection (the dispatcher does).
+    #[target_feature(enable = "popcnt")]
+    pub unsafe fn block_sums_popcnt(
+        block: &[u64],
+        pw: usize,
+        windows: &[u64],
+        acts: &[i32],
+        sums: &mut [i32],
+    ) {
+        block_sums_impl(block, pw, windows, acts, sums)
+    }
+}
+
+/// Which popcount tier the dispatcher resolves to on this host:
+/// `"avx2"` / `"popcnt"` (with the `simd` feature on a capable x86-64)
+/// or `"portable"` (default build, or no usable extension). Reported in
+/// `BENCH_kernels.json` so bench rows are interpretable.
+pub fn engine_kind() -> &'static str {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("popcnt")
+        {
+            return "avx2";
+        }
+        if std::arch::is_x86_feature_detected!("popcnt") {
+            return "popcnt";
+        }
+    }
+    "portable"
+}
+
+/// Dispatch [`block_sums_impl`] at the best tier the host supports. The
+/// detection macro reads a cached atomic, so per-call cost is noise next
+/// to a block's `pw * LANES * windows` popcounts.
+#[inline]
+fn block_sums(block: &[u64], pw: usize, windows: &[u64], acts: &[i32], sums: &mut [i32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("popcnt")
+        {
+            // SAFETY: avx2+popcnt presence just verified.
+            return unsafe { x86::block_sums_avx2(block, pw, windows, acts, sums) };
+        }
+        if std::arch::is_x86_feature_detected!("popcnt") {
+            // SAFETY: popcnt presence just verified.
+            return unsafe { x86::block_sums_popcnt(block, pw, windows, acts, sums) };
+        }
+    }
+    block_sums_portable(block, pw, windows, acts, sums)
+}
+
+/// Lane-engine twin of `reference::conv_sums_packed`: sums at one
+/// position (diagnostics/fuzzing; the layer kernels below never call it —
+/// they amortize the incremental window build across all positions).
+pub fn conv_sums_lanes(x: &BitMap, layer: &LaneLayer, t: usize) -> Vec<i32> {
+    assert_eq!(x.c, layer.c_in, "feature map width must match the layer");
+    let pw = layer.plane_words;
+    let mut windows = vec![0u64; x.t * pw];
+    let mut acts = vec![0i32; x.t];
+    build_windows_into(x, layer.kernel, pw, &mut windows, &mut acts);
+    let mut sums = vec![0i32; LANES];
+    let mut out = vec![0i32; layer.c_out];
+    for b in 0..layer.blocks {
+        block_sums(
+            layer.block(b),
+            pw,
+            &windows[t * pw..(t + 1) * pw],
+            &acts[t..t + 1],
+            &mut sums,
+        );
+        let live = layer.live(b);
+        out[b * LANES..b * LANES + live].copy_from_slice(&sums[..live]);
+    }
+    out
+}
+
+/// Lane/incremental twin of `reference::conv_layer_packed_batch`:
+/// bit-identical output maps, windows built once per map by
+/// shift-and-patch, channels popcounted [`LANES`] at a time with each
+/// block's planes walked once per batch (weight-stationary, blocks
+/// outermost).
+pub fn conv_layer_lanes_batch(xs: &[BitMap], layer: &LaneLayer) -> Vec<BitMap> {
+    assert!(layer.binarized);
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    assert_eq!(xs[0].c, layer.c_in, "feature map width must match the layer");
+    let (t_in, pw) = (xs[0].t, layer.plane_words);
+    let t_out = if layer.pooled { t_in / 2 } else { t_in };
+    let (windows, acts) = build_windows_batch(xs, layer.kernel, pw);
+    let mut outs: Vec<BitMap> = xs.iter().map(|_| BitMap::zero(t_out, layer.c_out)).collect();
+    let mut sums = vec![0i32; t_in * LANES];
+    for b in 0..layer.blocks {
+        let block = layer.block(b);
+        let live = layer.live(b);
+        let thr = &layer.thresholds[b * LANES..b * LANES + live];
+        for (u, out) in outs.iter_mut().enumerate() {
+            block_sums(
+                block,
+                pw,
+                &windows[u * t_in * pw..(u + 1) * t_in * pw],
+                &acts[u * t_in..(u + 1) * t_in],
+                &mut sums,
+            );
+            for t in 0..t_in {
+                let ot = if layer.pooled { t / 2 } else { t };
+                if ot >= t_out {
+                    break; // odd tail dropped by pooling
+                }
+                for (l, &th) in thr.iter().enumerate() {
+                    if sums[t * LANES + l] > th {
+                        out.set(ot, b * LANES + l); // pooled max == OR of the pair
+                    }
+                }
+            }
+        }
+    }
+    outs
+}
+
+/// Lane/incremental twin of `reference::final_layer_gap_packed_batch`:
+/// raw sums accumulated per lane across positions, GAP division last
+/// (identical integer sums ⇒ identical f32 logits).
+pub fn final_layer_gap_lanes_batch(xs: &[BitMap], layer: &LaneLayer) -> Vec<Vec<f32>> {
+    assert!(!layer.binarized);
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    assert_eq!(xs[0].c, layer.c_in, "feature map width must match the layer");
+    let (t_in, pw) = (xs[0].t, layer.plane_words);
+    let (windows, acts) = build_windows_batch(xs, layer.kernel, pw);
+    let mut logits = vec![vec![0.0f32; layer.c_out]; xs.len()];
+    let mut sums = vec![0i32; t_in * LANES];
+    for b in 0..layer.blocks {
+        let block = layer.block(b);
+        let live = layer.live(b);
+        for (u, l) in logits.iter_mut().enumerate() {
+            block_sums(
+                block,
+                pw,
+                &windows[u * t_in * pw..(u + 1) * t_in * pw],
+                &acts[u * t_in..(u + 1) * t_in],
+                &mut sums,
+            );
+            let mut acc = [0i64; LANES];
+            for chunk in sums.chunks_exact(LANES) {
+                for (a, &s) in acc.iter_mut().zip(chunk) {
+                    *a += s as i64;
+                }
+            }
+            for (lane, &a) in acc[..live].iter().enumerate() {
+                l[b * LANES + lane] = a as f32 / t_in as f32;
+            }
+        }
+    }
+    logits
+}
+
+/// Single-map conv through the lane engine (a batch of one: the batched
+/// kernel's window build and block walk are already position-amortized,
+/// so there is no cheaper dedicated form).
+pub fn conv_layer_lanes(x: &BitMap, layer: &LaneLayer) -> BitMap {
+    conv_layer_lanes_batch(std::slice::from_ref(x), layer).pop().unwrap()
+}
+
+/// Single-map GAP through the lane engine.
+pub fn final_layer_gap_lanes(x: &BitMap, layer: &LaneLayer) -> Vec<f32> {
+    final_layer_gap_lanes_batch(std::slice::from_ref(x), layer).pop().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::kws::LayerSpec;
+    use crate::model::reference::{
+        conv_layer_packed, conv_sums_packed, final_layer_gap_packed,
+    };
+
+    fn tiny_layer(c_in: usize, c_out: usize, kernel: usize, pooled: bool, binarized: bool) -> LayerSpec {
+        let rows = kernel * c_in;
+        let weights = (0..rows * c_out)
+            .map(|i| {
+                let (r, co) = (i / c_out, i % c_out);
+                if (r * 3 + co * 7) % 5 < 2 { 1i8 } else { -1 }
+            })
+            .collect();
+        LayerSpec {
+            c_in,
+            c_out,
+            kernel,
+            pooled,
+            binarized,
+            weights,
+            thresholds: if binarized {
+                (0..c_out).map(|co| (co % 7) as i32 - 3).collect()
+            } else {
+                vec![]
+            },
+        }
+    }
+
+    fn patterned_bits(t: usize, c: usize, salt: usize) -> BitMap {
+        let mut x = BitMap::zero(t, c);
+        for r in 0..t {
+            for ch in 0..c {
+                if (r * 11 + ch * 5 + salt * 3) % 7 < 3 {
+                    x.set(r, ch);
+                }
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn lane_transpose_roundtrips_planes() {
+        let spec = tiny_layer(70, 19, 3, false, true); // ragged both ways
+        let packed = PackedLayer::from_spec(&spec);
+        let lanes = LaneLayer::from_packed(&packed);
+        assert_eq!(lanes.blocks, 19usize.div_ceil(LANES));
+        for co in 0..packed.c_out {
+            let (b, l) = (co / LANES, co % LANES);
+            let block = lanes.block(b);
+            for (j, &w) in packed.plane(co).iter().enumerate() {
+                assert_eq!(block[j * LANES + l], w, "co {co} word {j}");
+            }
+        }
+        // Dead lanes in the last block are zero planes.
+        for l in 19 % LANES..LANES {
+            let block = lanes.block(lanes.blocks - 1);
+            for j in 0..lanes.plane_words {
+                assert_eq!(block[j * LANES + l], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_windows_match_gather_every_position() {
+        for kernel in [1usize, 3, 5] {
+            for c in [1usize, 31, 32, 64, 70] {
+                let x = patterned_bits(9, c, kernel);
+                let pw = (kernel * c).div_ceil(64);
+                let mut windows = vec![0u64; x.t * pw];
+                let mut acts = vec![0i32; x.t];
+                build_windows_into(&x, kernel, pw, &mut windows, &mut acts);
+                let mut want = vec![0u64; pw];
+                for t in 0..x.t {
+                    gather_window(&x, kernel, t, &mut want);
+                    assert_eq!(&windows[t * pw..(t + 1) * pw], &want[..], "k {kernel} c {c} t {t}");
+                    let act: u32 = want.iter().map(|v| v.count_ones()).sum();
+                    assert_eq!(acts[t], act as i32, "k {kernel} c {c} t {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shift_down_handles_word_multiples_and_overhang() {
+        // 128-bit vector, shift by exactly 64 (sh == 0 path).
+        let src = [0xDEAD_BEEF_0123_4567u64, 0x8899_AABB_CCDD_EEFF];
+        let mut dst = [0u64; 2];
+        shift_down_into(&mut dst, &src, 64);
+        assert_eq!(dst, [0x8899_AABB_CCDD_EEFF, 0]);
+        // Shift past the end zeroes everything.
+        shift_down_into(&mut dst, &src, 128);
+        assert_eq!(dst, [0, 0]);
+        // Unaligned shift carries bits across the word boundary.
+        shift_down_into(&mut dst, &src, 4);
+        assert_eq!(dst[0], (src[0] >> 4) | (src[1] << 60));
+        assert_eq!(dst[1], src[1] >> 4);
+    }
+
+    #[test]
+    fn lane_kernels_match_packed_reference() {
+        for (c_in, c_out, kernel, pooled) in
+            [(8, 8, 3, false), (70, 19, 3, true), (33, 5, 5, false), (17, 24, 1, true)]
+        {
+            let spec = tiny_layer(c_in, c_out, kernel, pooled, true);
+            let packed = PackedLayer::from_spec(&spec);
+            let lanes = LaneLayer::from_packed(&packed);
+            let x = patterned_bits(11, c_in, c_out); // odd t: pooling tail
+            assert_eq!(
+                conv_layer_lanes(&x, &lanes),
+                conv_layer_packed(&x, &packed),
+                "conv {c_in}x{c_out} k{kernel} pooled {pooled}"
+            );
+            for t in 0..x.t {
+                assert_eq!(
+                    conv_sums_lanes(&x, &lanes, t),
+                    conv_sums_packed(&x, &packed, t),
+                    "sums t {t}"
+                );
+            }
+        }
+        let spec = tiny_layer(19, 12, 3, false, false);
+        let packed = PackedLayer::from_spec(&spec);
+        let lanes = LaneLayer::from_packed(&packed);
+        let x = patterned_bits(7, 19, 1);
+        assert_eq!(final_layer_gap_lanes(&x, &lanes), final_layer_gap_packed(&x, &packed));
+    }
+
+    #[test]
+    fn batched_lane_kernels_match_single_and_empty() {
+        let conv = tiny_layer(70, 23, 3, true, true);
+        let last = tiny_layer(23, 12, 3, false, false);
+        let pc = PackedLayer::from_spec(&conv);
+        let pl = PackedLayer::from_spec(&last);
+        let lc = LaneLayer::from_packed(&pc);
+        let ll = LaneLayer::from_packed(&pl);
+        let xs: Vec<BitMap> = (0..5).map(|u| patterned_bits(9, 70, u)).collect();
+        let mids = conv_layer_lanes_batch(&xs, &lc);
+        for (u, x) in xs.iter().enumerate() {
+            assert_eq!(mids[u], conv_layer_lanes(x, &lc), "u {u}");
+            assert_eq!(mids[u], conv_layer_packed(x, &pc), "u {u} vs packed");
+        }
+        let logits = final_layer_gap_lanes_batch(&mids, &ll);
+        for (u, mid) in mids.iter().enumerate() {
+            assert_eq!(logits[u], final_layer_gap_packed(mid, &pl), "u {u}");
+        }
+        assert!(conv_layer_lanes_batch(&[], &lc).is_empty());
+        assert!(final_layer_gap_lanes_batch(&[], &ll).is_empty());
+    }
+
+    #[test]
+    fn engine_kind_is_a_known_tier() {
+        assert!(["avx2", "popcnt", "portable"].contains(&engine_kind()));
+        if !cfg!(feature = "simd") {
+            assert_eq!(engine_kind(), "portable");
+        }
+    }
+}

@@ -3,6 +3,7 @@
 //! and the synthetic-GSCD test vectors exported by `make artifacts`.
 
 pub mod dataset;
+pub mod kernel;
 pub mod kws;
 pub mod reference;
 

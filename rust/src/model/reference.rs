@@ -221,7 +221,7 @@ fn or_shifted(dst: &mut [u32], bit_off: usize, src: &[u32]) {
 /// bits beyond the row's meaningful length are zero (BitMap's padding
 /// guarantee), so only real feature bits land in the window.
 #[inline]
-fn or_shifted_wide(dst: &mut [u64], bit_off: usize, src: &[u32]) {
+pub(crate) fn or_shifted_wide(dst: &mut [u64], bit_off: usize, src: &[u32]) {
     for (i, &s) in src.iter().enumerate() {
         if s == 0 {
             continue;
@@ -243,7 +243,7 @@ fn or_shifted_wide(dst: &mut [u64], bit_off: usize, src: &[u32]) {
 /// row `t + j - pad` occupies bits `[j*c_in, (j+1)*c_in)`, matching the
 /// wordline order `r = j*c_in + ci` of the scalar kernels and the macro.
 /// Padding rows (outside the map) contribute zeros.
-fn gather_window(x: &BitMap, kernel: usize, t: usize, out: &mut [u64]) {
+pub(crate) fn gather_window(x: &BitMap, kernel: usize, t: usize, out: &mut [u64]) {
     let pad = (kernel - 1) / 2;
     out.fill(0);
     for j in 0..kernel {

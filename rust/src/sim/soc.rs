@@ -192,7 +192,7 @@ impl Soc {
             instret: cpu.stats.instret,
             phases,
             energy,
-            seconds_at_50mhz: cpu.stats.cycles as f64 / 50e6,
+            seconds_at_50mhz: crate::clock::cycles_to_seconds(cpu.stats.cycles),
             console: self.bus.console.clone(),
             shard_fires: self.bus.cims.iter().map(|m| m.stats.fires).collect(),
             markers: self.bus.phases.clone(),

@@ -24,8 +24,9 @@ use super::spans::RequestSpan;
 #[cfg(test)]
 use super::spans::SpanOutcome;
 
-/// The paper's system clock: cycles → µs divisor.
-pub const CLOCK_MHZ: f64 = 50.0;
+/// The paper's system clock: cycles → µs divisor (re-exported from the
+/// single source of truth, [`crate::clock`]).
+pub use crate::clock::CLOCK_MHZ;
 
 /// Trace process ids (one per logical timeline).
 pub const PID_SERVE: u64 = 1;

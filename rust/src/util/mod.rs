@@ -1,7 +1,7 @@
 //! Small in-tree replacements for crates missing from the offline image
 //! (serde_json, clap, rand, proptest) plus binary-artifact I/O helpers.
 
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 pub mod cli;
 pub mod io;
@@ -17,6 +17,21 @@ pub mod rng;
 /// `shutdown`, and every stats reporter behind a `PoisonError`.
 pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// [`lock_or_recover`]'s read twin for `RwLock` (the sharded-parallel
+/// inference path shares its evolving feature map through one): a shard
+/// thread that panicked mid-layer poisons the lock, but the map itself is
+/// only ever replaced wholesale by the merge leader, so readers can
+/// always recover — the *error* surfacing belongs to the dead-shard
+/// accounting, not to every subsequent lock site.
+pub fn read_or_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// [`read_or_recover`]'s write twin.
+pub fn write_or_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 #[cfg(test)]
@@ -35,5 +50,19 @@ mod tests {
         // Recovery: the data is still there and still writable.
         lock_or_recover(&m).push(2);
         assert_eq!(*lock_or_recover(&m), vec![1, 2]);
+    }
+
+    #[test]
+    fn rwlock_recovery_survives_poisoning_both_ways() {
+        let l = RwLock::new(7u64);
+        // Poison: panic while holding the write guard.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = l.write().unwrap();
+            panic!("poison");
+        }));
+        assert!(l.read().is_err(), "rwlock must actually be poisoned");
+        assert_eq!(*read_or_recover(&l), 7);
+        *write_or_recover(&l) = 8;
+        assert_eq!(*read_or_recover(&l), 8);
     }
 }

@@ -5,6 +5,10 @@
 //! included: every position of small maps is checked, so the zero-padded
 //! windows at t=0 and t=t-1 are always exercised). No artifacts needed.
 
+use cimrv::model::kernel::{
+    conv_layer_lanes, conv_layer_lanes_batch, conv_sums_lanes, engine_kind,
+    final_layer_gap_lanes, final_layer_gap_lanes_batch, LaneLayer,
+};
 use cimrv::model::kws::LayerSpec;
 use cimrv::model::reference::{
     conv_layer, conv_layer_packed, conv_layer_packed_batch, conv_sums, conv_sums_packed,
@@ -196,6 +200,144 @@ fn prop_batched_sums_and_gap_match_per_utterance() {
         let batch = final_layer_gap_packed_batch(&ys, &packed_last);
         for (u, y) in ys.iter().enumerate() {
             assert_eq!(batch[u], final_layer_gap_packed(y, &packed_last), "u {u}");
+        }
+    });
+}
+
+// --- lane-engine (SIMD + incremental windows) vs the scalar oracle ------
+// These run under both cargo feature configurations: the CI matrix builds
+// with and without `--features simd`, so the same assertions cover the
+// portable tier and whichever SIMD tier the host dispatches to.
+
+#[test]
+fn prop_lane_conv_sums_match_scalar() {
+    // Raw per-position sums: the lane engine's blocked accumulators vs
+    // the i8 oracle, across ragged widths (c_in % 64 != 0 dominates the
+    // 1..100 draw) and every padded edge position.
+    check("lane conv sums", 120, |rng| {
+        let layer = random_layer(rng, true);
+        let t = rng.range(1, 16);
+        let x = random_bits(rng, t, layer.c_in);
+        let lanes = LaneLayer::from_packed(&PackedLayer::from_spec(&layer));
+        for pos in 0..t {
+            assert_eq!(
+                conv_sums_lanes(&x, &lanes, pos),
+                conv_sums(&x, &layer, pos),
+                "engine {} k {} c_in {} c_out {} t {t} pos {pos}",
+                engine_kind(),
+                layer.kernel,
+                layer.c_in,
+                layer.c_out
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_lane_conv_layer_matches_scalar() {
+    check("lane conv layer", 120, |rng| {
+        let layer = random_layer(rng, true);
+        // Odd t exercises the dropped pooling tail.
+        let t = rng.range(2, 24);
+        let x = random_bits(rng, t, layer.c_in);
+        let lanes = LaneLayer::from_packed(&PackedLayer::from_spec(&layer));
+        assert_eq!(
+            conv_layer_lanes(&x, &lanes),
+            conv_layer(&x, &layer),
+            "engine {} k {} c_in {} c_out {} pooled {} t {t}",
+            engine_kind(),
+            layer.kernel,
+            layer.c_in,
+            layer.c_out,
+            layer.pooled
+        );
+    });
+}
+
+#[test]
+fn prop_lane_gap_matches_scalar() {
+    check("lane GAP", 100, |rng| {
+        let layer = random_layer(rng, false);
+        let t = rng.range(1, 20);
+        let x = random_bits(rng, t, layer.c_in);
+        let lanes = LaneLayer::from_packed(&PackedLayer::from_spec(&layer));
+        assert_eq!(
+            final_layer_gap_lanes(&x, &lanes),
+            final_layer_gap(&x, &layer),
+            "engine {} k {} c_in {} c_out {} t {t}",
+            engine_kind(),
+            layer.kernel,
+            layer.c_in,
+            layer.c_out
+        );
+    });
+}
+
+#[test]
+fn prop_lane_batches_match_per_utterance() {
+    // Ragged batches: every utterance shares (t, c_in) geometry but not
+    // content; batch sizes 1..7 hit partial final thread chunks upstream.
+    check("lane batched conv + GAP", 60, |rng| {
+        let conv = random_layer(rng, true);
+        let last = random_layer(rng, false);
+        let t = rng.range(2, 16);
+        let n = rng.range(1, 7);
+        let lanes_conv = LaneLayer::from_packed(&PackedLayer::from_spec(&conv));
+        let xs: Vec<BitMap> = (0..n).map(|_| random_bits(rng, t, conv.c_in)).collect();
+        let batch = conv_layer_lanes_batch(&xs, &lanes_conv);
+        assert_eq!(batch.len(), n);
+        for (u, x) in xs.iter().enumerate() {
+            assert_eq!(
+                batch[u],
+                conv_layer_lanes(x, &lanes_conv),
+                "engine {} k {} pooled {} t {t} u {u}/{n}",
+                engine_kind(),
+                conv.kernel,
+                conv.pooled
+            );
+        }
+        let lanes_last = LaneLayer::from_packed(&PackedLayer::from_spec(&last));
+        let ys: Vec<BitMap> = (0..n).map(|_| random_bits(rng, t, last.c_in)).collect();
+        let gap = final_layer_gap_lanes_batch(&ys, &lanes_last);
+        for (u, y) in ys.iter().enumerate() {
+            assert_eq!(gap[u], final_layer_gap_lanes(y, &lanes_last), "u {u}");
+        }
+    });
+}
+
+#[test]
+fn prop_lane_sharded_channel_slices_match_scalar() {
+    // The sharded fsim builds LaneLayers from `slice_channels` slices —
+    // slice widths not divisible by LANES leave dead lanes in the final
+    // block, which must not leak into the sums.
+    check("lane sharded slices", 80, |rng| {
+        let layer = random_layer(rng, true);
+        let t = rng.range(2, 12);
+        let x = random_bits(rng, t, layer.c_in);
+        let packed = PackedLayer::from_spec(&layer);
+        let cut = rng.range(1, layer.c_out.max(2)); // 1..c_out-1 (or 1 when c_out == 1)
+        let cut = cut.min(layer.c_out);
+        let want = conv_layer(&x, &layer);
+        for (c0, c1) in [(0, cut), (cut, layer.c_out)] {
+            if c0 == c1 {
+                continue;
+            }
+            let shard = LaneLayer::from_packed(&packed.slice_channels(c0, c1));
+            let got = conv_layer_lanes(&x, &shard);
+            // The shard's channel ch is the full layer's channel c0 + ch.
+            assert_eq!(got.t, want.t);
+            for r in 0..got.t {
+                for ch in c0..c1 {
+                    assert_eq!(
+                        got.get(r, ch - c0),
+                        want.get(r, ch),
+                        "engine {} k {} c_out {} slice {c0}..{c1} r {r} ch {ch}",
+                        engine_kind(),
+                        layer.kernel,
+                        layer.c_out
+                    );
+                }
+            }
         }
     });
 }
