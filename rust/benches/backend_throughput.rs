@@ -22,7 +22,12 @@
 //!   the host has >= 4 cores; N=2 and N=4 rows always recorded);
 //! * kernel-level micro benches (preprocess, each conv layer, the GAP
 //!   layer) — scalar vs packed, written to `BENCH_kernels.json` so the
-//!   perf trajectory is tracked run over run.
+//!   perf trajectory is tracked run over run;
+//! * the fused resident schedule (`--opt fused`): measured cycle-engine
+//!   runs at baseline / full / fused, with the accelerated-phase
+//!   (weights+conv) reduction gated at >= 60% vs baseline (paper:
+//!   85.14%) and fused DRAM traffic gated below full's — deterministic
+//!   cycle counts, so these gates run even in quick (CI) mode.
 //!
 //! Runs on the trained artifacts when present, else on the synthetic
 //! model, so it works straight after `cargo build`. Set
@@ -369,6 +374,79 @@ fn main() {
         shard_rows.push((n, s));
     }
 
+    // --- fused resident schedule (cycle engine, modeled cycles) ----------
+    // The fusion tentpole's regression gate: baseline / full / fused
+    // measured on the cycle engine. Cycle counts and DRAM byte counts are
+    // deterministic, so the thresholds hold in quick (CI) mode too.
+    let fused_probe = &audios[3];
+    let fused_ladder = [
+        ("baseline", OptLevel::BASELINE),
+        ("full", OptLevel::FULL),
+        ("fused", OptLevel::FUSED),
+    ];
+    let fused_rows: Vec<(&str, cimrv::sim::RunResult)> = fused_ladder
+        .iter()
+        .map(|&(name, opt)| {
+            let p = build_kws_program(&model, opt).expect("codegen (fused ladder)");
+            let mut be = backend::build(BackendKind::Cycle, p, DramConfig::default())
+                .expect("cycle backend (fused ladder)");
+            (name, be.run(fused_probe).expect("cycle inference (fused ladder)"))
+        })
+        .collect();
+    println!("\nfused resident schedule (cycle engine):");
+    println!(
+        "  {:<10}{:>14}{:>14}{:>14}{:>14}",
+        "config", "total cyc", "accel cyc", "conv cyc", "DRAM bytes"
+    );
+    for (name, r) in &fused_rows {
+        println!(
+            "  {:<10}{:>14}{:>14}{:>14}{:>14}",
+            name,
+            r.cycles,
+            r.phases.accelerated(),
+            r.phases.conv,
+            r.energy.dram_bytes
+        );
+    }
+    let (base_r, full_r, fused_r) = (&fused_rows[0].1, &fused_rows[1].1, &fused_rows[2].1);
+    assert_eq!(
+        fused_r.logits, base_r.logits,
+        "fused schedule must be bit-identical to the baseline program"
+    );
+    let accel_red =
+        1.0 - fused_r.phases.accelerated() as f64 / base_r.phases.accelerated() as f64;
+    let e2e_red = 1.0 - fused_r.cycles as f64 / base_r.cycles as f64;
+    println!(
+        "  accelerated-phase reduction {:.2}% (gate >= 60%, paper 85.14%) | e2e {:.2}% | \
+         DRAM {} -> {} bytes",
+        100.0 * accel_red,
+        100.0 * e2e_red,
+        full_r.energy.dram_bytes,
+        fused_r.energy.dram_bytes
+    );
+    assert!(
+        accel_red >= 0.60,
+        "fused schedule must cut >= 60% of baseline accelerated-phase cycles \
+         ({:.2}% measured)",
+        100.0 * accel_red
+    );
+    assert!(
+        fused_r.cycles < full_r.cycles,
+        "fused total cycles ({}) must beat the full ladder ({})",
+        fused_r.cycles,
+        full_r.cycles
+    );
+    assert!(
+        fused_r.energy.dram_bytes < full_r.energy.dram_bytes,
+        "fused per-inference DRAM traffic ({}) must beat full's ({}): resident weights \
+         leave only the audio fetch",
+        fused_r.energy.dram_bytes,
+        full_r.energy.dram_bytes
+    );
+    println!(
+        "assert: fused >= 60% accelerated reduction, < full cycles, < full DRAM bytes \u{2713}"
+    );
+
     // --- BENCH_kernels.json ----------------------------------------------
     let mut json = String::from("{\n");
     json.push_str(&format!("  \"model\": \"{model_kind}\",\n"));
@@ -423,6 +501,23 @@ fn main() {
             1e3 * s,
             single_sh_s / s,
             if i + 1 < shard_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("    ]\n  },\n");
+    json.push_str("  \"fused\": {\n");
+    json.push_str(&format!("    \"accelerated_reduction_pct\": {:.2},\n", 100.0 * accel_red));
+    json.push_str(&format!("    \"e2e_reduction_pct\": {:.2},\n", 100.0 * e2e_red));
+    json.push_str("    \"gate\": \"accelerated_reduction_pct >= 60\",\n");
+    json.push_str("    \"rows\": [\n");
+    for (i, (name, r)) in fused_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "      {{\"config\": \"{name}\", \"total_cycles\": {}, \
+             \"accelerated_cycles\": {}, \"conv_cycles\": {}, \"dram_bytes\": {}}}{}\n",
+            r.cycles,
+            r.phases.accelerated(),
+            r.phases.conv,
+            r.energy.dram_bytes,
+            if i + 1 < fused_rows.len() { "," } else { "" }
         ));
     }
     json.push_str("    ]\n  }\n}\n");

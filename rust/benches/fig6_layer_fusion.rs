@@ -1,8 +1,11 @@
 //! Fig. 6 — CIM layer fusion: convolution-phase latency with inter-layer
-//! feature maps kept in FM SRAM vs round-tripped through DRAM.
-//! Paper: −33.16% of convolution execution. Our model's binary FMs are
-//! much smaller relative to its weights, so the absolute share is lower;
-//! the direction and mechanism (saved DRAM FM traffic) are the claim.
+//! feature maps kept in FM SRAM vs round-tripped through DRAM, and the
+//! full fused resident schedule (co-resident sign planes + conv/max-pool
+//! pipelining + weight fusion) on top.
+//! Paper: −33.16% of convolution execution from FM fusion alone, 85.14%
+//! total. Our model's binary FMs are much smaller relative to its
+//! weights, so the absolute share is lower; the direction and mechanism
+//! (saved DRAM FM + weight traffic) are the claim.
 
 mod common;
 
@@ -13,37 +16,52 @@ fn main() {
     let audio = common::audio(&model, 3, 1);
 
     let base = common::run_once(&model, OptLevel::BASELINE, &audio);
-    let fused = common::run_once(
+    let fm_fused = common::run_once(
         &model,
         OptLevel { layer_fusion: true, ..OptLevel::BASELINE },
         &audio,
     );
+    let full = common::run_once(&model, OptLevel::FULL, &audio);
+    // The real fused path: weights stay resident across inferences, so
+    // the steady-state DRAM traffic is the audio fetch alone.
+    let fused = common::run_once(&model, OptLevel::FUSED, &audio);
 
     println!("=== Fig. 6: CIM layer fusion ===");
     println!("{:<24}{:>16}{:>16}{:>18}", "config", "conv cycles", "accel cycles", "DRAM bytes");
     // Real byte counts from the activity accounting — not dram_pj divided
     // by an assumed pJ/byte, which silently skewed this column whenever
     // the energy table changed.
-    println!(
-        "{:<24}{:>16}{:>16}{:>18}",
-        "no fusion (DRAM FM)",
-        base.phases.conv,
-        base.phases.accelerated(),
-        base.energy.dram_bytes
-    );
-    println!(
-        "{:<24}{:>16}{:>16}{:>18}",
-        "layer fusion (on-chip)",
-        fused.phases.conv,
-        fused.phases.accelerated(),
-        fused.energy.dram_bytes
-    );
-    let conv_red = 100.0 * (1.0 - fused.phases.conv as f64 / base.phases.conv as f64);
+    for (name, r) in [
+        ("no fusion (DRAM FM)", &base),
+        ("layer fusion (on-chip)", &fm_fused),
+        ("full ladder", &full),
+        ("fused resident", &fused),
+    ] {
+        println!(
+            "{:<24}{:>16}{:>16}{:>18}",
+            name,
+            r.phases.conv,
+            r.phases.accelerated(),
+            r.energy.dram_bytes
+        );
+    }
+    let conv_red = 100.0 * (1.0 - fm_fused.phases.conv as f64 / base.phases.conv as f64);
     let accel_red =
         100.0 * (1.0 - fused.phases.accelerated() as f64 / base.phases.accelerated() as f64);
+    let dram_red = 100.0 * (1.0 - fused.energy.dram_bytes as f64 / full.energy.dram_bytes as f64);
     println!(
-        "conv-phase reduction: {conv_red:.2}% | accelerated-phase: {accel_red:.2}% \
-         (paper: 33.16% of conv execution)"
+        "FM-fusion conv-phase reduction: {conv_red:.2}% (paper: 33.16% of conv execution)"
     );
-    assert_eq!(base.logits, fused.logits, "fusion must not change values");
+    println!(
+        "fused resident accelerated-phase reduction: {accel_red:.2}% (paper: 85.14% total) | \
+         per-inference DRAM traffic vs full: -{dram_red:.2}% \
+         ({} -> {} bytes, resident weights leave only the audio fetch)",
+        full.energy.dram_bytes, fused.energy.dram_bytes
+    );
+    assert_eq!(base.logits, fm_fused.logits, "FM fusion must not change values");
+    assert_eq!(base.logits, fused.logits, "the fused schedule must not change values");
+    assert!(
+        fused.energy.dram_bytes < full.energy.dram_bytes,
+        "fused per-inference DRAM bytes must undercut the full ladder"
+    );
 }

@@ -17,20 +17,44 @@ pub struct OptLevel {
     /// compute, double-buffered in weight SRAM (Figs. 8/9).
     /// Off = compute stalls on every layer's DRAM weight load.
     pub weight_fusion: bool,
+    /// Multi-layer-resident fused programs: the image is split into a
+    /// one-time *setup* section (mask-plane init, every layer's weight
+    /// DMA, resident layers' sign bursts packed at planner-assigned
+    /// wordline rows — see `compiler::fusion`) and a steady-state
+    /// *per-inference* section that re-fires the resident weights with
+    /// zero per-inference weight DRAM traffic. Implies the other three
+    /// (codegen rejects `fused` without them).
+    pub fused: bool,
 }
 
 impl OptLevel {
     /// The paper's baseline (conventional CIM accelerator).
-    pub const BASELINE: OptLevel =
-        OptLevel { layer_fusion: false, conv_pool_pipeline: false, weight_fusion: false };
-    /// Everything on (the CIMR-V configuration).
-    pub const FULL: OptLevel =
-        OptLevel { layer_fusion: true, conv_pool_pipeline: true, weight_fusion: true };
+    pub const BASELINE: OptLevel = OptLevel {
+        layer_fusion: false,
+        conv_pool_pipeline: false,
+        weight_fusion: false,
+        fused: false,
+    };
+    /// The classic CIMR-V configuration (all three paper toggles, one
+    /// self-contained boot-and-run image).
+    pub const FULL: OptLevel = OptLevel {
+        layer_fusion: true,
+        conv_pool_pipeline: true,
+        weight_fusion: true,
+        fused: false,
+    };
+    /// FULL plus multi-layer-resident fusion (steady-state serving mode).
+    pub const FUSED: OptLevel = OptLevel {
+        layer_fusion: true,
+        conv_pool_pipeline: true,
+        weight_fusion: true,
+        fused: true,
+    };
 
     /// The cumulative ladder used for the 85.14 % waterfall:
     /// baseline -> +layer fusion -> +weight fusion -> +pipeline (the
-    /// paper's §III-A ordering).
-    pub fn ladder() -> [(&'static str, OptLevel); 4] {
+    /// paper's §III-A ordering) -> +multi-layer residency.
+    pub fn ladder() -> [(&'static str, OptLevel); 5] {
         [
             ("baseline", OptLevel::BASELINE),
             (
@@ -39,9 +63,10 @@ impl OptLevel {
             ),
             (
                 "+weight fusion",
-                OptLevel { layer_fusion: true, weight_fusion: true, conv_pool_pipeline: false },
+                OptLevel { layer_fusion: true, weight_fusion: true, ..OptLevel::BASELINE },
             ),
             ("+conv/pool pipeline (full)", OptLevel::FULL),
+            ("+resident fusion (fused)", OptLevel::FUSED),
         ]
     }
 
@@ -49,11 +74,12 @@ impl OptLevel {
         Ok(match s {
             "baseline" | "none" => OptLevel::BASELINE,
             "full" | "all" => OptLevel::FULL,
+            "fused" | "resident" => OptLevel::FUSED,
             "layer-fusion" => OptLevel { layer_fusion: true, ..OptLevel::BASELINE },
             "weight-fusion" => OptLevel { weight_fusion: true, ..OptLevel::BASELINE },
             "pipeline" => OptLevel { conv_pool_pipeline: true, ..OptLevel::BASELINE },
             _ => anyhow::bail!(
-                "unknown opt level {s:?} (baseline|layer-fusion|weight-fusion|pipeline|full)"
+                "unknown opt level {s:?} (baseline|layer-fusion|weight-fusion|pipeline|full|fused)"
             ),
         })
     }
@@ -63,8 +89,11 @@ impl fmt::Display for OptLevel {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "lf={} pipe={} wf={}",
-            self.layer_fusion as u8, self.conv_pool_pipeline as u8, self.weight_fusion as u8
+            "lf={} pipe={} wf={} fused={}",
+            self.layer_fusion as u8,
+            self.conv_pool_pipeline as u8,
+            self.weight_fusion as u8,
+            self.fused as u8
         )
     }
 }
@@ -78,14 +107,17 @@ mod tests {
         let l = OptLevel::ladder();
         assert_eq!(l[0].1, OptLevel::BASELINE);
         assert_eq!(l[3].1, OptLevel::FULL);
+        assert_eq!(l[4].1, OptLevel::FUSED);
         assert!(l[1].1.layer_fusion && !l[1].1.weight_fusion);
         assert!(l[2].1.layer_fusion && l[2].1.weight_fusion && !l[2].1.conv_pool_pipeline);
+        assert!(!l[3].1.fused && l[4].1.fused);
     }
 
     #[test]
     fn parse_roundtrip() {
         assert_eq!(OptLevel::parse("full").unwrap(), OptLevel::FULL);
         assert_eq!(OptLevel::parse("baseline").unwrap(), OptLevel::BASELINE);
+        assert_eq!(OptLevel::parse("fused").unwrap(), OptLevel::FUSED);
         assert!(OptLevel::parse("bogus").is_err());
     }
 }

@@ -9,6 +9,33 @@
 //! The conv inner code is fully unrolled straight-line `cim_conv`
 //! sequences (the paper's single-cycle-per-instruction throughput story);
 //! preprocessing and weight bursts are loops.
+//!
+//! # Fused fire/drain ordering contract (`OptLevel::FUSED`)
+//!
+//! Fused images split in two sections (see [`Program::entry`]):
+//!
+//! 1. **Setup** (PC 0, run once by the SoC loader): mask-plane init, every
+//!    layer's weight stream DMA'd DRAM -> weight SRAM, and each *resident*
+//!    layer's sign planes burst to its `FusionPlan::row_base` rectangle.
+//! 2. **Per-inference** (PC `entry`): audio DMA only — no weight DRAM
+//!    traffic. Each layer's weight phase re-bursts just its thresholds
+//!    (the per-SA-column threshold registers are shared by co-resident
+//!    layers) plus the sign planes of *streamed* layers at `stream_base`.
+//!
+//! Within a fused pooled conv layer the ordering is the conv/pool
+//! pipeline's: position `t` fires with `pool_or` latching, odd positions
+//! drain the pooled word while the macro's shift register is already
+//! taking row `t+2` of the *same* layer — and because layer `i+1`'s
+//! planes are co-resident, its weight phase needs no sign burst, so its
+//! fires start immediately after layer `i`'s last drain. The first pooled
+//! drain is announced with the `Phase::pool_drain(i)` marker (id `40+i`)
+//! so trace viewers can render the drain region `[40+i, 30+i)` as a slice
+//! concurrent with the next fires; cycle attribution folds it into conv.
+//!
+//! Streamed layers (wordline budget exceeded) fall back per-layer; when a
+//! whole group exceeds one macro's wordlines, input-channel-axis sharding
+//! ([`build_kws_program_input_sharded`]) splits every window across the
+//! bank, shrinking per-macro windows (`FusionPlan::for_slices`).
 
 use anyhow::Result;
 
@@ -22,6 +49,7 @@ use crate::mem::layout;
 use crate::model::KwsModel;
 
 use super::asm::Asm;
+use super::fusion::FusionPlan;
 use super::program::{Phase, Program};
 
 const FM: i64 = layout::FM_BASE as i64;
@@ -233,13 +261,86 @@ fn emit_weight_phase(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize, opt
     emit_phase(a, Phase::weight_done(i));
 }
 
+/// Sign-plane `cim_w` burst of layer `i` into the wordline rectangle at
+/// `row_base` (row blocks of 32). The port address of window word `j` of
+/// column `c` is `c * 32 + row_base + j` — exactly the words a fire with
+/// `CimConfig::row_base == row_base` reads back, so a layer bursts and
+/// fires through the same rectangle regardless of where it sits.
+fn emit_sign_burst(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize, row_base: usize) {
+    let lp = &p.layers[i];
+    let aw = lp.window_words;
+    let multi = shards.n_macros > 1;
+    for (m, c0, c1) in shards.layers[i].non_empty() {
+        if multi {
+            emit_sel(a, m as i64);
+        }
+        a.li(Reg::A1, layout::WT_BASE as i64 + lp.wt_offset as i64 + (4 * c0 * aw) as i64);
+        a.li(Reg::A2, (weight_map::SIGN_BASE + row_base) as i64);
+        a.li(Reg::S5, (c1 - c0) as i64);
+        let col_top = a.here_label();
+        for j in 0..aw {
+            a.cim(CimInstr::write(Reg::A1, j as u16, Reg::A2, j as u16));
+        }
+        a.addi(Reg::A1, Reg::A1, (4 * aw) as i32);
+        a.addi(Reg::A2, Reg::A2, Mode::X.col_words() as i32);
+        a.addi(Reg::S5, Reg::S5, -1);
+        a.bne(Reg::S5, Reg::ZERO, col_top);
+    }
+}
+
+/// Fused-program weight phase of layer `i`: no DRAM traffic (streams went
+/// resident in the weight SRAM at setup). Resident layers' sign planes
+/// are already in their rectangles; streamed layers re-burst theirs at
+/// `stream_base`. Thresholds are re-burst for every binarized layer —
+/// the per-column threshold registers are shared across co-residents.
+fn emit_fused_weight_phase(
+    a: &mut Asm,
+    p: &KwsPlan,
+    shards: &ShardPlan,
+    i: usize,
+    fp: &FusionPlan,
+) {
+    let lp = &p.layers[i];
+    let multi = shards.n_macros > 1;
+    if !fp.resident[i] {
+        emit_sign_burst(a, p, shards, i, fp.stream_base);
+    }
+    if lp.th_words > 0 {
+        for (m, c0, c1) in shards.layers[i].non_empty() {
+            if multi {
+                emit_sel(a, m as i64);
+            }
+            a.li(
+                Reg::A1,
+                layout::WT_BASE as i64 + lp.wt_offset as i64 + (4 * (lp.sign_words + c0)) as i64,
+            );
+            a.li(Reg::A2, weight_map::TH_BASE as i64);
+            a.li(Reg::S5, (c1 - c0) as i64);
+            let th_top = a.here_label();
+            a.cim(CimInstr::write(Reg::A1, 0, Reg::A2, 0));
+            a.addi(Reg::A1, Reg::A1, 4);
+            a.addi(Reg::A2, Reg::A2, 1);
+            a.addi(Reg::S5, Reg::S5, -1);
+            a.bne(Reg::S5, Reg::ZERO, th_top);
+        }
+    }
+    emit_phase(a, Phase::weight_done(i));
+}
+
 /// Convolution phase of a binarized layer (row-wise dataflow, Fig. 5).
 ///
 /// Under sharding, shifts broadcast to every macro (the shared input bus)
 /// while fires and drains interleave per macro: each owner is selected,
 /// fired, and drains its latch words at its word-aligned channel offset of
 /// the packed output row — bit-identical rows, per-macro `CimStats`.
-fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: OptLevel) {
+fn emit_conv_layer(
+    a: &mut Asm,
+    p: &KwsPlan,
+    shards: &ShardPlan,
+    i: usize,
+    opt: OptLevel,
+    fusion: Option<&FusionPlan>,
+) {
     let lp = &p.layers[i];
     let s = lp.s_words;
     let o = lp.o_words;
@@ -249,7 +350,9 @@ fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: 
     let groups = shards.layers[i].non_empty();
 
     // Configure the CIM unit for this layer (broadcast: every macro runs
-    // the same window geometry, each over its own column range).
+    // the same window geometry, each over its own column range). Fused
+    // programs aim the window at the layer's resident (or streaming)
+    // wordline rectangle.
     if multi {
         emit_sel(a, SEL_BROADCAST);
     }
@@ -257,7 +360,7 @@ fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: 
         mode: Mode::X,
         pool_or: fused_pool,
         window_words: lp.window_words as u8,
-        row_base: 0,
+        row_base: fusion.map_or(0, |f| f.row_base[i] as u8),
         col_base: 0,
     };
     a.li(Reg::T0, cfg.to_bits() as i64);
@@ -289,6 +392,11 @@ fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: 
         // Does this position drain to the real output?
         let drains = if fused_pool { t % 2 == 1 } else { true };
         if drains {
+            if t == 1 && fused_pool && fusion.is_some() {
+                // First pooled drain of the fused schedule: from here on,
+                // drains overlap the next position's shift-in/fire.
+                emit_phase(a, Phase::pool_drain(i));
+            }
             // Fire each owner (wd = 0 fires and stores its word 0 at the
             // shard's word offset), then drain its remaining latch words.
             for &(m, c0, c1) in &groups {
@@ -379,7 +487,14 @@ fn emit_conv_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: 
 /// into the GAP result vector on the RISC-V side (Fig. 10 post-processing).
 /// Under sharding each owner macro is fired and its raw shard columns
 /// drain to their global class offsets of the DMEM dump row.
-fn emit_final_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, model: &KwsModel, opt: OptLevel) {
+fn emit_final_layer(
+    a: &mut Asm,
+    p: &KwsPlan,
+    shards: &ShardPlan,
+    model: &KwsModel,
+    opt: OptLevel,
+    fusion: Option<&FusionPlan>,
+) {
     let i = p.layers.len() - 1;
     let lp = &p.layers[i];
     let s = lp.s_words;
@@ -395,7 +510,7 @@ fn emit_final_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, model: &KwsMod
         mode: Mode::X,
         pool_or: false,
         window_words: lp.window_words as u8,
-        row_base: 0,
+        row_base: fusion.map_or(0, |f| f.row_base[i] as u8),
         col_base: 0,
     };
     a.li(Reg::T0, cfg.to_bits() as i64);
@@ -484,6 +599,9 @@ pub fn build_kws_program_sharded(
     opt: OptLevel,
     n_macros: usize,
 ) -> Result<Program> {
+    if opt.fused {
+        return build_fused_program(model, opt, n_macros);
+    }
     let p = KwsPlan::new(model)?;
     let shards = ShardPlan::word_aligned(&p, n_macros.max(1))?;
     anyhow::ensure!(shards.is_word_aligned(), "cycle-engine shard plan must be word-aligned");
@@ -494,19 +612,40 @@ pub fn build_kws_program_sharded(
     for i in 0..p.layers.len() {
         emit_weight_phase(&mut a, &p, &shards, i, opt);
         if p.layers[i].binarized {
-            emit_conv_layer(&mut a, &p, &shards, i, opt);
+            emit_conv_layer(&mut a, &p, &shards, i, opt, None);
         } else {
-            emit_final_layer(&mut a, &p, &shards, model, opt);
+            emit_final_layer(&mut a, &p, &shards, model, opt, None);
         }
     }
-    // Publish the result and halt.
-    a.li(Reg::T0, DMEM + plan::DMEM_RESULT as i64);
-    mmio_sw(&mut a, Reg::T0, layout::MMIO_HOST_RESULT);
-    a.li(Reg::T0, 0);
-    mmio_sw(&mut a, Reg::T0, layout::MMIO_HOST_EXIT);
-    a.ebreak(); // unreachable (HOST_EXIT halts), defensive
+    emit_epilogue(&mut a);
 
-    // DMEM constant tables: folded-BN thresholds + flip words.
+    let (thr_words, flip_words) = dmem_tables(model);
+    let final_t = p.layers.last().unwrap().t_in;
+    Ok(Program {
+        imem: a.assemble()?,
+        entry: 0,
+        dram: p.build_dram_weights(model),
+        dmem: vec![(plan::DMEM_THR, thr_words), (plan::DMEM_FLIP, flip_words)],
+        result_addr: plan::DMEM_RESULT,
+        final_t,
+        opt,
+        n_classes: model.n_classes,
+        plan: p,
+        shards,
+    })
+}
+
+/// Result publication + halt, shared by every builder.
+fn emit_epilogue(a: &mut Asm) {
+    a.li(Reg::T0, DMEM + plan::DMEM_RESULT as i64);
+    mmio_sw(a, Reg::T0, layout::MMIO_HOST_RESULT);
+    a.li(Reg::T0, 0);
+    mmio_sw(a, Reg::T0, layout::MMIO_HOST_EXIT);
+    a.ebreak(); // unreachable (HOST_EXIT halts), defensive
+}
+
+/// DMEM constant tables: folded-BN thresholds + flip words.
+fn dmem_tables(model: &KwsModel) -> (Vec<u32>, Vec<u32>) {
     let thr_words: Vec<u32> = model
         .pre_thr
         .iter()
@@ -542,10 +681,494 @@ pub fn build_kws_program_sharded(
             word
         })
         .collect();
+    (thr_words, flip_words)
+}
 
+/// Fused image (`OptLevel::FUSED`): a one-time *setup* section at PC 0 and
+/// the steady-state per-inference section at [`Program::entry`]. See the
+/// module docs for the ordering contract. Per-inference DRAM traffic is
+/// the audio buffer only.
+fn build_fused_program(model: &KwsModel, opt: OptLevel, n_macros: usize) -> Result<Program> {
+    anyhow::ensure!(
+        opt.layer_fusion && opt.conv_pool_pipeline && opt.weight_fusion,
+        "opt.fused implies layer_fusion + conv_pool_pipeline + weight_fusion (use OptLevel::FUSED)"
+    );
+    let p = KwsPlan::new(model)?;
+    let shards = ShardPlan::word_aligned(&p, n_macros.max(1))?;
+    anyhow::ensure!(shards.is_word_aligned(), "cycle-engine shard plan must be word-aligned");
+    let fp = FusionPlan::new(&p);
+    let multi = shards.n_macros > 1;
+
+    // --- Setup section (PC 0, run once by the SoC loader) ----------------
+    let mut s = Asm::new();
+    s.li(Reg::T6, layout::MMIO_BASE as i64);
+    if multi {
+        emit_sel(&mut s, SEL_BROADCAST);
+    }
+    // Mask plane: all-ones (binary weights — every cell of every resident
+    // rectangle active; fires gate by window, not by mask).
+    s.li(Reg::A1, FM + plan::FM_ONES as i64);
+    s.li(Reg::A2, weight_map::MASK_BASE as i64);
+    s.li(Reg::T1, (weight_map::MASK_BASE + weight_map::MASK_WORDS) as i64);
+    s.li(Reg::T0, 0xFFFF_FFFFu32 as i64);
+    s.sw(Reg::A1, Reg::T0, 0);
+    let top = s.here_label();
+    s.cim(CimInstr::write(Reg::A1, 0, Reg::A2, 0));
+    s.addi(Reg::A2, Reg::A2, 1);
+    s.bne(Reg::A2, Reg::T1, top);
+    // Every layer's weight stream goes resident in the weight SRAM, once.
+    for lp in &p.layers {
+        emit_udma_start(
+            &mut s,
+            layout::DRAM_BASE as i64 + lp.dram_offset as i64,
+            layout::WT_BASE as i64 + lp.wt_offset as i64,
+            lp.stream_bytes() as i64,
+        );
+        emit_udma_wait(&mut s);
+    }
+    // Resident layers' sign planes: burst once into their rectangles.
+    for i in 0..p.layers.len() {
+        if fp.resident[i] {
+            emit_sign_burst(&mut s, &p, &shards, i, fp.row_base[i]);
+        }
+    }
+    s.li(Reg::T0, 0);
+    mmio_sw(&mut s, Reg::T0, layout::MMIO_HOST_EXIT);
+    s.ebreak();
+    let setup = s.assemble()?;
+
+    // --- Per-inference section (PC `entry`) ------------------------------
+    // Branch targets are PC-relative within each section, so the two
+    // assemblies concatenate safely.
+    let mut a = Asm::new();
+    a.li(Reg::T6, layout::MMIO_BASE as i64);
+    if multi {
+        emit_sel(&mut a, SEL_BROADCAST);
+    }
+    emit_udma_start(
+        &mut a,
+        layout::DRAM_BASE as i64 + plan::DRAM_AUDIO as i64,
+        DMEM + plan::DMEM_AUDIO as i64,
+        p.audio_bytes as i64,
+    );
+    emit_udma_wait(&mut a);
+    emit_phase(&mut a, Phase::BootDone as u32);
+    emit_preprocess(&mut a, model);
+    for i in 0..p.layers.len() {
+        emit_fused_weight_phase(&mut a, &p, &shards, i, &fp);
+        if p.layers[i].binarized {
+            emit_conv_layer(&mut a, &p, &shards, i, opt, Some(&fp));
+        } else {
+            emit_final_layer(&mut a, &p, &shards, model, opt, Some(&fp));
+        }
+    }
+    emit_epilogue(&mut a);
+
+    let mut imem = setup;
+    let entry = imem.len();
+    imem.extend_from_slice(&a.assemble()?);
+    anyhow::ensure!(imem.len() * 4 <= layout::IMEM_SIZE as usize, "fused image overflows IMEM");
+
+    let (thr_words, flip_words) = dmem_tables(model);
+    let final_t = p.layers.last().unwrap().t_in;
+    Ok(Program {
+        imem,
+        entry,
+        dram: p.build_dram_weights(model),
+        dmem: vec![(plan::DMEM_THR, thr_words), (plan::DMEM_FLIP, flip_words)],
+        result_addr: plan::DMEM_RESULT,
+        final_t,
+        opt,
+        n_classes: model.n_classes,
+        plan: p,
+        shards,
+    })
+}
+
+/// Weight phase of layer `i` under input-axis sharding: every macro gets
+/// *all* output columns of its input-word slice of the stream; thresholds
+/// go to DMEM (`plan::DMEM_SLICE_TH`) for the host-side compare — the
+/// macros produce raw partial sums, not latched bits.
+fn emit_input_weight_phase(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize) {
+    let lp = &p.layers[i];
+    let multi = shards.n_macros > 1;
+    // Serial stream fetch (input-axis programs always load serially: the
+    // th DMA below would contend with a boot-enqueued descriptor chain).
+    emit_udma_start(
+        a,
+        layout::DRAM_BASE as i64 + lp.dram_offset as i64,
+        layout::WT_BASE as i64 + lp.wt_offset as i64,
+        lp.stream_bytes() as i64,
+    );
+    emit_udma_wait(a);
+
+    let aw = lp.window_words;
+    let s = lp.s_words;
+    let k = aw / s; // kernel taps
+    for (m, c0, c1) in shards.layers[i].non_empty() {
+        let wa = c0 / 32; // first input word of this macro's slice
+        let sl = (c1 - c0) / 32; // slice words per tap
+        if multi {
+            emit_sel(a, m as i64);
+        }
+        // Column-major burst of the slice's words of every output column:
+        // stream word (tap, j) of column c is at c*aw + tap*s + wa + j;
+        // its port word within the macro's shrunk window is tap*sl + j.
+        a.li(Reg::A1, layout::WT_BASE as i64 + lp.wt_offset as i64);
+        a.li(Reg::A2, weight_map::SIGN_BASE as i64);
+        a.li(Reg::S5, lp.c_out as i64);
+        let col_top = a.here_label();
+        for tap in 0..k {
+            for j in 0..sl {
+                a.cim(CimInstr::write(
+                    Reg::A1,
+                    (tap * s + wa + j) as u16,
+                    Reg::A2,
+                    (tap * sl + j) as u16,
+                ));
+            }
+        }
+        a.addi(Reg::A1, Reg::A1, (4 * aw) as i32);
+        a.addi(Reg::A2, Reg::A2, Mode::X.col_words() as i32);
+        a.addi(Reg::S5, Reg::S5, -1);
+        a.bne(Reg::S5, Reg::ZERO, col_top);
+    }
+    if lp.th_words > 0 {
+        emit_udma_start(
+            a,
+            layout::DRAM_BASE as i64 + lp.dram_offset as i64 + (4 * lp.sign_words) as i64,
+            DMEM + plan::DMEM_SLICE_TH as i64,
+            (4 * lp.th_words) as i64,
+        );
+        emit_udma_wait(a);
+    }
+    emit_phase(a, Phase::weight_done(i));
+}
+
+/// Binarized conv layer under input-axis sharding: each macro fires over
+/// its input slice and drains *raw partial sums* (`cim_r`) of all output
+/// channels into a per-macro DMEM row; the core adds the partials
+/// (integer addition — exact, so the merge is bit-identical to the
+/// unsharded layer), applies thresholds (strict `>`) and packs the output
+/// row. Pooling is always the host OR pass here (`conv_pool_pipeline` is
+/// a no-op: macro latch bits never carry this layer's output).
+fn emit_input_conv_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: OptLevel) {
+    let lp = &p.layers[i];
+    let s = lp.s_words;
+    let o = lp.o_words;
+    let t_len = lp.t_in;
+    let c_out = lp.c_out;
+    let multi = shards.n_macros > 1;
+    let groups = shards.layers[i].non_empty();
+    let k = lp.window_words / s;
+
+    // Per-macro window config (windows differ per slice width).
+    for &(m, c0, c1) in &groups {
+        let sl = (c1 - c0) / 32;
+        if multi {
+            emit_sel(a, m as i64);
+        }
+        let cfg = CimConfig {
+            mode: Mode::X,
+            pool_or: false,
+            window_words: (k * sl) as u8,
+            row_base: 0,
+            col_base: 0,
+        };
+        a.li(Reg::T0, cfg.to_bits() as i64);
+        mmio_sw(a, Reg::T0, layout::MMIO_CIM_CFG);
+    }
+
+    a.li(Reg::A0, FM + p.in_buf(i) as i64); // src row pointer
+    a.li(Reg::A1, FM + plan::FM_ZERO as i64);
+    a.li(Reg::A2, FM + plan::FM_SCRATCH as i64);
+    a.li(Reg::S3, weight_map::RAW_BASE as i64);
+    a.li(Reg::S4, DMEM + plan::DMEM_SLICE_TH as i64);
+    // Packed output rows: straight to the out buffer, or staged in
+    // PREPOOL for the host OR pass.
+    let dst = if lp.pooled { FM + plan::FM_PREPOOL as i64 } else { FM + p.out_buf(i) as i64 };
+    a.li(Reg::S1, dst);
+
+    // Prefill: per macro, its slice words of the zero row and rows 0, 1.
+    for &(m, c0, c1) in &groups {
+        let wa = c0 / 32;
+        let sl = (c1 - c0) / 32;
+        if multi {
+            emit_sel(a, m as i64);
+        }
+        for j in 0..sl {
+            a.cim(CimInstr::conv(Reg::A1, j as u16, Reg::A2, 0, 7, true));
+        }
+        for r in 0..2 {
+            for j in 0..sl {
+                a.cim(CimInstr::conv(Reg::A0, (r * s + wa + j) as u16, Reg::A2, 0, 7, true));
+            }
+        }
+    }
+    a.addi(Reg::A0, Reg::A0, (8 * s) as i32);
+
+    for t in 0..t_len {
+        // Fire each macro and drain its raw partials to its RAWPART row.
+        for (gi, &(m, ..)) in groups.iter().enumerate() {
+            if multi {
+                emit_sel(a, m as i64);
+            }
+            a.cim(CimInstr::conv(Reg::A0, 0, Reg::A2, 0, 0, false));
+            a.li(Reg::A3, DMEM + plan::DMEM_RAWPART as i64 + (4 * gi * c_out) as i64);
+            a.mv(Reg::A1, Reg::S3);
+            for c in 0..c_out {
+                if c > 0 && c % 128 == 0 {
+                    a.addi(Reg::A3, Reg::A3, 4 * 128); // imm_d is 7 bits
+                }
+                a.cim(CimInstr::read(Reg::A1, c as u16, Reg::A3, (c % 128) as u16));
+            }
+            a.li(Reg::A1, FM + plan::FM_ZERO as i64);
+        }
+        // Merge partials into row 0 (exact integer adds).
+        for gi in 1..groups.len() {
+            a.li(Reg::S0, DMEM + plan::DMEM_RAWPART as i64);
+            a.li(Reg::S5, DMEM + plan::DMEM_RAWPART as i64 + (4 * gi * c_out) as i64);
+            a.li(Reg::S2, c_out as i64);
+            let top = a.here_label();
+            a.lw(Reg::T0, Reg::S0, 0);
+            a.lw(Reg::T1, Reg::S5, 0);
+            a.add(Reg::T0, Reg::T0, Reg::T1);
+            a.sw(Reg::S0, Reg::T0, 0);
+            a.addi(Reg::S0, Reg::S0, 4);
+            a.addi(Reg::S5, Reg::S5, 4);
+            a.addi(Reg::S2, Reg::S2, -1);
+            a.bne(Reg::S2, Reg::ZERO, top);
+        }
+        // Threshold (strict >, same compare as the macro latch) and pack.
+        a.li(Reg::S0, DMEM + plan::DMEM_RAWPART as i64);
+        for wd in 0..o {
+            a.li(Reg::T3, 0);
+            for bit in 0..32.min(c_out - wd * 32) {
+                let c = wd * 32 + bit;
+                a.lw(Reg::T0, Reg::S0, (4 * c) as i32);
+                a.lw(Reg::T1, Reg::S4, (4 * c) as i32);
+                a.slt(Reg::T1, Reg::T1, Reg::T0);
+                if bit > 0 {
+                    a.slli(Reg::T1, Reg::T1, bit as i32);
+                }
+                a.or(Reg::T3, Reg::T3, Reg::T1);
+            }
+            a.sw(Reg::S1, Reg::T3, (4 * wd) as i32);
+        }
+        a.addi(Reg::S1, Reg::S1, (4 * o) as i32);
+        // Shift in row t+2 (per macro, its slice).
+        if t + 2 < t_len {
+            for &(m, c0, c1) in &groups {
+                let wa = c0 / 32;
+                let sl = (c1 - c0) / 32;
+                if multi {
+                    emit_sel(a, m as i64);
+                }
+                for j in 0..sl {
+                    a.cim(CimInstr::conv(Reg::A0, (wa + j) as u16, Reg::A2, 0, 7, true));
+                }
+            }
+            a.addi(Reg::A0, Reg::A0, (4 * s) as i32);
+        } else if t + 2 == t_len {
+            for &(m, c0, c1) in &groups {
+                let sl = (c1 - c0) / 32;
+                if multi {
+                    emit_sel(a, m as i64);
+                }
+                for j in 0..sl {
+                    a.cim(CimInstr::conv(Reg::A1, j as u16, Reg::A2, 0, 7, true));
+                }
+            }
+        }
+    }
+
+    // Host OR pooling PREPOOL -> out buffer.
+    if lp.pooled {
+        a.li(Reg::S0, FM + plan::FM_PREPOOL as i64);
+        a.li(Reg::S1, FM + p.out_buf(i) as i64);
+        a.li(Reg::S2, lp.t_out as i64);
+        let top = a.here_label();
+        for w in 0..o {
+            a.lw(Reg::T0, Reg::S0, (4 * w) as i32);
+            a.lw(Reg::T1, Reg::S0, (4 * (o + w)) as i32);
+            a.or(Reg::T0, Reg::T0, Reg::T1);
+            a.sw(Reg::S1, Reg::T0, (4 * w) as i32);
+        }
+        a.addi(Reg::S0, Reg::S0, (8 * o) as i32);
+        a.addi(Reg::S1, Reg::S1, (4 * o) as i32);
+        a.addi(Reg::S2, Reg::S2, -1);
+        a.bne(Reg::S2, Reg::ZERO, top);
+    }
+
+    // Baseline FM round trip (no layer fusion), as in the classic image.
+    if !opt.layer_fusion && i + 1 < p.layers.len() {
+        let out = p.out_buf(i) as i64;
+        let bytes = lp.out_bytes() as i64;
+        emit_udma_start(a, FM + out, layout::DRAM_BASE as i64 + plan::DRAM_FM_SPILL as i64, bytes);
+        emit_udma_wait(a);
+        emit_udma_start(a, layout::DRAM_BASE as i64 + plan::DRAM_FM_SPILL as i64, FM + out, bytes);
+        emit_udma_wait(a);
+    }
+    emit_phase(a, Phase::conv_done(i));
+}
+
+/// Final layer under input-axis sharding: per-macro raw partials of the
+/// `n_classes` columns merge into the GAP dump row.
+fn emit_input_final_layer(a: &mut Asm, p: &KwsPlan, shards: &ShardPlan, model: &KwsModel) {
+    let i = p.layers.len() - 1;
+    let lp = &p.layers[i];
+    let s = lp.s_words;
+    let t_len = lp.t_in;
+    let n = model.n_classes;
+    let multi = shards.n_macros > 1;
+    let groups = shards.layers[i].non_empty();
+    let k = lp.window_words / s;
+
+    for &(m, c0, c1) in &groups {
+        let sl = (c1 - c0) / 32;
+        if multi {
+            emit_sel(a, m as i64);
+        }
+        let cfg = CimConfig {
+            mode: Mode::X,
+            pool_or: false,
+            window_words: (k * sl) as u8,
+            row_base: 0,
+            col_base: 0,
+        };
+        a.li(Reg::T0, cfg.to_bits() as i64);
+        mmio_sw(a, Reg::T0, layout::MMIO_CIM_CFG);
+    }
+
+    a.li(Reg::A0, FM + p.in_buf(i) as i64);
+    a.li(Reg::A1, FM + plan::FM_ZERO as i64);
+    a.li(Reg::A2, FM + plan::FM_SCRATCH as i64);
+    a.li(Reg::S3, weight_map::RAW_BASE as i64);
+    a.li(Reg::S1, DMEM + plan::DMEM_RAWDUMP as i64); // walking dump row ptr
+
+    for &(m, c0, c1) in &groups {
+        let wa = c0 / 32;
+        let sl = (c1 - c0) / 32;
+        if multi {
+            emit_sel(a, m as i64);
+        }
+        for j in 0..sl {
+            a.cim(CimInstr::conv(Reg::A1, j as u16, Reg::A2, 0, 7, true));
+        }
+        for r in 0..2 {
+            for j in 0..sl {
+                a.cim(CimInstr::conv(Reg::A0, (r * s + wa + j) as u16, Reg::A2, 0, 7, true));
+            }
+        }
+    }
+    a.addi(Reg::A0, Reg::A0, (8 * s) as i32);
+
+    for t in 0..t_len {
+        for (gi, &(m, ..)) in groups.iter().enumerate() {
+            if multi {
+                emit_sel(a, m as i64);
+            }
+            a.cim(CimInstr::conv(Reg::A0, 0, Reg::A2, 0, 0, false));
+            a.li(Reg::A3, DMEM + plan::DMEM_RAWPART as i64);
+            a.mv(Reg::A1, Reg::S3);
+            for c in 0..n {
+                a.cim(CimInstr::read(Reg::A1, c as u16, Reg::A3, (gi * n + c) as u16));
+            }
+            a.li(Reg::A1, FM + plan::FM_ZERO as i64);
+        }
+        // Merge the per-macro class partials into the dump row.
+        a.li(Reg::A3, DMEM + plan::DMEM_RAWPART as i64);
+        for c in 0..n {
+            a.lw(Reg::T0, Reg::A3, (4 * c) as i32);
+            for gi in 1..groups.len() {
+                a.lw(Reg::T1, Reg::A3, (4 * (gi * n + c)) as i32);
+                a.add(Reg::T0, Reg::T0, Reg::T1);
+            }
+            a.sw(Reg::S1, Reg::T0, (4 * c) as i32);
+        }
+        a.addi(Reg::S1, Reg::S1, (4 * n) as i32);
+        if t + 2 < t_len {
+            for &(m, c0, c1) in &groups {
+                let wa = c0 / 32;
+                let sl = (c1 - c0) / 32;
+                if multi {
+                    emit_sel(a, m as i64);
+                }
+                for j in 0..sl {
+                    a.cim(CimInstr::conv(Reg::A0, (wa + j) as u16, Reg::A2, 0, 7, true));
+                }
+            }
+            a.addi(Reg::A0, Reg::A0, (4 * s) as i32);
+        } else if t + 2 == t_len {
+            for &(m, c0, c1) in &groups {
+                let sl = (c1 - c0) / 32;
+                if multi {
+                    emit_sel(a, m as i64);
+                }
+                for j in 0..sl {
+                    a.cim(CimInstr::conv(Reg::A1, j as u16, Reg::A2, 0, 7, true));
+                }
+            }
+        }
+    }
+
+    // GAP accumulate (identical to the classic epilogue).
+    a.li(Reg::S0, DMEM + plan::DMEM_RAWDUMP as i64);
+    a.li(Reg::S1, DMEM + plan::DMEM_RESULT as i64);
+    for c in 0..n {
+        a.sw(Reg::S1, Reg::ZERO, (c * 4) as i32);
+    }
+    a.li(Reg::S2, t_len as i64);
+    let gap_top = a.here_label();
+    for c in 0..n {
+        a.lw(Reg::T0, Reg::S1, (c * 4) as i32);
+        a.lw(Reg::T1, Reg::S0, (c * 4) as i32);
+        a.add(Reg::T0, Reg::T0, Reg::T1);
+        a.sw(Reg::S1, Reg::T0, (c * 4) as i32);
+    }
+    a.addi(Reg::S0, Reg::S0, (n * 4) as i32);
+    a.addi(Reg::S2, Reg::S2, -1);
+    a.bne(Reg::S2, Reg::ZERO, gap_top);
+    emit_phase(a, Phase::conv_done(i));
+}
+
+/// Build a program sharded on the *input-channel* axis
+/// (`ShardPlan::input_word_aligned`): every macro holds all output
+/// columns of a disjoint input-word slice of each layer and fires over a
+/// proportionally shrunk window; the core merges raw partial sums
+/// exactly. This is the fallback when a fused group's full window exceeds
+/// one macro's wordlines. Thresholding/pooling move to the core, so
+/// `conv_pool_pipeline` and `weight_fusion` are no-ops here; `fused` is
+/// rejected (tensor-level residency for sliced windows lives in `fsim`).
+pub fn build_kws_program_input_sharded(
+    model: &KwsModel,
+    opt: OptLevel,
+    n_macros: usize,
+) -> Result<Program> {
+    anyhow::ensure!(!opt.fused, "input-axis sharding: resident fusion not supported on the cycle engine");
+    let p = KwsPlan::new(model)?;
+    let shards = ShardPlan::input_word_aligned(&p, n_macros.max(1))?;
+    // Boot without the weight-fusion descriptor chain: the per-layer
+    // threshold DMA below would contend with boot-enqueued descriptors.
+    let serial = OptLevel { weight_fusion: false, ..opt };
+    let mut a = Asm::new();
+    emit_boot(&mut a, &p, &shards, serial);
+    emit_preprocess(&mut a, model);
+    for i in 0..p.layers.len() {
+        emit_input_weight_phase(&mut a, &p, &shards, i);
+        if p.layers[i].binarized {
+            emit_input_conv_layer(&mut a, &p, &shards, i, opt);
+        } else {
+            emit_input_final_layer(&mut a, &p, &shards, model);
+        }
+    }
+    emit_epilogue(&mut a);
+
+    let (thr_words, flip_words) = dmem_tables(model);
     let final_t = p.layers.last().unwrap().t_in;
     Ok(Program {
         imem: a.assemble()?,
+        entry: 0,
         dram: p.build_dram_weights(model),
         dmem: vec![(plan::DMEM_THR, thr_words), (plan::DMEM_FLIP, flip_words)],
         result_addr: plan::DMEM_RESULT,
@@ -636,6 +1259,45 @@ mod tests {
                 decode(*w).unwrap_or_else(|e| panic!("n={n} word {i}: {e}"));
             }
         }
+    }
+
+    #[test]
+    fn fused_build_has_setup_and_steady_sections() {
+        let m = fake_model();
+        for n in 1..=4 {
+            let prog = build_kws_program_sharded(&m, OptLevel::FUSED, n).unwrap();
+            // Setup section at PC 0, per-inference section at entry.
+            assert!(prog.entry > 0 && prog.entry < prog.imem.len(), "n={n}");
+            for (i, w) in prog.imem.iter().enumerate() {
+                decode(*w).unwrap_or_else(|e| panic!("n={n} word {i}: {e}"));
+            }
+            // Steady state carries no weight-stream DMA: the per-inference
+            // section is much smaller than a classic FULL image.
+            let full = build_kws_program_sharded(&m, OptLevel::FULL, n).unwrap();
+            assert!(prog.imem.len() - prog.entry < full.imem.len(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_requires_the_full_ladder() {
+        let m = fake_model();
+        let bad = OptLevel { fused: true, ..OptLevel::BASELINE };
+        assert!(build_kws_program(&m, bad).is_err());
+    }
+
+    #[test]
+    fn input_sharded_builds_and_decodes() {
+        let m = fake_model();
+        for n in 1..=4 {
+            let prog = build_kws_program_input_sharded(&m, OptLevel::FULL, n).unwrap();
+            assert_eq!(prog.shards.axis, crate::dataflow::ShardAxis::Input);
+            assert_eq!(prog.entry, 0);
+            assert!(prog.imem.len() * 4 <= layout::IMEM_SIZE as usize, "n={n}");
+            for (i, w) in prog.imem.iter().enumerate() {
+                decode(*w).unwrap_or_else(|e| panic!("n={n} word {i}: {e}"));
+            }
+        }
+        assert!(build_kws_program_input_sharded(&m, OptLevel::FUSED, 2).is_err());
     }
 
     #[test]

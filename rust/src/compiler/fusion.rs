@@ -1,0 +1,190 @@
+//! Multi-layer residency planning for fused programs (`OptLevel::FUSED`).
+//!
+//! The X-mode macro has 32 wordline blocks (32 × 32 = 1024 wordlines).
+//! The classic program gives every layer the whole array at `row_base 0`
+//! and re-bursts that layer's sign planes each inference. Fusion instead
+//! packs as many consecutive layers' sign planes as fit *co-resident* at
+//! disjoint wordline rows, bursts them once at program setup, and only
+//! streams the layers that did not fit. Streamed layers share the row
+//! region above the resident shelf ([`FusionPlan::stream_base`]), so a
+//! streamed burst can never clobber a resident layer.
+//!
+//! Placement is purely row-axis: every layer (resident or streamed)
+//! occupies sense-amp columns `0..c_out` of its own row rectangle, so the
+//! per-column threshold registers are shared — binarized layers re-burst
+//! thresholds per inference either way (cheap: `c_out` words vs the
+//! `c_out * window_words` sign words the residency saves).
+//!
+//! The packing objective is DRAM-traffic/burst-cycle savings: residents
+//! are chosen greedily by descending `sign_words` (ties to the earlier
+//! layer), subject to `resident_rows + max(streamed window_words) <= 32`
+//! — a fixpoint, since which layers stream determines the shelf budget.
+
+use crate::cim::Mode;
+use crate::dataflow::plan::KwsPlan;
+
+/// Row-axis placement of every layer of a fused program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusionPlan {
+    /// Layer i's sign planes stay in the macro across inferences.
+    pub resident: Vec<bool>,
+    /// First wordline block (x32) of layer i's rectangle. Residents get
+    /// disjoint rows packed from 0 in layer order; all streamed layers
+    /// share [`Self::stream_base`].
+    pub row_base: Vec<usize>,
+    /// First row block above the resident shelf (= total resident rows).
+    pub stream_base: usize,
+}
+
+impl FusionPlan {
+    /// Plan residency for a single whole-width macro.
+    pub fn new(p: &KwsPlan) -> FusionPlan {
+        let ww: Vec<usize> = p.layers.iter().map(|l| l.window_words).collect();
+        let sw: Vec<usize> = p.layers.iter().map(|l| l.sign_words).collect();
+        Self::for_window_words(&ww, &sw)
+    }
+
+    /// Plan residency when each macro holds a `1/n` input-channel slice
+    /// of every layer (`ShardPlan::input_word_aligned`): the per-macro
+    /// window shrinks to `kernel * ceil(s_words/n)` row blocks, so more
+    /// layers fit resident as the bank grows — the fallback path for
+    /// fused groups wider than one macro's wordlines.
+    pub fn for_slices(p: &KwsPlan, n: usize) -> FusionPlan {
+        let ww: Vec<usize> = p
+            .layers
+            .iter()
+            .map(|l| {
+                let k = l.window_words / l.s_words.max(1);
+                k * l.s_words.div_ceil(n.max(1))
+            })
+            .collect();
+        let sw: Vec<usize> =
+            p.layers.iter().map(|l| l.c_out * l.window_words.div_ceil(n.max(1))).collect();
+        Self::for_window_words(&ww, &sw)
+    }
+
+    fn for_window_words(ww: &[usize], sign_words: &[usize]) -> FusionPlan {
+        let n = ww.len();
+        let cap = Mode::X.col_words(); // 32 row blocks
+        let mut resident = vec![true; n];
+        // Fixpoint: streamed layers set the shelf budget, the budget sets
+        // who streams. Monotone in practice; capped at 2n rounds.
+        for _ in 0..2 * n.max(1) {
+            let streamed_ww =
+                (0..n).filter(|&i| !resident[i]).map(|i| ww[i]).max().unwrap_or(0);
+            let budget = cap.saturating_sub(streamed_ww);
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by_key(|&i| (std::cmp::Reverse(sign_words[i]), i));
+            let mut next = vec![false; n];
+            let mut used = 0usize;
+            for &i in &order {
+                if used + ww[i] <= budget {
+                    next[i] = true;
+                    used += ww[i];
+                }
+            }
+            if next == resident {
+                break;
+            }
+            resident = next;
+        }
+        let mut row_base = vec![0usize; n];
+        let mut acc = 0usize;
+        for i in 0..n {
+            if resident[i] {
+                row_base[i] = acc;
+                acc += ww[i];
+            }
+        }
+        for i in 0..n {
+            if !resident[i] {
+                row_base[i] = acc;
+            }
+        }
+        FusionPlan { resident, row_base, stream_base: acc }
+    }
+
+    pub fn n_resident(&self) -> usize {
+        self.resident.iter().filter(|&&r| r).count()
+    }
+
+    /// Sign words re-burst per inference under this plan (streamed layers
+    /// only) — the quantity residency minimizes.
+    pub fn streamed_sign_words(&self, p: &KwsPlan) -> usize {
+        p.layers
+            .iter()
+            .zip(&self.resident)
+            .filter(|(_, &r)| !r)
+            .map(|(l, _)| l.sign_words)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::KwsModel;
+
+    fn plan_of(m: &KwsModel) -> (KwsPlan, FusionPlan) {
+        let p = KwsPlan::new(m).unwrap();
+        let f = FusionPlan::new(&p);
+        (p, f)
+    }
+
+    #[test]
+    fn placement_is_disjoint_and_within_budget() {
+        for m in [KwsModel::synthetic(3), KwsModel::synthetic_wide(1)] {
+            let (p, f) = plan_of(&m);
+            assert_eq!(f.resident.len(), p.layers.len());
+            let mut shelf = 0usize;
+            for (i, l) in p.layers.iter().enumerate() {
+                if f.resident[i] {
+                    assert_eq!(f.row_base[i], shelf, "residents pack in layer order");
+                    shelf += l.window_words;
+                } else {
+                    assert_eq!(f.row_base[i], f.stream_base);
+                }
+            }
+            assert_eq!(f.stream_base, shelf);
+            let max_streamed = p
+                .layers
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !f.resident[*i])
+                .map(|(_, l)| l.window_words)
+                .max()
+                .unwrap_or(0);
+            assert!(shelf + max_streamed <= Mode::X.col_words());
+        }
+    }
+
+    #[test]
+    fn small_models_go_fully_resident() {
+        // synthetic(3): window_words sum well under 32 -> everything
+        // resident, zero per-inference sign traffic.
+        let (p, f) = plan_of(&KwsModel::synthetic(3));
+        assert!(f.resident.iter().all(|&r| r));
+        assert_eq!(f.streamed_sign_words(&p), 0);
+    }
+
+    #[test]
+    fn wide_models_stream_under_pressure() {
+        // synthetic_wide: window_words [6, 24, 24, 18] cannot co-reside;
+        // the fixpoint settles on a partial shelf that still leaves room
+        // for the widest streamed window.
+        let (p, f) = plan_of(&KwsModel::synthetic_wide(1));
+        assert!(f.n_resident() >= 1, "some residency must survive");
+        assert!(f.n_resident() < p.layers.len(), "not everything fits");
+        assert!(f.streamed_sign_words(&p) < p.layers.iter().map(|l| l.sign_words).sum::<usize>());
+    }
+
+    #[test]
+    fn slicing_grows_residency() {
+        let m = KwsModel::synthetic_wide(2);
+        let p = KwsPlan::new(&m).unwrap();
+        let f1 = FusionPlan::for_slices(&p, 1);
+        let f4 = FusionPlan::for_slices(&p, 4);
+        assert_eq!(f1, FusionPlan::new(&p));
+        assert!(f4.n_resident() > f1.n_resident(), "slicing frees wordline budget");
+    }
+}

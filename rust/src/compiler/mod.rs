@@ -13,7 +13,9 @@
 
 pub mod asm;
 pub mod codegen;
+pub mod fusion;
 pub mod program;
 
-pub use codegen::{build_kws_program, build_kws_program_sharded};
+pub use codegen::{build_kws_program, build_kws_program_input_sharded, build_kws_program_sharded};
+pub use fusion::FusionPlan;
 pub use program::{Phase, Program};

@@ -15,6 +15,13 @@ pub enum Phase {
     WeightBase = 10,
     /// Conv phase of layer i done: 30 + i.
     ConvBase = 30,
+    /// Fused conv/pool pipeline of layer i entered its first pooled
+    /// drain: 40 + i. Emitted only by fused programs; marks the start of
+    /// the region where pooling drains overlap the next fires (the
+    /// Perfetto exporter renders `[40+i, 30+i)` as a concurrent
+    /// pool-drain slice). Cycle attribution folds it into the conv
+    /// bucket (`PhaseBreakdown::from_markers` buckets 30..=49 as conv).
+    PoolDrainBase = 40,
 }
 
 impl Phase {
@@ -25,6 +32,10 @@ impl Phase {
     pub fn conv_done(layer: usize) -> u32 {
         Phase::ConvBase as u32 + layer as u32
     }
+
+    pub fn pool_drain(layer: usize) -> u32 {
+        Phase::PoolDrainBase as u32 + layer as u32
+    }
 }
 
 /// A complete bootable image.
@@ -32,6 +43,14 @@ impl Phase {
 pub struct Program {
     /// Encoded instructions, loaded at IMEM 0 (boot vector).
     pub imem: Vec<u32>,
+    /// Per-inference entry point (instruction index). Classic programs
+    /// are one self-contained boot-and-run image (`entry == 0`). Fused
+    /// programs (`opt.fused`) put a one-time *setup* section at PC 0 —
+    /// mask-plane init, all weight DMA, resident layers' sign bursts —
+    /// which the SoC loader executes once at construction; every
+    /// [`crate::sim::Soc::run`] then starts here, in the steady-state
+    /// per-inference section.
+    pub entry: usize,
     /// DRAM staging: (byte offset, payload) chunks (weights; audio is
     /// staged per-inference by the SoC loader).
     pub dram: Vec<(u32, Vec<u8>)>,

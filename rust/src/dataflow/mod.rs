@@ -10,4 +10,4 @@ pub mod plan;
 pub mod shard;
 
 pub use plan::{KwsPlan, LayerPlan};
-pub use shard::{LayerShards, ShardPlan};
+pub use shard::{LayerShards, ShardAxis, ShardPlan};

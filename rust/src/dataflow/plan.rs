@@ -39,6 +39,16 @@ pub const DMEM_FLIP: u32 = 0x1_0200;
 pub const DMEM_RESULT: u32 = 0x1_0300;
 /// Raw-sum dump area for the final layer (t_final * n_classes words).
 pub const DMEM_RAWDUMP: u32 = 0x1_0400;
+/// Per-macro raw partial-sum staging for input-axis-sharded programs:
+/// `n_macros` rows of `c_out` i32 words for the current position (macro
+/// `m`'s partials at word offset `m * c_out`; ≤ 4 macros × 256 channels
+/// = 4 KiB). Merged by the RISC-V core before thresholding.
+pub const DMEM_RAWPART: u32 = 0x1_2000;
+/// Per-layer threshold table for input-axis-sharded programs (DMA'd
+/// straight from the DRAM weight stream each weight phase; ≤ 256 words).
+/// Input-axis macros hold only raw partial weights, so the SA threshold
+/// registers are unused and the compare runs on the core.
+pub const DMEM_SLICE_TH: u32 = 0x1_3000;
 
 // --- DRAM staging --------------------------------------------------------------
 pub const DRAM_AUDIO: u32 = 0x0000_0000;

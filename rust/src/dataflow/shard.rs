@@ -15,6 +15,12 @@
 //!   split. Used by the cycle engine: each macro's latch words drain
 //!   straight into the packed FM row at a word offset, so the row-wise
 //!   drain loop needs no cross-word shifts.
+//! * [`ShardPlan::input_word_aligned`] — input-channel-axis split
+//!   ([`ShardAxis::Input`]): every macro holds all output channels of a
+//!   disjoint input slice and emits partial raw sums, merged by addition
+//!   before thresholding. The fallback for windows wider than one
+//!   macro's wordlines (`compiler::build_kws_program_input_sharded` /
+//!   `DecodedProgram::infer_input_sharded`).
 //!
 //! Both splits are value-preserving by construction: a channel's sums and
 //! thresholds do not depend on which macro computes it, so sharded logits
@@ -25,8 +31,28 @@ use anyhow::{ensure, Result};
 
 use super::plan::KwsPlan;
 
-/// Per-layer output-channel ranges, one `[start, end)` per macro (empty
+/// Which channel axis a plan splits layers along.
+///
+/// * `Output` — each macro owns a disjoint output-channel range (the
+///   classic split: same input window everywhere, binarized partial rows
+///   concatenate).
+/// * `Input` — each macro owns a disjoint *input*-channel slice of every
+///   layer and computes partial raw sums over **all** output channels;
+///   partials add exactly (`sum = 2*pop(win & plane) - pop(win)` is
+///   additive over disjoint input masks), then thresholding/pooling runs
+///   on the merged sums. This is the fallback for layers/groups whose
+///   window is wider than one macro's wordlines (`window_words > 32`
+///   after fusion packs the array tighter — see `compiler::fusion`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardAxis {
+    Output,
+    Input,
+}
+
+/// Per-layer channel ranges, one `[start, end)` per macro (empty
 /// ranges allowed: a 12-channel classifier on 4 macros leaves 3 idle).
+/// For [`ShardAxis::Input`] plans the ranges (and `c_out`, which then
+/// holds the layer's **input**-channel total) are along the input axis.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerShards {
     pub index: usize,
@@ -63,6 +89,9 @@ impl LayerShards {
 pub struct ShardPlan {
     pub n_macros: usize,
     pub layers: Vec<LayerShards>,
+    /// Axis the ranges split along ([`ShardAxis::Output`] for every
+    /// classic constructor).
+    pub axis: ShardAxis,
 }
 
 impl ShardPlan {
@@ -79,6 +108,7 @@ impl ShardPlan {
                     ranges: vec![(0, lp.c_out)],
                 })
                 .collect(),
+            axis: ShardAxis::Output,
         }
     }
 
@@ -102,7 +132,7 @@ impl ShardPlan {
                 LayerShards { index: lp.index, c_out: lp.c_out, ranges }
             })
             .collect();
-        let sp = ShardPlan { n_macros: n, layers };
+        let sp = ShardPlan { n_macros: n, layers, axis: ShardAxis::Output };
         sp.validate()?;
         Ok(sp)
     }
@@ -131,7 +161,39 @@ impl ShardPlan {
                 LayerShards { index: lp.index, c_out: lp.c_out, ranges }
             })
             .collect();
-        let sp = ShardPlan { n_macros: n, layers };
+        let sp = ShardPlan { n_macros: n, layers, axis: ShardAxis::Output };
+        sp.validate()?;
+        Ok(sp)
+    }
+
+    /// Input-channel-axis split, 32-channel (feature-word) granular:
+    /// every macro owns the same `[start, end)` input slice of each
+    /// layer (`c_in` is a word multiple by plan construction, so all
+    /// slices are word-aligned). Each macro computes partial raw sums
+    /// over **all** output channels of its slice; the engines merge by
+    /// integer addition before thresholding. `LayerShards::c_out` holds
+    /// the layer's input-channel total under this axis.
+    pub fn input_word_aligned(plan: &KwsPlan, n: usize) -> Result<Self> {
+        ensure!(n >= 1, "shard count must be >= 1");
+        let layers = plan
+            .layers
+            .iter()
+            .map(|lp| {
+                let c_in = lp.s_words * 32;
+                let words = lp.s_words;
+                let base = words / n;
+                let rem = words % n;
+                let mut ranges = Vec::with_capacity(n);
+                let mut at_word = 0;
+                for m in 0..n {
+                    let w = base + usize::from(m < rem);
+                    ranges.push((at_word * 32, (at_word + w) * 32));
+                    at_word += w;
+                }
+                LayerShards { index: lp.index, c_out: c_in, ranges }
+            })
+            .collect();
+        let sp = ShardPlan { n_macros: n, layers, axis: ShardAxis::Input };
         sp.validate()?;
         Ok(sp)
     }
@@ -241,6 +303,25 @@ mod tests {
         // 12 channels on 4 macros: macro 0 owns all, 1..3 idle.
         assert_eq!(sp.layers[2].ranges, vec![(0, 12), (12, 12), (12, 12), (12, 12)]);
         assert_eq!(sp.layers[2].non_empty(), vec![(0, 0, 12)]);
+    }
+
+    #[test]
+    fn input_split_tiles_input_channels() {
+        let p = plan();
+        for n in 1..=4 {
+            let sp = ShardPlan::input_word_aligned(&p, n).unwrap();
+            sp.validate().unwrap();
+            assert_eq!(sp.axis, ShardAxis::Input);
+            assert!(sp.is_word_aligned());
+            for (ls, lp) in sp.layers.iter().zip(&p.layers) {
+                assert_eq!(ls.c_out, lp.s_words * 32, "axis total is c_in");
+                let covered: usize = (0..n).map(|m| ls.len(m)).sum();
+                assert_eq!(covered, lp.s_words * 32);
+            }
+        }
+        // 64 input channels = 2 words over 4 macros: 2 own a word each.
+        let sp = ShardPlan::input_word_aligned(&p, 4).unwrap();
+        assert_eq!(sp.layers[0].non_empty(), vec![(0, 0, 32), (1, 32, 64)]);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::compiler::Program;
 use crate::dataflow::plan;
-use crate::dataflow::shard::ShardPlan;
+use crate::dataflow::shard::{ShardAxis, ShardPlan};
 use crate::model::kernel::{self, LaneLayer};
 use crate::model::kws::LayerSpec;
 use crate::model::reference::{self, BitMap, PackedLayer};
@@ -86,6 +86,24 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
         .copied()
         .or_else(|| p.downcast_ref::<String>().map(String::as_str))
         .unwrap_or("non-string panic payload")
+}
+
+/// `x` with only input channels `[c0, c1)` retained (both bounds are
+/// 32-multiples by input-plan construction, so this is a word copy).
+/// The map keeps its full width: `conv_sums_packed_into` windows then
+/// align with the full sign planes, and the zeroed words contribute
+/// nothing to `pop(win)` or `pop(win & plane)` — exactly the partial a
+/// macro holding that input slice computes.
+fn mask_to_input_slice(x: &BitMap, c0: usize, c1: usize) -> BitMap {
+    debug_assert!(c0 % 32 == 0 && c1 % 32 == 0 && c0 <= c1 && c1 <= x.c);
+    let wpr = x.wpr();
+    let (w0, w1) = (c0 / 32, c1 / 32);
+    let mut m = BitMap::zero(x.t, x.c);
+    for t in 0..x.t {
+        let row = t * wpr;
+        m.words[row + w0..row + w1].copy_from_slice(&x.words[row + w0..row + w1]);
+    }
+    m
 }
 
 fn le_u32(bytes: &[u8], word: usize) -> u32 {
@@ -330,6 +348,11 @@ impl DecodedProgram {
     /// copy). Built once per (program, plan); reused across inferences.
     pub fn shard(&self, plan: &ShardPlan) -> Result<ShardedProgram> {
         plan.validate()?;
+        ensure!(
+            plan.axis == ShardAxis::Output,
+            "channel-slicing shard execution needs an output-axis plan \
+             (input-axis plans run through infer_input_sharded)"
+        );
         ensure!(
             plan.layers.len() == self.layers.len(),
             "shard plan has {} layers, program has {}",
@@ -593,6 +616,119 @@ impl DecodedProgram {
         Ok((logits, predicted))
     }
 
+    /// Input-channel-axis sharded inference ([`ShardAxis::Input`] plans):
+    /// every macro computes raw partial sums for **all** output channels
+    /// over its input-channel slice; partials merge by integer addition
+    /// (the XNOR-popcount sum `2*pop(win & plane) - pop(win)` is additive
+    /// over disjoint input masks), then the merged sums run the same
+    /// strict-`>` threshold / OR-pool / i64 GAP arithmetic as the
+    /// unsharded path — bit-identical logits by construction. The
+    /// tensor-level twin of the cycle engine's
+    /// `compiler::build_kws_program_input_sharded` schedule, and the
+    /// fallback execution form for fused groups whose window exceeds one
+    /// macro's wordlines.
+    pub fn infer_input_sharded(
+        &self,
+        audio: &[f32],
+        plan: &ShardPlan,
+    ) -> Result<(Vec<f32>, usize)> {
+        self.validate_input_plan(plan)?;
+        let n_layers = self.layers.len();
+        let mut x = self.preprocess(audio);
+        for (li, l) in self.layers.iter().enumerate() {
+            let t_in = x.t;
+            let mut window = vec![0u64; l.plane_words];
+            let mut sums = vec![0i32; l.c_out];
+            // Merged raw sums, one row per position: each macro's masked
+            // window sees only its slice's bits, so its sums are exact
+            // partials and the adds reconstruct the unsharded values.
+            let mut acc = vec![0i32; t_in * l.c_out];
+            for (_, c0, c1) in plan.layers[li].non_empty() {
+                let part = mask_to_input_slice(&x, c0, c1);
+                for t in 0..t_in {
+                    reference::conv_sums_packed_into(&part, l, t, &mut window, &mut sums);
+                    for (a, &s) in acc[t * l.c_out..(t + 1) * l.c_out].iter_mut().zip(&sums) {
+                        *a += s;
+                    }
+                }
+            }
+            if li == n_layers - 1 {
+                // Raw final layer: GAP over merged sums, f32 division last
+                // (same order as `reference::final_layer_gap_packed`).
+                let mut gap = vec![0i64; l.c_out];
+                for t in 0..t_in {
+                    for (g, &s) in gap.iter_mut().zip(&acc[t * l.c_out..(t + 1) * l.c_out]) {
+                        *g += s as i64;
+                    }
+                }
+                let logits: Vec<f32> = gap.iter().map(|&g| g as f32 / t_in as f32).collect();
+                let predicted = reference::argmax(&logits);
+                return Ok((logits, predicted));
+            }
+            let t_out = if l.pooled { t_in / 2 } else { t_in };
+            let mut out = BitMap::zero(t_out, l.c_out);
+            for t in 0..t_in {
+                let ot = if l.pooled { t / 2 } else { t };
+                if ot >= t_out {
+                    break; // odd tail dropped by pooling
+                }
+                let row = &acc[t * l.c_out..(t + 1) * l.c_out];
+                for (co, (&s, &th)) in row.iter().zip(&l.thresholds).enumerate() {
+                    if s > th {
+                        out.set(ot, co); // pooled max == OR of the pair
+                    }
+                }
+            }
+            x = out;
+        }
+        unreachable!("the final layer returns above")
+    }
+
+    /// Check an input-axis plan against the decoded geometry (shared by
+    /// [`Self::infer_input_sharded`] and `FastSim` configuration, so a
+    /// mismatched plan fails at setup, not mid-request).
+    pub fn validate_input_plan(&self, plan: &ShardPlan) -> Result<()> {
+        plan.validate()?;
+        ensure!(
+            plan.axis == ShardAxis::Input,
+            "input-sharded execution needs an input-axis plan"
+        );
+        ensure!(
+            plan.layers.len() == self.layers.len(),
+            "shard plan has {} layers, program has {}",
+            plan.layers.len(),
+            self.layers.len()
+        );
+        for (ls, l) in plan.layers.iter().zip(&self.layers) {
+            ensure!(
+                ls.c_out == l.c_in,
+                "layer {}: input plan covers {} channels, layer takes {}",
+                ls.index,
+                ls.c_out,
+                l.c_in
+            );
+        }
+        Ok(())
+    }
+
+    /// Fires each macro performs per inference under an input-axis plan:
+    /// one per row position of every layer whose input slice is non-empty
+    /// for that macro — mirroring the cycle engine's per-position fire
+    /// interleave (the input-axis twin of `ShardedProgram::fires_per_macro`).
+    pub fn input_fires_per_macro(&self, plan: &ShardPlan) -> Vec<u64> {
+        let t_ins = self.t_ins();
+        (0..plan.n_macros)
+            .map(|m| {
+                plan.layers
+                    .iter()
+                    .zip(&t_ins)
+                    .filter(|(ls, _)| !ls.is_empty(m))
+                    .map(|(_, &t_in)| t_in as u64)
+                    .sum()
+            })
+            .collect()
+    }
+
     /// Unpack every layer to the scalar tap-major/channel-minor form
     /// (done once; pair with [`Self::infer_scalar`]).
     pub fn to_layer_specs(&self) -> Vec<LayerSpec> {
@@ -778,6 +914,53 @@ mod tests {
             let got = d.infer_sharded_batch(&refs, &sp);
             assert_eq!(got, want, "sharded batch n={n}");
         }
+    }
+
+    #[test]
+    fn input_sharded_inference_bit_identical() {
+        use crate::dataflow::shard::ShardPlan;
+        for (name, m) in [
+            ("narrow", KwsModel::synthetic(17)),
+            ("wide", KwsModel::synthetic_wide(17)),
+        ] {
+            let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+            let d = DecodedProgram::decode(&prog).unwrap();
+            let audio = dataset::synth_utterance(7, 29, m.audio_len, 0.37);
+            let (want, wp) = d.infer(&audio);
+            for n in 1..=4 {
+                let plan = ShardPlan::input_word_aligned(&prog.plan, n).unwrap();
+                let (got, gp) = d.infer_input_sharded(&audio, &plan).unwrap();
+                assert_eq!(got, want, "{name} n={n}");
+                assert_eq!(gp, wp, "{name} n={n}");
+                // Every owning macro fires once per position of every
+                // layer whose input slice it holds.
+                let fires = d.input_fires_per_macro(&plan);
+                assert_eq!(fires.len(), n);
+                assert_eq!(
+                    fires.iter().sum::<u64>(),
+                    prog.plan
+                        .layers
+                        .iter()
+                        .map(|lp| plan.layers[lp.index].non_empty().len() as u64
+                            * lp.t_in as u64)
+                        .sum::<u64>(),
+                    "{name} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_rejects_input_axis_plan() {
+        use crate::dataflow::shard::ShardPlan;
+        let prog = build_kws_program(&KwsModel::synthetic(3), OptLevel::FULL).unwrap();
+        let d = DecodedProgram::decode(&prog).unwrap();
+        let plan = ShardPlan::input_word_aligned(&prog.plan, 2).unwrap();
+        assert!(d.shard(&plan).is_err(), "output-axis slicer must reject input plans");
+        // And the input path rejects output-axis plans symmetrically.
+        let out_plan = ShardPlan::even(&prog.plan, 2).unwrap();
+        let audio = dataset::synth_utterance(1, 1, prog.plan.audio_bytes as usize / 2, 0.3);
+        assert!(d.infer_input_sharded(&audio, &out_plan).is_err());
     }
 
     #[test]

@@ -21,9 +21,9 @@ use std::collections::VecDeque;
 use crate::baselines::OptLevel;
 use crate::cim::mode::{CimConfig, Mode};
 use crate::cim::weight_map;
-use crate::compiler::Program;
+use crate::compiler::{FusionPlan, Program};
 use crate::dataflow::plan::{self, KwsPlan};
-use crate::dataflow::shard::ShardPlan;
+use crate::dataflow::shard::{ShardAxis, ShardPlan};
 use crate::energy::ActivityCounts;
 use crate::mem::dram::{Dram, DramConfig};
 use crate::mem::layout;
@@ -414,9 +414,70 @@ fn weight_phase(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: 
     w.phase(10 + i as u32);
 }
 
+/// Mirror of `emit_sign_burst` (fused: rectangle at `row_base`).
+fn sign_burst(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, i: usize, row_base: usize) {
+    let lp = &p.layers[i];
+    let aw = lp.window_words;
+    let multi = shards.n_macros > 1;
+    let groups = shards.layers[i].non_empty();
+    w.macro_group(groups.len(), |w, g| {
+        let (m, c0, c1) = groups[g];
+        let cols = c1 - c0;
+        if multi {
+            w.sel(m as i64);
+        }
+        w.li(WT + lp.wt_offset as i64 + (4 * c0 * aw) as i64);
+        w.li((weight_map::SIGN_BASE + row_base) as i64);
+        w.li(cols as i64);
+        for col in 0..cols {
+            for _ in 0..aw {
+                w.cim_w_from_wt();
+            }
+            w.alu(3);
+            w.branch(col + 1 != cols);
+        }
+    });
+}
+
+/// Mirror of `emit_fused_weight_phase`: streamed sign bursts plus the
+/// per-inference threshold re-burst — no DRAM traffic.
+fn fused_weight_phase(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, i: usize, fp: &FusionPlan) {
+    let lp = &p.layers[i];
+    let multi = shards.n_macros > 1;
+    if !fp.resident[i] {
+        sign_burst(w, p, shards, i, fp.stream_base);
+    }
+    if lp.th_words > 0 {
+        let groups = shards.layers[i].non_empty();
+        w.macro_group(groups.len(), |w, g| {
+            let (m, c0, c1) = groups[g];
+            let cols = c1 - c0;
+            if multi {
+                w.sel(m as i64);
+            }
+            w.li(WT + lp.wt_offset as i64 + (4 * (lp.sign_words + c0)) as i64);
+            w.li(weight_map::TH_BASE as i64);
+            w.li(cols as i64);
+            for j in 0..cols {
+                w.cim_w_from_wt();
+                w.alu(3);
+                w.branch(j + 1 != cols);
+            }
+        });
+    }
+    w.phase(10 + i as u32);
+}
+
 /// Mirror of `emit_conv_layer` (sharded: interleaved per-macro fires and
 /// drains; the overlapped schedule fires the macros concurrently).
-fn conv_layer(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: OptLevel) {
+fn conv_layer(
+    w: &mut Walker,
+    p: &KwsPlan,
+    shards: &ShardPlan,
+    i: usize,
+    opt: OptLevel,
+    fusion: Option<&FusionPlan>,
+) {
     let lp = &p.layers[i];
     let s = lp.s_words;
     let o = lp.o_words;
@@ -432,7 +493,7 @@ fn conv_layer(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: Op
         mode: Mode::X,
         pool_or: fused_pool,
         window_words: lp.window_words as u8,
-        row_base: 0,
+        row_base: fusion.map_or(0, |f| f.row_base[i] as u8),
         col_base: 0,
     };
     w.li(cfg.to_bits() as i64);
@@ -458,6 +519,9 @@ fn conv_layer(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: Op
     for t in 0..t_len {
         let drains = if fused_pool { t % 2 == 1 } else { true };
         if drains {
+            if t == 1 && fused_pool && fusion.is_some() {
+                w.phase(40 + i as u32); // first pooled drain (overlap start)
+            }
             w.macro_group(groups.len(), |w, g| {
                 let (m, c0, c1) = groups[g];
                 if multi {
@@ -523,7 +587,7 @@ fn conv_layer(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: Op
 }
 
 /// Mirror of `emit_final_layer` (sharded: per-macro fire + raw drains).
-fn final_layer(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, n: usize) {
+fn final_layer(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, n: usize, fusion: Option<&FusionPlan>) {
     let i = p.layers.len() - 1;
     let lp = &p.layers[i];
     let s = lp.s_words;
@@ -538,7 +602,7 @@ fn final_layer(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, n: usize) {
         mode: Mode::X,
         pool_or: false,
         window_words: lp.window_words as u8,
-        row_base: 0,
+        row_base: fusion.map_or(0, |f| f.row_base[i] as u8),
         col_base: 0,
     };
     w.li(cfg.to_bits() as i64);
@@ -625,22 +689,372 @@ pub fn estimate_overlapped(program: &Program, dram_cfg: &DramConfig) -> Estimate
     walk(program, dram_cfg, true)
 }
 
+/// Mirror of the fused per-inference section (PC `entry` onward). The
+/// one-time setup section is *not* walked: the estimate reports the
+/// steady-state inference latency, which is what the fused optimization
+/// changes (setup amortizes over the deployment lifetime).
+fn fused_inference(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, opt: OptLevel, n: usize) {
+    let fp = FusionPlan::new(p);
+    let multi = shards.n_macros > 1;
+    w.li(MMIO); // t6
+    if multi {
+        w.sel(SEL_BROADCAST);
+    }
+    w.udma_start(
+        DRAM + plan::DRAM_AUDIO as i64,
+        DMEM + plan::DMEM_AUDIO as i64,
+        p.audio_bytes as i64,
+        plan::DRAM_AUDIO,
+    );
+    w.udma_wait();
+    w.phase(1);
+    let t = p.layers[0].t_in;
+    let c = p.layers[0].s_words * 32;
+    preprocess(w, t, c);
+    for i in 0..p.layers.len() {
+        fused_weight_phase(w, p, shards, i, &fp);
+        if p.layers[i].binarized {
+            conv_layer(w, p, shards, i, opt, Some(&fp));
+        } else {
+            final_layer(w, p, shards, n, Some(&fp));
+        }
+    }
+}
+
+/// Mirror of `emit_input_weight_phase` (input-axis sharding).
+fn input_weight_phase(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, i: usize) {
+    let lp = &p.layers[i];
+    let multi = shards.n_macros > 1;
+    w.udma_start(
+        DRAM + lp.dram_offset as i64,
+        WT + lp.wt_offset as i64,
+        lp.stream_bytes() as i64,
+        lp.dram_offset,
+    );
+    w.udma_wait();
+    let s = lp.s_words;
+    let k = lp.window_words / s;
+    let groups = shards.layers[i].non_empty();
+    w.macro_group(groups.len(), |w, g| {
+        let (m, c0, c1) = groups[g];
+        let sl = (c1 - c0) / 32;
+        if multi {
+            w.sel(m as i64);
+        }
+        w.li(WT + lp.wt_offset as i64);
+        w.li(weight_map::SIGN_BASE as i64);
+        w.li(lp.c_out as i64);
+        for col in 0..lp.c_out {
+            for _ in 0..k * sl {
+                w.cim_w_from_wt();
+            }
+            w.alu(3);
+            w.branch(col + 1 != lp.c_out);
+        }
+    });
+    if lp.th_words > 0 {
+        let off = lp.dram_offset + 4 * lp.sign_words as u32;
+        w.udma_start(
+            DRAM + off as i64,
+            DMEM + plan::DMEM_SLICE_TH as i64,
+            (4 * lp.th_words) as i64,
+            off,
+        );
+        w.udma_wait();
+    }
+    w.phase(10 + i as u32);
+}
+
+/// Mirror of `emit_input_conv_layer`.
+fn input_conv_layer(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, i: usize, opt: OptLevel) {
+    let lp = &p.layers[i];
+    let s = lp.s_words;
+    let o = lp.o_words;
+    let t_len = lp.t_in;
+    let c_out = lp.c_out;
+    let multi = shards.n_macros > 1;
+    let groups = shards.layers[i].non_empty();
+    let k = lp.window_words / s;
+
+    for &(m, c0, c1) in &groups {
+        let sl = (c1 - c0) / 32;
+        if multi {
+            w.sel(m as i64);
+        }
+        let cfg = CimConfig {
+            mode: Mode::X,
+            pool_or: false,
+            window_words: (k * sl) as u8,
+            row_base: 0,
+            col_base: 0,
+        };
+        w.li(cfg.to_bits() as i64);
+        w.store();
+    }
+    w.li(FM + p.in_buf(i) as i64); // a0
+    w.li(FM + plan::FM_ZERO as i64); // a1
+    w.li(FM + plan::FM_SCRATCH as i64); // a2
+    w.li(weight_map::RAW_BASE as i64); // s3
+    w.li(DMEM + plan::DMEM_SLICE_TH as i64); // s4
+    let dst =
+        if lp.pooled { FM + plan::FM_PREPOOL as i64 } else { FM + p.out_buf(i) as i64 };
+    w.li(dst); // s1
+    w.macro_group(groups.len(), |w, g| {
+        let (m, c0, c1) = groups[g];
+        let sl = (c1 - c0) / 32;
+        if multi {
+            w.sel(m as i64);
+        }
+        for _ in 0..3 * sl {
+            w.cim_conv(true, false); // prefill: zero row + rows 0, 1
+        }
+    });
+    w.alu(1); // addi a0
+
+    for t in 0..t_len {
+        w.macro_group(groups.len(), |w, g| {
+            let (m, ..) = groups[g];
+            if multi {
+                w.sel(m as i64);
+            }
+            w.cim_conv(false, true); // fire, dummy store
+            w.li(DMEM + plan::DMEM_RAWPART as i64 + (4 * g * c_out) as i64); // a3
+            w.alu(1); // mv a1, s3
+            for c in 0..c_out {
+                if c > 0 && c % 128 == 0 {
+                    w.alu(1); // addi a3 (imm_d range)
+                }
+                w.cim_r_to_dmem();
+            }
+            w.li(FM + plan::FM_ZERO as i64); // restore a1
+        });
+        for gi in 1..groups.len() {
+            w.li(DMEM + plan::DMEM_RAWPART as i64); // s0
+            w.li(DMEM + plan::DMEM_RAWPART as i64 + (4 * gi * c_out) as i64); // s5
+            w.li(c_out as i64); // s2
+            for j in 0..c_out {
+                w.load_dmem();
+                w.load_dmem();
+                w.alu(1); // add
+                w.store_dmem();
+                w.alu(3); // addi s0, s5, s2
+                w.branch(j + 1 != c_out);
+            }
+        }
+        w.li(DMEM + plan::DMEM_RAWPART as i64); // s0
+        for wd in 0..o {
+            w.li(0); // t3
+            for bit in 0..32.min(c_out - wd * 32) {
+                w.load_dmem();
+                w.load_dmem();
+                w.alu(1); // slt
+                if bit > 0 {
+                    w.alu(1); // slli
+                }
+                w.alu(1); // or
+            }
+            w.store_fm();
+        }
+        w.alu(1); // addi s1
+        if t + 2 < t_len {
+            w.macro_group(groups.len(), |w, g| {
+                let (m, c0, c1) = groups[g];
+                let sl = (c1 - c0) / 32;
+                if multi {
+                    w.sel(m as i64);
+                }
+                for _ in 0..sl {
+                    w.cim_conv(true, false);
+                }
+            });
+            w.alu(1); // addi a0
+        } else if t + 2 == t_len {
+            w.macro_group(groups.len(), |w, g| {
+                let (m, c0, c1) = groups[g];
+                let sl = (c1 - c0) / 32;
+                if multi {
+                    w.sel(m as i64);
+                }
+                for _ in 0..sl {
+                    w.cim_conv(true, false);
+                }
+            });
+        }
+    }
+
+    if lp.pooled {
+        w.li(FM + plan::FM_PREPOOL as i64);
+        w.li(FM + p.out_buf(i) as i64);
+        w.li(lp.t_out as i64);
+        for t in 0..lp.t_out {
+            for _ in 0..o {
+                w.load_fm();
+                w.load_fm();
+                w.alu(1);
+                w.store_fm();
+            }
+            w.alu(3);
+            w.branch(t + 1 != lp.t_out);
+        }
+    }
+    if !opt.layer_fusion && i + 1 < p.layers.len() {
+        let out = p.out_buf(i) as i64;
+        let bytes = lp.out_bytes() as i64;
+        w.udma_start(FM + out, DRAM + plan::DRAM_FM_SPILL as i64, bytes, plan::DRAM_FM_SPILL);
+        w.udma_wait();
+        w.udma_start(DRAM + plan::DRAM_FM_SPILL as i64, FM + out, bytes, plan::DRAM_FM_SPILL);
+        w.udma_wait();
+    }
+    w.phase(30 + i as u32);
+}
+
+/// Mirror of `emit_input_final_layer`.
+fn input_final_layer(w: &mut Walker, p: &KwsPlan, shards: &ShardPlan, n: usize) {
+    let i = p.layers.len() - 1;
+    let lp = &p.layers[i];
+    let s = lp.s_words;
+    let t_len = lp.t_in;
+    let multi = shards.n_macros > 1;
+    let groups = shards.layers[i].non_empty();
+    let k = lp.window_words / s;
+
+    for &(m, c0, c1) in &groups {
+        let sl = (c1 - c0) / 32;
+        if multi {
+            w.sel(m as i64);
+        }
+        let cfg = CimConfig {
+            mode: Mode::X,
+            pool_or: false,
+            window_words: (k * sl) as u8,
+            row_base: 0,
+            col_base: 0,
+        };
+        w.li(cfg.to_bits() as i64);
+        w.store();
+    }
+    w.li(FM + p.in_buf(i) as i64); // a0
+    w.li(FM + plan::FM_ZERO as i64); // a1
+    w.li(FM + plan::FM_SCRATCH as i64); // a2
+    w.li(weight_map::RAW_BASE as i64); // s3
+    w.li(DMEM + plan::DMEM_RAWDUMP as i64); // s1
+    w.macro_group(groups.len(), |w, g| {
+        let (m, c0, c1) = groups[g];
+        let sl = (c1 - c0) / 32;
+        if multi {
+            w.sel(m as i64);
+        }
+        for _ in 0..3 * sl {
+            w.cim_conv(true, false);
+        }
+    });
+    w.alu(1); // addi a0
+
+    for t in 0..t_len {
+        w.macro_group(groups.len(), |w, g| {
+            let (m, ..) = groups[g];
+            if multi {
+                w.sel(m as i64);
+            }
+            w.cim_conv(false, true);
+            w.li(DMEM + plan::DMEM_RAWPART as i64); // a3
+            w.alu(1); // mv a1, s3
+            for _ in 0..n {
+                w.cim_r_to_dmem();
+            }
+            w.li(FM + plan::FM_ZERO as i64);
+        });
+        w.li(DMEM + plan::DMEM_RAWPART as i64); // a3 reload
+        for _ in 0..n {
+            w.load_dmem();
+            for _ in 1..groups.len() {
+                w.load_dmem();
+                w.alu(1);
+            }
+            w.store_dmem();
+        }
+        w.alu(1); // addi s1
+        if t + 2 < t_len {
+            w.macro_group(groups.len(), |w, g| {
+                let (m, c0, c1) = groups[g];
+                let sl = (c1 - c0) / 32;
+                if multi {
+                    w.sel(m as i64);
+                }
+                for _ in 0..sl {
+                    w.cim_conv(true, false);
+                }
+            });
+            w.alu(1);
+        } else if t + 2 == t_len {
+            w.macro_group(groups.len(), |w, g| {
+                let (m, c0, c1) = groups[g];
+                let sl = (c1 - c0) / 32;
+                if multi {
+                    w.sel(m as i64);
+                }
+                for _ in 0..sl {
+                    w.cim_conv(true, false);
+                }
+            });
+        }
+    }
+
+    w.li(DMEM + plan::DMEM_RAWDUMP as i64);
+    w.li(DMEM + plan::DMEM_RESULT as i64);
+    for _ in 0..n {
+        w.store_dmem();
+    }
+    w.li(t_len as i64);
+    for t in 0..t_len {
+        for _ in 0..n {
+            w.load_dmem();
+            w.load_dmem();
+            w.alu(1);
+            w.store_dmem();
+        }
+        w.alu(2);
+        w.branch(t + 1 != t_len);
+    }
+    w.phase(30 + i as u32);
+}
+
 fn walk(program: &Program, dram_cfg: &DramConfig, overlap: bool) -> Estimate {
     let p = &program.plan;
     let shards = &program.shards;
     let mut w = Walker::new(dram_cfg);
     w.overlap = overlap;
 
-    boot(&mut w, p, shards, program.opt);
-    let t = p.layers[0].t_in;
-    let c = p.layers[0].s_words * 32;
-    preprocess(&mut w, t, c);
-    for i in 0..p.layers.len() {
-        weight_phase(&mut w, p, shards, i, program.opt);
-        if p.layers[i].binarized {
-            conv_layer(&mut w, p, shards, i, program.opt);
-        } else {
-            final_layer(&mut w, p, shards, program.n_classes);
+    if program.opt.fused {
+        fused_inference(&mut w, p, shards, program.opt, program.n_classes);
+    } else if shards.axis == ShardAxis::Input {
+        // Input-axis programs boot without the weight-fusion descriptor
+        // chain (see `build_kws_program_input_sharded`).
+        let serial = OptLevel { weight_fusion: false, ..program.opt };
+        boot(&mut w, p, shards, serial);
+        let t = p.layers[0].t_in;
+        let c = p.layers[0].s_words * 32;
+        preprocess(&mut w, t, c);
+        for i in 0..p.layers.len() {
+            input_weight_phase(&mut w, p, shards, i);
+            if p.layers[i].binarized {
+                input_conv_layer(&mut w, p, shards, i, program.opt);
+            } else {
+                input_final_layer(&mut w, p, shards, program.n_classes);
+            }
+        }
+    } else {
+        boot(&mut w, p, shards, program.opt);
+        let t = p.layers[0].t_in;
+        let c = p.layers[0].s_words * 32;
+        preprocess(&mut w, t, c);
+        for i in 0..p.layers.len() {
+            weight_phase(&mut w, p, shards, i, program.opt);
+            if p.layers[i].binarized {
+                conv_layer(&mut w, p, shards, i, program.opt, None);
+            } else {
+                final_layer(&mut w, p, shards, program.n_classes, None);
+            }
         }
     }
     // Result publication + HOST_EXIT (the halting store retires normally).
@@ -734,6 +1148,52 @@ mod tests {
             estimate_overlapped(&prog, &DramConfig::default()).cycles,
             estimate(&prog, &DramConfig::default()).cycles
         );
+    }
+
+    #[test]
+    fn fused_estimate_beats_full_and_partitions() {
+        let m = KwsModel::synthetic(5);
+        let full = estimate(
+            &build_kws_program(&m, OptLevel::FULL).unwrap(),
+            &DramConfig::default(),
+        );
+        let prog = build_kws_program(&m, OptLevel::FUSED).unwrap();
+        let fused = estimate(&prog, &DramConfig::default());
+        assert!(fused.cycles < full.cycles);
+        assert_eq!(fused.phases.total(), fused.cycles);
+        // Steady state: audio is the only DRAM traffic.
+        assert_eq!(fused.counts.dram_bytes, prog.plan.audio_bytes as u64);
+        assert!(fused.counts.dram_bytes < full.counts.dram_bytes);
+        // Same fires either way (the work moves, it doesn't shrink).
+        assert_eq!(fused.counts.fires, full.counts.fires);
+        // Pool-drain markers show up for the pooled layers.
+        assert!(fused.markers.iter().any(|&(id, _)| (40..50).contains(&id)));
+        // Overlapped never does worse.
+        let ov = estimate_overlapped(&prog, &DramConfig::default());
+        assert!(ov.cycles <= fused.cycles);
+    }
+
+    #[test]
+    fn input_sharded_estimate_partitions_phases() {
+        let m = KwsModel::synthetic(6);
+        for n in 1..=4usize {
+            let prog =
+                crate::compiler::build_kws_program_input_sharded(&m, OptLevel::FULL, n).unwrap();
+            let e = estimate(&prog, &DramConfig::default());
+            assert_eq!(e.phases.total(), e.cycles, "n={n}");
+            assert!(e.phases.boot > 0 && e.phases.preprocess > 0, "n={n}");
+            assert!(e.phases.weights > 0 && e.phases.conv > 0, "n={n}");
+            // Same fire count as the classic schedule: one per row position
+            // per non-empty slice owner.
+            let want: u64 = prog
+                .plan
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| (l.t_in * prog.shards.layers[i].non_empty().len()) as u64)
+                .sum();
+            assert_eq!(e.counts.fires, want, "n={n}");
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub use latency::Estimate;
 use anyhow::Result;
 
 use crate::compiler::Program;
-use crate::dataflow::shard::ShardPlan;
+use crate::dataflow::shard::{ShardAxis, ShardPlan};
 use crate::energy::{EnergyReport, EnergyTable};
 use crate::mem::dram::DramConfig;
 use crate::robustness::VariationParams;
@@ -81,6 +81,11 @@ pub struct FastSim {
     energy_table: EnergyTable,
     calibration: Option<Calibration>,
     sharded: Option<ShardedExec>,
+    /// Input-channel-axis plan ([`ShardAxis::Input`]): inference routes
+    /// through `DecodedProgram::infer_input_sharded` (per-macro raw
+    /// partial sums, merged by addition). Mutually exclusive with
+    /// `sharded` — an image is split along one axis at a time.
+    input_plan: Option<ShardPlan>,
     /// Thread cap for [`Self::infer_batch`]'s chunked fan-out: `None` =
     /// one thread per available core, `Some(1)` = stay on the caller's
     /// thread (what the coordinator uses when its workers already
@@ -100,10 +105,19 @@ impl FastSim {
     pub fn new(program: Program, dram_cfg: DramConfig) -> Result<Self> {
         let decoded = DecodedProgram::decode(&program)?;
         let estimate = latency::estimate(&program, &dram_cfg);
-        let sharded = if program.shards.n_macros > 1 {
-            Some(ShardedExec { prog: decoded.shard(&program.shards)?, parallel: false })
+        let (sharded, input_plan) = if program.shards.n_macros > 1 {
+            match program.shards.axis {
+                ShardAxis::Output => (
+                    Some(ShardedExec { prog: decoded.shard(&program.shards)?, parallel: false }),
+                    None,
+                ),
+                ShardAxis::Input => {
+                    decoded.validate_input_plan(&program.shards)?;
+                    (None, Some(program.shards.clone()))
+                }
+            }
         } else {
-            None
+            (None, None)
         };
         Ok(FastSim {
             program,
@@ -112,6 +126,7 @@ impl FastSim {
             energy_table: EnergyTable::default(),
             calibration: None,
             sharded,
+            input_plan,
             batch_threads: None,
             variation: None,
         })
@@ -122,6 +137,13 @@ impl FastSim {
     /// functional simulator is not). `parallel` runs one thread per macro
     /// per inference.
     pub fn with_shard_plan(mut self, plan: &ShardPlan, parallel: bool) -> Result<Self> {
+        if plan.axis == ShardAxis::Input {
+            self.decoded.validate_input_plan(plan)?;
+            self.input_plan = (plan.n_macros > 1).then(|| plan.clone());
+            self.sharded = None;
+            return Ok(self);
+        }
+        self.input_plan = None;
         self.sharded = if plan.n_macros > 1 || parallel {
             Some(ShardedExec { prog: self.decoded.shard(plan)?, parallel })
         } else {
@@ -133,9 +155,10 @@ impl FastSim {
     /// Per-macro fire counts of one inference (a single entry when the
     /// program is unsharded).
     pub fn shard_fires(&self) -> Vec<u64> {
-        match &self.sharded {
-            Some(se) => se.prog.fires_per_macro.clone(),
-            None => vec![self.estimate.counts.fires],
+        match (&self.sharded, &self.input_plan) {
+            (Some(se), _) => se.prog.fires_per_macro.clone(),
+            (None, Some(plan)) => self.decoded.input_fires_per_macro(plan),
+            (None, None) => vec![self.estimate.counts.fires],
         }
     }
 
@@ -207,16 +230,27 @@ impl FastSim {
                 .infer_sharded_parallel(audio, &se.prog)
                 .unwrap_or_else(|_| self.decoded.infer_sharded(audio, &se.prog)),
             Some(se) => self.decoded.infer_sharded(audio, &se.prog),
-            None => self.decoded.infer(audio),
+            // Input-axis split: per-macro raw partials merged by addition
+            // (the plan was validated at setup, so this cannot fail; the
+            // unsharded walk is the bit-identical safety net regardless).
+            None => match &self.input_plan {
+                Some(plan) => self
+                    .decoded
+                    .infer_input_sharded(audio, plan)
+                    .unwrap_or_else(|_| self.decoded.infer(audio)),
+                None => self.decoded.infer(audio),
+            },
         };
         self.finish(out)
     }
 
     /// One *disturbed* inference with explicit parameters (overriding any
     /// [`Self::with_variation`] default) — the Monte-Carlo sweep hot
-    /// path. Honors the active shard layout: a sharded program replays
-    /// one independent noise stream per macro, exactly like the SoC's
-    /// macro bank.
+    /// path. Honors the active shard layout: an output-sharded program
+    /// replays one independent noise stream per macro, exactly like the
+    /// SoC's macro bank. Input-axis plans replay as one logical macro
+    /// (the replay's fire walk is defined along the output axis; the
+    /// clean input-sharded path is bit-identical to unsharded anyway).
     pub fn infer_disturbed(&self, audio: &[f32], params: &VariationParams) -> RunResult {
         let sp = self.sharded.as_ref().map(|se| &se.prog);
         self.finish(crate::robustness::infer_disturbed(&self.decoded, sp, params, audio))
@@ -293,9 +327,17 @@ impl FastSim {
                 .map(|a| crate::robustness::infer_disturbed(&self.decoded, sp, v, a))
                 .collect();
         }
-        match &self.sharded {
-            Some(se) => self.decoded.infer_sharded_batch(batch, &se.prog),
-            None => self.decoded.infer_batch(batch),
+        match (&self.sharded, &self.input_plan) {
+            (Some(se), _) => self.decoded.infer_sharded_batch(batch, &se.prog),
+            (None, Some(plan)) => batch
+                .iter()
+                .map(|a| {
+                    self.decoded
+                        .infer_input_sharded(a, plan)
+                        .unwrap_or_else(|_| self.decoded.infer(a))
+                })
+                .collect(),
+            (None, None) => self.decoded.infer_batch(batch),
         }
     }
 
@@ -379,6 +421,41 @@ mod tests {
         let got = threaded.infer(&audio);
         assert_eq!(got.logits, want.logits);
         assert_eq!(got.shard_fires.len(), 3);
+    }
+
+    #[test]
+    fn input_sharded_fastsim_matches_unsharded_bits() {
+        let m = KwsModel::synthetic(19);
+        let single = FastSim::new(
+            build_kws_program(&m, OptLevel::FULL).unwrap(),
+            DramConfig::default(),
+        )
+        .unwrap();
+        let audio = dataset::synth_utterance(3, 8, m.audio_len, 0.3);
+        let want = single.infer(&audio);
+
+        // Auto-routed from an input-sharded image's metadata...
+        let prog =
+            crate::compiler::build_kws_program_input_sharded(&m, OptLevel::FULL, 2).unwrap();
+        let sim = FastSim::new(prog, DramConfig::default()).unwrap();
+        let got = sim.infer(&audio);
+        assert_eq!(got.logits, want.logits);
+        assert_eq!(got.predicted, want.predicted);
+        assert_eq!(got.shard_fires.len(), 2);
+        assert!(got.shard_fires.iter().all(|&f| f > 0), "{:?}", got.shard_fires);
+
+        // ...and through an explicit input plan on an unsharded image,
+        // including the batched route.
+        let prog = build_kws_program(&m, OptLevel::FULL).unwrap();
+        let plan =
+            crate::dataflow::shard::ShardPlan::input_word_aligned(&prog.plan, 2).unwrap();
+        let sim = FastSim::new(prog, DramConfig::default())
+            .unwrap()
+            .with_shard_plan(&plan, false)
+            .unwrap();
+        for r in sim.infer_batch(&[&audio, &audio]) {
+            assert_eq!(r.logits, want.logits);
+        }
     }
 
     #[test]

@@ -72,7 +72,23 @@ impl Soc {
             .iter()
             .map(|&w| crate::isa::decode(w))
             .collect::<Result<Vec<_>>>()?;
-        Ok(Soc { bus, program, decoded, energy_table: EnergyTable::default(), reset_stats_per_run: true })
+        let mut soc =
+            Soc { bus, program, decoded, energy_table: EnergyTable::default(), reset_stats_per_run: true };
+        if soc.program.entry > 0 {
+            // Fused image: execute the one-time setup section (PC 0) now —
+            // mask init, weight DMA, resident sign bursts. Every `run`
+            // starts at `entry` with the macros already loaded.
+            soc.execute(0)?;
+            match soc.bus.exit_code {
+                Some(0) => {}
+                Some(c) => bail!("fused setup exited with code {c}"),
+                None => bail!("fused setup halted without HOST_EXIT"),
+            }
+            soc.bus.phases.clear();
+            soc.bus.exit_code = None;
+            soc.bus.console.clear();
+        }
+        Ok(soc)
     }
 
     pub fn with_energy_table(mut self, t: EnergyTable) -> Self {
@@ -145,26 +161,7 @@ impl Soc {
             self.bus.exit_code = None;
             self.bus.console.clear();
         }
-        let mut cpu = Cpu::new(0);
-        let mut now: u64 = 0;
-        let mut steps: u64 = 0;
-        loop {
-            self.bus.tick(now)?;
-            match cpu
-                .step_predecoded(&mut self.bus, &self.decoded)
-                .with_context(|| format!("cycle {now}"))?
-            {
-                StepOutcome::Retired { cycles } => now += cycles,
-                StepOutcome::Halted => break,
-            }
-            steps += 1;
-            if steps > MAX_STEPS {
-                bail!("program did not halt within {MAX_STEPS} steps");
-            }
-        }
-        // Drain any in-flight uDMA bookkeeping.
-        self.bus.tick(u64::MAX)?;
-        self.bus.now = now;
+        let cpu = self.execute((self.program.entry * 4) as u32)?;
 
         match self.bus.exit_code {
             Some(0) => {}
@@ -203,6 +200,32 @@ impl Soc {
     pub fn infer(&mut self, audio: &[f32]) -> Result<RunResult> {
         self.stage_audio(audio)?;
         self.run()
+    }
+
+    /// Execute from `start_pc` to halt (the shared core loop of the
+    /// one-time fused setup pass and every per-inference run).
+    fn execute(&mut self, start_pc: u32) -> Result<Cpu> {
+        let mut cpu = Cpu::new(start_pc);
+        let mut now: u64 = 0;
+        let mut steps: u64 = 0;
+        loop {
+            self.bus.tick(now)?;
+            match cpu
+                .step_predecoded(&mut self.bus, &self.decoded)
+                .with_context(|| format!("cycle {now}"))?
+            {
+                StepOutcome::Retired { cycles } => now += cycles,
+                StepOutcome::Halted => break,
+            }
+            steps += 1;
+            if steps > MAX_STEPS {
+                bail!("program did not halt within {MAX_STEPS} steps");
+            }
+        }
+        // Drain any in-flight uDMA bookkeeping.
+        self.bus.tick(u64::MAX)?;
+        self.bus.now = now;
+        Ok(cpu)
     }
 }
 
@@ -326,6 +349,38 @@ mod tests {
         assert!(r.phases.conv > 0);
         let total = r.phases.boot + r.phases.preprocess + r.phases.weights + r.phases.conv + r.phases.tail;
         assert_eq!(total, r.cycles);
+    }
+
+    #[test]
+    fn fused_soc_is_reusable_and_matches_reference() {
+        let m = fake_model(42);
+        let audio = test_audio(7);
+        let want = reference::infer(&m, &audio);
+        let prog = build_kws_program(&m, OptLevel::FUSED).unwrap();
+        assert!(prog.entry > 0);
+        let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+        let a = soc.infer(&audio).unwrap();
+        assert_eq!(a.logits, want, "first fused inference");
+        // Steady state: the resident planes survive across runs.
+        let b = soc.infer(&audio).unwrap();
+        assert_eq!(b.logits, want, "second fused inference (resident reuse)");
+        assert_eq!(a.cycles, b.cycles);
+        // The overlapped pooled-drain region is announced per pooled layer.
+        assert!(a.markers.iter().any(|&(id, _)| (40..50).contains(&id)));
+    }
+
+    #[test]
+    fn input_sharded_soc_matches_reference() {
+        let m = fake_model(11);
+        let audio = test_audio(3);
+        let want = reference::infer(&m, &audio);
+        for n in 1..=4usize {
+            let prog =
+                crate::compiler::build_kws_program_input_sharded(&m, OptLevel::FULL, n).unwrap();
+            let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+            let r = soc.infer(&audio).unwrap();
+            assert_eq!(r.logits, want, "input-axis n={n}");
+        }
     }
 
     #[test]

@@ -106,13 +106,16 @@ impl TraceBuilder {
 }
 
 /// Human label for a phase-marker id (the `PhaseBreakdown` scheme:
-/// 1 = boot, 2 = preprocess, 10..=29 weights per layer, 30..=49 conv
-/// per layer, anything else tail work).
+/// 1 = boot, 2 = preprocess, 10..=29 weights per layer, 30..=39 conv
+/// per layer, 40..=49 fused pool-drain overlap start per layer —
+/// matched before the conv arm, since the two ranges share the
+/// `from_markers` conv bucket — anything else tail work).
 fn marker_label(id: u32) -> String {
     match id {
         1 => "boot".to_string(),
         2 => "preprocess".to_string(),
         10..=29 => format!("weights L{}", id - 10),
+        40..=49 => format!("pool drain L{}", id - 40),
         30..=49 => format!("conv L{}", id - 30),
         other => format!("marker {other}"),
     }
@@ -136,8 +139,19 @@ pub fn engine_tracks(
         tb.thread_name(PID_ENGINE, 1 + m as u64, &format!("macro {m}"));
     }
 
+    // Fused programs mark the first pooled row drain of layer `l`'s conv
+    // phase with id `40 + l`: it *opens* an overlap window (drains ride
+    // along with the remaining fires) that the layer's conv-done marker
+    // (`30 + l`) closes. The open markers don't split the phase track —
+    // their cycles are conv work, same as `PhaseBreakdown::from_markers`
+    // folds them — they become concurrent per-macro pool-drain slices.
+    let mut drain_open: [Option<u64>; 10] = [None; 10];
     let mut prev = 0u64;
     for &(id, at) in markers {
+        if let 40..=49 = id {
+            drain_open[(id - 40) as usize % 10] = Some(at);
+            continue;
+        }
         let (ts, dur) = (us(prev), us(at.saturating_sub(prev)));
         tb.complete(
             PID_ENGINE,
@@ -159,6 +173,11 @@ pub fn engine_tracks(
             if let Some(ls) = program.shards.layers.iter().find(|ls| ls.index == l) {
                 let fires =
                     program.plan.layers.get(l).map(|lp| lp.t_in).unwrap_or(0);
+                let drain_from = if kind == "fire" && l < 10 {
+                    drain_open[l].take()
+                } else {
+                    None
+                };
                 for (m, c0, c1) in ls.non_empty() {
                     let mut args = vec![
                         ("channels", Json::num((c1 - c0) as f64)),
@@ -176,6 +195,19 @@ pub fn engine_tracks(
                         dur,
                         args,
                     );
+                    // The fused conv/max-pool pipeline: pooled drains run
+                    // concurrently with the tail of the fire window.
+                    if let Some(t1) = drain_from {
+                        tb.complete(
+                            PID_ENGINE,
+                            1 + m as u64,
+                            &format!("L{l} pool drain"),
+                            "pool",
+                            us(t1),
+                            us(at.saturating_sub(t1)),
+                            vec![("overlapped_with", Json::str(format!("L{l} fire")))],
+                        );
+                    }
                 }
             }
         }
@@ -382,6 +414,45 @@ mod tests {
             .find(|e| e.get("name").and_then(|n| n.as_str().map(str::to_string)).ok().as_deref() == Some("boot"))
             .unwrap();
         assert_eq!(boot.get("dur").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn fused_pool_drain_markers_render_concurrent_slices() {
+        let m = KwsModel::synthetic(3);
+        let prog = build_kws_program_sharded(&m, OptLevel::FULL, 2).unwrap();
+        // boot @100, preprocess @400, L0 weights @600, first pooled drain
+        // @700 (opens the overlap window), L0 conv done @900.
+        let markers = vec![(1, 100), (2, 400), (10, 600), (40, 700), (30, 900)];
+        let mut tb = TraceBuilder::new();
+        engine_tracks(&mut tb, &prog, &markers, 1000);
+        let doc = tb.build();
+        assert_event_schema(&doc);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let named = |want: &str| -> Vec<&Json> {
+            events
+                .iter()
+                .filter(|e| {
+                    e.get("name").and_then(|n| n.as_str().map(str::to_string)).ok().as_deref()
+                        == Some(want)
+                })
+                .collect()
+        };
+        // The open marker never splits the phase track: conv L0 runs
+        // 600..900 = 6µs starting at 12µs, exactly as from_markers folds
+        // the drain cycles into the conv bucket.
+        let conv = named("conv L0");
+        assert_eq!(conv.len(), 1);
+        assert_eq!(conv[0].get("ts").unwrap().as_f64().unwrap(), 12.0);
+        assert_eq!(conv[0].get("dur").unwrap().as_f64().unwrap(), 6.0);
+        // Both owning macros show the drain window 700..900 concurrent
+        // with their fire slice.
+        let drains = named("L0 pool drain");
+        assert_eq!(drains.len(), 2, "one pool-drain slice per owning macro");
+        for d in drains {
+            assert_eq!(d.get("ts").unwrap().as_f64().unwrap(), 14.0);
+            assert_eq!(d.get("dur").unwrap().as_f64().unwrap(), 4.0);
+        }
+        assert_eq!(named("L0 fire").len(), 2);
     }
 
     #[test]

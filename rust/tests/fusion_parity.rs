@@ -1,0 +1,226 @@
+//! Fused-schedule parity suite: the resident fused program (`--opt
+//! fused` — co-resident sign planes, conv/max-pool drain pipelining,
+//! one-time weight setup) must be **bit-identical** to the unfused
+//! ladder — on both engines, at every shard count, on pooled and
+//! unpooled layers, under variation replay (sigma > 0), and through the
+//! input-channel-axis fallback used when a fused group cannot co-reside.
+//! No artifacts required — runs on synthetic models.
+
+use cimrv::baselines::OptLevel;
+use cimrv::compiler::{
+    build_kws_program, build_kws_program_input_sharded, build_kws_program_sharded,
+};
+use cimrv::fsim::{latency, FastSim};
+use cimrv::mem::dram::DramConfig;
+use cimrv::model::kws::LayerSpec;
+use cimrv::model::{dataset, reference, KwsModel};
+use cimrv::robustness::VariationParams;
+use cimrv::sim::Soc;
+
+/// A model with an unpooled mid layer (96 -> 64, no max-pool), so the
+/// fused drain path covers both the pooling-overlap schedule and the
+/// plain store-through drain in one program.
+fn mixed_model(seed: u64) -> KwsModel {
+    use cimrv::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut mk = |ci: usize, co: usize, pooled: bool, binarized: bool| LayerSpec {
+        c_in: ci,
+        c_out: co,
+        kernel: 3,
+        pooled,
+        binarized,
+        weights: (0..3 * ci * co).map(|_| rng.pm1()).collect(),
+        thresholds: if binarized {
+            (0..co).map(|_| rng.range(0, 9) as i32 - 4).collect()
+        } else {
+            vec![]
+        },
+    };
+    let layers = vec![
+        mk(64, 96, true, true),
+        mk(96, 64, false, true), // unpooled binarized layer
+        mk(64, 32, true, true),
+        mk(32, 12, false, false),
+    ];
+    let (pre_thr, pre_dir) =
+        cimrv::model::kws::fold_bn(&[1.0; 64], &[0.5; 64], &[20000.0; 64], &[4.0e8; 64]);
+    KwsModel {
+        audio_len: 16000,
+        t: 128,
+        c: 64,
+        n_classes: 12,
+        fusion_split: 2,
+        layers,
+        bn_gamma: vec![1.0; 64],
+        bn_beta: vec![0.5; 64],
+        bn_mean: vec![20000.0; 64],
+        bn_var: vec![4.0e8; 64],
+        pre_thr,
+        pre_dir,
+        trained: false,
+        artifacts_dir: std::path::PathBuf::new(),
+    }
+}
+
+#[test]
+fn fused_cycle_engine_bit_identical_across_shard_counts_and_reuse() {
+    // The fused chip vs the host reference, for a pooled-only model and a
+    // pooled/unpooled mix, at 1..=4 macros — and a *second* inference on
+    // the same SoC, which is the whole point of residency: the weights
+    // stay programmed, only the audio changes.
+    for (tag, model, shards) in [
+        ("synthetic", KwsModel::synthetic(11), vec![1usize, 2, 4]),
+        ("mixed", mixed_model(3), vec![1usize, 3]),
+    ] {
+        let a0 = dataset::synth_utterance(2, 6, model.audio_len, 0.37);
+        let a1 = dataset::synth_utterance(9, 41, model.audio_len, 0.37);
+        let want0 = reference::infer(&model, &a0);
+        let want1 = reference::infer(&model, &a1);
+        for n in shards {
+            let prog = build_kws_program_sharded(&model, OptLevel::FUSED, n).unwrap();
+            assert!(prog.entry > 0, "{tag} n={n}: fused programs carry a setup section");
+            let mut soc = Soc::new(prog, DramConfig::default()).unwrap();
+            let r0 = soc.infer(&a0).unwrap();
+            let r1 = soc.infer(&a1).unwrap();
+            assert_eq!(r0.logits, want0, "{tag} n={n}: first fused inference");
+            assert_eq!(r1.logits, want1, "{tag} n={n}: reused resident weights");
+            assert_eq!(r0.shard_fires.len(), n, "{tag} n={n}");
+        }
+    }
+}
+
+#[test]
+fn fused_streamed_fallback_matches_full_on_both_engines() {
+    // synthetic_wide's windows cannot all co-reside in one macro's
+    // wordlines, so the fusion planner keeps only a prefix resident and
+    // streams the rest per inference — values must be untouched either
+    // way, on the cycle engine and the functional simulator.
+    let model = KwsModel::synthetic_wide(17);
+    let audio = dataset::synth_utterance(4, 13, model.audio_len, 0.37);
+    let full = build_kws_program(&model, OptLevel::FULL).unwrap();
+    let fused = build_kws_program(&model, OptLevel::FUSED).unwrap();
+    assert!(fused.entry > 0);
+    let want = Soc::new(full.clone(), DramConfig::default()).unwrap().infer(&audio).unwrap();
+    let got = Soc::new(fused.clone(), DramConfig::default()).unwrap().infer(&audio).unwrap();
+    assert_eq!(got.logits, want.logits, "partially-resident fused schedule changed values");
+    let f_full = FastSim::new(full, DramConfig::default()).unwrap().infer(&audio);
+    let f_fused = FastSim::new(fused, DramConfig::default()).unwrap().infer(&audio);
+    assert_eq!(f_fused.logits, want.logits, "fsim fused diverged from cycle engine");
+    assert_eq!(f_full.logits, want.logits, "fsim full diverged from cycle engine");
+}
+
+#[test]
+fn fused_fsim_matches_cycle_engine_at_every_ladder_rung() {
+    // Cross-engine parity over the whole 5-rung ladder (the fused rung
+    // included), 2-macro program: the functional simulator must serve
+    // exactly the bits the fused silicon produces.
+    let model = mixed_model(5);
+    let audio = dataset::synth_utterance(7, 3, model.audio_len, 0.37);
+    for (name, opt) in OptLevel::ladder() {
+        let prog = build_kws_program_sharded(&model, opt, 2).unwrap();
+        let want = Soc::new(prog.clone(), DramConfig::default()).unwrap().infer(&audio).unwrap();
+        let got = FastSim::new(prog, DramConfig::default()).unwrap().infer(&audio);
+        assert_eq!(got.logits, want.logits, "{name}");
+        assert_eq!(got.shard_fires, want.shard_fires, "{name}");
+    }
+}
+
+#[test]
+fn fused_variation_replay_parity_sigma_nonzero() {
+    // Variation replay on the fused program: the disturbed fast path must
+    // reproduce the disturbed fused chip bit for bit — and because the
+    // fused schedule preserves the fire walk (same layers, same rows,
+    // same order), the disturbed logits must equal the FULL ladder's too.
+    let model = KwsModel::synthetic(42);
+    let audio = dataset::synth_utterance(3, 7, model.audio_len, 0.37);
+    let configs = [
+        VariationParams { sigma: 0.3, nl_alpha: 0.1, symmetric: true, ..Default::default() },
+        VariationParams { sigma: 0.5, nl_alpha: 0.2, symmetric: true, mismatch: 0.4, seed: 99 },
+    ];
+    for n in [1usize, 2] {
+        let fused = build_kws_program_sharded(&model, OptLevel::FUSED, n).unwrap();
+        let full = build_kws_program_sharded(&model, OptLevel::FULL, n).unwrap();
+        for params in &configs {
+            assert!(params.sigma > 0.0);
+            let want = Soc::new(fused.clone(), DramConfig::default())
+                .unwrap()
+                .with_variation(params.model())
+                .infer(&audio)
+                .unwrap();
+            let got = FastSim::new(fused.clone(), DramConfig::default())
+                .unwrap()
+                .infer_disturbed(&audio, params);
+            assert_eq!(got.logits, want.logits, "n={n} {params:?}: disturbed fsim diverged");
+            let full_r = Soc::new(full.clone(), DramConfig::default())
+                .unwrap()
+                .with_variation(params.model())
+                .infer(&audio)
+                .unwrap();
+            assert_eq!(
+                want.logits, full_r.logits,
+                "n={n} {params:?}: fused fire walk drew a different noise stream"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_latency_estimate_beats_full() {
+    // The analytical walker's fused schedule: strictly fewer cycles and
+    // strictly less DRAM traffic per steady-state inference than the full
+    // unfused ladder (weights resident, audio fetch only).
+    for model in [KwsModel::synthetic(11), mixed_model(3)] {
+        let full = build_kws_program(&model, OptLevel::FULL).unwrap();
+        let fused = build_kws_program(&model, OptLevel::FUSED).unwrap();
+        let e_full = latency::estimate(&full, &DramConfig::default());
+        let e_fused = latency::estimate(&fused, &DramConfig::default());
+        assert!(
+            e_fused.cycles < e_full.cycles,
+            "fused {} !< full {} cycles",
+            e_fused.cycles,
+            e_full.cycles
+        );
+        assert!(
+            e_fused.counts.dram_bytes < e_full.counts.dram_bytes,
+            "fused {} !< full {} DRAM bytes",
+            e_fused.counts.dram_bytes,
+            e_full.counts.dram_bytes
+        );
+    }
+}
+
+#[test]
+fn input_axis_fallback_bit_identical_on_both_engines() {
+    // The input-channel-axis shard split (the fallback when a fused
+    // group's window exceeds one macro's wordlines): raw partial sums
+    // merged by the core must reproduce the unsharded bits exactly, on
+    // the cycle engine and through the fsim's auto-routed merge path.
+    let model = KwsModel::synthetic(5);
+    let audio = dataset::synth_utterance(6, 17, model.audio_len, 0.37);
+    let want = reference::infer(&model, &audio);
+    for n in 1..=3usize {
+        let prog = build_kws_program_input_sharded(&model, OptLevel::FULL, n).unwrap();
+        let r = Soc::new(prog.clone(), DramConfig::default()).unwrap().infer(&audio).unwrap();
+        assert_eq!(r.logits, want, "cycle input-axis n={n}");
+        let f = FastSim::new(prog, DramConfig::default()).unwrap().infer(&audio);
+        assert_eq!(f.logits, want, "fsim input-axis n={n}");
+        assert_eq!(f.predicted, r.predicted, "n={n}");
+    }
+    // Wide model (several latch words per row) through the fsim merge.
+    let wide = KwsModel::synthetic_wide(17);
+    let waudio = dataset::synth_utterance(1, 29, wide.audio_len, 0.37);
+    let wwant = reference::infer(&wide, &waudio);
+    let prog = build_kws_program_input_sharded(&wide, OptLevel::FULL, 2).unwrap();
+    let f = FastSim::new(prog, DramConfig::default()).unwrap().infer(&waudio);
+    assert_eq!(f.logits, wwant, "fsim input-axis wide");
+    assert_eq!(f.shard_fires.len(), 2);
+    assert!(f.shard_fires.iter().all(|&x| x > 0), "both input slices fire");
+}
+
+#[test]
+fn fused_rejected_where_unsupported() {
+    // The input-axis cycle builder cannot host tensor-level residency for
+    // sliced windows; asking for it is a loud error, not silent fallback.
+    let model = KwsModel::synthetic(5);
+    assert!(build_kws_program_input_sharded(&model, OptLevel::FUSED, 2).is_err());
+}
