@@ -12,10 +12,16 @@
 //!
 //! — interleaved per rep with min-of-reps timing, and asserts the
 //! disabled overhead is <= 1% and the enabled overhead is <= 5% of the
-//! baseline. Results land in `BENCH_observability.json`.
+//! baseline. The enabled path now includes the scoped self-time
+//! profiler's regions (backend + per-layer), so the same gates also
+//! bound the profiler's cost. Results land in `BENCH_observability.json`
+//! and are folded with every other `BENCH_*.json` into
+//! `BENCH_summary.json` (stamped from `CIMRV_BENCH_STAMP`).
 //!
 //! `CIMRV_BENCH_QUICK=1` shrinks reps/iters for the CI smoke run; the
 //! asserts still run.
+
+mod common;
 
 use std::hint::black_box;
 use std::time::Instant;
@@ -109,6 +115,14 @@ fn main() {
         "enabled runs recorded {batches} batches, expected >= {}",
         reps * iters
     );
+    // Same honesty check for the profiler: the ≤5% gate is only a
+    // profiler bound if the enabled runs actually opened regions.
+    let fold = telemetry::global_profiler().fold();
+    assert!(
+        fold.contains_key("backend_fast_run"),
+        "enabled runs recorded no backend_fast_run region (profiler silently off?): {:?}",
+        fold.keys().collect::<Vec<_>>()
+    );
 
     let doc = Json::obj(vec![
         ("model", Json::str(model_kind)),
@@ -126,6 +140,8 @@ fn main() {
     std::fs::write("BENCH_observability.json", format!("{doc}\n"))
         .expect("writing BENCH_observability.json");
     println!("wrote BENCH_observability.json");
+    let stamp = std::env::var("CIMRV_BENCH_STAMP").unwrap_or_else(|_| "local".to_string());
+    common::write_bench_summary(&stamp);
 
     assert!(
         disabled_pct <= 1.0,

@@ -54,6 +54,7 @@ impl InferenceBackend for CycleBackend {
         // Same global-off fast path as the fast backend: disabled
         // telemetry costs one relaxed load before the serial loop.
         let t0 = telemetry::enabled().then(std::time::Instant::now);
+        let _r = t0.map(|_| telemetry::region("backend_cycle_run"));
         let runs: Result<Vec<RunResult>> = batch
             .iter()
             .map(|audio| {
@@ -63,10 +64,11 @@ impl InferenceBackend for CycleBackend {
                 self.soc.infer(audio)
             })
             .collect();
+        drop(_r);
         if let (Some(t0), Ok(runs)) = (t0, &runs) {
             let telem = telemetry::global();
             telem
-                .histogram("backend.cycle.execute_us", Histogram::us_bounds())
+                .histogram("backend.cycle.execute_us", Histogram::fine_us_bounds())
                 .observe(t0.elapsed().as_micros() as u64);
             telem.counter("backend.cycle.batches").inc();
             telem.counter("backend.cycle.inferences").add(runs.len() as u64);

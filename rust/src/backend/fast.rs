@@ -75,9 +75,12 @@ impl InferenceBackend for FastBackend {
         }
         let telem = telemetry::global();
         let t0 = std::time::Instant::now();
-        let runs = self.sim.infer_batch(batch);
+        let runs = {
+            let _r = telemetry::region("backend_fast_run");
+            self.sim.infer_batch(batch)
+        };
         telem
-            .histogram("backend.fast.execute_us", Histogram::us_bounds())
+            .histogram("backend.fast.execute_us", Histogram::fine_us_bounds())
             .observe(t0.elapsed().as_micros() as u64);
         telem.counter("backend.fast.batches").inc();
         telem.counter("backend.fast.inferences").add(runs.len() as u64);

@@ -39,7 +39,7 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -57,7 +57,10 @@ use crate::resilience::{
 };
 use crate::robustness::VariationParams;
 use crate::sim::{RunResult, Soc};
-use crate::telemetry::{self, Histogram, RequestSpan, SpanLog, SpanOutcome};
+use crate::telemetry::{
+    self, incident, Histogram, IncidentKind, RequestSpan, SloConfig, SloMonitor, SloReport,
+    SpanLog, SpanOutcome,
+};
 use crate::util::lock_or_recover;
 use crate::util::rng::Rng;
 
@@ -171,6 +174,9 @@ pub struct ServiceStats {
     /// trace exporter renders (latency is data-independent, so one
     /// sample describes every request). Captured only under telemetry.
     engine: Mutex<Option<(Vec<(u32, u64)>, u64)>>,
+    /// Rolling SLO monitor, installed once from [`ServeOptions::slo`]
+    /// (`--slo p99_ms=...,availability=...`). Absent = no monitoring.
+    slo: OnceLock<SloMonitor>,
 }
 
 impl ServiceStats {
@@ -240,6 +246,26 @@ impl ServiceStats {
     pub fn engine_sample(&self) -> Option<(Vec<(u32, u64)>, u64)> {
         lock_or_recover(&self.engine).clone()
     }
+
+    /// Install the rolling SLO monitor (no-op if one is already
+    /// installed — the config is fixed for the deployment's lifetime).
+    pub fn install_slo(&self, cfg: SloConfig) {
+        let _ = self.slo.set(SloMonitor::new(cfg));
+    }
+
+    /// Feed one terminal request outcome into the SLO window (latency in
+    /// µs; `served` = the request got an answer, not a shed/failure).
+    /// No-op without an installed monitor.
+    pub fn slo_record(&self, latency_us: u64, served: bool) {
+        if let Some(m) = self.slo.get() {
+            m.record(latency_us, served);
+        }
+    }
+
+    /// Current SLO report, if monitoring is configured.
+    pub fn slo_report(&self) -> Option<SloReport> {
+        self.slo.get().map(SloMonitor::report)
+    }
 }
 
 /// Serving options beyond the backend choice.
@@ -282,6 +308,10 @@ pub struct ServeOptions {
     /// trips). Exhausting it fails the request with a typed
     /// [`ServeError`]. Must be >= 1.
     pub max_attempts: u32,
+    /// SLO targets (`--slo p99_ms=...,availability=...`): installs a
+    /// rolling-window monitor on [`ServiceStats`] fed by every terminal
+    /// request outcome. `None` = no monitoring.
+    pub slo: Option<SloConfig>,
 }
 
 impl Default for ServeOptions {
@@ -295,6 +325,7 @@ impl Default for ServeOptions {
             queue_cap: DEFAULT_QUEUE_CAP,
             chaos: None,
             max_attempts: DEFAULT_MAX_ATTEMPTS,
+            slo: None,
         }
     }
 }
@@ -410,6 +441,9 @@ impl BackendFactory {
                 // the survivor plan has different timing, so the
                 // analytical estimate applies until recalibration.
                 let survivors = ShardPlan::even(&self.program.plan, self.macros - 1)?;
+                incident(IncidentKind::DegradedReplan, Some(worker), None, || {
+                    format!("re-planned over {} of {} macros", self.macros - 1, self.macros)
+                });
                 let mut fresh = FastSim::new(self.program.clone(), DramConfig::default())?
                     .with_shard_plan(&survivors, false)?;
                 if self.multi_worker {
@@ -530,6 +564,7 @@ fn run_worker(
         jobs.push(first);
         // The assembly window opens when the first job lands here.
         let assembly_start = Instant::now();
+        let assemble_region = telemetry::region("worker_assemble");
         let window_closes = assembly_start + linger.window();
         while jobs.len() < ctx.batch_cap {
             let now = Instant::now();
@@ -553,6 +588,7 @@ fn run_worker(
             last_submit = Some(job.enqueued);
         }
         let assembled = Instant::now();
+        drop(assemble_region);
         g_linger.set(linger.window().as_secs_f64() * 1e6);
         // Dequeue-time deadline check: expired work is dropped here, not
         // computed — the whole point of carrying a deadline.
@@ -574,6 +610,10 @@ fn run_worker(
                         assembled,
                     );
                     let waited_us = job.enqueued.elapsed().as_micros() as u64;
+                    incident(IncidentKind::DeadlineMiss, Some(wi), Some(job.req.id), || {
+                        format!("expired in queue after {waited_us}µs")
+                    });
+                    ctx.stats.slo_record(waited_us, false);
                     let _ = job.reply.send(Err(ServeError::DeadlineExceeded { waited_us }));
                 }
                 _ => live.push(job),
@@ -594,7 +634,10 @@ fn run_worker(
             let exec_start = Instant::now();
             let result = {
                 let audios: Vec<&[f32]> = jobs.iter().map(|j| j.req.audio.as_slice()).collect();
-                catch_unwind(AssertUnwindSafe(|| be.run_batch(&audios)))
+                catch_unwind(AssertUnwindSafe(|| {
+                    let _r = telemetry::region("worker_execute");
+                    be.run_batch(&audios)
+                }))
             };
             let exec_end = Instant::now();
             m_exec.observe(exec_end.duration_since(exec_start).as_micros() as u64);
@@ -619,6 +662,11 @@ fn run_worker(
                                 exec_end,
                             );
                             let attempts = job.attempts;
+                            incident(IncidentKind::RequestFailed, Some(wi), Some(job.req.id), || {
+                                format!("worker panic with attempt budget exhausted ({attempts})")
+                            });
+                            ctx.stats
+                                .slo_record(job.enqueued.elapsed().as_micros() as u64, false);
                             let _ = job.reply.send(Err(ServeError::WorkerPanic { attempts }));
                         } else {
                             ctx.stats.requeues.fetch_add(1, Ordering::Relaxed);
@@ -633,6 +681,11 @@ fn run_worker(
                 }
                 Ok(Ok(runs)) if runs.len() == jobs.len() => {
                     breaker.record_success();
+                    if batch_attempts > 0 {
+                        incident(IncidentKind::BreakerReset, Some(wi), None, || {
+                            format!("fault streak cleared after {batch_attempts} retry attempt(s)")
+                        });
+                    }
                     break Some((runs, exec_start, exec_end));
                 }
                 Ok(Ok(runs)) => {
@@ -652,6 +705,10 @@ fn run_worker(
                             exec_start,
                             exec_end,
                         );
+                        incident(IncidentKind::RequestFailed, Some(wi), Some(job.req.id), || {
+                            format!("backend returned {got} results for a batch of {want}")
+                        });
+                        ctx.stats.slo_record(job.enqueued.elapsed().as_micros() as u64, false);
                         let _ = job.reply.send(Err(ServeError::Backend {
                             attempts: job.attempts + batch_attempts + 1,
                             message: format!(
@@ -683,6 +740,14 @@ fn run_worker(
                                     exec_end,
                                 );
                                 let attempts = job.attempts;
+                                incident(
+                                    IncidentKind::RequestFailed,
+                                    Some(wi),
+                                    Some(job.req.id),
+                                    || format!("breaker open, attempt budget exhausted ({attempts}): {e:#}"),
+                                );
+                                ctx.stats
+                                    .slo_record(job.enqueued.elapsed().as_micros() as u64, false);
                                 let _ = job.reply.send(Err(ServeError::Backend {
                                     attempts,
                                     message: format!("{e:#}"),
@@ -714,6 +779,13 @@ fn run_worker(
                                 exec_start,
                                 exec_end,
                             );
+                            incident(IncidentKind::RequestFailed, Some(wi), Some(job.req.id), || {
+                                format!(
+                                    "attempt budget exhausted ({}): {e:#}",
+                                    job.attempts + batch_attempts
+                                )
+                            });
+                            ctx.stats.slo_record(job.enqueued.elapsed().as_micros() as u64, false);
                             let _ = job.reply.send(Err(ServeError::Backend {
                                 attempts: job.attempts + batch_attempts,
                                 message: format!("{e:#}"),
@@ -746,6 +818,7 @@ fn run_worker(
             }
         }
         let batch_size = jobs.len();
+        let _respond = telemetry::region("worker_respond");
         for (job, r) in jobs.iter().zip(&runs) {
             // Post-exec deadline check: the result exists but arrived
             // too late to matter — answer typed, don't pretend.
@@ -765,6 +838,10 @@ fn run_worker(
                         exec_end,
                     );
                     let waited_us = job.enqueued.elapsed().as_micros() as u64;
+                    incident(IncidentKind::DeadlineMiss, Some(wi), Some(job.req.id), || {
+                        format!("computed but expired after {waited_us}µs")
+                    });
+                    ctx.stats.slo_record(waited_us, false);
                     let _ = job.reply.send(Err(ServeError::DeadlineExceeded { waited_us }));
                     continue;
                 }
@@ -774,6 +851,7 @@ fn run_worker(
             ctx.stats.served.fetch_add(1, Ordering::Relaxed);
             ctx.stats.chip_cycles.fetch_add(r.cycles, Ordering::Relaxed);
             ctx.stats.record_host_latency(host);
+            ctx.stats.slo_record((host * 1e6) as u64, true);
             m_requests.inc();
             m_host.observe((host * 1e6) as u64);
             if telemetry::enabled() {
@@ -841,6 +919,9 @@ fn supervise(
                         }
                         WorkerExit::BreakerOpen => {
                             ctx.stats.breaker_trips.fetch_add(1, Ordering::Relaxed);
+                            incident(IncidentKind::BreakerTrip, Some(wi), None, || {
+                                format!("{BREAKER_THRESHOLD} consecutive faults; degraded respawn scheduled")
+                            });
                             slot.needs_respawn = true;
                             slot.degraded = true;
                             slot.not_before = Some(Instant::now() + BREAKER_COOLDOWN);
@@ -860,6 +941,13 @@ fn supervise(
                             slot.needs_respawn = false;
                             slot.not_before = None;
                             ctx.stats.respawns.fetch_add(1, Ordering::Relaxed);
+                            let (incarnation, degraded) = (slot.incarnation, slot.degraded);
+                            incident(IncidentKind::WorkerRespawn, Some(wi), None, || {
+                                format!(
+                                    "incarnation {incarnation}{}",
+                                    if degraded { " (degraded)" } else { "" }
+                                )
+                            });
                         }
                         // Construction failed (transient resource issue):
                         // leave needs_respawn set and retry next tick.
@@ -942,6 +1030,9 @@ impl Coordinator {
                     let mut soc = Soc::new(program.clone(), DramConfig::default())?;
                     let silence = vec![0.0f32; model.audio_len];
                     let measured = soc.infer(&silence)?;
+                    incident(IncidentKind::CalibrationSnap, None, None, || {
+                        format!("fast-backend timing snapped to {} measured cycles", measured.cycles)
+                    });
                     sim = sim.with_calibration(Calibration::from_run(&measured));
                 }
                 Some(Arc::new(sim))
@@ -963,6 +1054,9 @@ impl Coordinator {
             backends.push(factory.build(wi, 0, false)?);
         }
         let stats = Arc::new(ServiceStats::sized(opts.macros.max(1), opts.batch));
+        if let Some(cfg) = opts.slo {
+            stats.install_slo(cfg);
+        }
         let queue = Arc::new(BoundedQueue::new(opts.queue_cap));
         let shutdown = Arc::new(AtomicBool::new(false));
         let ctx = WorkerContext {
@@ -1019,8 +1113,13 @@ impl Coordinator {
             }
             Err(PushError::Full(job)) => {
                 self.stats.shed_overload.fetch_add(1, Ordering::Relaxed);
+                self.stats.slo_record(0, false);
                 if telemetry::enabled() {
                     telemetry::global().counter("serve.shed.overload").inc();
+                    let depth = self.queue.len();
+                    incident(IncidentKind::Shed, None, Some(job.req.id), || {
+                        format!("queue full at depth {depth}")
+                    });
                     let t = self.stats.spans.us_since_epoch(now);
                     self.stats.spans.record(RequestSpan {
                         req_id: job.req.id,
@@ -1681,5 +1780,56 @@ mod tests {
                 other => panic!("expected ServeError::Shutdown, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn slo_monitor_tracks_served_requests_when_configured() {
+        crate::telemetry::with_telemetry(|| {
+            let m = fake_model();
+            // Generous targets: clean serving must be compliant.
+            let slo = SloConfig::parse_spec("p99_ms=60000,availability=0.5").unwrap();
+            let mut coord = Coordinator::start_with_options(
+                &m,
+                OptLevel::FULL,
+                2,
+                BackendKind::Fast,
+                ServeOptions { slo: Some(slo), ..Default::default() },
+            )
+            .unwrap();
+            let reqs: Vec<_> = (0..6)
+                .map(|i| InferenceRequest {
+                    id: i,
+                    audio: crate::model::dataset::synth_utterance(i as usize % 12, i, 16000, 0.3),
+                    label: None,
+                    deadline: None,
+                })
+                .collect();
+            let _ = coord.serve_batch(reqs).unwrap();
+            coord.shutdown();
+            let rep = coord.stats.slo_report().expect("--slo installs the monitor");
+            assert_eq!(rep.seen, 6);
+            assert_eq!(rep.window_n, 6);
+            assert_eq!(rep.availability, Some(1.0), "clean serving: every outcome served");
+            assert!(rep.p99_us.is_some(), "served latencies feed the p99 window");
+            assert!(rep.burn_rate.is_some(), "availability target < 1 defines a budget");
+            assert!(rep.compliant(), "{}", rep.render());
+            // The report mirrors into the registry gauges.
+            let reg = crate::telemetry::global();
+            assert_eq!(reg.gauge("slo.availability").get(), 1.0);
+            assert!(reg.gauge("slo.p99_us").get() >= 1.0, "p99 gauge mirrors µs");
+
+            // No --slo: no monitor, no report.
+            let mut plain =
+                Coordinator::start_with(&m, OptLevel::FULL, 1, BackendKind::Fast).unwrap();
+            let req = InferenceRequest {
+                id: 0,
+                audio: crate::model::dataset::synth_utterance(0, 1, 16000, 0.3),
+                label: None,
+                deadline: None,
+            };
+            let _ = plain.serve_batch(vec![req]).unwrap();
+            plain.shutdown();
+            assert!(plain.stats.slo_report().is_none());
+        });
     }
 }

@@ -33,6 +33,8 @@ use crate::dataflow::shard::{ShardAxis, ShardPlan};
 use crate::model::kernel::{self, LaneLayer};
 use crate::model::kws::LayerSpec;
 use crate::model::reference::{self, BitMap, PackedLayer};
+use crate::telemetry::profiler::layer_name;
+use crate::telemetry::region;
 use crate::util::{lock_or_recover, read_or_recover, write_or_recover};
 
 /// A program image decoded back to tensor-level form.
@@ -219,6 +221,7 @@ impl DecodedProgram {
     /// single pass, then 32 channel compares per packed word with the
     /// flip word applied by XOR (decoded `c` is always a word multiple).
     pub fn preprocess(&self, audio: &[f32]) -> BitMap {
+        let _r = region("preprocess");
         let q = reference::quantize_audio(audio);
         let frame = self.audio_len / self.t;
         let mut bits = BitMap::zero(self.t, self.c);
@@ -272,10 +275,14 @@ impl DecodedProgram {
     /// (`model::kernel`) over the decoded bit-planes.
     pub fn infer(&self, audio: &[f32]) -> (Vec<f32>, usize) {
         let mut x = self.preprocess(audio);
-        for lane in &self.lanes[..self.lanes.len() - 1] {
+        for (li, lane) in self.lanes[..self.lanes.len() - 1].iter().enumerate() {
+            let _r = region(layer_name(li));
             x = kernel::conv_layer_lanes(&x, lane);
         }
-        let logits = kernel::final_layer_gap_lanes(&x, self.lanes.last().unwrap());
+        let logits = {
+            let _r = region("final_gap");
+            kernel::final_layer_gap_lanes(&x, self.lanes.last().unwrap())
+        };
         let predicted = reference::argmax(&logits);
         (logits, predicted)
     }
@@ -310,9 +317,11 @@ impl DecodedProgram {
             return Vec::new();
         }
         let mut xs = self.preprocess_batch(batch);
-        for lane in &self.lanes[..self.lanes.len() - 1] {
+        for (li, lane) in self.lanes[..self.lanes.len() - 1].iter().enumerate() {
+            let _r = region(layer_name(li));
             xs = kernel::conv_layer_lanes_batch(&xs, lane);
         }
+        let _r = region("final_gap");
         kernel::final_layer_gap_lanes_batch(&xs, self.lanes.last().unwrap())
             .into_iter()
             .map(|logits| {
@@ -410,17 +419,20 @@ impl DecodedProgram {
         let n_layers = self.layers.len();
         let mut x = self.preprocess(audio);
         for li in 0..n_layers - 1 {
+            let _r = region(layer_name(li));
             let full = &self.layers[li];
             let t_out = if full.pooled { x.t / 2 } else { x.t };
             let mut out = BitMap::zero(t_out, full.c_out);
             for shards in &sp.lane_per_macro {
                 if let Some((off, shard)) = &shards[li] {
                     let part = kernel::conv_layer_lanes(&x, shard);
+                    let _m = region("merge");
                     reference::merge_shard(&mut out, *off, &part);
                 }
             }
             x = out;
         }
+        let _r = region("final_gap");
         let mut logits = vec![0.0f32; self.n_classes];
         for shards in &sp.lane_per_macro {
             if let Some((off, shard)) = &shards[n_layers - 1] {
@@ -448,6 +460,7 @@ impl DecodedProgram {
         let n_layers = self.layers.len();
         let mut xs = self.preprocess_batch(batch);
         for li in 0..n_layers - 1 {
+            let _r = region(layer_name(li));
             let full = &self.layers[li];
             let t_out = if full.pooled { xs[0].t / 2 } else { xs[0].t };
             let mut outs: Vec<BitMap> =
@@ -455,6 +468,7 @@ impl DecodedProgram {
             for shards in &sp.lane_per_macro {
                 if let Some((off, shard)) = &shards[li] {
                     let parts = kernel::conv_layer_lanes_batch(&xs, shard);
+                    let _m = region("merge");
                     for (out, part) in outs.iter_mut().zip(&parts) {
                         reference::merge_shard(out, *off, part);
                     }
@@ -462,6 +476,7 @@ impl DecodedProgram {
             }
             xs = outs;
         }
+        let _r = region("final_gap");
         let mut logits = vec![vec![0.0f32; self.n_classes]; xs.len()];
         for shards in &sp.lane_per_macro {
             if let Some((off, shard)) = &shards[n_layers - 1] {
@@ -541,6 +556,7 @@ impl DecodedProgram {
                                 if let Some(f) = fault {
                                     f(m, li);
                                 }
+                                let _r = region("shard_compute");
                                 let x = read_or_recover(current);
                                 let part = macro_shards[li]
                                     .as_ref()
@@ -559,6 +575,7 @@ impl DecodedProgram {
                             // barrier elected — it may itself have failed,
                             // so the merge is guarded the same way.
                             let merge = catch_unwind(AssertUnwindSafe(|| {
+                                let _r = region("shard_merge");
                                 let mut cur = write_or_recover(current);
                                 let t_out = if pooled { cur.t / 2 } else { cur.t };
                                 let mut out = BitMap::zero(t_out, c_out);
@@ -587,6 +604,7 @@ impl DecodedProgram {
                             if let Some(f) = fault {
                                 f(m, n_layers - 1);
                             }
+                            let _r = region("final_gap");
                             let x = read_or_recover(current);
                             kernel::final_layer_gap_lanes(&x, shard)
                         }));
@@ -636,6 +654,7 @@ impl DecodedProgram {
         let n_layers = self.layers.len();
         let mut x = self.preprocess(audio);
         for (li, l) in self.layers.iter().enumerate() {
+            let _r = if li == n_layers - 1 { region("final_gap") } else { region(layer_name(li)) };
             let t_in = x.t;
             let mut window = vec![0u64; l.plane_words];
             let mut sums = vec![0i32; l.c_out];

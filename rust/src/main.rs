@@ -28,10 +28,15 @@
 //! reproducible): latency=P,latency_ms=N,stall=P,stall_ms=N,transient=P,
 //! panic=P,corrupt=P,corrupt_sigma=S,seed=N
 //!
-//! Observability (run/serve/sweep/trace): --trace-out FILE writes a
-//! Perfetto/chrome://tracing trace (instruction JSONL on `trace`),
+//! Observability (run/serve/sweep/soak/trace): --trace-out FILE writes
+//! a Perfetto/chrome://tracing trace (instruction JSONL on `trace`),
 //! --metrics-out FILE dumps the telemetry registry (Prometheus text for
-//! .prom/.txt, JSON otherwise); either flag turns telemetry on.
+//! .prom/.txt, JSON otherwise), --profile-out FILE writes the scoped
+//! self-time profile as collapsed/folded stacks (flamegraph input),
+//! --events-out FILE writes the structured incident log as JSONL; any
+//! of these flags turns telemetry on. --slo p99_ms=..,availability=..
+//! [,window=N] arms the rolling SLO monitor on serve (report block +
+//! slo.* gauges) and gates `soak --check` cells on the same targets.
 //!
 //! The shared --variation SPEC is comma-separated key=value:
 //!   sigma=0.1,nl=0.3,mapping=single,mismatch=0.05,seed=7
@@ -59,7 +64,7 @@ use cimrv::model::{dataset, reference, KwsModel};
 use cimrv::robustness::{self, run_sweep, SweepConfig};
 use cimrv::runtime::GoldenModel;
 use cimrv::sim::Soc;
-use cimrv::telemetry::{self, perfetto, TraceBuilder};
+use cimrv::telemetry::{self, events, global_profiler, perfetto, SloConfig, TraceBuilder};
 use cimrv::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -80,17 +85,21 @@ fn main() -> Result<()> {
                  [--opt LEVEL] [--backend cycle|fast] [--macros N] [--batch B] [--calibrate] \
                  [--linger-us U] [--variation SPEC] [--n N] [--workers W] [--label L] \
                  [--seed S] [--skip K] [--no-golden] [--json] \
-                 [--trace-out FILE] [--metrics-out FILE]\n\
+                 [--trace-out FILE] [--metrics-out FILE] [--profile-out FILE] \
+                 [--events-out FILE]\n\
                  serve resilience: [--chaos SPEC] [--queue-cap N] [--deadline-ms D] \
-                 [--max-attempts K]\n\
+                 [--max-attempts K] [--slo p99_ms=..,availability=..[,window=N]]\n\
                  sweep: [--quick] [--check] [--sigmas 0,0.1,..] [--nl 0.3] \
                  [--mappings both|symmetric|single] [--seeds K] [--mismatch M] \
                  [--threads T] [--out FILE]\n\
                  soak: [--quick] [--check] [--n N] [--workers W] [--out FILE] \
-                 (default BENCH_resilience.json)\n\
+                 [--slo SPEC] (default BENCH_resilience.json)\n\
                  observability: --trace-out writes a Perfetto/chrome://tracing JSON \
                  (run/serve; JSONL on trace), --metrics-out dumps the metrics \
-                 registry (.prom/.txt = Prometheus text, else JSON)"
+                 registry (.prom/.txt = Prometheus text, else JSON), --profile-out \
+                 writes folded stacks (flamegraph input), --events-out writes the \
+                 incident log as JSONL, --slo arms the SLO monitor (serve) or \
+                 gates --check (soak)"
             );
             Ok(())
         }
@@ -101,17 +110,43 @@ fn load_model() -> Result<KwsModel> {
     KwsModel::load_default().context("loading artifacts (run `make artifacts` first)")
 }
 
-/// Shared `--trace-out FILE` / `--metrics-out FILE` handling: asking for
-/// either output implicitly turns telemetry on (with a fresh registry,
-/// so the dump covers exactly this invocation).
-fn telemetry_outputs(args: &Args) -> (Option<String>, Option<String>) {
-    let trace_out = args.opt("trace-out").map(str::to_string);
-    let metrics_out = args.opt("metrics-out").map(str::to_string);
-    if trace_out.is_some() || metrics_out.is_some() {
+/// Parsed observability output flags (`--trace-out`, `--metrics-out`,
+/// `--profile-out`, `--events-out`).
+#[derive(Default)]
+struct ObsOutputs {
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
+    profile_out: Option<String>,
+    events_out: Option<String>,
+}
+
+impl ObsOutputs {
+    fn any(&self) -> bool {
+        self.trace_out.is_some()
+            || self.metrics_out.is_some()
+            || self.profile_out.is_some()
+            || self.events_out.is_some()
+    }
+}
+
+/// Shared observability-output handling: asking for any output
+/// implicitly turns telemetry on (with a fresh registry, profiler, and
+/// event ring, so every dump covers exactly this invocation).
+fn telemetry_outputs(args: &Args) -> ObsOutputs {
+    let get = |k: &str| args.opt(k).map(str::to_string);
+    let outs = ObsOutputs {
+        trace_out: get("trace-out"),
+        metrics_out: get("metrics-out"),
+        profile_out: get("profile-out"),
+        events_out: get("events-out"),
+    };
+    if outs.any() {
         telemetry::set_enabled(true);
         telemetry::global().reset();
+        global_profiler().reset();
+        events().reset();
     }
-    (trace_out, metrics_out)
+    outs
 }
 
 /// Dump the global registry: Prometheus text exposition for `.prom` /
@@ -135,9 +170,54 @@ fn write_trace(path: &str, tb: TraceBuilder) -> Result<()> {
     Ok(())
 }
 
+/// `--profile-out`: collapsed/folded stacks (one `a;b;c <µs>` line per
+/// call path — direct flamegraph.pl / speedscope input), plus the
+/// per-region self/total table on stdout.
+fn write_profile(path: &str) -> Result<()> {
+    let prof = global_profiler();
+    std::fs::write(path, prof.render_folded()).with_context(|| format!("writing {path}"))?;
+    let dropped = prof.dropped_slices();
+    if dropped > 0 {
+        eprintln!("note: profiler slice ring overflowed ({dropped} slices dropped from the trace; folded totals are unaffected)");
+    }
+    println!("wrote {path} (folded stacks — flamegraph.pl or speedscope)");
+    print!("{}", prof.render_table());
+    Ok(())
+}
+
+/// `--events-out`: the structured incident log, one JSON object per line.
+fn write_events(path: &str) -> Result<()> {
+    let log = events();
+    std::fs::write(path, log.to_jsonl()).with_context(|| format!("writing {path}"))?;
+    let dropped = log.dropped();
+    let suffix = if dropped > 0 {
+        format!(", {dropped} older event(s) dropped by the ring")
+    } else {
+        String::new()
+    };
+    println!("wrote {path} ({} incident event(s){suffix})", log.len());
+    Ok(())
+}
+
+/// The non-trace observability dumps every subcommand shares (the trace
+/// itself carries command-specific tracks, so each command builds its
+/// own `TraceBuilder`).
+fn write_obs_outputs(outs: &ObsOutputs) -> Result<()> {
+    if let Some(path) = &outs.profile_out {
+        write_profile(path)?;
+    }
+    if let Some(path) = &outs.events_out {
+        write_events(path)?;
+    }
+    if let Some(path) = &outs.metrics_out {
+        write_metrics(path)?;
+    }
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let model = load_model()?;
-    let (trace_out, metrics_out) = telemetry_outputs(args);
+    let outs = telemetry_outputs(args);
     let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
     let kind = BackendKind::parse(&args.opt_or("backend", "cycle"))?;
     let macros = args.opt_usize("macros", 1)?.max(1);
@@ -192,25 +272,23 @@ fn cmd_run(args: &Args) -> Result<()> {
             println!("  [{i}] predicted {} (true {label})", r.predicted);
         }
         println!("host reference: all {batch} batched elements bit-exact \u{2713}");
-        if let (Some(path), Some(r)) = (&trace_out, rs.first()) {
+        if let (Some(path), Some(r)) = (&outs.trace_out, rs.first()) {
             let mut tb = TraceBuilder::new();
             perfetto::engine_tracks(&mut tb, be.program(), &r.markers, r.cycles);
+            perfetto::profiler_tracks(&mut tb, &global_profiler().slices_snapshot());
             write_trace(path, tb)?;
         }
-        if let Some(path) = &metrics_out {
-            write_metrics(path)?;
-        }
+        write_obs_outputs(&outs)?;
         return Ok(());
     }
     let r = be.run(&audio)?;
-    if let Some(path) = &trace_out {
+    if let Some(path) = &outs.trace_out {
         let mut tb = TraceBuilder::new();
         perfetto::engine_tracks(&mut tb, be.program(), &r.markers, r.cycles);
+        perfetto::profiler_tracks(&mut tb, &global_profiler().slices_snapshot());
         write_trace(path, tb)?;
     }
-    if let Some(path) = &metrics_out {
-        write_metrics(path)?;
-    }
+    write_obs_outputs(&outs)?;
     println!("predicted class {} (true {label}), logits {:?}", r.predicted, r.logits);
     println!("{}", r.phases.render());
     println!("{}", r.energy.breakdown());
@@ -383,7 +461,7 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = load_model()?;
-    let (trace_out, metrics_out) = telemetry_outputs(args);
+    let outs = telemetry_outputs(args);
     let workers = args.opt_usize("workers", 4)?;
     let n = args.opt_usize("n", 24)?;
     let opt = OptLevel::parse(&args.opt_or("opt", "full"))?;
@@ -405,6 +483,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.opt_usize("queue-cap", DEFAULT_QUEUE_CAP)?,
         chaos: args.opt("chaos").map(FaultPlan::parse_spec).transpose()?,
         max_attempts: args.opt_u64("max-attempts", u64::from(DEFAULT_MAX_ATTEMPTS))? as u32,
+        slo: args.opt("slo").map(SloConfig::parse_spec).transpose()?,
     };
     if opts.calibrate && kind == BackendKind::Cycle {
         eprintln!("note: --calibrate is a fast-backend option (cycle is already exact)");
@@ -503,9 +582,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if telemetry::enabled() {
         print!("{}", render_span_breakdown(&coord.stats));
     }
-    if let Some(path) = &trace_out {
+    if let Some(slo) = coord.stats.slo_report() {
+        print!("{}", slo.render());
+    }
+    if let Some(path) = &outs.trace_out {
+        let spans = coord.stats.spans.snapshot();
         let mut tb = TraceBuilder::new();
-        perfetto::serving_tracks(&mut tb, &coord.stats.spans.snapshot(), 256);
+        perfetto::serving_tracks(&mut tb, &spans, 256);
+        // Queue-depth and per-worker batch-size counter tracks from the
+        // same spans, plus the incident log as instant events.
+        perfetto::counter_tracks(&mut tb, &spans);
+        perfetto::incident_tracks(&mut tb, &events().snapshot());
+        perfetto::profiler_tracks(&mut tb, &global_profiler().slices_snapshot());
         // The engine timeline from one representative run, on the same
         // trace's time axis (its own process track).
         if let Some((markers, cycles)) = coord.stats.engine_sample() {
@@ -514,9 +602,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         write_trace(path, tb)?;
     }
-    if let Some(path) = &metrics_out {
-        write_metrics(path)?;
-    }
+    write_obs_outputs(&outs)?;
     coord.shutdown();
     Ok(())
 }
@@ -536,7 +622,7 @@ fn parse_f64_list(s: &str) -> Result<Vec<f64>> {
 /// mapping beats single-ended at the largest swept sigma (§II-B).
 fn cmd_sweep(args: &Args) -> Result<()> {
     let model = load_model()?;
-    let (_, metrics_out) = telemetry_outputs(args);
+    let outs = telemetry_outputs(args);
     let dir = cimrv::util::io::artifacts_dir()?;
     let eval = dataset::Dataset::load_eval(&dir, model.audio_len, model.n_classes)?;
     let n = args.opt_usize("n", eval.len())?.min(eval.len());
@@ -596,9 +682,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         report.check_mapping_claim()?;
         println!("check: symmetric mapping beats single-ended at max sigma \u{2713}");
     }
-    if let Some(path) = &metrics_out {
-        write_metrics(path)?;
-    }
+    write_obs_outputs(&outs)?;
     Ok(())
 }
 
@@ -612,7 +696,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 /// respawn/shed evidence per cell).
 fn cmd_soak(args: &Args) -> Result<()> {
     let model = load_model()?;
-    let (_, metrics_out) = telemetry_outputs(args);
+    let outs = telemetry_outputs(args);
+    let slo = args.opt("slo").map(SloConfig::parse_spec).transpose()?;
     let mut cfg = if args.flag("quick") { SoakConfig::quick() } else { SoakConfig::standard() };
     cfg.n = args.opt_usize("n", cfg.n)?;
     anyhow::ensure!(cfg.n > 0, "--n must be >= 1");
@@ -638,10 +723,14 @@ fn cmd_soak(args: &Args) -> Result<()> {
     if args.flag("check") {
         report.check()?;
         println!("check: availability contract holds under chaos \u{2713}");
+        if let Some(slo) = &slo {
+            report.check_slo(slo)?;
+            println!("check: SLO targets ({}) hold on full-availability cells \u{2713}", slo.spec());
+        }
+    } else if let Some(slo) = &slo {
+        eprintln!("note: --slo gates soak only with --check ({})", slo.spec());
     }
-    if let Some(path) = &metrics_out {
-        write_metrics(path)?;
-    }
+    write_obs_outputs(&outs)?;
     Ok(())
 }
 

@@ -32,6 +32,7 @@
 //! floating point, so vectorization cannot change a single bit.
 
 use super::reference::{gather_window, or_shifted_wide, BitMap, PackedLayer};
+use crate::telemetry::region;
 
 /// Output channels per lane block: one u64x4 AVX2 register pair's worth,
 /// and a full unroll for the portable SWAR path.
@@ -317,9 +318,15 @@ pub fn conv_layer_lanes_batch(xs: &[BitMap], layer: &LaneLayer) -> Vec<BitMap> {
     assert_eq!(xs[0].c, layer.c_in, "feature map width must match the layer");
     let (t_in, pw) = (xs[0].t, layer.plane_words);
     let t_out = if layer.pooled { t_in / 2 } else { t_in };
-    let (windows, acts) = build_windows_batch(xs, layer.kernel, pw);
+    let (windows, acts) = {
+        let _r = region("window_build");
+        build_windows_batch(xs, layer.kernel, pw)
+    };
     let mut outs: Vec<BitMap> = xs.iter().map(|_| BitMap::zero(t_out, layer.c_out)).collect();
     let mut sums = vec![0i32; t_in * LANES];
+    // One coarse region per kernel call (never per block: the guard
+    // would dominate the 8-lane popcount loop it measures).
+    let _r = region("block_sums");
     for b in 0..layer.blocks {
         let block = layer.block(b);
         let live = layer.live(b);
@@ -358,9 +365,13 @@ pub fn final_layer_gap_lanes_batch(xs: &[BitMap], layer: &LaneLayer) -> Vec<Vec<
     }
     assert_eq!(xs[0].c, layer.c_in, "feature map width must match the layer");
     let (t_in, pw) = (xs[0].t, layer.plane_words);
-    let (windows, acts) = build_windows_batch(xs, layer.kernel, pw);
+    let (windows, acts) = {
+        let _r = region("window_build");
+        build_windows_batch(xs, layer.kernel, pw)
+    };
     let mut logits = vec![vec![0.0f32; layer.c_out]; xs.len()];
     let mut sums = vec![0i32; t_in * LANES];
+    let _r = region("block_sums");
     for b in 0..layer.blocks {
         let block = layer.block(b);
         let live = layer.live(b);

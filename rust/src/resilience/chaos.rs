@@ -130,8 +130,40 @@ impl ChaosBackend {
         self.counts.panic += fired.panic as u64;
         self.counts.corrupt += fired.corrupt as u64;
         self.fault_log.push(fired.bits());
+        if fired.any() {
+            // The incident log sees only *fired* draws, not every call:
+            // quiet calls are the common case and would drown the ring.
+            let call = self.counts.calls;
+            crate::telemetry::incident(
+                crate::telemetry::IncidentKind::ChaosInjected,
+                None,
+                None,
+                || format!("call {call}: {} (bits {:#04b})", fired_names(&fired), fired.bits()),
+            );
+        }
         fired
     }
+}
+
+/// Comma-joined names of the fault classes that fired (event-log detail).
+fn fired_names(f: &FiredFaults) -> String {
+    let mut names = Vec::new();
+    if f.latency {
+        names.push("latency");
+    }
+    if f.stall {
+        names.push("stall");
+    }
+    if f.transient {
+        names.push("transient");
+    }
+    if f.panic {
+        names.push("panic");
+    }
+    if f.corrupt {
+        names.push("corrupt");
+    }
+    names.join("+")
 }
 
 impl InferenceBackend for ChaosBackend {

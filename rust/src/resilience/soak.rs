@@ -277,6 +277,22 @@ impl SoakReport {
         Ok(())
     }
 
+    /// Gate every full-availability cell on explicit SLO targets
+    /// (`soak --check --slo ...`). Cells that shed by design (tight
+    /// deadlines, tiny queues) are exempt: their availability is a
+    /// scenario property, not a service-level promise.
+    pub fn check_slo(&self, slo: &crate::telemetry::SloConfig) -> Result<()> {
+        for (spec, r) in &self.cells {
+            if !spec.expect_full_availability {
+                continue;
+            }
+            let p99_us = r.latency_s.map(|p| (p[2] * 1e6).round() as u64);
+            slo.check_observed(r.availability(), p99_us)
+                .map_err(|e| e.context(format!("cell {}: SLO violated ({})", r.name, slo.spec())))?;
+        }
+        Ok(())
+    }
+
     /// `BENCH_resilience.json` payload.
     pub fn to_json(&self) -> Json {
         let cells = self
@@ -516,6 +532,32 @@ mod tests {
         shed.failed = 0;
         shed.deadline_expired = 1;
         SoakReport { cells: vec![(tolerant, shed)], elapsed_s: 0.1 }.check().unwrap();
+    }
+
+    #[test]
+    fn slo_gate_applies_to_full_availability_cells_only() {
+        use crate::telemetry::SloConfig;
+        let strict = SloConfig::parse_spec("p99_ms=2.5,availability=0.999").unwrap();
+        let clean = SoakCell::new("clean", None);
+        // result(): 10/10 served, p99 = 3 ms -> availability passes,
+        // p99 fails the 2.5 ms target.
+        let report =
+            SoakReport { cells: vec![(clean.clone(), result("clean"))], elapsed_s: 0.1 };
+        let err = report.check_slo(&strict).unwrap_err();
+        assert!(format!("{err:#}").contains("p99"), "{err:#}");
+        // A looser p99 target passes.
+        let loose = SloConfig::parse_spec("p99_ms=5,availability=0.999").unwrap();
+        report.check_slo(&loose).unwrap();
+        // Lost availability trips the availability target...
+        let mut lossy = result("lossy");
+        lossy.ok = 9;
+        lossy.failed = 1;
+        let bad = SoakReport { cells: vec![(clean.clone(), lossy.clone())], elapsed_s: 0.1 };
+        let err = bad.check_slo(&loose).unwrap_err();
+        assert!(format!("{err:#}").contains("availability"), "{err:#}");
+        // ...but shed-by-design cells are exempt from the gate.
+        let tolerant = SoakCell { expect_full_availability: false, ..clean };
+        SoakReport { cells: vec![(tolerant, lossy)], elapsed_s: 0.1 }.check_slo(&loose).unwrap();
     }
 
     #[test]

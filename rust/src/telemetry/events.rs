@@ -1,0 +1,365 @@
+//! Structured incident event log: a bounded ring of typed, timestamped
+//! resilience events.
+//!
+//! Metrics say *how much*, spans say *how long* — this log says *what
+//! happened*: worker respawns, breaker trips/resets, degraded re-plans,
+//! admission/deadline sheds, chaos injections, calibration snaps, and
+//! terminal request failures, each carrying the worker and request ids
+//! needed to correlate with the span timeline. The log is a bounded
+//! ring ([`EVENT_RING_CAP`] by default): incidents are rare by design,
+//! but a pathological storm must not grow memory without bound — old
+//! events are dropped and counted instead.
+//!
+//! Recording goes through the same global enable flag as every other
+//! telemetry tier; [`incident`] takes the detail as a closure so a
+//! disabled process never formats the string. Export is JSONL
+//! ([`EventLog::to_jsonl`], `--events-out FILE`) — one self-contained
+//! object per line, schema-stable keys (`seq`, `ts_us`, `kind`,
+//! `worker`, `req_id`, `detail`) — plus Perfetto instant events via
+//! [`perfetto::incident_tracks`](super::perfetto).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+use crate::util::lock_or_recover;
+
+/// Default ring capacity: bounded memory under incident storms.
+pub const EVENT_RING_CAP: usize = 4096;
+
+/// What happened. The wire label ([`IncidentKind::as_str`]) is the
+/// JSONL/Perfetto schema; add variants, never repurpose labels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IncidentKind {
+    /// Supervisor restarted a dead worker (panic or breaker teardown).
+    WorkerRespawn,
+    /// A worker's circuit breaker hit its consecutive-fault threshold.
+    BreakerTrip,
+    /// A previously tripping worker served cleanly again.
+    BreakerReset,
+    /// A respawned worker was rebuilt on the survivor shard re-plan.
+    DegradedReplan,
+    /// Admission control refused a request (queue full).
+    Shed,
+    /// A request's deadline expired (at dequeue or post-exec).
+    DeadlineMiss,
+    /// The chaos backend fired one or more scheduled faults.
+    ChaosInjected,
+    /// Served latency/energy snapped to a measured cycle-level run.
+    CalibrationSnap,
+    /// A request failed back to the caller with a typed error.
+    RequestFailed,
+}
+
+impl IncidentKind {
+    /// Stable snake_case wire label.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            IncidentKind::WorkerRespawn => "worker_respawn",
+            IncidentKind::BreakerTrip => "breaker_trip",
+            IncidentKind::BreakerReset => "breaker_reset",
+            IncidentKind::DegradedReplan => "degraded_replan",
+            IncidentKind::Shed => "shed",
+            IncidentKind::DeadlineMiss => "deadline_miss",
+            IncidentKind::ChaosInjected => "chaos_injected",
+            IncidentKind::CalibrationSnap => "calibration_snap",
+            IncidentKind::RequestFailed => "request_failed",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str) (JSONL round-trips).
+    pub fn parse(s: &str) -> Option<IncidentKind> {
+        Some(match s {
+            "worker_respawn" => IncidentKind::WorkerRespawn,
+            "breaker_trip" => IncidentKind::BreakerTrip,
+            "breaker_reset" => IncidentKind::BreakerReset,
+            "degraded_replan" => IncidentKind::DegradedReplan,
+            "shed" => IncidentKind::Shed,
+            "deadline_miss" => IncidentKind::DeadlineMiss,
+            "chaos_injected" => IncidentKind::ChaosInjected,
+            "calibration_snap" => IncidentKind::CalibrationSnap,
+            "request_failed" => IncidentKind::RequestFailed,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded incident.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IncidentEvent {
+    /// Monotone sequence number within the log (survives ring drops, so
+    /// gaps at the front are visible).
+    pub seq: u64,
+    /// µs since the log's epoch (process start of the global log).
+    pub ts_us: u64,
+    pub kind: IncidentKind,
+    /// Worker index, when the incident belongs to one.
+    pub worker: Option<usize>,
+    /// Request id, when the incident belongs to one.
+    pub req_id: Option<u64>,
+    /// Free-form context (chaos spec, shed depth/cap, attempts, ...).
+    pub detail: String,
+}
+
+impl IncidentEvent {
+    /// Schema-stable JSON object (all six keys always present; absent
+    /// ids are `null`).
+    pub fn to_json(&self) -> Json {
+        let opt_num = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("ts_us", Json::num(self.ts_us as f64)),
+            ("kind", Json::str(self.kind.as_str())),
+            ("worker", opt_num(self.worker.map(|w| w as f64))),
+            ("req_id", opt_num(self.req_id.map(|r| r as f64))),
+            ("detail", Json::str(self.detail.clone())),
+        ])
+    }
+
+    /// Parse one JSONL object back (round-trip tests, external tools).
+    pub fn from_json(j: &Json) -> Result<IncidentEvent> {
+        let opt_u64 = |j: &Json| -> Result<Option<u64>> {
+            match j {
+                Json::Null => Ok(None),
+                other => Ok(Some(other.as_f64()? as u64)),
+            }
+        };
+        let kind_s = j.get("kind")?.as_str()?.to_string();
+        Ok(IncidentEvent {
+            seq: j.get("seq")?.as_f64()? as u64,
+            ts_us: j.get("ts_us")?.as_f64()? as u64,
+            kind: IncidentKind::parse(&kind_s)
+                .ok_or_else(|| anyhow!("unknown incident kind {kind_s:?}"))?,
+            worker: opt_u64(j.get("worker")?)?.map(|w| w as usize),
+            req_id: opt_u64(j.get("req_id")?)?,
+            detail: j.get("detail")?.as_str()?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: VecDeque<IncidentEvent>,
+    dropped: u64,
+}
+
+/// Bounded incident sink. The process-global instance ([`events`]) is
+/// what the coordinator and the chaos backend record into; tests build
+/// private ones.
+#[derive(Debug)]
+pub struct EventLog {
+    epoch: Instant,
+    cap: usize,
+    seq: AtomicU64,
+    ring: Mutex<Ring>,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        Self::with_capacity(EVENT_RING_CAP)
+    }
+}
+
+impl EventLog {
+    pub fn with_capacity(cap: usize) -> Self {
+        EventLog {
+            epoch: Instant::now(),
+            cap: cap.max(1),
+            seq: AtomicU64::new(0),
+            ring: Mutex::new(Ring::default()),
+        }
+    }
+
+    /// µs since this log's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record an incident (no-op while telemetry is disabled). Oldest
+    /// events fall off when the ring is full; `seq` stays monotone.
+    pub fn record(
+        &self,
+        kind: IncidentKind,
+        worker: Option<usize>,
+        req_id: Option<u64>,
+        detail: String,
+    ) {
+        if !crate::telemetry::enabled() {
+            return;
+        }
+        let ev = IncidentEvent {
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            ts_us: self.now_us(),
+            kind,
+            worker,
+            req_id,
+            detail,
+        };
+        let mut ring = lock_or_recover(&self.ring);
+        ring.buf.push_back(ev);
+        while ring.buf.len() > self.cap {
+            ring.buf.pop_front();
+            ring.dropped += 1;
+        }
+    }
+
+    /// Number of events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        lock_or_recover(&self.ring).buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events dropped off the front of the ring so far.
+    pub fn dropped(&self) -> u64 {
+        lock_or_recover(&self.ring).dropped
+    }
+
+    /// Copy of the held events, oldest first.
+    pub fn snapshot(&self) -> Vec<IncidentEvent> {
+        lock_or_recover(&self.ring).buf.iter().cloned().collect()
+    }
+
+    /// Clear the ring and restart sequence numbering (per-invocation
+    /// dumps, mirrors `Registry::reset`).
+    pub fn reset(&self) {
+        let mut ring = lock_or_recover(&self.ring);
+        ring.buf.clear();
+        ring.dropped = 0;
+        self.seq.store(0, Ordering::Relaxed);
+    }
+
+    /// JSONL export: one schema-stable object per line, oldest first.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in lock_or_recover(&self.ring).buf.iter() {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// The process-wide incident log.
+pub fn events() -> &'static EventLog {
+    static GLOBAL: OnceLock<EventLog> = OnceLock::new();
+    GLOBAL.get_or_init(EventLog::default)
+}
+
+/// Record into the global log. The detail closure only runs when
+/// telemetry is enabled, so disabled call sites never format.
+pub fn incident(
+    kind: IncidentKind,
+    worker: Option<usize>,
+    req_id: Option<u64>,
+    detail: impl FnOnce() -> String,
+) {
+    if !crate::telemetry::enabled() {
+        return;
+    }
+    events().record(kind, worker, req_id, detail());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::with_telemetry;
+
+    #[test]
+    fn disabled_log_records_nothing() {
+        with_telemetry(|| {
+            crate::telemetry::set_enabled(false);
+            let log = EventLog::with_capacity(8);
+            log.record(IncidentKind::Shed, Some(0), Some(1), "x".into());
+            assert!(log.is_empty());
+        });
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_keeps_seq_monotone() {
+        with_telemetry(|| {
+            let log = EventLog::with_capacity(4);
+            for i in 0..10u64 {
+                log.record(IncidentKind::ChaosInjected, None, Some(i), format!("call {i}"));
+            }
+            assert_eq!(log.len(), 4);
+            assert_eq!(log.dropped(), 6);
+            let snap = log.snapshot();
+            // The survivors are the newest four, in order, with their
+            // original sequence numbers (the front gap is visible).
+            assert_eq!(snap.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+            assert_eq!(snap[0].req_id, Some(6));
+            log.reset();
+            assert!(log.is_empty());
+            assert_eq!(log.dropped(), 0);
+            log.record(IncidentKind::Shed, None, None, "post-reset".into());
+            assert_eq!(log.snapshot()[0].seq, 0);
+        });
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_util_json() {
+        with_telemetry(|| {
+            let log = EventLog::with_capacity(16);
+            log.record(IncidentKind::BreakerTrip, Some(2), None, "5 consecutive faults".into());
+            log.record(
+                IncidentKind::DeadlineMiss,
+                Some(0),
+                Some(42),
+                "waited 1234 us \"quoted\"".into(),
+            );
+            let jsonl = log.to_jsonl();
+            let lines: Vec<&str> = jsonl.lines().collect();
+            assert_eq!(lines.len(), 2);
+            let orig = log.snapshot();
+            for (line, want) in lines.iter().zip(&orig) {
+                let j = Json::parse(line).expect("each line is a standalone JSON object");
+                for key in ["seq", "ts_us", "kind", "worker", "req_id", "detail"] {
+                    assert!(j.get(key).is_ok(), "line missing {key}: {line}");
+                }
+                let back = IncidentEvent::from_json(&j).unwrap();
+                assert_eq!(&back, want);
+            }
+            // null ids round-trip as None.
+            let j = Json::parse(lines[0]).unwrap();
+            assert_eq!(j.get("req_id").unwrap(), &Json::Null);
+        });
+    }
+
+    #[test]
+    fn kind_labels_round_trip() {
+        for k in [
+            IncidentKind::WorkerRespawn,
+            IncidentKind::BreakerTrip,
+            IncidentKind::BreakerReset,
+            IncidentKind::DegradedReplan,
+            IncidentKind::Shed,
+            IncidentKind::DeadlineMiss,
+            IncidentKind::ChaosInjected,
+            IncidentKind::CalibrationSnap,
+            IncidentKind::RequestFailed,
+        ] {
+            assert_eq!(IncidentKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(IncidentKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn incident_helper_gates_the_detail_closure() {
+        with_telemetry(|| {
+            crate::telemetry::set_enabled(false);
+            let mut ran = false;
+            incident(IncidentKind::Shed, None, None, || {
+                ran = true;
+                String::new()
+            });
+            assert!(!ran, "detail must not be formatted while disabled");
+        });
+    }
+}

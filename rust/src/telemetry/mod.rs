@@ -1,7 +1,8 @@
-//! Unified telemetry: metrics registry, request-lifecycle spans, and
-//! Perfetto trace export.
+//! Unified telemetry: metrics registry, request-lifecycle spans,
+//! Perfetto trace export, continuous profiling, the incident event
+//! log, and SLO monitoring.
 //!
-//! Three tiers share one on/off switch ([`set_enabled`]):
+//! Every tier shares one on/off switch ([`set_enabled`]):
 //!
 //! * [`registry`] — process-global counters/gauges/histograms behind
 //!   atomics, with Prometheus text and JSON exposition (`--metrics-out`).
@@ -11,18 +12,33 @@
 //!   timeline and the engines' phase/fire schedules into one
 //!   `trace.json` (`--trace-out`), loadable in ui.perfetto.dev or
 //!   chrome://tracing.
+//! * [`profiler`] — scoped self-time regions through the fsim/kernel
+//!   hot paths and the worker loop, folded-stack + table + Perfetto
+//!   slice export (`--profile-out`).
+//! * [`events`] — a bounded ring of typed resilience incidents
+//!   (respawns, breaker trips, sheds, chaos injections, ...), JSONL +
+//!   Perfetto instant export (`--events-out`).
+//! * [`slo`] — rolling-window availability / p99 / error-budget burn
+//!   tracking against `--slo` targets, rendered in the serve report and
+//!   gating `soak --check`.
 //!
 //! Everything is off by default: the record paths cost one relaxed
 //! atomic load until a CLI flag (or a test/bench) turns telemetry on —
 //! `benches/telemetry_overhead.rs` holds that claim to ≤1% disabled /
-//! ≤5% enabled on the packed serving path.
+//! ≤5% enabled on the packed serving path, profiler regions included.
 
+pub mod events;
 pub mod perfetto;
+pub mod profiler;
 pub mod registry;
+pub mod slo;
 pub mod spans;
 
+pub use events::{events, incident, EventLog, IncidentEvent, IncidentKind};
 pub use perfetto::TraceBuilder;
+pub use profiler::{global_profiler, region, Profiler, Region};
 pub use registry::{enabled, global, set_enabled, Counter, Gauge, Histogram, Registry};
+pub use slo::{SloConfig, SloMonitor, SloReport};
 pub use spans::{RequestSpan, SpanLog, SpanOutcome};
 
 /// Serialize unit tests that flip the process-global enable flag, so

@@ -32,6 +32,11 @@ pub use crate::clock::CLOCK_MHZ;
 pub const PID_SERVE: u64 = 1;
 pub const PID_REQUESTS: u64 = 2;
 pub const PID_ENGINE: u64 = 3;
+pub const PID_PROFILER: u64 = 4;
+
+/// Thread id on the serve process reserved for incident instants (well
+/// above any realistic worker id, below none that exist).
+pub const TID_INCIDENTS: u64 = 95;
 
 /// Builds a Chrome trace-event JSON document.
 #[derive(Debug, Default)]
@@ -82,6 +87,41 @@ impl TraceBuilder {
             ("ph", Json::str("X")),
             ("ts", Json::num(ts_us)),
             ("dur", Json::num(dur_us.max(0.0))),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+
+    /// Add a counter (`ph:"C"`) sample. Perfetto renders consecutive
+    /// samples sharing one `(pid, name)` pair as a stepped area chart.
+    pub fn counter(&mut self, pid: u64, name: &str, ts_us: f64, value: f64) {
+        self.events.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("ph", Json::str("C")),
+            ("ts", Json::num(ts_us)),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("value", Json::num(value))])),
+        ]));
+    }
+
+    /// Add an instant (`ph:"i"`, thread-scoped) event.
+    pub fn instant(
+        &mut self,
+        pid: u64,
+        tid: u64,
+        name: &str,
+        cat: &str,
+        ts_us: f64,
+        args: Vec<(&str, Json)>,
+    ) {
+        self.events.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str(cat)),
+            ("ph", Json::str("i")),
+            ("s", Json::str("t")),
+            ("ts", Json::num(ts_us)),
             ("pid", Json::num(pid as f64)),
             ("tid", Json::num(tid as f64)),
             ("args", Json::obj(args)),
@@ -374,6 +414,116 @@ pub fn serving_tracks(tb: &mut TraceBuilder, spans: &[RequestSpan], max_request_
     }
 }
 
+/// Derive counter tracks from the request spans: a queue-depth series
+/// (each admitted request raises depth at enqueue and lowers it when a
+/// worker starts assembling its batch) and a per-worker batch-size
+/// series sampled when each batch starts executing.
+pub fn counter_tracks(tb: &mut TraceBuilder, spans: &[RequestSpan]) {
+    if spans.is_empty() {
+        return;
+    }
+    // Queue depth: +1 at enqueue, -1 at assembly start, for every span a
+    // worker eventually picked up. Admission-shed spans (worker ==
+    // usize::MAX) never occupied the queue.
+    let mut deltas: Vec<(u64, i64)> = Vec::new();
+    for s in spans {
+        if s.worker == usize::MAX {
+            continue;
+        }
+        deltas.push((s.enqueue_us, 1));
+        deltas.push((s.assembly_start_us, -1));
+    }
+    deltas.sort_unstable();
+    let mut depth = 0i64;
+    let mut i = 0;
+    while i < deltas.len() {
+        let ts = deltas[i].0;
+        while i < deltas.len() && deltas[i].0 == ts {
+            depth += deltas[i].1;
+            i += 1;
+        }
+        tb.counter(PID_SERVE, "queue depth", ts as f64, depth as f64);
+    }
+    // Batch sizes: one sample per batch (first member seen), one counter
+    // series per worker so the step charts don't interleave.
+    let mut seen: Vec<(usize, u64)> = Vec::new();
+    for s in spans {
+        if s.worker == usize::MAX || seen.contains(&(s.worker, s.exec_start_us)) {
+            continue;
+        }
+        seen.push((s.worker, s.exec_start_us));
+        let n = spans
+            .iter()
+            .filter(|t| t.worker == s.worker && t.exec_start_us == s.exec_start_us)
+            .count();
+        tb.counter(
+            PID_SERVE,
+            &format!("batch size w{}", s.worker),
+            s.exec_start_us as f64,
+            n as f64,
+        );
+    }
+}
+
+/// Render profiler slices into their own process: one thread track per
+/// profiled OS thread, nesting reconstructed from the recorded depth.
+pub fn profiler_tracks(tb: &mut TraceBuilder, slices: &[super::profiler::ProfSlice]) {
+    if slices.is_empty() {
+        return;
+    }
+    tb.process_name(PID_PROFILER, "profiler (self-time regions)");
+    let mut tids: Vec<usize> = slices.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for &t in &tids {
+        tb.thread_name(PID_PROFILER, t as u64, &format!("profiled thread {t}"));
+    }
+    for s in slices {
+        tb.complete(
+            PID_PROFILER,
+            s.tid as u64,
+            &s.name,
+            "profile",
+            s.start_us as f64,
+            s.dur_us as f64,
+            vec![
+                ("path", Json::str(s.path.as_str())),
+                ("depth", Json::num(s.depth as f64)),
+            ],
+        );
+    }
+}
+
+/// Render incident-log events as instants on a dedicated serve-process
+/// thread, so breaker trips / sheds / respawns line up against the
+/// worker and request tracks they explain.
+pub fn incident_tracks(tb: &mut TraceBuilder, events: &[super::events::IncidentEvent]) {
+    if events.is_empty() {
+        return;
+    }
+    tb.thread_name(PID_SERVE, TID_INCIDENTS, "incidents");
+    for e in events {
+        let mut args = vec![
+            ("seq", Json::num(e.seq as f64)),
+            ("detail", Json::str(e.detail.as_str())),
+        ];
+        if let Some(w) = e.worker {
+            args.push(("worker", Json::num(w as f64)));
+        }
+        if let Some(r) = e.req_id {
+            args.push(("req_id", Json::num(r as f64)));
+        }
+        tb.instant(
+            PID_SERVE,
+            TID_INCIDENTS,
+            e.kind.as_str(),
+            "incident",
+            e.ts_us as f64,
+            args,
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -548,8 +698,118 @@ mod tests {
     fn empty_inputs_build_empty_but_valid_docs() {
         let mut tb = TraceBuilder::new();
         serving_tracks(&mut tb, &[], 256);
+        counter_tracks(&mut tb, &[]);
+        profiler_tracks(&mut tb, &[]);
+        incident_tracks(&mut tb, &[]);
         assert!(tb.is_empty());
         let doc = tb.build();
         assert_eq!(doc.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn counter_tracks_integrate_queue_depth_and_batch_sizes() {
+        let span = |req_id: u64, worker: usize, enq: u64, asm: u64, exec: u64| RequestSpan {
+            req_id,
+            worker,
+            batch_size: 2,
+            enqueue_us: enq,
+            assembly_start_us: asm,
+            assembled_us: asm + 5,
+            exec_start_us: exec,
+            exec_end_us: exec + 100,
+            respond_us: exec + 110,
+            shard_fires: vec![10],
+            outcome: SpanOutcome::Ok,
+        };
+        // Two requests queue up (depth 2), both drained into one batch
+        // at 20µs; a third is shed at admission and must not count.
+        let mut shed = span(2, usize::MAX, 12, 12, 12);
+        shed.outcome = SpanOutcome::Shed;
+        let spans = vec![span(0, 0, 5, 20, 30), span(1, 0, 10, 20, 30), shed];
+        let mut tb = TraceBuilder::new();
+        counter_tracks(&mut tb, &spans);
+        let doc = tb.build();
+        assert_event_schema(&doc);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let samples: Vec<(f64, f64)> = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(|p| p.as_str().map(str::to_string)).ok().as_deref()
+                    == Some("C")
+                    && e.get("name").and_then(|n| n.as_str().map(str::to_string)).ok().as_deref()
+                        == Some("queue depth")
+            })
+            .map(|e| {
+                (
+                    e.get("ts").unwrap().as_f64().unwrap(),
+                    e.path(&["args", "value"]).unwrap().as_f64().unwrap(),
+                )
+            })
+            .collect();
+        assert_eq!(samples, vec![(5.0, 1.0), (10.0, 2.0), (20.0, 0.0)]);
+        // One batch-size sample for worker 0's batch of two.
+        let batch = events
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(|n| n.as_str().map(str::to_string)).ok().as_deref()
+                    == Some("batch size w0")
+            })
+            .unwrap();
+        assert_eq!(batch.path(&["args", "value"]).unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(batch.get("ts").unwrap().as_f64().unwrap(), 30.0);
+    }
+
+    #[test]
+    fn profiler_and_incident_tracks_carry_valid_phases() {
+        use super::super::events::{IncidentEvent, IncidentKind};
+        use super::super::profiler::ProfSlice;
+        let slices = vec![
+            ProfSlice {
+                tid: 0,
+                name: "infer".to_string(),
+                path: "infer".to_string(),
+                start_us: 10,
+                dur_us: 100,
+                depth: 0,
+            },
+            ProfSlice {
+                tid: 0,
+                name: "conv_l0".to_string(),
+                path: "infer;conv_l0".to_string(),
+                start_us: 12,
+                dur_us: 40,
+                depth: 1,
+            },
+        ];
+        let ev = IncidentEvent {
+            seq: 0,
+            ts_us: 55,
+            kind: IncidentKind::BreakerTrip,
+            worker: Some(1),
+            req_id: None,
+            detail: "5 consecutive failures".to_string(),
+        };
+        let mut tb = TraceBuilder::new();
+        profiler_tracks(&mut tb, &slices);
+        incident_tracks(&mut tb, &[ev]);
+        let doc = tb.build();
+        assert_event_schema(&doc);
+        let text = doc.to_string();
+        assert!(text.contains("profiled thread 0"));
+        assert!(text.contains("\"conv_l0\""));
+        assert!(text.contains("infer;conv_l0"));
+        assert!(text.contains("breaker_trip"));
+        assert!(text.contains("\"incidents\""));
+        // Instants carry the scope field chrome://tracing requires.
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let inst = events
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(|p| p.as_str().map(str::to_string)).ok().as_deref()
+                    == Some("i")
+            })
+            .unwrap();
+        assert_eq!(inst.get("s").unwrap().as_str().unwrap(), "t");
+        assert_eq!(inst.get("tid").unwrap().as_f64().unwrap(), TID_INCIDENTS as f64);
     }
 }

@@ -1,0 +1,442 @@
+//! Scoped self-time profiler: nestable regions behind the global
+//! telemetry switch.
+//!
+//! A [`region`] guard marks one stretch of work. Regions nest — opening
+//! a region inside another attributes the child's wall time to the
+//! child, and the parent's *self* time becomes its total minus its
+//! children's totals (exactly, by construction: a parent accumulates
+//! each closing child's duration and subtracts the sum when it closes
+//! itself). Aggregation is per thread — each thread owns its frame
+//! stack (a plain `RefCell`, no lock on open) and folds closed regions
+//! into a `path → {total, self, count}` map shared with the global
+//! [`Profiler`] — so the record path takes no cross-thread lock until
+//! a region *closes*, and even then only an uncontended per-thread
+//! mutex plus one bounded push into the slice buffer.
+//!
+//! Disabled cost is the telemetry contract: [`region`] is one relaxed
+//! load of the global flag and an inert guard. The hot loops use
+//! [`layer_name`] for per-layer region labels so the disabled path
+//! never formats a string.
+//!
+//! Three exports, all from the same recorded data:
+//!
+//! * **Folded stacks** ([`Profiler::render_folded`]) — one line per
+//!   distinct call path, `a;b;c <self_µs>`, directly consumable by
+//!   `flamegraph.pl` / speedscope (`--profile-out FILE`).
+//! * **Self/total table** ([`Profiler::render_table`]) — per region
+//!   name, printed after `run`/`serve` when telemetry is on.
+//! * **Perfetto slices** ([`Profiler::slices_snapshot`]) — bounded
+//!   buffer of timestamped slices the trace exporter renders as its
+//!   own process ([`perfetto::profiler_tracks`](super::perfetto)).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::lock_or_recover;
+
+/// Upper bound on buffered Perfetto slices; past it, closes still
+/// aggregate (folded stacks and the table stay exact) but no new
+/// timeline slices are kept ([`Profiler::dropped_slices`] counts them).
+pub const SLICE_CAP: usize = 16_384;
+
+/// Aggregate for one distinct call path (`a;b;c`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PathStat {
+    /// Total wall time spent with this path open, ns.
+    pub total_ns: u64,
+    /// Wall time minus time attributed to child regions, ns.
+    pub self_ns: u64,
+    /// Number of times this exact path closed.
+    pub count: u64,
+}
+
+/// One region's self/total aggregate by leaf name (the table view).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionRow {
+    pub name: String,
+    pub count: u64,
+    pub total_us: u64,
+    pub self_us: u64,
+}
+
+/// One closed region instance, timestamped for the Perfetto timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfSlice {
+    /// Profiler-assigned thread index (registration order).
+    pub tid: usize,
+    /// Leaf region name.
+    pub name: String,
+    /// Full `;`-joined path.
+    pub path: String,
+    /// µs since the profiler epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Nesting depth at open (0 = top level).
+    pub depth: usize,
+}
+
+#[derive(Debug)]
+struct ThreadAgg {
+    tid: usize,
+    agg: Mutex<BTreeMap<String, PathStat>>,
+}
+
+/// Process-wide sink the per-thread recorders register with.
+#[derive(Debug)]
+pub struct Profiler {
+    epoch: Instant,
+    threads: Mutex<Vec<Arc<ThreadAgg>>>,
+    slices: Mutex<Vec<ProfSlice>>,
+    dropped: AtomicU64,
+    next_tid: AtomicUsize,
+}
+
+impl Profiler {
+    fn new() -> Self {
+        Profiler {
+            epoch: Instant::now(),
+            threads: Mutex::new(Vec::new()),
+            slices: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+            next_tid: AtomicUsize::new(0),
+        }
+    }
+
+    fn register(&self) -> Arc<ThreadAgg> {
+        let t = Arc::new(ThreadAgg {
+            tid: self.next_tid.fetch_add(1, Ordering::Relaxed),
+            agg: Mutex::new(BTreeMap::new()),
+        });
+        lock_or_recover(&self.threads).push(Arc::clone(&t));
+        t
+    }
+
+    /// Clear all recorded data (per-thread aggregates stay registered,
+    /// so live threads keep recording into their cleared maps).
+    pub fn reset(&self) {
+        for t in lock_or_recover(&self.threads).iter() {
+            lock_or_recover(&t.agg).clear();
+        }
+        lock_or_recover(&self.slices).clear();
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// Merge every thread's aggregates into one `path → stat` map.
+    pub fn fold(&self) -> BTreeMap<String, PathStat> {
+        let mut out: BTreeMap<String, PathStat> = BTreeMap::new();
+        for t in lock_or_recover(&self.threads).iter() {
+            for (path, s) in lock_or_recover(&t.agg).iter() {
+                let e = out.entry(path.clone()).or_default();
+                e.total_ns += s.total_ns;
+                e.self_ns += s.self_ns;
+                e.count += s.count;
+            }
+        }
+        out
+    }
+
+    /// Has anything been recorded since the last reset?
+    pub fn has_data(&self) -> bool {
+        lock_or_recover(&self.threads)
+            .iter()
+            .any(|t| !lock_or_recover(&t.agg).is_empty())
+    }
+
+    /// Folded-stack text (`path self_µs`, one line per path) —
+    /// flamegraph.pl / speedscope input. Region names never contain
+    /// spaces, so the final space-separated field is always the value.
+    pub fn render_folded(&self) -> String {
+        let mut out = String::new();
+        for (path, s) in self.fold() {
+            out.push_str(&format!("{path} {}\n", s.self_ns / 1_000));
+        }
+        out
+    }
+
+    /// Per-region rows aggregated by leaf name, heaviest self time
+    /// first. Totals for a name sum over every path it closes under.
+    pub fn table(&self) -> Vec<RegionRow> {
+        let mut by_name: BTreeMap<String, PathStat> = BTreeMap::new();
+        for (path, s) in self.fold() {
+            let leaf = path.rsplit(';').next().unwrap_or(&path).to_string();
+            let e = by_name.entry(leaf).or_default();
+            e.total_ns += s.total_ns;
+            e.self_ns += s.self_ns;
+            e.count += s.count;
+        }
+        let mut rows: Vec<RegionRow> = by_name
+            .into_iter()
+            .map(|(name, s)| RegionRow {
+                name,
+                count: s.count,
+                total_us: s.total_ns / 1_000,
+                self_us: s.self_ns / 1_000,
+            })
+            .collect();
+        rows.sort_by(|a, b| b.self_us.cmp(&a.self_us).then(a.name.cmp(&b.name)));
+        rows
+    }
+
+    /// The self/total table as printed after `run`/`serve`.
+    pub fn render_table(&self) -> String {
+        let rows = self.table();
+        if rows.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from(
+            "profile (self time, aggregated across threads):\n\
+             region                     count    total µs     self µs\n",
+        );
+        for r in &rows {
+            out.push_str(&format!(
+                "  {:<24} {:>6} {:>11} {:>11}\n",
+                r.name, r.count, r.total_us, r.self_us
+            ));
+        }
+        let dropped = self.dropped_slices();
+        if dropped > 0 {
+            out.push_str(&format!("  ({dropped} timeline slices dropped past the {SLICE_CAP}-slice cap; aggregates stay exact)\n"));
+        }
+        out
+    }
+
+    /// Copy of the buffered timeline slices, in close order.
+    pub fn slices_snapshot(&self) -> Vec<ProfSlice> {
+        lock_or_recover(&self.slices).clone()
+    }
+
+    /// Slices discarded because the buffer hit [`SLICE_CAP`].
+    pub fn dropped_slices(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-wide profiler every [`region`] records into.
+pub fn global_profiler() -> &'static Profiler {
+    static GLOBAL: OnceLock<Profiler> = OnceLock::new();
+    GLOBAL.get_or_init(Profiler::new)
+}
+
+struct Frame {
+    name: String,
+    start: Instant,
+    child_ns: u64,
+}
+
+struct ThreadState {
+    agg: Arc<ThreadAgg>,
+    stack: Vec<Frame>,
+}
+
+thread_local! {
+    static STATE: RefCell<Option<ThreadState>> = const { RefCell::new(None) };
+}
+
+/// RAII guard for one open region; closing (drop) does the accounting.
+#[must_use = "a region measures the scope of its guard; bind it with `let _r = ...`"]
+pub struct Region {
+    active: bool,
+}
+
+/// Open a nestable profiling region. One relaxed load and an inert
+/// guard when telemetry is disabled. `name` must not contain spaces or
+/// semicolons (they would corrupt the folded-stack grammar); offenders
+/// are recorded with the bad characters replaced by `_`.
+pub fn region(name: &str) -> Region {
+    if !crate::telemetry::enabled() {
+        return Region { active: false };
+    }
+    let clean: String = name
+        .chars()
+        .map(|c| if c == ' ' || c == ';' { '_' } else { c })
+        .collect();
+    STATE.with(|s| {
+        let mut s = s.borrow_mut();
+        let st = s.get_or_insert_with(|| ThreadState {
+            agg: global_profiler().register(),
+            stack: Vec::new(),
+        });
+        st.stack.push(Frame { name: clean, start: Instant::now(), child_ns: 0 });
+    });
+    Region { active: true }
+}
+
+/// Static per-layer region labels (`conv_l0`, `conv_l1`, ...): keeps
+/// the disabled hot path free of `format!` allocations.
+pub fn layer_name(i: usize) -> &'static str {
+    const NAMES: [&str; 16] = [
+        "conv_l0", "conv_l1", "conv_l2", "conv_l3", "conv_l4", "conv_l5", "conv_l6", "conv_l7",
+        "conv_l8", "conv_l9", "conv_l10", "conv_l11", "conv_l12", "conv_l13", "conv_l14",
+        "conv_l15",
+    ];
+    NAMES.get(i).copied().unwrap_or("conv_ln")
+}
+
+impl Drop for Region {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        // try_with: a guard dropped during thread teardown (after TLS
+        // destruction) silently loses its sample instead of aborting.
+        let _ = STATE.try_with(|s| {
+            let mut s = s.borrow_mut();
+            let Some(st) = s.as_mut() else { return };
+            let Some(f) = st.stack.pop() else { return };
+            let dur_ns = f.start.elapsed().as_nanos() as u64;
+            let self_ns = dur_ns.saturating_sub(f.child_ns);
+            let depth = st.stack.len();
+            let mut path = String::new();
+            for fr in &st.stack {
+                path.push_str(&fr.name);
+                path.push(';');
+            }
+            path.push_str(&f.name);
+            if let Some(parent) = st.stack.last_mut() {
+                parent.child_ns += dur_ns;
+            }
+            {
+                let mut agg = lock_or_recover(&st.agg.agg);
+                let e = agg.entry(path.clone()).or_default();
+                e.total_ns += dur_ns;
+                e.self_ns += self_ns;
+                e.count += 1;
+            }
+            let p = global_profiler();
+            let mut slices = lock_or_recover(&p.slices);
+            if slices.len() < SLICE_CAP {
+                let start_us = f.start.saturating_duration_since(p.epoch).as_micros() as u64;
+                slices.push(ProfSlice {
+                    tid: st.agg.tid,
+                    name: f.name,
+                    path,
+                    start_us,
+                    dur_us: dur_ns / 1_000,
+                    depth,
+                });
+            } else {
+                drop(slices);
+                p.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::with_telemetry;
+
+    fn spin_us(us: u64) {
+        let t0 = Instant::now();
+        while t0.elapsed().as_micros() < us as u128 {
+            std::hint::spin_loop();
+        }
+    }
+
+    #[test]
+    fn disabled_regions_record_nothing() {
+        with_telemetry(|| {
+            crate::telemetry::set_enabled(false);
+            global_profiler().reset();
+            {
+                let _a = region("off_outer");
+                let _b = region("off_inner");
+            }
+            assert!(!global_profiler().fold().contains_key("off_outer"));
+        });
+    }
+
+    #[test]
+    fn nesting_self_time_is_exact() {
+        with_telemetry(|| {
+            global_profiler().reset();
+            {
+                let _a = region("nest_a");
+                spin_us(200);
+                {
+                    let _b = region("nest_b");
+                    spin_us(200);
+                }
+                spin_us(100);
+            }
+            let fold = global_profiler().fold();
+            let a = fold.get("nest_a").copied().expect("outer path recorded");
+            let b = fold.get("nest_a;nest_b").copied().expect("nested path recorded");
+            assert_eq!(a.count, 1);
+            assert_eq!(b.count, 1);
+            // The invariant is exact by construction: a's child_ns is
+            // b's measured duration, so self + child == total.
+            assert_eq!(a.self_ns + b.total_ns, a.total_ns);
+            assert_eq!(b.self_ns, b.total_ns, "leaf self == total");
+            assert!(a.total_ns >= b.total_ns);
+            // Table view: one row per leaf name, self-descending.
+            let rows = global_profiler().table();
+            assert!(rows.iter().any(|r| r.name == "nest_a"));
+            assert!(rows.iter().any(|r| r.name == "nest_b"));
+            assert!(!global_profiler().render_table().is_empty());
+        });
+    }
+
+    #[test]
+    fn folded_lines_and_slices_share_the_grammar() {
+        with_telemetry(|| {
+            global_profiler().reset();
+            {
+                let _a = region("fold outer"); // space sanitized to _
+                let _b = region("fold_leaf");
+            }
+            let folded = global_profiler().render_folded();
+            let line = folded
+                .lines()
+                .find(|l| l.starts_with("fold_outer;fold_leaf "))
+                .expect("nested folded line present");
+            // `stack self_us`: exactly one space, integer value.
+            let (stack, val) = line.rsplit_once(' ').unwrap();
+            assert_eq!(stack, "fold_outer;fold_leaf");
+            val.parse::<u64>().expect("folded value is an integer");
+            let slices = global_profiler().slices_snapshot();
+            let s = slices.iter().find(|s| s.name == "fold_leaf").unwrap();
+            assert_eq!(s.depth, 1);
+            assert_eq!(s.path, "fold_outer;fold_leaf");
+            assert_eq!(global_profiler().dropped_slices(), 0);
+        });
+    }
+
+    #[test]
+    fn per_thread_aggregation_is_exact_under_contention() {
+        with_telemetry(|| {
+            global_profiler().reset();
+            const THREADS: usize = 8;
+            const PER_THREAD: usize = 200;
+            std::thread::scope(|scope| {
+                for _ in 0..THREADS {
+                    scope.spawn(|| {
+                        for _ in 0..PER_THREAD {
+                            let _o = region("cont_outer");
+                            let _i = region("cont_inner");
+                        }
+                    });
+                }
+            });
+            let fold = global_profiler().fold();
+            let total = (THREADS * PER_THREAD) as u64;
+            assert_eq!(fold["cont_outer"].count, total);
+            assert_eq!(fold["cont_outer;cont_inner"].count, total);
+            // Per-path invariant survives the merge: self + children == total.
+            let o = fold["cont_outer"];
+            let i = fold["cont_outer;cont_inner"];
+            assert_eq!(o.self_ns + i.total_ns, o.total_ns);
+        });
+    }
+
+    #[test]
+    fn layer_names_are_static_and_bounded() {
+        assert_eq!(layer_name(0), "conv_l0");
+        assert_eq!(layer_name(15), "conv_l15");
+        assert_eq!(layer_name(99), "conv_ln");
+    }
+}

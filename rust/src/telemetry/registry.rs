@@ -118,6 +118,14 @@ impl Histogram {
         (0..13).map(|i| 4u64.pow(i)).collect()
     }
 
+    /// Fine-grained microsecond ladder: 1µs .. ~1s, powers of two —
+    /// for sub-100µs populations (kernel regions, fast-path executes)
+    /// where the powers-of-four ladder collapses everything into two
+    /// or three buckets.
+    pub fn fine_us_bounds() -> Vec<u64> {
+        (0..=20).map(|i| 1u64 << i).collect()
+    }
+
     #[inline]
     pub fn observe(&self, v: u64) {
         if !enabled() {
@@ -182,6 +190,87 @@ enum Metric {
 #[derive(Debug, Default)]
 pub struct Registry {
     metrics: Mutex<BTreeMap<String, Metric>>,
+    help: Mutex<BTreeMap<String, String>>,
+}
+
+/// Sanitize a metric name into the Prometheus grammar
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`): invalid characters become `_` and a
+/// leading digit gets a `_` prefix. The registry's dotted namespaces
+/// keep their historical mapping (`serve.requests` → `serve_requests`).
+fn sanitize_metric_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 1);
+    for (i, c) in name.chars().enumerate() {
+        let valid = c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit());
+        if valid {
+            out.push(c);
+        } else if i == 0 && c.is_ascii_digit() {
+            out.push('_');
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Escape a label value for the text exposition (`\` → `\\`, `"` →
+/// `\"`, newline → `\n`). Today only `le` flows through here, but any
+/// future labelled metric must use it too.
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape `# HELP` text (`\` → `\\`, newline → `\n`).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Help strings for the well-known metric namespaces; [`Registry::
+/// describe`] overrides, anything else falls back to a generic line.
+fn builtin_help(name: &str) -> Option<&'static str> {
+    Some(match name {
+        "serve.requests" => "Requests admitted by the coordinator",
+        "serve.batches" => "Micro-batches executed by the workers",
+        "serve.retries" => "Batch attempts retried after transient faults",
+        "serve.shed.overload" => "Requests shed at admission (queue full)",
+        "serve.shed.deadline" => "Requests shed on an expired deadline",
+        "serve.host_latency_us" => "End-to-end host latency per served request (us)",
+        "serve.execute_us" => "Backend run_batch wall time per batch (us)",
+        "serve.queue_depth" => "Request queue depth at last admission",
+        "serve.linger_window_us" => "Micro-batch linger window in effect (us)",
+        "backend.fast.batches" => "Batches executed by the fast backend",
+        "backend.fast.inferences" => "Inferences executed by the fast backend",
+        "backend.fast.execute_us" => "Fast-backend run_batch wall time (us)",
+        "backend.cycle.batches" => "Batches executed by the cycle backend",
+        "backend.cycle.inferences" => "Inferences executed by the cycle backend",
+        "backend.cycle.execute_us" => "Cycle-backend run_batch wall time (us)",
+        "sweep.point_us" => "Robustness-sweep grid point wall time (us)",
+        "sweep.points_per_s" => "Robustness-sweep throughput (grid points/s)",
+        "slo.availability" => "Rolling-window served fraction vs the SLO target",
+        "slo.p99_us" => "Rolling-window p99 host latency (us)",
+        "slo.burn_rate" => "Error-budget burn rate (1.0 = on budget)",
+        _ => return None,
+    })
 }
 
 impl Registry {
@@ -238,12 +327,30 @@ impl Registry {
         }
     }
 
-    /// Prometheus text exposition. Metric names sanitize `.` to `_`
-    /// (the registry namespaces with dots, e.g. `serve.requests`).
+    /// Attach a `# HELP` string to a metric name (raw dotted name, not
+    /// the sanitized form). Well-known namespaces have built-in help;
+    /// this overrides or extends it for custom metrics.
+    pub fn describe(&self, name: &str, help: &str) {
+        lock_or_recover(&self.help).insert(name.to_string(), help.to_string());
+    }
+
+    fn help_for(&self, name: &str) -> String {
+        if let Some(h) = lock_or_recover(&self.help).get(name) {
+            return h.clone();
+        }
+        builtin_help(name).map(str::to_string).unwrap_or_else(|| format!("cimrv metric {name}"))
+    }
+
+    /// Prometheus text exposition: `# HELP` + `# TYPE` per metric,
+    /// names sanitized into the exposition grammar (the registry
+    /// namespaces with dots, e.g. `serve.requests` → `serve_requests`),
+    /// label values escaped.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
         for (name, metric) in lock_or_recover(&self.metrics).iter() {
-            let n = name.replace(['.', '-'], "_");
+            let n = sanitize_metric_name(name);
+            let help = escape_help(&self.help_for(name));
+            out.push_str(&format!("# HELP {n} {help}\n"));
             match metric {
                 Metric::Counter(c) => {
                     out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
@@ -258,6 +365,7 @@ impl Registry {
                             Some(b) => b.to_string(),
                             None => "+Inf".to_string(),
                         };
+                        let le = escape_label_value(&le);
                         out.push_str(&format!("{n}_bucket{{le=\"{le}\"}} {cum}\n"));
                     }
                     out.push_str(&format!("{n}_sum {}\n{n}_count {}\n", h.sum(), h.count()));
@@ -395,5 +503,58 @@ mod tests {
         assert!(prom.contains("h_empty_count 0"));
         let j = r.to_json();
         assert_eq!(j.path(&["h.empty", "mean"]).unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn prometheus_exposition_has_help_and_sanitized_names() {
+        with_telemetry(|| {
+            let r = Registry::new();
+            r.counter("serve.requests").add(2);
+            r.counter("9weird name/metric").inc();
+            r.describe("9weird name/metric", "custom help\nwith a newline");
+            let prom = r.render_prometheus();
+            // Built-in help for the well-known namespace.
+            assert!(prom.contains("# HELP serve_requests Requests admitted by the coordinator"));
+            assert!(prom.contains("# TYPE serve_requests counter"));
+            // Invalid characters sanitized, leading digit prefixed,
+            // help newline escaped.
+            assert!(prom.contains("# HELP _9weird_name_metric custom help\\nwith a newline"));
+            assert!(prom.contains("_9weird_name_metric 1"));
+            // Unknown names still get a HELP line.
+            r.gauge("totally.new").set(1.0);
+            assert!(r.render_prometheus().contains("# HELP totally_new cimrv metric totally.new"));
+        });
+    }
+
+    #[test]
+    fn sanitize_and_escape_helpers() {
+        assert_eq!(sanitize_metric_name("serve.requests"), "serve_requests");
+        assert_eq!(sanitize_metric_name("a-b.c"), "a_b_c");
+        assert_eq!(sanitize_metric_name("7up"), "_7up");
+        assert_eq!(sanitize_metric_name(""), "_");
+        assert_eq!(sanitize_metric_name("ok:name_1"), "ok:name_1");
+        assert_eq!(escape_label_value("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape_help("a\\b\nc"), "a\\\\b\\nc");
+    }
+
+    #[test]
+    fn fine_bounds_resolve_sub_100us_populations() {
+        with_telemetry(|| {
+            let bounds = Histogram::fine_us_bounds();
+            assert_eq!(bounds.first(), Some(&1));
+            assert_eq!(bounds.last(), Some(&(1 << 20)));
+            let r = Registry::new();
+            let h = r.histogram("fine.us", Histogram::fine_us_bounds());
+            for v in [3, 5, 40, 90] {
+                h.observe(v);
+            }
+            // Powers of two separate 40 from 90 (bounds 64/128); the
+            // us_bounds powers-of-four ladder would merge them at 64.
+            let cum = h.cumulative();
+            let at = |b: u64| cum.iter().find(|(bb, _)| *bb == Some(b)).unwrap().1;
+            assert_eq!(at(4), 1);
+            assert_eq!(at(64), 3);
+            assert_eq!(at(128), 4);
+        });
     }
 }

@@ -1,0 +1,419 @@
+//! SLO monitoring: rolling-window availability and p99-vs-target
+//! tracking with error-budget burn rate.
+//!
+//! `--slo p99_ms=...,availability=...[,window=N]` on `serve`/`soak`
+//! arms a [`SloMonitor`] over the most recent `window` terminal request
+//! outcomes (served / shed / deadline-missed / failed). From that
+//! window it derives:
+//!
+//! * **availability** — served fraction of the window;
+//! * **p99** — nearest-rank 99th percentile of the *served* latencies
+//!   (the same rank rule as the serve report, so the two agree on
+//!   identical sample sets);
+//! * **burn rate** — observed error rate divided by the error budget
+//!   (`1 − availability_target`): 1.0 means errors arrive exactly as
+//!   fast as the budget allows, >1 means the budget is burning down.
+//!
+//! The monitor lives in `ServiceStats` (installed by the coordinator
+//! when `ServeOptions.slo` is set), records from the same terminal
+//! sites that close request spans, renders in the serve report, and
+//! mirrors its numbers into the metrics registry (`slo.availability`,
+//! `slo.p99_us`, `slo.burn_rate`). `soak --check --slo ...` gates each
+//! full-availability cell on the same [`SloConfig`] targets.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::json::Json;
+use crate::util::lock_or_recover;
+
+/// Default rolling-window size (terminal request outcomes).
+pub const DEFAULT_SLO_WINDOW: usize = 512;
+
+/// Parsed `--slo` targets. `Copy` so it rides inside `ServeOptions`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    /// p99 latency target in milliseconds (served requests).
+    pub p99_ms: Option<f64>,
+    /// Availability target as a fraction in (0, 1].
+    pub availability: Option<f64>,
+    /// Rolling-window size in requests.
+    pub window: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig { p99_ms: None, availability: None, window: DEFAULT_SLO_WINDOW }
+    }
+}
+
+impl SloConfig {
+    /// Parse `p99_ms=5,availability=0.999,window=256` (any subset; at
+    /// least one target required).
+    pub fn parse_spec(spec: &str) -> Result<SloConfig> {
+        let mut cfg = SloConfig::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("--slo expects key=value pairs, got {part:?}");
+            };
+            match k.trim() {
+                "p99_ms" => {
+                    let ms: f64 =
+                        v.trim().parse().map_err(|_| anyhow::anyhow!("bad p99_ms {v:?}"))?;
+                    ensure!(ms > 0.0 && ms.is_finite(), "p99_ms must be a positive number");
+                    cfg.p99_ms = Some(ms);
+                }
+                "availability" => {
+                    let a: f64 = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad availability {v:?}"))?;
+                    ensure!((0.0..=1.0).contains(&a) && a > 0.0, "availability must be in (0, 1]");
+                    cfg.availability = Some(a);
+                }
+                "window" => {
+                    let w: usize =
+                        v.trim().parse().map_err(|_| anyhow::anyhow!("bad window {v:?}"))?;
+                    ensure!(w >= 1, "window must be >= 1");
+                    cfg.window = w;
+                }
+                other => bail!(
+                    "unknown --slo key {other:?} (expected p99_ms, availability, window)"
+                ),
+            }
+        }
+        ensure!(
+            cfg.p99_ms.is_some() || cfg.availability.is_some(),
+            "--slo needs at least one target (p99_ms=... or availability=...)"
+        );
+        Ok(cfg)
+    }
+
+    /// Canonical spec string (reports, JSON).
+    pub fn spec(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(ms) = self.p99_ms {
+            parts.push(format!("p99_ms={ms}"));
+        }
+        if let Some(a) = self.availability {
+            parts.push(format!("availability={a}"));
+        }
+        parts.push(format!("window={}", self.window));
+        parts.join(",")
+    }
+
+    /// p99 target in µs, when set.
+    pub fn p99_target_us(&self) -> Option<u64> {
+        self.p99_ms.map(|ms| (ms * 1_000.0).round() as u64)
+    }
+
+    /// Gate one observed (availability, p99) pair against the targets —
+    /// the `soak --check` SLO gate.
+    pub fn check_observed(&self, availability: f64, p99_us: Option<u64>) -> Result<()> {
+        if let Some(target) = self.availability {
+            ensure!(
+                availability + 1e-12 >= target,
+                "availability {:.4} below SLO target {:.4}",
+                availability,
+                target
+            );
+        }
+        if let (Some(target_us), Some(p99)) = (self.p99_target_us(), p99_us) {
+            ensure!(p99 <= target_us, "p99 {p99} us above SLO target {target_us} us");
+        }
+        Ok(())
+    }
+}
+
+/// Nearest-rank percentile over an unsorted sample set: the smallest
+/// value with at least `ceil(p * n)` samples ≤ it. Exact at boundaries:
+/// `p=0.99` over `1..=100` is 99, `p=1.0` is the max. Matches the serve
+/// report's rank rule (`coordinator::report::percentiles_us`).
+pub fn percentile_us(samples: &[u64], p: f64) -> Option<u64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 1.0) };
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    Some(sorted[rank - 1])
+}
+
+#[derive(Debug, Default)]
+struct SloState {
+    /// (latency_us, served) per terminal outcome, newest at the back.
+    window: VecDeque<(u64, bool)>,
+    seen: u64,
+    served_total: u64,
+}
+
+/// Rolling SLO tracker; thread-safe, recorded from the worker loop.
+#[derive(Debug)]
+pub struct SloMonitor {
+    cfg: SloConfig,
+    state: Mutex<SloState>,
+}
+
+/// One evaluated snapshot of the monitor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloReport {
+    pub cfg: SloConfig,
+    /// Terminal outcomes observed overall / in the current window.
+    pub seen: u64,
+    pub window_n: usize,
+    /// Served fraction of the window (`None` until anything lands).
+    pub availability: Option<f64>,
+    /// Nearest-rank p99 of served latencies in the window, µs.
+    pub p99_us: Option<u64>,
+    /// Error-budget burn rate (needs an availability target < 1).
+    pub burn_rate: Option<f64>,
+}
+
+impl SloMonitor {
+    pub fn new(cfg: SloConfig) -> Self {
+        SloMonitor { cfg, state: Mutex::new(SloState::default()) }
+    }
+
+    pub fn config(&self) -> SloConfig {
+        self.cfg
+    }
+
+    /// Record one terminal outcome: `served` with its end-to-end host
+    /// latency, or an unserved lifecycle (shed/deadline/failed).
+    pub fn record(&self, latency_us: u64, served: bool) {
+        let mut s = lock_or_recover(&self.state);
+        s.seen += 1;
+        if served {
+            s.served_total += 1;
+        }
+        s.window.push_back((latency_us, served));
+        while s.window.len() > self.cfg.window {
+            s.window.pop_front();
+        }
+    }
+
+    /// Evaluate the rolling window and mirror the numbers into the
+    /// metrics registry gauges.
+    pub fn report(&self) -> SloReport {
+        let s = lock_or_recover(&self.state);
+        let n = s.window.len();
+        let served: Vec<u64> =
+            s.window.iter().filter(|(_, ok)| *ok).map(|(us, _)| *us).collect();
+        let availability = if n == 0 { None } else { Some(served.len() as f64 / n as f64) };
+        let p99_us = percentile_us(&served, 0.99);
+        let burn_rate = match (availability, self.cfg.availability) {
+            (Some(a), Some(target)) if target < 1.0 => Some((1.0 - a) / (1.0 - target)),
+            _ => None,
+        };
+        drop(s);
+        if crate::telemetry::enabled() {
+            let reg = crate::telemetry::global();
+            if let Some(a) = availability {
+                reg.gauge("slo.availability").set(a);
+            }
+            if let Some(p) = p99_us {
+                reg.gauge("slo.p99_us").set(p as f64);
+            }
+            if let Some(b) = burn_rate {
+                reg.gauge("slo.burn_rate").set(b);
+            }
+        }
+        SloReport {
+            cfg: self.cfg,
+            seen: self.seen(),
+            window_n: n,
+            availability,
+            p99_us,
+            burn_rate,
+        }
+    }
+
+    fn seen(&self) -> u64 {
+        lock_or_recover(&self.state).seen
+    }
+}
+
+impl SloReport {
+    /// Does the window meet the availability target (vacuously true
+    /// when no target is set or nothing landed yet)?
+    pub fn availability_ok(&self) -> bool {
+        match (self.availability, self.cfg.availability) {
+            (Some(a), Some(target)) => a + 1e-12 >= target,
+            _ => true,
+        }
+    }
+
+    /// Does the window meet the p99 target?
+    pub fn p99_ok(&self) -> bool {
+        match (self.p99_us, self.cfg.p99_target_us()) {
+            (Some(p), Some(target)) => p <= target,
+            _ => true,
+        }
+    }
+
+    pub fn compliant(&self) -> bool {
+        self.availability_ok() && self.p99_ok()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("spec", Json::str(self.cfg.spec())),
+            ("seen", Json::num(self.seen as f64)),
+            ("window_n", Json::num(self.window_n as f64)),
+            ("availability", opt(self.availability)),
+            ("p99_us", opt(self.p99_us.map(|p| p as f64))),
+            ("burn_rate", opt(self.burn_rate)),
+            ("compliant", Json::Bool(self.compliant())),
+        ])
+    }
+
+    /// The serve-report block.
+    pub fn render(&self) -> String {
+        let mut out = format!("slo ({}):\n", self.cfg.spec());
+        match self.availability {
+            Some(a) => {
+                let target = self
+                    .cfg
+                    .availability
+                    .map(|t| format!(" (target {:.4}, {})", t, ok_str(self.availability_ok())))
+                    .unwrap_or_default();
+                out.push_str(&format!(
+                    "  availability: {:.4} over last {} request(s){target}\n",
+                    a, self.window_n
+                ));
+            }
+            None => out.push_str("  availability: no requests observed yet\n"),
+        }
+        match self.p99_us {
+            Some(p) => {
+                let target = self
+                    .cfg
+                    .p99_target_us()
+                    .map(|t| format!(" (target {} µs, {})", t, ok_str(self.p99_ok())))
+                    .unwrap_or_default();
+                out.push_str(&format!("  p99: {p} µs{target}\n"));
+            }
+            None => out.push_str("  p99: no served requests in window\n"),
+        }
+        if let Some(b) = self.burn_rate {
+            out.push_str(&format!(
+                "  error-budget burn rate: {b:.2}x ({})\n",
+                if b <= 1.0 { "within budget" } else { "burning down" }
+            ));
+        }
+        out
+    }
+}
+
+fn ok_str(ok: bool) -> &'static str {
+    if ok {
+        "met"
+    } else {
+        "MISSED"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_round_trips() {
+        let cfg = SloConfig::parse_spec("p99_ms=5,availability=0.999,window=128").unwrap();
+        assert_eq!(cfg.p99_ms, Some(5.0));
+        assert_eq!(cfg.availability, Some(0.999));
+        assert_eq!(cfg.window, 128);
+        assert_eq!(cfg.p99_target_us(), Some(5_000));
+        let again = SloConfig::parse_spec(&cfg.spec()).unwrap();
+        assert_eq!(again, cfg);
+        // Subsets parse; an empty target set does not.
+        assert!(SloConfig::parse_spec("availability=0.99").is_ok());
+        assert!(SloConfig::parse_spec("window=64").is_err());
+        assert!(SloConfig::parse_spec("p99_ms=0").is_err());
+        assert!(SloConfig::parse_spec("availability=1.5").is_err());
+        assert!(SloConfig::parse_spec("bogus=1").is_err());
+    }
+
+    #[test]
+    fn percentile_is_exact_at_boundaries() {
+        let v: Vec<u64> = (1..=100).collect();
+        // Nearest rank: ceil(0.99 * 100) = 99 → the 99th smallest.
+        assert_eq!(percentile_us(&v, 0.99), Some(99));
+        assert_eq!(percentile_us(&v, 1.0), Some(100));
+        assert_eq!(percentile_us(&v, 0.0), Some(1));
+        assert_eq!(percentile_us(&v, 0.5), Some(50));
+        // One more sample tips the rank: ceil(0.99 * 101) = 100.
+        let v101: Vec<u64> = (1..=101).collect();
+        assert_eq!(percentile_us(&v101, 0.99), Some(100));
+        assert_eq!(percentile_us(&[], 0.99), None);
+        assert_eq!(percentile_us(&[7], f64::NAN), Some(7));
+    }
+
+    #[test]
+    fn rolling_window_math_and_burn_rate() {
+        let cfg = SloConfig::parse_spec("p99_ms=1,availability=0.9,window=10").unwrap();
+        let m = SloMonitor::new(cfg);
+        // 8 served at 500 µs + 2 failures: availability 0.8 in-window.
+        for _ in 0..8 {
+            m.record(500, true);
+        }
+        for _ in 0..2 {
+            m.record(0, false);
+        }
+        let r = m.report();
+        assert_eq!(r.window_n, 10);
+        assert_eq!(r.availability, Some(0.8));
+        assert_eq!(r.p99_us, Some(500));
+        // Error rate 0.2 against a 0.1 budget: burning at 2x.
+        let burn = r.burn_rate.unwrap();
+        assert!((burn - 2.0).abs() < 1e-9, "burn {burn}");
+        assert!(!r.availability_ok());
+        assert!(r.p99_ok(), "500 µs meets the 1 ms target");
+        assert!(!r.compliant());
+        // 10 clean fast requests roll the failures out of the window.
+        for _ in 0..10 {
+            m.record(400, true);
+        }
+        let r = m.report();
+        assert_eq!(r.availability, Some(1.0));
+        assert_eq!(r.burn_rate, Some(0.0));
+        assert!(r.compliant());
+        assert_eq!(r.seen, 20);
+        // JSON snapshot round-trips through the parser.
+        let j = r.to_json();
+        assert!(Json::parse(&j.to_string()).is_ok());
+        assert!(r.render().contains("slo ("));
+    }
+
+    #[test]
+    fn p99_violation_fails_compliance() {
+        let cfg = SloConfig::parse_spec("p99_ms=1,window=100").unwrap();
+        let m = SloMonitor::new(cfg);
+        for _ in 0..99 {
+            m.record(100, true);
+        }
+        m.record(5_000, true); // rank 100 of 100 at p99? ceil(.99*100)=99 → 100 µs
+        let r = m.report();
+        assert_eq!(r.p99_us, Some(100));
+        assert!(r.compliant());
+        // A second slow sample moves rank 99 onto the slow tail.
+        m.record(6_000, true);
+        let r = m.report();
+        assert_eq!(r.p99_us, Some(5_000));
+        assert!(!r.p99_ok());
+        assert!(!r.compliant());
+    }
+
+    #[test]
+    fn check_observed_gates_targets() {
+        let cfg = SloConfig::parse_spec("p99_ms=2,availability=0.99").unwrap();
+        assert!(cfg.check_observed(1.0, Some(1_500)).is_ok());
+        assert!(cfg.check_observed(0.98, Some(1_500)).is_err());
+        assert!(cfg.check_observed(1.0, Some(2_500)).is_err());
+        assert!(cfg.check_observed(0.995, None).is_ok());
+    }
+}

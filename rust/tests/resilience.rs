@@ -15,7 +15,21 @@ use cimrv::coordinator::{
 use cimrv::mem::dram::DramConfig;
 use cimrv::model::{dataset, KwsModel};
 use cimrv::resilience::{ChaosBackend, FaultPlan};
+use cimrv::telemetry::{self, events, IncidentKind};
 use cimrv::util::rng::Rng;
+
+/// The telemetry enable flag is process-global; the one test that flips
+/// it (to capture the incident log) serializes through this guard, same
+/// pattern as `tests/telemetry.rs`.
+fn with_telemetry<T>(f: impl FnOnce() -> T) -> T {
+    static GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    let was = telemetry::enabled();
+    telemetry::set_enabled(true);
+    let out = f();
+    telemetry::set_enabled(was);
+    out
+}
 
 /// Load the trained artifacts, or skip the calling test (same contract
 /// as `integration.rs`: the checked-in testdata set makes this run in
@@ -232,17 +246,54 @@ fn breaker_trips_respawn_degraded_and_preserve_correctness() {
         max_attempts: 40,
         ..Default::default()
     };
-    let mut coord =
-        Coordinator::start_with_options(&m, OptLevel::FULL, 1, BackendKind::Fast, opts).unwrap();
-    let resps = coord.serve_batch(requests(&m, 2, None)).unwrap();
+    // Serve with telemetry on so the incident log captures the whole
+    // degradation story alongside the counters.
+    let (resps, stats, degraded, incidents) = with_telemetry(|| {
+        events().reset();
+        let mut coord =
+            Coordinator::start_with_options(&m, OptLevel::FULL, 1, BackendKind::Fast, opts)
+                .unwrap();
+        let resps = coord.serve_batch(requests(&m, 2, None)).unwrap();
+        coord.shutdown();
+        let degraded = coord.degraded_workers();
+        (resps, std::sync::Arc::clone(&coord.stats), degraded, events().snapshot())
+    });
     use std::sync::atomic::Ordering::Relaxed;
-    let s = &coord.stats;
+    let s = &stats;
     assert!(s.breaker_trips.load(Relaxed) >= 1, "incarnation 0 must trip the breaker");
     assert!(s.respawns.load(Relaxed) >= 1, "the tripped worker must be respawned");
     assert_eq!(
-        coord.degraded_workers(),
-        1,
+        degraded, 1,
         "the respawned worker must run the degraded survivor shard plan"
+    );
+    // The structured incident log tells the same story, in order: chaos
+    // injections, the breaker trip on worker 0, the degraded re-plan
+    // (built during respawn), then the respawn announcement. The log is
+    // process-global, so concurrently running tests may interleave
+    // their own incidents — assert the trip -> re-plan -> respawn chain
+    // exists in order rather than demanding exclusive positions.
+    assert!(
+        incidents.iter().any(|e| e.kind == IncidentKind::ChaosInjected),
+        "injected faults must log"
+    );
+    let trip = incidents
+        .iter()
+        .position(|e| e.kind == IncidentKind::BreakerTrip)
+        .expect("breaker trip in the event log");
+    let trip_ev = &incidents[trip];
+    assert_eq!(trip_ev.worker, Some(0), "single-worker serve: worker 0 trips");
+    assert!(
+        trip_ev.detail.contains("consecutive faults"),
+        "trip detail carries the streak: {trip_ev:?}"
+    );
+    let replan = incidents[trip..]
+        .iter()
+        .position(|e| e.kind == IncidentKind::DegradedReplan)
+        .map(|p| trip + p)
+        .expect("degraded re-plan after the trip");
+    assert!(
+        incidents[replan..].iter().any(|e| e.kind == IncidentKind::WorkerRespawn),
+        "respawn after the degraded re-plan"
     );
     for (got, want) in resps.iter().zip(&clean) {
         assert_eq!(
@@ -252,5 +303,4 @@ fn breaker_trips_respawn_degraded_and_preserve_correctness() {
         );
         assert_eq!(got.predicted, want.predicted);
     }
-    coord.shutdown();
 }

@@ -10,7 +10,10 @@ use cimrv::baselines::OptLevel;
 use cimrv::compiler::build_kws_program_sharded;
 use cimrv::coordinator::{Coordinator, InferenceRequest};
 use cimrv::model::{dataset, KwsModel};
-use cimrv::telemetry::{self, perfetto, Histogram, Registry, TraceBuilder};
+use cimrv::telemetry::{
+    self, events, global_profiler, perfetto, region, EventLog, Histogram, IncidentEvent,
+    IncidentKind, Registry, SloConfig, SloMonitor, TraceBuilder,
+};
 use cimrv::util::json::Json;
 
 /// The enable flag is process-global; tests that flip it run serialized
@@ -65,8 +68,9 @@ fn registry_totals_are_exact_under_thread_contention() {
     });
 }
 
-/// Every event in an exported trace document — metadata and slices —
-/// must carry `ph`/`ts`/`pid`/`tid`, or Perfetto refuses the load.
+/// Every event in an exported trace document — metadata, slices,
+/// counter samples, and instants — must carry `ph`/`ts`/`pid`/`tid`,
+/// or Perfetto refuses the load.
 fn assert_trace_schema(doc: &Json) -> usize {
     let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
     for e in events {
@@ -74,9 +78,17 @@ fn assert_trace_schema(doc: &Json) -> usize {
             assert!(e.get(key).is_ok(), "trace event missing {key:?}: {e}");
         }
         let ph = e.get("ph").unwrap().as_str().unwrap().to_string();
-        assert!(ph == "X" || ph == "M", "unexpected phase {ph:?}");
-        if ph == "X" {
-            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(
+            ph == "X" || ph == "M" || ph == "C" || ph == "i",
+            "unexpected phase {ph:?}"
+        );
+        match ph.as_str() {
+            "X" => assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0),
+            // Counter samples carry their value in args.
+            "C" => assert!(e.path(&["args", "value"]).unwrap().as_f64().is_ok()),
+            // Instants need a scope or Perfetto rejects them.
+            "i" => assert_eq!(e.get("s").unwrap().as_str().unwrap(), "t"),
+            _ => {}
         }
     }
     events.len()
@@ -106,9 +118,17 @@ fn perfetto_export_from_a_real_serve_passes_the_schema_smoke() {
         let _ = coord.serve_batch(reqs).unwrap();
         coord.shutdown();
 
+        // One synthetic incident so the instant track has something to
+        // carry (clean serving emits none).
+        events().record(IncidentKind::Shed, None, Some(99), "synthetic test shed".to_string());
+
         // Exactly the export `cmd_serve --trace-out` performs.
+        let spans = coord.stats.spans.snapshot();
         let mut tb = TraceBuilder::new();
-        perfetto::serving_tracks(&mut tb, &coord.stats.spans.snapshot(), 256);
+        perfetto::serving_tracks(&mut tb, &spans, 256);
+        perfetto::counter_tracks(&mut tb, &spans);
+        perfetto::incident_tracks(&mut tb, &events().snapshot());
+        perfetto::profiler_tracks(&mut tb, &global_profiler().slices_snapshot());
         let (markers, cycles) = coord.stats.engine_sample().expect("engine sample");
         let program = build_kws_program_sharded(&m, OptLevel::FULL, macros).unwrap();
         perfetto::engine_tracks(&mut tb, &program, &markers, cycles);
@@ -119,12 +139,17 @@ fn perfetto_export_from_a_real_serve_passes_the_schema_smoke() {
         // Round-trips through the JSON parser (what CI's validator does).
         let parsed = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), n);
-        // Both timelines present: worker batching and per-macro engine.
+        // All timelines present: worker batching, counters, incidents,
+        // profiler regions, and the per-macro engine.
         let text = doc.to_string();
         assert!(text.contains("worker 0"), "missing worker track");
         assert!(text.contains("macro 0"), "missing engine macro track");
         assert!(text.contains("macro 1"), "missing second macro track");
         assert!(text.contains("execute["), "missing batch execute slices");
+        assert!(text.contains("queue depth"), "missing queue-depth counter track");
+        assert!(text.contains("batch size w"), "missing batch-size counter track");
+        assert!(text.contains("incidents"), "missing incident instant track");
+        assert!(text.contains("backend_fast_run"), "missing profiler slices");
     });
 }
 
@@ -158,4 +183,159 @@ fn span_percentiles_match_service_stats_exactly() {
         let from_stats = coord.stats.host_latency_percentiles().unwrap();
         assert_eq!(from_spans, from_stats);
     });
+}
+
+/// Keep the optimizer from collapsing the timed work to nothing.
+fn spin() -> u64 {
+    let mut x = 0u64;
+    for i in 0..5_000u64 {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    x
+}
+
+#[test]
+fn profiler_nesting_attributes_self_time_exactly_under_contention() {
+    with_telemetry(|| {
+        let prof = global_profiler();
+        prof.reset();
+        const THREADS: usize = 4;
+        const ITERS: usize = 32;
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                s.spawn(|| {
+                    for _ in 0..ITERS {
+                        let _o = region("outer");
+                        std::hint::black_box(spin());
+                        let _i = region("inner");
+                        std::hint::black_box(spin());
+                    }
+                });
+            }
+        });
+        let fold = prof.fold();
+        let outer = fold["outer"];
+        let inner = fold["outer;inner"];
+        let closes = (THREADS * ITERS) as u64;
+        assert_eq!(outer.count, closes);
+        assert_eq!(inner.count, closes);
+        assert!(outer.total_ns > 0 && inner.total_ns > 0);
+        // The nesting contract, exact by construction: a parent's self
+        // time is its total minus the sum of its children's totals —
+        // the same ns values, not re-measured, so no tolerance.
+        assert_eq!(
+            outer.total_ns,
+            outer.self_ns + inner.total_ns,
+            "outer self must be total minus the nested child's total"
+        );
+        // Folded-stack grammar: every line is `path<SP><integer µs>`
+        // with a semicolon-joined path and no other spaces.
+        let folded = prof.render_folded();
+        assert!(folded.lines().count() >= 2, "{folded}");
+        for line in folded.lines() {
+            let (path, val) = line.rsplit_once(' ').expect("`path value` line");
+            assert!(!path.is_empty() && !path.contains(' '), "{line:?}");
+            val.parse::<u64>().expect("folded value is integer µs");
+        }
+        // The table aggregates by leaf name and carries both names.
+        let table = prof.table();
+        assert!(table.iter().any(|r| r.name == "outer"));
+        assert!(table.iter().any(|r| r.name == "inner"));
+        // Timeline slices carry depth and the full path.
+        let slices = prof.slices_snapshot();
+        assert!(slices.iter().any(|s| s.path == "outer;inner" && s.depth == 1));
+
+        // Disabled: a region guard records nothing at all.
+        telemetry::set_enabled(false);
+        prof.reset();
+        {
+            let _r = region("ghost");
+            std::hint::black_box(spin());
+        }
+        assert!(!prof.has_data(), "disabled region must not record");
+        telemetry::set_enabled(true);
+    });
+}
+
+#[test]
+fn event_ring_overflow_keeps_newest_and_jsonl_roundtrips() {
+    with_telemetry(|| {
+        let log = EventLog::with_capacity(8);
+        for i in 0..20usize {
+            log.record(
+                IncidentKind::Shed,
+                Some(i % 3),
+                Some(i as u64),
+                format!("detail {i}"),
+            );
+        }
+        // Bounded ring: newest 8 survive, 12 oldest counted as dropped.
+        assert_eq!(log.len(), 8);
+        assert_eq!(log.dropped(), 12);
+        let snap = log.snapshot();
+        assert_eq!(snap.first().unwrap().seq, 12, "oldest survivor");
+        assert_eq!(snap.last().unwrap().seq, 19, "newest survivor");
+        for w in snap.windows(2) {
+            assert_eq!(w[1].seq, w[0].seq + 1, "seq stays monotone");
+            assert!(w[1].ts_us >= w[0].ts_us, "timestamps stay ordered");
+        }
+        // JSONL round-trip: one parseable object per line, every field
+        // surviving (including the optional ids).
+        let jsonl = log.to_jsonl();
+        assert_eq!(jsonl.lines().count(), 8);
+        for (line, want) in jsonl.lines().zip(&snap) {
+            let ev = IncidentEvent::from_json(&Json::parse(line).unwrap()).unwrap();
+            assert_eq!(&ev, want);
+            assert_eq!(ev.kind, IncidentKind::Shed);
+            assert_eq!(ev.detail, format!("detail {}", ev.seq));
+        }
+        // Disabled: record is a no-op, the ring stays put.
+        telemetry::set_enabled(false);
+        log.record(IncidentKind::Shed, None, None, "ignored".to_string());
+        assert_eq!(log.len(), 8);
+        assert_eq!(log.dropped(), 12);
+        telemetry::set_enabled(true);
+    });
+}
+
+#[test]
+fn slo_window_math_availability_p99_and_burn_rate() {
+    let cfg = SloConfig::parse_spec("p99_ms=5,availability=0.9,window=100").unwrap();
+    let mon = SloMonitor::new(cfg);
+    // 95 served at 10..=950 µs, then 5 unserved outcomes.
+    for i in 1..=95u64 {
+        mon.record(i * 10, true);
+    }
+    for _ in 0..5 {
+        mon.record(0, false);
+    }
+    let rep = mon.report();
+    assert_eq!(rep.seen, 100);
+    assert_eq!(rep.window_n, 100);
+    assert_eq!(rep.availability, Some(0.95));
+    // Nearest-rank p99 over 95 served samples: rank ceil(0.99*95)=95,
+    // i.e. the max, 950 µs.
+    assert_eq!(rep.p99_us, Some(950));
+    // Burn rate: (1-0.95)/(1-0.9) = 0.5 — half the error budget.
+    assert!((rep.burn_rate.unwrap() - 0.5).abs() < 1e-12);
+    assert!(rep.availability_ok() && rep.p99_ok() && rep.compliant());
+
+    // 20 more failures slide the window: 75 served / 25 failed.
+    for _ in 0..20 {
+        mon.record(0, false);
+    }
+    let rep = mon.report();
+    assert_eq!(rep.window_n, 100, "window stays bounded");
+    assert_eq!(rep.seen, 120, "seen keeps counting past the window");
+    assert_eq!(rep.availability, Some(0.75));
+    assert!((rep.burn_rate.unwrap() - 2.5).abs() < 1e-12, "2.5x over budget");
+    assert!(!rep.availability_ok() && !rep.compliant());
+    // The report renders and serializes without panicking.
+    assert!(rep.render().contains("burn rate"));
+    assert!(Json::parse(&rep.to_json().to_string()).is_ok());
+
+    // The soak-gate checker agrees with the same targets.
+    assert!(cfg.check_observed(0.95, Some(950)).is_ok());
+    assert!(cfg.check_observed(0.95, Some(5_001)).is_err(), "p99 above 5 ms");
+    assert!(cfg.check_observed(0.85, Some(950)).is_err(), "availability below 0.9");
 }
